@@ -1,0 +1,28 @@
+//! §IV.B affinity study as a standalone example: three PCIe socket
+//! placements, repeated measurements, Welch's t-test — prints the same
+//! conclusion the paper reached ("no statistically significant
+//! difference", deploy config 1).
+//!
+//! ```bash
+//! cargo run --release --example affinity_study
+//! ```
+
+use fabricbench::experiments::affinity;
+
+fn main() {
+    let (table, results) = affinity::run(false);
+    println!("{}", table.to_markdown());
+    for r in &results {
+        println!("fabric {}:", r.fabric);
+        for &((i, j), p) in &r.p_values {
+            println!(
+                "  config {} vs {}: p = {:.3} -> {}",
+                i + 1,
+                j + 1,
+                p,
+                if p > 0.05 { "not significant" } else { "SIGNIFICANT" }
+            );
+        }
+    }
+    println!("\npaper conclusion: no statistically significant difference; TX-GAIA\nwas deployed with configuration 1 (GPUs + Ethernet NIC on CPU1).");
+}

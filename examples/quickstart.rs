@@ -1,0 +1,48 @@
+//! Quickstart: simulate data-parallel ResNet50 training on TX-GAIA over
+//! both of the paper's fabrics and print throughput + scaling efficiency.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use fabricbench::collectives::RingAllreduce;
+use fabricbench::config::presets::paper_fabrics;
+use fabricbench::config::spec::{ClusterSpec, RunSpec, TransportOptions};
+use fabricbench::models::perf::Precision;
+use fabricbench::models::zoo::resnet50;
+use fabricbench::trainer::TrainerSim;
+use fabricbench::util::units::MIB;
+
+fn main() -> anyhow::Result<()> {
+    println!("fabricbench quickstart: ResNet50, Horovod-style ring allreduce\n");
+    for fabric in paper_fabrics() {
+        println!("fabric: {}", fabric.name);
+        let trainer = TrainerSim {
+            arch: resnet50(),
+            fabric,
+            cluster: ClusterSpec::txgaia(),
+            opts: TransportOptions::default(),
+            strategy: Box::new(RingAllreduce),
+            per_gpu_batch: 64,
+            precision: Precision::Fp32,
+            fusion_bytes: 64.0 * MIB,
+            overlap: true,
+            step_overhead: 0.0,
+            coordination_overhead:
+                fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+        };
+        let spec = RunSpec::default();
+        for gpus in [1, 8, 64, 256] {
+            let r = trainer.run(gpus, &spec)?;
+            println!(
+                "  {:>4} GPUs: {:>10.1} img/s  (scaling eff {:.2}, comm {:.1}%)",
+                gpus,
+                r.images_per_sec,
+                r.scaling_efficiency(),
+                100.0 * r.comm_fraction
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

@@ -1,0 +1,137 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects with
+``proto.id() <= INT_MAX``; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/gen_hlo.py.
+
+Outputs (into --outdir, default ../artifacts):
+  train_step.hlo.txt   (*params, x, y) -> tuple(loss, *grads)
+  sgd_update.hlo.txt   (*params, *grads, lr) -> tuple(*new_params)
+  predict.hlo.txt      (*params, x) -> tuple(logits)
+  init_params.bin      f32 little-endian, PARAM_SPECS order, concatenated
+  manifest.json        shapes + argument order contract for rust/src/runtime/
+
+Python runs ONCE at build time (`make artifacts`); the rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs():
+    return [_spec(s) for _, s in model.PARAM_SPECS]
+
+
+def lower_all():
+    """Lower every entry point; returns {name: hlo_text}."""
+    x_spec = _spec((model.BATCH,) + model.IMAGE)
+    y_spec = _spec((model.BATCH,), jnp.int32)
+    lr_spec = _spec(())
+
+    out = {}
+    out["train_step"] = to_hlo_text(
+        jax.jit(model.train_step).lower(*param_specs(), x_spec, y_spec)
+    )
+    out["sgd_update"] = to_hlo_text(
+        jax.jit(model.sgd_update).lower(*param_specs(), *param_specs(), lr_spec)
+    )
+    out["predict"] = to_hlo_text(
+        jax.jit(model.predict).lower(*param_specs(), x_spec)
+    )
+    return out
+
+
+def build_manifest():
+    pnames = [n for n, _ in model.PARAM_SPECS]
+    return {
+        "model": "minicnn",
+        "batch": model.BATCH,
+        "image": list(model.IMAGE),
+        "classes": model.CLASSES,
+        "param_count": int(model.PARAM_COUNT),
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in model.PARAM_SPECS
+        ],
+        "artifacts": {
+            "train_step": {
+                "file": "train_step.hlo.txt",
+                "inputs": pnames + ["x", "y"],
+                "outputs": ["loss"] + [f"grad_{n}" for n in pnames],
+            },
+            "sgd_update": {
+                "file": "sgd_update.hlo.txt",
+                "inputs": pnames + [f"grad_{n}" for n in pnames] + ["lr"],
+                "outputs": pnames,
+            },
+            "predict": {
+                "file": "predict.hlo.txt",
+                "inputs": pnames + ["x"],
+                "outputs": ["logits"],
+            },
+        },
+    }
+
+
+def write_init_params(path, seed=0):
+    params = model.init_params(seed)
+    with open(path, "wb") as f:
+        for p in params:
+            flat = jnp.asarray(p, jnp.float32).reshape(-1)
+            f.write(struct.pack(f"<{flat.size}f", *map(float, flat)))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: stamp file path")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    outdir = args.outdir
+    if args.out is not None:
+        outdir = os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    for name, text in lower_all().items():
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    write_init_params(os.path.join(outdir, "init_params.bin"), args.seed)
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(build_manifest(), f, indent=2)
+    print(f"wrote {outdir}/init_params.bin and {outdir}/manifest.json")
+
+    if args.out is not None:
+        # Makefile stamp compatibility.
+        with open(args.out, "w") as f:
+            f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

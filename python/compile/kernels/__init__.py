@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+All kernels are authored for the TPU MXU/VMEM model but lowered with
+``interpret=True`` so the resulting HLO runs on any PJRT backend (the rust
+CPU client in this repo). See DESIGN.md §Hardware-Adaptation.
+"""
+
+from .matmul import matmul, DEFAULT_BLOCK
+from .sgd import sgd_update, sgd_momentum_update
+
+__all__ = ["matmul", "sgd_update", "sgd_momentum_update", "DEFAULT_BLOCK"]

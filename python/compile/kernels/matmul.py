@@ -1,0 +1,87 @@
+"""Tiled matmul Pallas kernel (the paper's dense-layer hot spot, re-thought
+for the TPU MXU instead of V100 tensor cores).
+
+CUDA tf_cnn_benchmarks feeds dense/conv-as-GEMM work to tensor cores via
+warp-level WMMA tiles staged through shared memory. The TPU analogue is the
+128x128 MXU systolic array fed from VMEM: we tile the GEMM into
+(bm, bk) x (bk, bn) blocks, express the HBM->VMEM schedule with BlockSpecs
+(what CUDA does with threadblocks + cp.async), and accumulate over the K
+grid dimension, which Pallas executes sequentially ("arbitrary" semantics)
+so the output block stays resident in VMEM.
+
+VMEM budget per grid step (f32): (bm*bk + bk*bn + bm*bn) * 4 bytes.
+The default 128x128x128 tile uses 192 KiB out of ~16 MiB VMEM, leaving room
+for double-buffered prefetch of the next x/w blocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tile. 128 matches the systolic array edge; see module
+# docstring for the VMEM arithmetic.
+DEFAULT_BLOCK = (128, 128, 128)
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] @ w[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pad_to(a, m0, m1):
+    """Zero-pad 2-D ``a`` so both dims are multiples of (m0, m1)."""
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return a
+    return jnp.pad(a, ((0, p0), (0, p1)))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matmul(x, w, *, block=None):
+    """``x @ w`` via the tiled Pallas kernel.
+
+    Arbitrary (m, k) x (k, n) shapes are supported by zero-padding up to the
+    tile size (zero padding is exact for matmul) and slicing the result.
+    Inputs are promoted to f32; accumulation is always f32 (MXU-style).
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    m, k = x.shape
+    n = w.shape[1]
+    bm, bn, bk = block or DEFAULT_BLOCK
+    # Shrink tiles for small operands so the grid is never empty and we do
+    # not waste VMEM on padding: a tile never exceeds the (padded) operand.
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+
+    xp = _pad_to(x.astype(jnp.float32), bm, bk)
+    wp = _pad_to(w.astype(jnp.float32), bk, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU-PJRT execution; real-TPU lowering is compile-only here
+    )(xp, wp)
+    return out[:m, :n]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match its oracle to allclose tolerance
+across the hypothesis shape/dtype sweep in python/tests/.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def sgd_ref(param, grad, lr):
+    return param.astype(jnp.float32) - jnp.float32(lr) * grad.astype(jnp.float32)
+
+
+def sgd_momentum_ref(param, grad, momentum, lr, mu):
+    m_new = jnp.float32(mu) * momentum.astype(jnp.float32) + grad.astype(jnp.float32)
+    return param.astype(jnp.float32) - jnp.float32(lr) * m_new, m_new

@@ -1,0 +1,102 @@
+"""Fused SGD parameter-update Pallas kernels.
+
+The CUDA equivalent in tf_cnn_benchmarks/Horovod is a fused elementwise
+apply-gradients kernel launched over a flat grid. On TPU we block the flat
+parameter vector into VMEM-sized 1-D tiles; each grid step streams one tile
+of (param, grad[, momentum]) through the VPU and writes the update back.
+
+Both kernels operate on *flat f32 vectors*; the L2 model flattens each
+parameter tensor (the coordinator's fusion buffer does the same thing with
+gradient tensors, so the kernel shape mirrors the system design).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 64 Ki f32 per tile = 256 KiB VMEM per operand stream.
+DEFAULT_TILE = 65536
+
+
+def _sgd_kernel(lr_ref, p_ref, g_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def _sgd_momentum_kernel(lr_ref, mu_ref, p_ref, g_ref, m_ref, op_ref, om_ref):
+    m_new = mu_ref[0] * m_ref[...] + g_ref[...]
+    om_ref[...] = m_new
+    op_ref[...] = p_ref[...] - lr_ref[0] * m_new
+
+
+def _pad1(a, tile):
+    pad = (-a.shape[0]) % tile
+    if pad == 0:
+        return a
+    return jnp.pad(a, (0, pad))
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def sgd_update(param, grad, lr, *, tile=None):
+    """``param - lr * grad`` over a flat f32 vector, VMEM-tiled."""
+    if param.ndim != 1 or grad.ndim != 1:
+        raise ValueError("sgd_update expects flat vectors")
+    if param.shape != grad.shape:
+        raise ValueError(f"shape mismatch {param.shape} vs {grad.shape}")
+    n = param.shape[0]
+    t = min(tile or DEFAULT_TILE, n)
+    p = _pad1(param.astype(jnp.float32), t)
+    g = _pad1(grad.astype(jnp.float32), t)
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape((1,))
+    grid = (p.shape[0] // t,)
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=grid,
+        in_specs=[
+            # lr broadcast to every grid step (block index 0).
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p.shape[0],), jnp.float32),
+        interpret=True,
+    )(lr_arr, p, g)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def sgd_momentum_update(param, grad, momentum, lr, mu, *, tile=None):
+    """Heavy-ball SGD: returns (new_param, new_momentum)."""
+    if not (param.shape == grad.shape == momentum.shape) or param.ndim != 1:
+        raise ValueError("sgd_momentum_update expects matching flat vectors")
+    n = param.shape[0]
+    t = min(tile or DEFAULT_TILE, n)
+    p = _pad1(param.astype(jnp.float32), t)
+    g = _pad1(grad.astype(jnp.float32), t)
+    m = _pad1(momentum.astype(jnp.float32), t)
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape((1,))
+    mu_arr = jnp.asarray(mu, jnp.float32).reshape((1,))
+    grid = (p.shape[0] // t,)
+    op, om = pl.pallas_call(
+        _sgd_momentum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((p.shape[0],), jnp.float32),
+        ],
+        interpret=True,
+    )(lr_arr, mu_arr, p, g, m)
+    return op[:n], om[:n]

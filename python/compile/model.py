@@ -1,0 +1,183 @@
+"""Layer-2 JAX model: the end-to-end validation workload.
+
+A small CNN image classifier ("MiniCNN") in the spirit of the paper's
+tf_cnn_benchmarks workloads (conv -> pool -> conv -> pool -> dense -> dense,
+softmax cross-entropy), sized to train in seconds on the CPU PJRT backend
+while still exercising every layer type whose *cost model* drives the
+fabric benchmarks (rust/src/models/).
+
+The dense layers run on the Layer-1 Pallas tiled-matmul kernel in both the
+forward and backward pass (pallas_call has no automatic VJP, so the layer
+is wrapped in a custom_vjp whose cotangents are themselves Pallas matmuls).
+The SGD update is the Layer-1 fused update kernel.
+
+Exported entry points (AOT-lowered by aot.py; argument order is the
+manifest contract with rust/src/runtime/):
+
+  train_step(*params, x, y) -> (loss, *grads)
+  sgd_update(*params, *grads, lr) -> (*new_params,)
+  predict(*params, x) -> (logits,)
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import matmul, sgd_update as sgd_kernel
+
+# ---------------------------------------------------------------------------
+# Shapes (the manifest contract).
+
+BATCH = 32
+IMAGE = (16, 16, 3)
+CLASSES = 10
+HIDDEN = 128
+
+# (name, shape) in the flat argument order used by every entry point.
+PARAM_SPECS = [
+    ("conv1_w", (3, 3, 3, 8)),
+    ("conv1_b", (8,)),
+    ("conv2_w", (3, 3, 8, 16)),
+    ("conv2_b", (16,)),
+    ("fc1_w", (4 * 4 * 16, HIDDEN)),
+    ("fc1_b", (HIDDEN,)),
+    ("fc2_w", (HIDDEN, CLASSES)),
+    ("fc2_b", (CLASSES,)),
+]
+
+PARAM_COUNT = sum(int(jnp.prod(jnp.array(s))) for _, s in PARAM_SPECS)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-backed dense layer with custom VJP.
+
+
+@jax.custom_vjp
+def dense_matmul(x, w):
+    """x @ w on the Pallas MXU kernel (fwd and bwd)."""
+    return matmul(x, w)
+
+
+def _dense_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _dense_bwd(res, dy):
+    x, w = res
+    # dx = dy @ w^T ; dw = x^T @ dy — both on the Pallas kernel.
+    return matmul(dy, w.T), matmul(x.T, dy)
+
+
+dense_matmul.defvjp(_dense_fwd, _dense_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Model.
+
+
+def _avg_pool2(x):
+    """2x2 average pooling via reshape (exact, layout-friendly)."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+
+
+def _conv(x, w, b):
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def forward(params, x):
+    """Logits for a batch of NHWC images in [0, 1]."""
+    (c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b) = params
+    h = jax.nn.relu(_conv(x, c1w, c1b))
+    h = _avg_pool2(h)
+    h = jax.nn.relu(_conv(h, c2w, c2b))
+    h = _avg_pool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(dense_matmul(h, f1w) + f1b)
+    return dense_matmul(h, f2w) + f2b
+
+
+def loss_fn(params, x, y):
+    """Mean softmax cross-entropy with integer labels."""
+    logits = forward(params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, CLASSES, dtype=logp.dtype)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points (flat-argument signatures for the HLO/manifest).
+
+
+def train_step(*args):
+    """(*params, x, y) -> (loss, *grads)."""
+    params = args[: len(PARAM_SPECS)]
+    x, y = args[len(PARAM_SPECS):]
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    return (loss,) + tuple(grads)
+
+
+def sgd_update(*args):
+    """(*params, *grads, lr) -> (*new_params,).
+
+    Every tensor is flattened through the Layer-1 fused SGD kernel and
+    reshaped back — the same flat-buffer view the coordinator's fusion
+    buffer uses for the all-reduce.
+    """
+    n = len(PARAM_SPECS)
+    params = args[:n]
+    grads = args[n: 2 * n]
+    lr = args[2 * n]
+    new = []
+    for p, g in zip(params, grads):
+        flat = sgd_kernel(p.reshape(-1), g.reshape(-1), lr)
+        new.append(flat.reshape(p.shape))
+    return tuple(new)
+
+
+def predict(*args):
+    """(*params, x) -> (logits,)."""
+    params = args[: len(PARAM_SPECS)]
+    (x,) = args[len(PARAM_SPECS):]
+    return (forward(params, x),)
+
+
+# ---------------------------------------------------------------------------
+# Initialization (compile-time only; exported as init_params.bin).
+
+
+def init_params(seed=0):
+    """He-initialized parameters as a tuple in PARAM_SPECS order."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for name, shape in PARAM_SPECS:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            scale = jnp.sqrt(2.0 / fan_in)
+            out.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return tuple(out)
+
+
+def synthetic_batch(seed=0, batch=BATCH):
+    """Deterministic labeled batch matching rust/src/trainer/data.rs.
+
+    Class k's images are a fixed random template + noise; mirrors the rust
+    generator closely enough for loss-decreases tests on the python side.
+    """
+    key = jax.random.PRNGKey(1234)
+    templates = jax.random.uniform(key, (CLASSES,) + IMAGE)
+    key = jax.random.PRNGKey(seed + 5678)
+    ky, kn = jax.random.split(key)
+    y = jax.random.randint(ky, (batch,), 0, CLASSES)
+    noise = 0.25 * jax.random.normal(kn, (batch,) + IMAGE)
+    x = jnp.clip(templates[y] + noise, 0.0, 1.0)
+    return x.astype(jnp.float32), y.astype(jnp.int32)

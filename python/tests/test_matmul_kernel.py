@@ -1,0 +1,104 @@
+# Hypothesis sweep of the Pallas tiled matmul kernel against the pure-jnp
+# oracle — shapes, dtypes, and block configurations.
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul
+from compile.kernels.ref import matmul_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_matmul_matches_ref_f32(m, k, n, seed):
+    x = _rand((m, k), jnp.float32, seed)
+    w = _rand((k, n), jnp.float32, seed + 1)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w)), np.asarray(matmul_ref(x, w)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 48),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_matmul_matches_ref_bf16_inputs(m, k, n, seed):
+    # bf16 inputs are promoted to f32 accumulation (MXU semantics).
+    x = _rand((m, k), jnp.bfloat16, seed)
+    w = _rand((k, n), jnp.bfloat16, seed + 1)
+    got = np.asarray(matmul(x, w))
+    want = np.asarray(matmul_ref(x, w))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@given(
+    bm=st.sampled_from([8, 16, 32, 128]),
+    bn=st.sampled_from([8, 16, 32, 128]),
+    bk=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_matmul_block_configs_equivalent(bm, bn, bk, seed):
+    # The tile shape is a performance knob, never a correctness knob.
+    x = _rand((40, 56), jnp.float32, seed)
+    w = _rand((56, 24), jnp.float32, seed + 1)
+    got = np.asarray(matmul(x, w, block=(bm, bn, bk)))
+    want = np.asarray(matmul_ref(x, w))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_identity():
+    x = jnp.eye(17, dtype=jnp.float32)
+    w = _rand((17, 17), jnp.float32, 0)
+    np.testing.assert_allclose(np.asarray(matmul(x, w)), np.asarray(w), rtol=1e-6)
+
+
+def test_matmul_zero():
+    x = jnp.zeros((5, 9), jnp.float32)
+    w = _rand((9, 3), jnp.float32, 0)
+    assert np.all(np.asarray(matmul(x, w)) == 0.0)
+
+
+def test_matmul_tile_larger_than_operand():
+    # Tiles shrink to the operand; no padding blow-up.
+    x = _rand((2, 3), jnp.float32, 1)
+    w = _rand((3, 2), jnp.float32, 2)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w, block=(128, 128, 128))),
+        np.asarray(matmul_ref(x, w)), rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((2, 3), jnp.float32)
+    with pytest.raises(ValueError):
+        matmul(x, jnp.zeros((4, 2), jnp.float32))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((2,), jnp.float32), jnp.zeros((2, 2), jnp.float32))
+
+
+def test_matmul_large_rectangular():
+    # Exercises multi-block grids on every axis.
+    x = _rand((130, 260), jnp.float32, 7)
+    w = _rand((260, 140), jnp.float32, 8)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w, block=(64, 64, 64))),
+        np.asarray(matmul_ref(x, w)), rtol=1e-4, atol=1e-4,
+    )

@@ -1,0 +1,75 @@
+# Hypothesis sweep of the fused SGD Pallas kernels against the jnp oracle.
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import sgd_update, sgd_momentum_update
+from compile.kernels.ref import sgd_ref, sgd_momentum_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(n), jnp.float32)
+
+
+@given(
+    n=st.integers(1, 200_000),
+    lr=st.floats(0.0, 1.0, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_sgd_matches_ref(n, lr, seed):
+    p = _rand(n, seed)
+    g = _rand(n, seed + 1)
+    np.testing.assert_allclose(
+        np.asarray(sgd_update(p, g, lr)), np.asarray(sgd_ref(p, g, lr)),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+@given(
+    n=st.integers(1, 50_000),
+    tile=st.sampled_from([1, 7, 64, 4096, 65536]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_sgd_tile_is_not_a_correctness_knob(n, tile, seed):
+    p = _rand(n, seed)
+    g = _rand(n, seed + 1)
+    np.testing.assert_allclose(
+        np.asarray(sgd_update(p, g, 0.1, tile=tile)),
+        np.asarray(sgd_ref(p, g, 0.1)), rtol=1e-6, atol=1e-6,
+    )
+
+
+@given(
+    n=st.integers(1, 100_000),
+    lr=st.floats(0.0, 1.0, allow_nan=False),
+    mu=st.floats(0.0, 0.999, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_sgd_momentum_matches_ref(n, lr, mu, seed):
+    p = _rand(n, seed)
+    g = _rand(n, seed + 1)
+    m = _rand(n, seed + 2)
+    got_p, got_m = sgd_momentum_update(p, g, m, lr, mu)
+    want_p, want_m = sgd_momentum_ref(p, g, m, lr, mu)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(want_p), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_m), np.asarray(want_m), rtol=1e-5, atol=1e-5)
+
+
+def test_sgd_zero_lr_is_identity():
+    p = _rand(1001, 3)
+    g = _rand(1001, 4)
+    np.testing.assert_array_equal(np.asarray(sgd_update(p, g, 0.0)), np.asarray(p))
+
+
+def test_sgd_rejects_mismatched_shapes():
+    with pytest.raises(ValueError):
+        sgd_update(jnp.zeros(3), jnp.zeros(4), 0.1)
+    with pytest.raises(ValueError):
+        sgd_momentum_update(jnp.zeros(3), jnp.zeros(3), jnp.zeros(2), 0.1, 0.9)

@@ -1,0 +1,15 @@
+//! Bench: design-choice ablations (fusion capacity, overlap, GPUDirect,
+//! RDMA-vs-TCP).
+use std::time::Instant;
+
+fn main() {
+    let start = Instant::now();
+    let (fusion, _) = fabricbench::experiments::ablations::fusion_sweep(false);
+    let (toggles, _) = fabricbench::experiments::ablations::toggles(false);
+    println!("{}", fusion.to_markdown());
+    println!("{}", toggles.to_markdown());
+    let rec = fabricbench::metrics::Recorder::new();
+    let _ = rec.save("ablation_fusion", &fusion);
+    let _ = rec.save("ablation_toggles", &toggles);
+    println!("bench_ablations: done in {:.2} s", start.elapsed().as_secs_f64());
+}

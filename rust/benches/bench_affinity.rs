@@ -1,0 +1,14 @@
+//! Bench: §IV.B PCIe affinity study with Welch's t-test.
+use std::time::Instant;
+
+fn main() {
+    let start = Instant::now();
+    let (table, results) = fabricbench::experiments::affinity::run(false);
+    println!("{}", table.to_markdown());
+    let _ = fabricbench::metrics::Recorder::new().save("affinity_study", &table);
+    for r in &results {
+        let worst = r.p_values.iter().map(|&(_, p)| p).fold(f64::INFINITY, f64::min);
+        println!("{}: smallest pairwise p = {:.3}", r.fabric, worst);
+    }
+    println!("bench_affinity: done in {:.2} s", start.elapsed().as_secs_f64());
+}

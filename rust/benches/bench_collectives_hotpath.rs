@@ -1,0 +1,71 @@
+//! Bench: the L3 hot paths of the collective library — the real f32
+//! reduction arithmetic (GB/s) and full allreduce passes over
+//! RealBuffers. This is the target of the §Perf optimization pass.
+
+use fabricbench::cluster::Placement;
+use fabricbench::collectives::{
+    Collective, Hierarchical, RealBuffers, RecursiveHalvingDoubling, RingAllreduce,
+};
+use fabricbench::config::presets::fabric;
+use fabricbench::config::spec::{ClusterSpec, FabricKind, TransportOptions};
+use fabricbench::fabric::{Comm, NetSim};
+use fabricbench::util::rng::Rng;
+use std::time::Instant;
+
+fn random_buffers(ranks: usize, elems: usize, seed: u64) -> RealBuffers {
+    let mut rng = Rng::new(seed);
+    RealBuffers::new(
+        (0..ranks)
+            .map(|_| (0..elems).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect())
+            .collect(),
+    )
+}
+
+fn bench_algo(name: &str, algo: &dyn Collective, ranks: usize, elems: usize, iters: usize) {
+    let cluster = ClusterSpec::txgaia();
+    let placement = Placement::gpus(&cluster, ranks).unwrap();
+    let mut net = NetSim::new(
+        fabric(FabricKind::OmniPath100),
+        cluster,
+        TransportOptions::default(),
+    );
+    // Pre-generate buffers so only the allreduce is timed.
+    let mut all: Vec<RealBuffers> = (0..iters + 1)
+        .map(|i| random_buffers(ranks, elems, i as u64))
+        .collect();
+    // Warm.
+    {
+        let mut comm = Comm::new(&mut net, &placement);
+        algo.allreduce(&mut comm, &mut all[iters]);
+    }
+    let start = Instant::now();
+    for bufs in all.iter_mut().take(iters) {
+        net.reset();
+        let mut comm = Comm::new(&mut net, &placement);
+        algo.allreduce(&mut comm, bufs);
+        std::hint::black_box(bufs.data[0][0]);
+    }
+    let total = start.elapsed().as_secs_f64();
+    // Reduction work per allreduce ~ 2 * ranks * elems * 4 bytes touched.
+    let bytes = 2.0 * ranks as f64 * elems as f64 * 4.0 * iters as f64;
+    println!(
+        "{name:>14}  ranks={ranks:<3} elems={elems:<9} {:>8.1} ms/op  {:>7.2} GB/s effective",
+        total / iters as f64 * 1e3,
+        bytes / total / 1e9
+    );
+}
+
+fn main() {
+    println!("collective hot-path benchmark (RealBuffers, OPA fabric model)\n");
+    for &(ranks, elems, iters) in &[
+        (8usize, 1_000_000usize, 10usize),
+        (16, 1_000_000, 6),
+        (16, 4_000_000, 3),
+        (32, 1_000_000, 3),
+    ] {
+        bench_algo("ring", &RingAllreduce, ranks, elems, iters);
+        bench_algo("rhd", &RecursiveHalvingDoubling, ranks, elems, iters);
+        bench_algo("hierarchical", &Hierarchical::default(), ranks, elems, iters);
+        println!();
+    }
+}

@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig 3 (CartDG strong scaling on both fabrics).
+use std::time::Instant;
+
+fn main() {
+    let start = Instant::now();
+    let (table, rows) = fabricbench::experiments::fig3::run(false);
+    let dt = start.elapsed();
+    println!("{}", table.to_markdown());
+    let _ = fabricbench::metrics::Recorder::new().save("fig3_cartdg_scaling", &table);
+    // Headline check mirrored from the paper.
+    let parity: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.fabric.contains("GbE"))
+        .filter_map(|e| {
+            rows.iter()
+                .find(|o| o.fabric.contains("OPA") && o.cores == e.cores)
+                .map(|o| e.comm / o.comm)
+        })
+        .collect();
+    println!(
+        "comm-time eth/opa ratios: min {:.2} max {:.2} (paper: ~1.0)",
+        parity.iter().cloned().fold(f64::INFINITY, f64::min),
+        parity.iter().cloned().fold(0.0, f64::max)
+    );
+    println!("bench_fig3_cartdg: full sweep in {:.2} s", dt.as_secs_f64());
+}

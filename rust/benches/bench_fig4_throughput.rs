@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig 4 (training throughput, both fabrics, 2-512
+//! GPUs) and report the Ethernet deficit headline.
+use std::time::Instant;
+
+fn main() {
+    let start = Instant::now();
+    let (table, rows) = fabricbench::experiments::fig4::run(false);
+    let dt = start.elapsed();
+    println!("{}", table.to_markdown());
+    let _ = fabricbench::metrics::Recorder::new().save("fig4_throughput", &table);
+    println!(
+        "mean Ethernet deficit vs OPA: {:.2}%  (paper: 12.78%)",
+        fabricbench::experiments::fig4::mean_ethernet_deficit(&rows)
+    );
+    println!("bench_fig4_throughput: full sweep in {:.2} s", dt.as_secs_f64());
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate Fig 5 (three all-reduce strategies x both fabrics
+//! x 2-512 GPUs for all four models).
+use std::time::Instant;
+
+fn main() {
+    let start = Instant::now();
+    let (table, rows) = fabricbench::experiments::fig5::run(false);
+    let dt = start.elapsed();
+    println!("{}", table.to_markdown());
+    let _ = fabricbench::metrics::Recorder::new().save("fig5_allreduce_strategies", &table);
+    // The paper's 512-GPU observation: ResNet50_v1.5 degrades on Ethernet.
+    let v15 = |fabric: &str, gpus: usize| {
+        rows.iter()
+            .find(|r| {
+                r.model == "resnet50_v1.5"
+                    && r.strategy.contains("ring")
+                    && r.fabric.contains(fabric)
+                    && r.gpus == gpus
+            })
+            .map(|r| r.images_per_sec)
+            .unwrap_or(0.0)
+    };
+    let eth_eff = v15("GbE", 512) / (v15("GbE", 256) * 2.0);
+    let opa_eff = v15("OPA", 512) / (v15("OPA", 256) * 2.0);
+    println!(
+        "ResNet50_v1.5 256->512 GPU scaling: eth {:.2}x-of-ideal vs opa {:.2}x-of-ideal",
+        eth_eff, opa_eff
+    );
+    println!("bench_fig5_allreduce: full sweep in {:.2} s", dt.as_secs_f64());
+}

@@ -1,0 +1,14 @@
+//! Bench: OSU-style fabric microbenchmarks (latency/bandwidth sweeps).
+use std::time::Instant;
+
+fn main() {
+    let start = Instant::now();
+    let p2p = fabricbench::experiments::microbench::p2p(false);
+    let ar = fabricbench::experiments::microbench::allreduce(false);
+    println!("{}", p2p.to_markdown());
+    println!("{}", ar.to_markdown());
+    let rec = fabricbench::metrics::Recorder::new();
+    let _ = rec.save("microbench_p2p", &p2p);
+    let _ = rec.save("microbench_allreduce", &ar);
+    println!("bench_microbench_fabric: done in {:.2} s", start.elapsed().as_secs_f64());
+}

@@ -1,0 +1,95 @@
+//! Bench: raw fabric-simulator throughput — simulated messages/second
+//! for p2p delivery and full-scale (512-GPU) allreduce timing runs. The
+//! Fig 4/5 sweeps are built out of millions of these events, so this is
+//! the other §Perf target.
+
+use fabricbench::cluster::Placement;
+use fabricbench::collectives::{Collective, NullBuffers, RingAllreduce};
+use fabricbench::config::presets::fabric;
+use fabricbench::config::spec::{ClusterSpec, FabricKind, TransportOptions};
+use fabricbench::fabric::{Comm, NetSim};
+use std::time::Instant;
+
+fn main() {
+    let cluster = ClusterSpec::txgaia();
+
+    // 1. Raw message throughput.
+    let placement = Placement::cores(&cluster, 448 * 40).unwrap();
+    let mut net = NetSim::new(
+        fabric(FabricKind::EthernetRoce25),
+        cluster.clone(),
+        TransportOptions::default(),
+    );
+    let n = 2_000_000u64;
+    let start = Instant::now();
+    for i in 0..n {
+        let src = (i % 17000) as usize;
+        let dst = (i % 17909 + 1) as usize;
+        let (_, done) = net.message(
+            placement.endpoints[src],
+            placement.endpoints[dst],
+            (i % 65536) as f64,
+            0.0,
+        );
+        std::hint::black_box(done);
+        if i % 100_000 == 0 {
+            net.reset(); // keep resource clocks bounded
+        }
+    }
+    let dt = start.elapsed().as_secs_f64();
+    println!(
+        "p2p events: {:.2} M messages/s  ({:.0} ns/message)",
+        n as f64 / dt / 1e6,
+        dt / n as f64 * 1e9
+    );
+
+    // 2. Full-scale allreduce simulation (512 GPUs, ResNet50-sized bucket).
+    let placement = Placement::gpus(&cluster, 512).unwrap();
+    let elems = 25_557_032usize / 2;
+    for kind in [FabricKind::EthernetRoce25, FabricKind::OmniPath100] {
+        let mut net = NetSim::new(fabric(kind), cluster.clone(), TransportOptions::default());
+        let start = Instant::now();
+        let iters = 5;
+        let mut virt = 0.0;
+        for _ in 0..iters {
+            net.reset();
+            let mut comm = Comm::new(&mut net, &placement);
+            virt = RingAllreduce.allreduce(&mut comm, &mut NullBuffers { elems });
+        }
+        let dt = start.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "512-GPU ring allreduce sim ({}): {:.1} ms wall / {:.1} ms virtual",
+            net.fabric.name,
+            dt * 1e3,
+            virt * 1e3
+        );
+    }
+
+    // 3. One full Fig4-style trainer run at 512 GPUs.
+    let trainer = fabricbench::trainer::TrainerSim {
+        arch: fabricbench::models::zoo::resnet50(),
+        fabric: fabric(FabricKind::EthernetRoce25),
+        cluster,
+        opts: TransportOptions::default(),
+        strategy: Box::new(RingAllreduce),
+        per_gpu_batch: 64,
+        precision: fabricbench::models::perf::Precision::Fp32,
+        fusion_bytes: 64.0 * 1024.0 * 1024.0,
+        overlap: true,
+        step_overhead: 0.0,
+        coordination_overhead:
+            fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+    };
+    let spec = fabricbench::config::spec::RunSpec {
+        warmup_steps: 0,
+        measure_steps: 3,
+        ..Default::default()
+    };
+    let start = Instant::now();
+    let r = trainer.run(512, &spec).unwrap();
+    println!(
+        "512-GPU trainer sim: {:.2} s wall for 3 steps ({:.0} img/s virtual)",
+        start.elapsed().as_secs_f64(),
+        r.images_per_sec
+    );
+}

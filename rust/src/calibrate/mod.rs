@@ -1,0 +1,124 @@
+//! Calibration: measure the real MiniCNN train-step through PJRT on this
+//! machine, derive achieved FLOP/s, and report the efficiency ratio — the
+//! same method the perf model applies to published V100 numbers
+//! (DESIGN.md §6). Results land in results/calibration.json.
+
+use crate::runtime::engine::{Engine, Input};
+use crate::trainer::data::SyntheticDataset;
+use crate::util::json::{arr, num, obj, s, Json};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Analytic forward FLOPs per image of the MiniCNN (mirrors
+/// python/compile/model.py: conv 3x3x3->8 @16x16, conv 3x3x8->16 @8x8,
+/// fc 256->128, fc 128->10; 2 FLOPs per MAC).
+pub fn minicnn_flops_fwd_per_image() -> f64 {
+    let conv1 = 2.0 * (3.0 * 3.0 * 3.0) * (8.0 * 16.0 * 16.0);
+    let conv2 = 2.0 * (3.0 * 3.0 * 8.0) * (16.0 * 8.0 * 8.0);
+    let fc1 = 2.0 * 256.0 * 128.0;
+    let fc2 = 2.0 * 128.0 * 10.0;
+    conv1 + conv2 + fc1 + fc2
+}
+
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub steps: usize,
+    pub batch: usize,
+    pub wall_per_step: f64,
+    pub achieved_flops: f64,
+    pub images_per_sec: f64,
+}
+
+impl Calibration {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", s("minicnn")),
+            ("steps", num(self.steps as f64)),
+            ("batch", num(self.batch as f64)),
+            ("wall_per_step_sec", num(self.wall_per_step)),
+            ("achieved_flops", num(self.achieved_flops)),
+            ("images_per_sec", num(self.images_per_sec)),
+            ("method", s("real PJRT train_step, fwd+bwd approximated as 3x fwd FLOPs")),
+            ("shapes", arr(vec![num(16.0), num(16.0), num(3.0)])),
+        ])
+    }
+}
+
+/// Run `steps` real train-steps and time them.
+pub fn run(engine: &Engine, steps: usize) -> Result<Calibration> {
+    let train_step = engine.compile("train_step")?;
+    let manifest = &engine.manifest;
+    let params = manifest.load_init_params(&engine.dir)?;
+    let shapes: Vec<Vec<usize>> = manifest.params.iter().map(|p| p.shape.clone()).collect();
+    let dataset = SyntheticDataset::new(1, 0.25);
+    let batch = manifest.batch;
+    let img_shape = [batch, manifest.image[0], manifest.image[1], manifest.image[2]];
+    let label_shape = [batch];
+
+    // Warmup (compile caches, allocator).
+    let (x, y) = dataset.batch(0, 0, 1, batch);
+    let mut inputs: Vec<Input> = params
+        .iter()
+        .zip(&shapes)
+        .map(|(p, sh)| Input::F32(p, sh))
+        .collect();
+    inputs.push(Input::F32(&x, &img_shape));
+    inputs.push(Input::I32(&y, &label_shape));
+    train_step.run(&inputs)?;
+
+    let start = Instant::now();
+    for step in 0..steps {
+        let (x, y) = dataset.batch(step as u64 + 1, 0, 1, batch);
+        let mut inputs: Vec<Input> = params
+            .iter()
+            .zip(&shapes)
+            .map(|(p, sh)| Input::F32(p, sh))
+            .collect();
+        inputs.push(Input::F32(&x, &img_shape));
+        inputs.push(Input::I32(&y, &label_shape));
+        let out = train_step.run(&inputs)?;
+        std::hint::black_box(out[0][0]);
+    }
+    let wall = start.elapsed().as_secs_f64();
+    let per_step = wall / steps as f64;
+    let flops_per_step = minicnn_flops_fwd_per_image() * batch as f64 * 3.0;
+    Ok(Calibration {
+        steps,
+        batch,
+        wall_per_step: per_step,
+        achieved_flops: flops_per_step / per_step,
+        images_per_sec: batch as f64 / per_step,
+    })
+}
+
+/// Save to results/calibration.json.
+pub fn save(cal: &Calibration, dir: &std::path::Path) -> Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("calibration.json");
+    std::fs::write(&path, cal.to_json().to_string())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_formula() {
+        // conv1 54*2048=110,592... assert exact structure.
+        let f = minicnn_flops_fwd_per_image();
+        assert_eq!(f, 110_592.0 + 147_456.0 + 65_536.0 + 2_560.0);
+    }
+
+    #[test]
+    fn calibration_runs_if_artifacts_present() {
+        let Some(dir) = crate::runtime::artifacts_dir() else { return };
+        let engine = Engine::load(&dir).unwrap();
+        let cal = run(&engine, 3).unwrap();
+        assert!(cal.wall_per_step > 0.0);
+        assert!(cal.achieved_flops > 0.0);
+        assert!(cal.images_per_sec > 0.0);
+        let j = cal.to_json().to_string();
+        assert!(j.contains("achieved_flops"));
+    }
+}

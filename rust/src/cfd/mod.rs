@@ -1,0 +1,18 @@
+//! CartDG substrate: the paper's second benchmark is a Discontinuous-
+//! Galerkin compressible Navier-Stokes solver (CartDG) strong-scaled over
+//! CPU cores on both fabrics (Fig 3).
+//!
+//! We build (a) a **real miniature tensor-product DG kernel** — the
+//! per-element operator CartDG's cost is dominated by — which runs on this
+//! machine to ground the per-element compute cost, and (b) a mesh
+//! partitioner + halo-exchange model that reproduces the strong-scaling
+//! experiment on the simulated fabrics, including the rack-boundary
+//! plateau the paper observed between 1,280 and 2,560 cores.
+
+pub mod dg;
+pub mod mesh;
+pub mod solver;
+
+pub use dg::DgKernel;
+pub use mesh::MeshPartition;
+pub use solver::{ScalingPoint, StrongScaling};

@@ -1,0 +1,227 @@
+//! CartDG strong-scaling driver (Fig 3): per-iteration compute and
+//! communication time vs core count, per fabric.
+//!
+//! Compute: elements/rank x per-element cost. The per-element cost
+//! defaults to the paper's reported efficiency (CartDG sustains >10% of
+//! peak on tensor-product operators) applied to TX-GAIA's Xeon 6248
+//! cores, and can be grounded with the *measured* cost of the real
+//! [`super::dg::DgKernel`] on this machine.
+//!
+//! Communication: one halo exchange per RK stage — six periodic face
+//! messages per rank over the simulated fabric with block placement
+//! (40 cores/node, 32 nodes/rack). Inter-rack messages pay switch hops,
+//! which is what produces the plateau between 1,280 and 2,560 cores.
+
+use super::dg::DgKernel;
+use super::mesh::MeshPartition;
+use crate::cluster::Placement;
+use crate::config::{ClusterSpec, FabricSpec, TransportOptions};
+use crate::fabric::{Comm, NetSim};
+
+/// Xeon Gold 6248 per-core peak (2.5 GHz x AVX-512 FMA = 80 GFLOP/s) and
+/// the paper's ">10% of peak" sustained efficiency for CartDG.
+pub const CORE_PEAK_FLOPS: f64 = 80.0e9;
+pub const CARTDG_EFFICIENCY: f64 = 0.10;
+
+/// The real [`DgKernel`] implements the tensor-product derivative core;
+/// a full compressible Navier-Stokes RHS adds flux evaluations, the
+/// equation of state and viscous terms on top — roughly an order of
+/// magnitude more arithmetic per element (Kirby 2018).
+pub const NS_PHYSICS_FACTOR: f64 = 10.0;
+
+/// Fraction of a stage's compute absorbed as straggler wait in
+/// MPI_Waitall (OS noise / per-core variation).
+pub const IMBALANCE_FRACTION: f64 = 0.03;
+
+/// One point on the strong-scaling curve.
+#[derive(Clone, Debug)]
+pub struct ScalingPoint {
+    pub cores: usize,
+    pub compute_time: f64,
+    /// Measured (exposed) communication time: CartDG overlaps the halo
+    /// exchange with interior compute, so the wire time hidden under the
+    /// interior update never shows up in the profile — this is how the
+    /// paper can observe near-identical comm times on a 25 Gb/s and a
+    /// 100 Gb/s fabric (see DESIGN.md).
+    pub comm_time: f64,
+    /// Raw wire time of the halo exchange (no overlap), for reference.
+    pub comm_wire_time: f64,
+    pub elems_per_rank: usize,
+    pub inter_rack_messages: u64,
+}
+
+impl ScalingPoint {
+    pub fn total(&self) -> f64 {
+        self.compute_time + self.comm_time
+    }
+}
+
+/// Strong-scaling experiment configuration.
+pub struct StrongScaling {
+    pub mesh: (usize, usize, usize),
+    pub cluster: ClusterSpec,
+    /// Seconds per element per RHS evaluation.
+    pub per_elem_seconds: f64,
+    /// Runge-Kutta stages per iteration (halo exchange each stage).
+    pub rk_stages: usize,
+}
+
+impl StrongScaling {
+    /// Paper configuration with the analytic per-element cost.
+    pub fn paper() -> Self {
+        StrongScaling {
+            mesh: super::mesh::PAPER_MESH,
+            cluster: ClusterSpec::txgaia(),
+            per_elem_seconds: NS_PHYSICS_FACTOR * DgKernel::flops_per_elem()
+                / (CORE_PEAK_FLOPS * CARTDG_EFFICIENCY),
+            rk_stages: 4,
+        }
+    }
+
+    /// Ground the per-element cost with the real DG kernel measured on
+    /// this machine (scaled by the same physics factor).
+    pub fn with_measured_kernel(mut self) -> Self {
+        let kernel = DgKernel::new();
+        self.per_elem_seconds = NS_PHYSICS_FACTOR * kernel.measure_per_elem_seconds(32, 2);
+        self
+    }
+
+    /// Simulate one iteration at `cores` ranks on `fabric`.
+    pub fn run_point(&self, fabric: &FabricSpec, cores: usize) -> anyhow::Result<ScalingPoint> {
+        let part = MeshPartition::new(self.mesh, cores);
+        let placement = Placement::cores(&self.cluster, cores)?;
+        let mut net = NetSim::new(fabric.clone(), self.cluster.clone(), TransportOptions::default());
+        // Every rank exchanges with ~6 neighbors concurrently.
+        net.set_active_flows(placement.nodes_used() as f64);
+
+        let elems = part.elems_per_rank();
+        let compute_time =
+            self.rk_stages as f64 * elems as f64 * self.per_elem_seconds;
+
+        // Halo exchange: all face messages of one stage form one round.
+        let mut msgs: Vec<(usize, usize, f64)> = Vec::new();
+        for r in 0..cores {
+            for (n, face_elems) in part.neighbors(r) {
+                let bytes = face_elems as f64 * MeshPartition::face_bytes_per_elem();
+                msgs.push((r, n, bytes));
+            }
+        }
+        let mut comm = Comm::new(&mut net, &placement);
+        comm.round(&msgs);
+        let wire_per_stage = comm.max_time();
+
+        // Computation-communication overlap: CartDG posts non-blocking
+        // halo sends and overlaps them with the stage's element updates
+        // (that design is how it scaled to a million ranks on Mira). Wire
+        // time up to one stage's compute window is hidden; what remains
+        // exposed is the per-message MPI software overhead (pack, post,
+        // wait, completion) plus any wire time exceeding the window.
+        let interior_window = elems as f64 * self.per_elem_seconds;
+        let msgs_per_rank = part.neighbors(0).len() as f64;
+        let sync_overhead = msgs_per_rank
+            * (fabric.per_msg_overhead + fabric.latency)
+            // Inter-rack traffic pays the switch hops on the wait path.
+            + if net.stats.inter_rack_messages > 0 { 2.0 * fabric.switch_hop_latency } else { 0.0 };
+        // Straggler wait: MPI_Waitall also absorbs per-rank compute jitter
+        // (OS noise, cache effects) — a few percent of the stage compute.
+        // Fabric-independent, shrinks with strong scaling: this is the
+        // dominant measured "communication time" at low core counts and
+        // why the paper's comm bars decrease with scale identically on
+        // both fabrics.
+        let imbalance = IMBALANCE_FRACTION * interior_window;
+        let exposed_per_stage =
+            (wire_per_stage - interior_window).max(0.0) + sync_overhead + imbalance;
+
+        Ok(ScalingPoint {
+            cores,
+            compute_time,
+            comm_time: self.rk_stages as f64 * exposed_per_stage,
+            comm_wire_time: self.rk_stages as f64 * wire_per_stage,
+            elems_per_rank: elems,
+            inter_rack_messages: net.stats.inter_rack_messages,
+        })
+    }
+
+    /// Full strong-scaling sweep.
+    pub fn sweep(&self, fabric: &FabricSpec, core_counts: &[usize]) -> anyhow::Result<Vec<ScalingPoint>> {
+        core_counts.iter().map(|&c| self.run_point(fabric, c)).collect()
+    }
+
+    /// The paper's core counts (40-core nodes, up to ~12.8k cores).
+    pub fn paper_core_counts() -> Vec<usize> {
+        vec![40, 80, 160, 320, 640, 1280, 2560, 5120, 10240, 12800]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fabric;
+    use crate::config::spec::FabricKind;
+
+    #[test]
+    fn compute_strong_scales() {
+        let s = StrongScaling::paper();
+        let f = fabric(FabricKind::OmniPath100);
+        let p40 = s.run_point(&f, 40).unwrap();
+        let p640 = s.run_point(&f, 640).unwrap();
+        let speedup = p40.compute_time / p640.compute_time;
+        assert!(speedup > 10.0, "compute speedup {speedup} at 16x cores");
+    }
+
+    #[test]
+    fn comm_time_nearly_identical_across_fabrics() {
+        // The paper's headline CFD observation.
+        let s = StrongScaling::paper();
+        let eth = fabric(FabricKind::EthernetRoce25);
+        let opa = fabric(FabricKind::OmniPath100);
+        for cores in [160, 1280, 5120] {
+            let te = s.run_point(&eth, cores).unwrap().comm_time;
+            let to = s.run_point(&opa, cores).unwrap().comm_time;
+            let ratio = te / to;
+            assert!(
+                (0.8..2.5).contains(&ratio),
+                "cores={cores}: eth/opa comm ratio {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn rack_boundary_visible() {
+        let s = StrongScaling::paper();
+        let f = fabric(FabricKind::EthernetRoce25);
+        let p1280 = s.run_point(&f, 1280).unwrap();
+        let p2560 = s.run_point(&f, 2560).unwrap();
+        // 1,280 cores = 32 nodes = one rack (no inter-rack traffic);
+        // 2,560 cores = 2 racks.
+        assert_eq!(p1280.inter_rack_messages, 0);
+        assert!(p2560.inter_rack_messages > 0);
+    }
+
+    #[test]
+    fn compute_dominates_at_low_core_counts() {
+        let s = StrongScaling::paper();
+        let f = fabric(FabricKind::OmniPath100);
+        let p = s.run_point(&f, 40).unwrap();
+        assert!(p.compute_time > 5.0 * p.comm_time, "compute {} comm {}", p.compute_time, p.comm_time);
+    }
+
+    #[test]
+    fn measured_kernel_cost_same_order_as_model() {
+        let model = StrongScaling::paper().per_elem_seconds;
+        let measured = StrongScaling::paper().with_measured_kernel().per_elem_seconds;
+        let ratio = measured / model;
+        // This container's cores differ from Xeon 6248 + production flags;
+        // same order of magnitude is the claim.
+        assert!((0.05..50.0).contains(&ratio), "measured/model ratio {ratio}");
+    }
+
+    #[test]
+    fn sweep_produces_monotone_elems() {
+        let s = StrongScaling::paper();
+        let f = fabric(FabricKind::OmniPath100);
+        let pts = s.sweep(&f, &[40, 320, 2560]).unwrap();
+        assert!(pts[0].elems_per_rank > pts[1].elems_per_rank);
+        assert!(pts[1].elems_per_rank > pts[2].elems_per_rank);
+    }
+}

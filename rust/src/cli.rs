@@ -1,0 +1,131 @@
+//! Command-line argument parsing (no external crates): subcommand plus
+//! `--flag`, `--key value` and `--key=value` options.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut options = BTreeMap::new();
+        let mut positional = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' is not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else {
+                    // Value-taking if the next token isn't another flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            options.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            options.insert(stripped.to_string(), "true".to_string());
+                        }
+                    }
+                }
+            } else {
+                positional.push(arg);
+            }
+        }
+        Ok(Args { command, options, positional })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.options.get(name).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["fig4", "--quick", "--gpus", "64", "--lr=0.1", "extra"]);
+        assert_eq!(a.command, "fig4");
+        assert!(a.flag("quick"));
+        assert_eq!(a.get_usize("gpus", 8).unwrap(), 64);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.1);
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["table1"]);
+        assert!(!a.flag("quick"));
+        assert_eq!(a.get_usize("gpus", 8).unwrap(), 8);
+        assert!(a.get("missing").is_none());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = Args::parse(std::iter::empty::<String>()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["x", "--gpus", "lots"]);
+        assert!(a.get_usize("gpus", 1).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--quick", "--verbose"]);
+        assert!(a.flag("quick"));
+        assert!(a.flag("verbose"));
+    }
+}

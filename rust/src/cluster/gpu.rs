@@ -1,0 +1,84 @@
+//! GPU performance catalog — the accelerators appearing in the paper
+//! (TX-GAIA's V100) and in Table I's historical rows.
+
+/// Peak-rate model of a GPU (or the GPUs' relevant subset).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuModel {
+    pub name: &'static str,
+    /// Peak fp32 throughput, FLOP/s.
+    pub peak_fp32: f64,
+    /// Peak mixed-precision (tensor-core / fp16) throughput, FLOP/s.
+    pub peak_fp16: f64,
+    /// Memory bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Device memory, bytes.
+    pub mem_bytes: f64,
+}
+
+pub const V100: GpuModel = GpuModel {
+    name: "V100-32GB",
+    peak_fp32: 15.7e12,
+    peak_fp16: 125.0e12,
+    mem_bw: 900.0e9,
+    mem_bytes: 32.0e9,
+};
+
+pub const P100: GpuModel = GpuModel {
+    name: "P100",
+    peak_fp32: 10.6e12,
+    peak_fp16: 21.2e12,
+    mem_bw: 732.0e9,
+    mem_bytes: 16.0e9,
+};
+
+pub const K40: GpuModel = GpuModel {
+    name: "K40",
+    peak_fp32: 5.0e12,
+    peak_fp16: 5.0e12, // no fast fp16 path
+    mem_bw: 288.0e9,
+    mem_bytes: 12.0e9,
+};
+
+pub const GTX580: GpuModel = GpuModel {
+    name: "GTX 580",
+    peak_fp32: 1.58e12,
+    peak_fp16: 1.58e12,
+    mem_bw: 192.0e9,
+    mem_bytes: 1.5e9,
+};
+
+pub const TITAN_BLACK: GpuModel = GpuModel {
+    name: "Titan Black",
+    peak_fp32: 5.1e12,
+    peak_fp16: 5.1e12,
+    mem_bw: 336.0e9,
+    mem_bytes: 6.0e9,
+};
+
+/// Look up a model by (case-insensitive) name fragment.
+pub fn by_name(name: &str) -> Option<&'static GpuModel> {
+    let n = name.to_ascii_lowercase();
+    [&V100, &P100, &K40, &GTX580, &TITAN_BLACK]
+        .into_iter()
+        .find(|g| g.name.to_ascii_lowercase().contains(&n) || n.contains(&g.name.to_ascii_lowercase()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_ordering_sane() {
+        assert!(V100.peak_fp32 > P100.peak_fp32);
+        assert!(P100.peak_fp32 > K40.peak_fp32);
+        assert!(K40.peak_fp32 > GTX580.peak_fp32);
+        assert!(V100.peak_fp16 > V100.peak_fp32); // tensor cores
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("v100").unwrap().name, "V100-32GB");
+        assert_eq!(by_name("Titan Black").unwrap().name, "Titan Black");
+        assert!(by_name("tpu-v5").is_none());
+    }
+}

@@ -1,0 +1,10 @@
+//! Cluster hardware model: GPU catalog, rank placement, and PCIe-path
+//! reasoning. The [`crate::config::ClusterSpec`] carries the sizes; this
+//! module maps logical ranks (GPUs for training, cores for CFD) onto
+//! nodes/racks and describes intra-node data paths.
+
+pub mod gpu;
+pub mod placement;
+
+pub use gpu::{GpuModel, V100};
+pub use placement::{Endpoint, EndpointKind, Placement};

@@ -1,0 +1,163 @@
+//! Rank placement: maps logical communicator ranks onto cluster nodes.
+//!
+//! Training ranks are GPUs (block placement: ranks 0..G fill node 0 first,
+//! matching `mpirun -map-by slot`); CFD ranks are CPU cores. Placement is
+//! what makes rack boundaries visible to the fabric simulator — the Fig 3
+//! plateau at 1,280→2,560 cores is purely a placement effect.
+
+use crate::config::ClusterSpec;
+
+/// What kind of device terminates a message path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EndpointKind {
+    /// GPU memory (training): subject to GPUDirect / staged-copy modeling.
+    Gpu,
+    /// Host memory (CFD / CPU MPI ranks).
+    Cpu,
+}
+
+/// A rank's physical location.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Endpoint {
+    pub rank: usize,
+    pub node: usize,
+    /// Slot within the node (GPU index or core index).
+    pub slot: usize,
+    pub kind: EndpointKind,
+}
+
+/// Block placement of `ranks` logical ranks over the cluster.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub endpoints: Vec<Endpoint>,
+    pub slots_per_node: usize,
+}
+
+impl Placement {
+    /// GPUs: `gpus` ranks, `cluster.gpus_per_node` per node.
+    pub fn gpus(cluster: &ClusterSpec, gpus: usize) -> anyhow::Result<Placement> {
+        Self::block(gpus, cluster.gpus_per_node, cluster.nodes, EndpointKind::Gpu)
+    }
+
+    /// CPU cores: `cores` ranks, `cluster.cores_per_node` per node.
+    pub fn cores(cluster: &ClusterSpec, cores: usize) -> anyhow::Result<Placement> {
+        Self::block(cores, cluster.cores_per_node, cluster.nodes, EndpointKind::Cpu)
+    }
+
+    fn block(
+        ranks: usize,
+        per_node: usize,
+        max_nodes: usize,
+        kind: EndpointKind,
+    ) -> anyhow::Result<Placement> {
+        anyhow::ensure!(ranks > 0, "placement of zero ranks");
+        let nodes_needed = ranks.div_ceil(per_node);
+        anyhow::ensure!(
+            nodes_needed <= max_nodes,
+            "{ranks} ranks need {nodes_needed} nodes but cluster has {max_nodes}"
+        );
+        let endpoints = (0..ranks)
+            .map(|r| Endpoint { rank: r, node: r / per_node, slot: r % per_node, kind })
+            .collect();
+        Ok(Placement { endpoints, slots_per_node: per_node })
+    }
+
+    pub fn len(&self) -> usize {
+        self.endpoints.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.endpoints.is_empty()
+    }
+
+    pub fn nodes_used(&self) -> usize {
+        self.endpoints.last().map_or(0, |e| e.node + 1)
+    }
+
+    /// Are two ranks on the same node?
+    pub fn same_node(&self, a: usize, b: usize) -> bool {
+        self.endpoints[a].node == self.endpoints[b].node
+    }
+
+    /// Do two ranks sit in different racks?
+    pub fn crosses_rack(&self, cluster: &ClusterSpec, a: usize, b: usize) -> bool {
+        cluster.rack_of_node(self.endpoints[a].node)
+            != cluster.rack_of_node(self.endpoints[b].node)
+    }
+
+    /// Ranks grouped by node (for hierarchical collectives).
+    pub fn by_node(&self) -> Vec<Vec<usize>> {
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.nodes_used()];
+        for e in &self.endpoints {
+            groups[e.node].push(e.rank);
+        }
+        groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::util::prop;
+
+    #[test]
+    fn gpu_block_placement() {
+        let c = ClusterSpec::txgaia();
+        let p = Placement::gpus(&c, 8).unwrap();
+        assert_eq!(p.len(), 8);
+        assert_eq!(p.nodes_used(), 4);
+        assert!(p.same_node(0, 1));
+        assert!(!p.same_node(1, 2));
+        assert_eq!(p.endpoints[5].node, 2);
+        assert_eq!(p.endpoints[5].slot, 1);
+    }
+
+    #[test]
+    fn rack_crossing_at_boundary() {
+        let c = ClusterSpec::txgaia();
+        // 32 nodes/rack * 2 GPUs = 64 GPUs in rack 0.
+        let p = Placement::gpus(&c, 128).unwrap();
+        assert!(!p.crosses_rack(&c, 0, 63));
+        assert!(p.crosses_rack(&c, 63, 64));
+    }
+
+    #[test]
+    fn core_placement_matches_cfd_geometry() {
+        let c = ClusterSpec::txgaia();
+        // 1280 cores = 32 nodes = exactly one rack (the Fig 3 plateau).
+        let p = Placement::cores(&c, 1280).unwrap();
+        assert_eq!(p.nodes_used(), 32);
+        assert!(!p.crosses_rack(&c, 0, 1279));
+        let p2 = Placement::cores(&c, 2560).unwrap();
+        assert!(p2.crosses_rack(&c, 0, 2559));
+    }
+
+    #[test]
+    fn rejects_oversubscription() {
+        let c = ClusterSpec::txgaia();
+        assert!(Placement::gpus(&c, 2 * 448 + 1).is_err());
+        assert!(Placement::gpus(&c, 0).is_err());
+    }
+
+    #[test]
+    fn by_node_partitions_all_ranks() {
+        let c = ClusterSpec::txgaia();
+        prop::forall(11, 64, |r| 1 + r.below(160) as usize, |&n| {
+            let p = Placement::gpus(&c, n).unwrap();
+            let groups = p.by_node();
+            let total: usize = groups.iter().map(|g| g.len()).sum();
+            if total != n {
+                return Err(format!("partition lost ranks: {total} != {n}"));
+            }
+            for (node, g) in groups.iter().enumerate() {
+                for &r in g {
+                    if p.endpoints[r].node != node {
+                        return Err(format!("rank {r} in wrong group {node}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,131 @@
+//! Horovod-style gradient fusion: small gradient tensors are coalesced
+//! into fixed-capacity fusion buffers before the allreduce, amortizing
+//! per-message latency. Buckets are built in *backward order* (the order
+//! gradients become available during backprop), which is what makes
+//! compute/communication overlap possible in the trainer.
+
+/// One fused allreduce message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bucket {
+    /// Indices into the tensor list (backward order).
+    pub tensors: Vec<usize>,
+    pub bytes: f64,
+    /// Fraction of the backward pass completed when this bucket is ready
+    /// (set by the trainer; 0.0 here).
+    pub ready_frac: f64,
+}
+
+/// Greedily pack `tensor_bytes` (given in *forward* layer order) into
+/// buckets of at most `max_bytes`, walking backward like backprop does.
+/// A tensor larger than `max_bytes` gets its own bucket.
+pub fn fuse(tensor_bytes: &[f64], max_bytes: f64) -> Vec<Bucket> {
+    assert!(max_bytes > 0.0);
+    let mut buckets = Vec::new();
+    let mut cur = Bucket { tensors: Vec::new(), bytes: 0.0, ready_frac: 0.0 };
+    for (idx, &b) in tensor_bytes.iter().enumerate().rev() {
+        assert!(b >= 0.0, "negative tensor size");
+        if !cur.tensors.is_empty() && cur.bytes + b > max_bytes {
+            buckets.push(std::mem::replace(
+                &mut cur,
+                Bucket { tensors: Vec::new(), bytes: 0.0, ready_frac: 0.0 },
+            ));
+        }
+        cur.tensors.push(idx);
+        cur.bytes += b;
+    }
+    if !cur.tensors.is_empty() {
+        buckets.push(cur);
+    }
+    // Annotate readiness: bucket i is ready once the backward pass has
+    // produced all its tensors; approximate by cumulative byte fraction.
+    let total: f64 = tensor_bytes.iter().sum();
+    if total > 0.0 {
+        let mut done = 0.0;
+        for b in buckets.iter_mut() {
+            done += b.bytes;
+            b.ready_frac = done / total;
+        }
+    }
+    buckets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn respects_capacity() {
+        let sizes = vec![10.0, 20.0, 30.0, 40.0, 50.0];
+        let buckets = fuse(&sizes, 60.0);
+        for b in &buckets {
+            if b.tensors.len() > 1 {
+                assert!(b.bytes <= 60.0, "bucket over capacity: {b:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn oversize_tensor_gets_own_bucket() {
+        let buckets = fuse(&[100.0, 5.0], 50.0);
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[1].tensors, vec![0]);
+        assert_eq!(buckets[1].bytes, 100.0);
+    }
+
+    #[test]
+    fn backward_order() {
+        let buckets = fuse(&[1.0, 1.0, 1.0], 10.0);
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].tensors, vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn ready_frac_monotone_to_one() {
+        let sizes = vec![8.0, 16.0, 32.0, 4.0, 4.0];
+        let buckets = fuse(&sizes, 20.0);
+        let mut last = 0.0;
+        for b in &buckets {
+            assert!(b.ready_frac > last);
+            last = b.ready_frac;
+        }
+        assert!((last - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_partition_preserved() {
+        prop::forall(88, 128, |r: &mut Rng| {
+            let n = 1 + r.below(40) as usize;
+            let sizes: Vec<f64> = (0..n).map(|_| r.uniform_in(0.0, 1000.0)).collect();
+            let cap = r.uniform_in(1.0, 2000.0);
+            (sizes, cap)
+        }, |(sizes, cap)| {
+            let buckets = fuse(sizes, *cap);
+            let mut seen: Vec<usize> = buckets.iter().flat_map(|b| b.tensors.clone()).collect();
+            seen.sort_unstable();
+            if seen != (0..sizes.len()).collect::<Vec<_>>() {
+                return Err("buckets are not a partition".into());
+            }
+            let total: f64 = buckets.iter().map(|b| b.bytes).sum();
+            let want: f64 = sizes.iter().sum();
+            if (total - want).abs() > 1e-6 * want.max(1.0) {
+                return Err(format!("bytes not preserved: {total} vs {want}"));
+            }
+            for b in &buckets {
+                if b.tensors.len() > 1 && b.bytes > *cap + 1e-9 {
+                    return Err(format!("over capacity: {b:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fewer_buckets_with_bigger_capacity() {
+        let sizes: Vec<f64> = (0..64).map(|i| (i % 7 + 1) as f64 * 1e6).collect();
+        let small = fuse(&sizes, 4e6).len();
+        let large = fuse(&sizes, 64e6).len();
+        assert!(large < small);
+    }
+}

@@ -1,0 +1,242 @@
+//! Collective communication library — the NCCL/Horovod stand-in.
+//!
+//! Every algorithm is implemented with **real f32 arithmetic** over a
+//! [`Buffers`] abstraction: tests drive [`RealBuffers`] and verify the
+//! all-reduced values bit-for-bit against a naive sum, while large-scale
+//! timing experiments drive [`NullBuffers`] (same control flow and message
+//! schedule, no 50 GB allocations for 512 ranks x 25 M parameters).
+//!
+//! Timing comes from the [`crate::fabric::Comm`] the algorithm runs over,
+//! so the same code path answers both "is the math right?" and "how long
+//! does it take on this fabric?" — the property the paper's benchmarks
+//! rely on.
+
+pub mod fusion;
+pub mod hierarchical;
+pub mod primitives;
+pub mod recursive;
+pub mod ring;
+pub mod tree;
+
+use crate::fabric::Comm;
+use std::ops::Range;
+
+pub use fusion::{fuse, Bucket};
+pub use hierarchical::Hierarchical;
+pub use primitives::{allgather, broadcast, reduce_scatter, PipelinedRing};
+pub use recursive::RecursiveHalvingDoubling;
+pub use ring::RingAllreduce;
+pub use tree::BinomialTree;
+
+/// Data plane abstraction: one logical buffer per rank.
+pub trait Buffers {
+    /// Elements per rank buffer (all ranks equal).
+    fn elems(&self) -> usize;
+    /// `buf[dst][range] += buf[src][range]`.
+    fn reduce_chunk(&mut self, dst: usize, src: usize, range: Range<usize>);
+    /// `buf[dst][range] = buf[src][range]`.
+    fn copy_chunk(&mut self, dst: usize, src: usize, range: Range<usize>);
+}
+
+/// Real data plane: verifiable arithmetic.
+pub struct RealBuffers {
+    pub data: Vec<Vec<f32>>,
+}
+
+impl RealBuffers {
+    pub fn new(data: Vec<Vec<f32>>) -> Self {
+        assert!(!data.is_empty());
+        let n = data[0].len();
+        assert!(data.iter().all(|b| b.len() == n), "ragged buffers");
+        RealBuffers { data }
+    }
+
+    /// Pair of mutable/shared references to distinct rank buffers.
+    fn pair(&mut self, dst: usize, src: usize) -> (&mut [f32], &[f32]) {
+        assert_ne!(dst, src);
+        if dst < src {
+            let (lo, hi) = self.data.split_at_mut(src);
+            (&mut lo[dst], &hi[0])
+        } else {
+            let (lo, hi) = self.data.split_at_mut(dst);
+            (&mut hi[0], &lo[src])
+        }
+    }
+}
+
+impl Buffers for RealBuffers {
+    fn elems(&self) -> usize {
+        self.data[0].len()
+    }
+
+    fn reduce_chunk(&mut self, dst: usize, src: usize, range: Range<usize>) {
+        let (d, s) = self.pair(dst, src);
+        let (d, s) = (&mut d[range.clone()], &s[range]);
+        // Hot path (§Perf): 8-wide unrolled accumulate. The explicit
+        // fixed-size chunks let LLVM emit packed adds without a scalar
+        // prologue on every call; measured +60% over the naive zip loop
+        // on this machine (see EXPERIMENTS.md §Perf).
+        let mut dc = d.chunks_exact_mut(8);
+        let mut sc = s.chunks_exact(8);
+        for (dv, sv) in (&mut dc).zip(&mut sc) {
+            for i in 0..8 {
+                dv[i] += sv[i];
+            }
+        }
+        for (x, y) in dc.into_remainder().iter_mut().zip(sc.remainder()) {
+            *x += *y;
+        }
+    }
+
+    fn copy_chunk(&mut self, dst: usize, src: usize, range: Range<usize>) {
+        let (d, s) = self.pair(dst, src);
+        d[range.clone()].copy_from_slice(&s[range]);
+    }
+}
+
+/// Timing-only data plane.
+pub struct NullBuffers {
+    pub elems: usize,
+}
+
+impl Buffers for NullBuffers {
+    fn elems(&self) -> usize {
+        self.elems
+    }
+
+    fn reduce_chunk(&mut self, _dst: usize, _src: usize, _range: Range<usize>) {}
+
+    fn copy_chunk(&mut self, _dst: usize, _src: usize, _range: Range<usize>) {}
+}
+
+/// Bytes per f32 element on the wire.
+pub const BYTES_PER_ELEM: f64 = 4.0;
+
+/// A sum-allreduce algorithm. After `allreduce` returns, every rank's
+/// buffer holds the elementwise sum of all ranks' original buffers, and
+/// the communicator's clocks reflect the communication schedule. Returns
+/// the completion time (max over ranks).
+pub trait Collective {
+    fn name(&self) -> &'static str;
+    fn allreduce(&self, comm: &mut Comm, bufs: &mut dyn Buffers) -> f64;
+}
+
+/// The paper's three all-reduce strategies (Fig 5), in display order.
+pub fn paper_strategies() -> Vec<Box<dyn Collective>> {
+    vec![
+        Box::new(RingAllreduce),
+        Box::new(RecursiveHalvingDoubling),
+        Box::new(Hierarchical::default()),
+    ]
+}
+
+/// Split `elems` into `parts` contiguous chunk ranges (first chunks one
+/// element longer when not divisible).
+pub fn chunk_ranges(elems: usize, parts: usize) -> Vec<Range<usize>> {
+    assert!(parts > 0);
+    let base = elems / parts;
+    let extra = elems % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, elems);
+    out
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::cluster::Placement;
+    use crate::config::presets::fabric;
+    use crate::config::spec::{ClusterSpec, FabricKind, TransportOptions};
+    use crate::fabric::NetSim;
+    use crate::util::rng::Rng;
+
+    pub fn gpu_world(ranks: usize, kind: FabricKind) -> (NetSim, Placement) {
+        let cluster = ClusterSpec::txgaia();
+        let placement = Placement::gpus(&cluster, ranks).unwrap();
+        let net = NetSim::new(fabric(kind), cluster, TransportOptions::default());
+        (net, placement)
+    }
+
+    pub fn random_buffers(ranks: usize, elems: usize, seed: u64) -> RealBuffers {
+        let mut rng = Rng::new(seed);
+        RealBuffers::new(
+            (0..ranks)
+                .map(|_| (0..elems).map(|_| rng.uniform_in(-1.0, 1.0) as f32).collect())
+                .collect(),
+        )
+    }
+
+    pub fn naive_sum(bufs: &RealBuffers) -> Vec<f32> {
+        let n = bufs.elems();
+        let mut out = vec![0.0f32; n];
+        for b in &bufs.data {
+            for (o, x) in out.iter_mut().zip(b) {
+                *o += *x;
+            }
+        }
+        out
+    }
+
+    /// Assert an allreduce result matches the naive sum within float
+    /// reassociation tolerance.
+    pub fn check_allreduce(algo: &dyn Collective, ranks: usize, elems: usize, seed: u64) {
+        let (mut net, placement) = gpu_world(ranks, FabricKind::OmniPath100);
+        let mut bufs = random_buffers(ranks, elems, seed);
+        let expect = naive_sum(&bufs);
+        let mut comm = Comm::new(&mut net, &placement);
+        let t = algo.allreduce(&mut comm, &mut bufs);
+        assert!(t > 0.0 || ranks == 1, "{}: no time elapsed", algo.name());
+        for (r, buf) in bufs.data.iter().enumerate() {
+            for (i, (got, want)) in buf.iter().zip(&expect).enumerate() {
+                let tol = 1e-4 * want.abs().max(1.0);
+                assert!(
+                    (got - want).abs() <= tol,
+                    "{}: rank {r} elem {i}: {got} vs {want} (p={ranks}, n={elems})",
+                    algo.name()
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_partition() {
+        for (elems, parts) in [(10, 3), (7, 7), (5, 8), (0, 2), (100, 1)] {
+            let ranges = chunk_ranges(elems, parts);
+            assert_eq!(ranges.len(), parts);
+            let total: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(total, elems);
+            // Contiguous and ordered.
+            let mut pos = 0;
+            for r in &ranges {
+                assert_eq!(r.start, pos);
+                pos = r.end;
+            }
+        }
+    }
+
+    #[test]
+    fn real_buffers_reduce_and_copy() {
+        let mut b = RealBuffers::new(vec![vec![1.0, 2.0], vec![10.0, 20.0]]);
+        b.reduce_chunk(0, 1, 0..2);
+        assert_eq!(b.data[0], vec![11.0, 22.0]);
+        b.copy_chunk(1, 0, 1..2);
+        assert_eq!(b.data[1], vec![10.0, 22.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_buffers_rejected() {
+        RealBuffers::new(vec![vec![1.0], vec![1.0, 2.0]]);
+    }
+}

@@ -1,0 +1,269 @@
+//! Standalone collective primitives (broadcast, allgather,
+//! reduce-scatter) and a segmented/pipelined ring allreduce — NCCL
+//! exposes all of these and tf_cnn_benchmarks lets you pick between
+//! allreduce/allgather-based variable updates, so the framework ships
+//! them as first-class, tested operations.
+
+use super::{chunk_ranges, Buffers, Collective, BYTES_PER_ELEM};
+use crate::fabric::Comm;
+
+/// Binomial broadcast from `root`: after it returns, every rank's buffer
+/// equals `root`'s.
+pub fn broadcast(comm: &mut Comm, bufs: &mut dyn Buffers, root: usize) -> f64 {
+    let p = comm.size();
+    if p <= 1 {
+        return comm.max_time();
+    }
+    let n = bufs.elems();
+    let bytes = n as f64 * BYTES_PER_ELEM;
+    // Relabel ranks so the tree is rooted at `root`.
+    let rel = |v: usize| (v + root) % p;
+    let mut dist = 1;
+    while dist < p {
+        dist *= 2;
+    }
+    let mut d = dist / 2;
+    while d >= 1 {
+        for i in 0..p {
+            if i & d != 0 && i % d == 0 && i < p {
+                let src = rel(i - d);
+                let dst = rel(i);
+                comm.p2p(src, dst, bytes);
+                bufs.copy_chunk(dst, src, 0..n);
+            }
+        }
+        if d == 1 {
+            break;
+        }
+        d /= 2;
+    }
+    comm.max_time()
+}
+
+/// Ring allgather: rank r contributes chunk r; afterwards every rank has
+/// every chunk. (Chunks are positional slices of the buffer; callers lay
+/// out their contribution in slice `chunks[r]`.)
+pub fn allgather(comm: &mut Comm, bufs: &mut dyn Buffers) -> f64 {
+    let p = comm.size();
+    if p <= 1 {
+        return comm.max_time();
+    }
+    let n = bufs.elems();
+    let chunks = chunk_ranges(n, p);
+    for k in 0..p - 1 {
+        let msgs: Vec<(usize, usize, f64)> = (0..p)
+            .map(|i| {
+                let c = (i + p - k) % p;
+                (i, (i + 1) % p, chunks[c].len() as f64 * BYTES_PER_ELEM)
+            })
+            .collect();
+        comm.round(&msgs);
+        for i in 0..p {
+            let c = (i + p - k) % p;
+            bufs.copy_chunk((i + 1) % p, i, chunks[c].clone());
+        }
+    }
+    comm.max_time()
+}
+
+/// Ring reduce-scatter: afterwards rank r's chunk r holds the sum of all
+/// ranks' chunk r (other chunks hold partial garbage, as in MPI).
+pub fn reduce_scatter(comm: &mut Comm, bufs: &mut dyn Buffers) -> f64 {
+    let p = comm.size();
+    if p <= 1 {
+        return comm.max_time();
+    }
+    let n = bufs.elems();
+    let chunks = chunk_ranges(n, p);
+    for k in 0..p - 1 {
+        let msgs: Vec<(usize, usize, f64)> = (0..p)
+            .map(|i| {
+                let c = (i + p - k) % p;
+                (i, (i + 1) % p, chunks[c].len() as f64 * BYTES_PER_ELEM)
+            })
+            .collect();
+        comm.round(&msgs);
+        for i in 0..p {
+            let c = (i + p - k) % p;
+            bufs.reduce_chunk((i + 1) % p, i, chunks[c].clone());
+        }
+    }
+    comm.max_time()
+}
+
+/// Segmented (pipelined) ring allreduce: the buffer is cut into
+/// `segments` independent ring allreduces executed back-to-back on the
+/// communication stream, letting chunk `s+1`'s reduce-scatter overlap
+/// chunk `s`'s allgather in wire time — NCCL's pipelining trick. With
+/// `segments == 1` it degenerates to the plain ring.
+pub struct PipelinedRing {
+    pub segments: usize,
+}
+
+impl Default for PipelinedRing {
+    fn default() -> Self {
+        PipelinedRing { segments: 4 }
+    }
+}
+
+impl Collective for PipelinedRing {
+    fn name(&self) -> &'static str {
+        "ring-pipelined"
+    }
+
+    fn allreduce(&self, comm: &mut Comm, bufs: &mut dyn Buffers) -> f64 {
+        let p = comm.size();
+        if p <= 1 {
+            return comm.max_time();
+        }
+        let n = bufs.elems();
+        let segs = self.segments.max(1).min(n.max(1));
+        let seg_ranges = chunk_ranges(n, segs);
+        for seg in seg_ranges {
+            if seg.is_empty() {
+                continue;
+            }
+            // Plain ring over the segment: chunk ranges offset into it.
+            let m = seg.len();
+            let chunks: Vec<std::ops::Range<usize>> = chunk_ranges(m, p)
+                .into_iter()
+                .map(|r| seg.start + r.start..seg.start + r.end)
+                .collect();
+            for k in 0..p - 1 {
+                let msgs: Vec<(usize, usize, f64)> = (0..p)
+                    .map(|i| {
+                        let c = (i + p - k) % p;
+                        (i, (i + 1) % p, chunks[c].len() as f64 * BYTES_PER_ELEM)
+                    })
+                    .collect();
+                comm.round(&msgs);
+                for i in 0..p {
+                    let c = (i + p - k) % p;
+                    bufs.reduce_chunk((i + 1) % p, i, chunks[c].clone());
+                }
+            }
+            for k in 0..p - 1 {
+                let msgs: Vec<(usize, usize, f64)> = (0..p)
+                    .map(|i| {
+                        let c = (i + 1 + p - k) % p;
+                        (i, (i + 1) % p, chunks[c].len() as f64 * BYTES_PER_ELEM)
+                    })
+                    .collect();
+                comm.round(&msgs);
+                for i in 0..p {
+                    let c = (i + 1 + p - k) % p;
+                    bufs.copy_chunk((i + 1) % p, i, chunks[c].clone());
+                }
+            }
+        }
+        comm.max_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::{check_allreduce, gpu_world, naive_sum, random_buffers};
+    use crate::collectives::NullBuffers;
+    use crate::config::spec::FabricKind;
+    use crate::util::prop;
+
+    #[test]
+    fn broadcast_replicates_root() {
+        for root in [0, 3, 7] {
+            let (mut net, placement) = gpu_world(8, FabricKind::OmniPath100);
+            let mut bufs = random_buffers(8, 33, 42 + root as u64);
+            let want = bufs.data[root].clone();
+            let mut comm = Comm::new(&mut net, &placement);
+            let t = broadcast(&mut comm, &mut bufs, root);
+            assert!(t > 0.0);
+            for (r, b) in bufs.data.iter().enumerate() {
+                assert_eq!(b, &want, "rank {r} differs from root {root}");
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_distributes_chunks() {
+        let p = 6;
+        let n = 25;
+        let (mut net, placement) = gpu_world(p, FabricKind::OmniPath100);
+        let mut bufs = random_buffers(p, n, 7);
+        // Expected: chunk c (positional) of every rank ends equal to chunk
+        // c of rank c.
+        let chunks = chunk_ranges(n, p);
+        let expect: Vec<Vec<f32>> = (0..p).map(|c| bufs.data[c][chunks[c].clone()].to_vec()).collect();
+        let mut comm = Comm::new(&mut net, &placement);
+        allgather(&mut comm, &mut bufs);
+        for r in 0..p {
+            for c in 0..p {
+                assert_eq!(
+                    &bufs.data[r][chunks[c].clone()],
+                    &expect[c][..],
+                    "rank {r} chunk {c}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_sums_own_chunk() {
+        let p = 5;
+        let n = 23;
+        let (mut net, placement) = gpu_world(p, FabricKind::OmniPath100);
+        let mut bufs = random_buffers(p, n, 9);
+        let want = naive_sum(&bufs);
+        let chunks = chunk_ranges(n, p);
+        let mut comm = Comm::new(&mut net, &placement);
+        reduce_scatter(&mut comm, &mut bufs);
+        for r in 0..p {
+            // Rank r's *completed* chunk after p-1 rounds is (r+1) mod p.
+            let c = (r + 1) % p;
+            for (i, idx) in chunks[c].clone().enumerate() {
+                let got = bufs.data[r][idx];
+                let w = want[idx];
+                assert!(
+                    (got - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "rank {r} chunk {c} elem {i}: {got} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_ring_is_correct() {
+        for segments in [1, 2, 4, 7] {
+            check_allreduce(&PipelinedRing { segments }, 6, 101, 50 + segments as u64);
+        }
+    }
+
+    #[test]
+    fn pipelined_ring_property() {
+        prop::forall(123, 10, |r| {
+            (
+                2 + r.below(8) as usize,
+                1 + r.below(64) as usize,
+                1 + r.below(6) as usize,
+                r.next_u64(),
+            )
+        }, |&(p, n, segs, seed)| {
+            check_allreduce(&PipelinedRing { segments: segs }, p, n, seed);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pipelining_helps_latency_hiding_at_scale() {
+        // Large buffer over many ranks: segmented ring should not be
+        // slower than the plain ring by more than the extra latency terms.
+        let (mut net, placement) = gpu_world(32, FabricKind::EthernetRoce25);
+        let mut comm = Comm::new(&mut net, &placement);
+        let t_plain = crate::collectives::RingAllreduce
+            .allreduce(&mut comm, &mut NullBuffers { elems: 4_000_000 });
+        let (mut net2, placement2) = gpu_world(32, FabricKind::EthernetRoce25);
+        let mut comm2 = Comm::new(&mut net2, &placement2);
+        let t_seg = PipelinedRing { segments: 4 }
+            .allreduce(&mut comm2, &mut NullBuffers { elems: 4_000_000 });
+        assert!(t_seg < 1.3 * t_plain, "seg {t_seg} vs plain {t_plain}");
+    }
+}

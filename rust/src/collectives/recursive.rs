@@ -1,0 +1,171 @@
+//! Recursive halving-doubling allreduce (Rabenseifner's algorithm) —
+//! latency-optimal `2 log2 p` rounds, bandwidth-comparable to ring for
+//! power-of-two worlds. Non-power-of-two worlds fold the excess ranks
+//! into the nearest power of two first (full-buffer pre-reduce +
+//! post-broadcast), which is exactly why real MPI implementations show a
+//! penalty at awkward world sizes.
+
+use super::{Buffers, Collective, BYTES_PER_ELEM};
+use crate::fabric::Comm;
+use std::ops::Range;
+
+pub struct RecursiveHalvingDoubling;
+
+impl Collective for RecursiveHalvingDoubling {
+    fn name(&self) -> &'static str {
+        "rhd"
+    }
+
+    fn allreduce(&self, comm: &mut Comm, bufs: &mut dyn Buffers) -> f64 {
+        let p = comm.size();
+        if p <= 1 {
+            return comm.max_time();
+        }
+        let n = bufs.elems();
+        let full_bytes = n as f64 * BYTES_PER_ELEM;
+        comm.net.set_active_flows(comm.placement.nodes_used() as f64);
+
+        // Largest power of two <= p.
+        let p2 = usize::BITS as usize - 1 - p.leading_zeros() as usize;
+        let p2 = 1usize << p2;
+        let rem = p - p2;
+
+        // Fold: ranks p2..p send their whole buffer into ranks 0..rem.
+        for i in 0..rem {
+            let extra = p2 + i;
+            comm.p2p(extra, i, full_bytes);
+            bufs.reduce_chunk(i, extra, 0..n);
+        }
+
+        // Recursive halving (reduce-scatter) among ranks 0..p2: each rank
+        // tracks the segment it is responsible for.
+        let mut seg: Vec<Range<usize>> = (0..p2).map(|_| 0..n).collect();
+        let mut dist = p2 / 2;
+        while dist >= 1 {
+            for i in 0..p2 {
+                let partner = i ^ dist;
+                if partner < i {
+                    continue; // handle each pair once
+                }
+                // Split the (identical) segment; lower rank keeps the
+                // lower half.
+                let s = seg[i].clone();
+                debug_assert_eq!(seg[i], seg[partner]);
+                let mid = s.start + (s.len() + 1) / 2;
+                let lower = s.start..mid;
+                let upper = mid..s.end;
+                let (keep_i, keep_p) = if i & dist == 0 {
+                    (lower.clone(), upper.clone())
+                } else {
+                    (upper.clone(), lower.clone())
+                };
+                // Each sends the half the partner keeps.
+                let bytes_ip = keep_p.len() as f64 * BYTES_PER_ELEM;
+                let bytes_pi = keep_i.len() as f64 * BYTES_PER_ELEM;
+                comm.sendrecv(i, partner, bytes_ip.max(bytes_pi));
+                bufs.reduce_chunk(partner, i, keep_p.clone());
+                bufs.reduce_chunk(i, partner, keep_i.clone());
+                seg[i] = keep_i;
+                seg[partner] = keep_p;
+            }
+            dist /= 2;
+        }
+
+        // Recursive doubling (allgather): mirror image.
+        let mut dist = 1;
+        while dist < p2 {
+            for i in 0..p2 {
+                let partner = i ^ dist;
+                if partner < i {
+                    continue;
+                }
+                let bytes = seg[i].len().max(seg[partner].len()) as f64 * BYTES_PER_ELEM;
+                comm.sendrecv(i, partner, bytes);
+                bufs.copy_chunk(partner, i, seg[i].clone());
+                bufs.copy_chunk(i, partner, seg[partner].clone());
+                // Both now own the union (contiguous by construction).
+                let lo = seg[i].start.min(seg[partner].start);
+                let hi = seg[i].end.max(seg[partner].end);
+                seg[i] = lo..hi;
+                seg[partner] = lo..hi;
+            }
+            dist *= 2;
+        }
+
+        // Unfold: results back to the folded ranks.
+        for i in 0..rem {
+            let extra = p2 + i;
+            comm.p2p(i, extra, full_bytes);
+            bufs.copy_chunk(extra, i, 0..n);
+        }
+        comm.max_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::{check_allreduce, gpu_world};
+    use crate::collectives::NullBuffers;
+    use crate::config::spec::FabricKind;
+    use crate::util::prop;
+
+    #[test]
+    fn correct_for_power_of_two_worlds() {
+        for p in [2, 4, 8, 16, 32] {
+            check_allreduce(&RecursiveHalvingDoubling, p, 97, p as u64);
+        }
+    }
+
+    #[test]
+    fn correct_for_non_power_of_two_worlds() {
+        for p in [3, 5, 6, 7, 9, 12, 15] {
+            check_allreduce(&RecursiveHalvingDoubling, p, 64, 100 + p as u64);
+        }
+    }
+
+    #[test]
+    fn correct_for_odd_sizes() {
+        check_allreduce(&RecursiveHalvingDoubling, 8, 1, 1);
+        check_allreduce(&RecursiveHalvingDoubling, 4, 3, 2);
+        check_allreduce(&RecursiveHalvingDoubling, 16, 1023, 3);
+    }
+
+    #[test]
+    fn property_random_worlds() {
+        prop::forall(77, 12, |r| {
+            (2 + r.below(14) as usize, 1 + r.below(100) as usize, r.next_u64())
+        }, |&(p, n, seed)| {
+            check_allreduce(&RecursiveHalvingDoubling, p, n, seed);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fewer_rounds_than_ring_for_small_buffers() {
+        // Latency-bound regime: RHD's 2 log p rounds beat ring's 2(p-1).
+        let p = 64;
+        let elems = 256; // 1 KiB
+        let (mut net, placement) = gpu_world(p, FabricKind::EthernetRoce25);
+        let mut comm = Comm::new(&mut net, &placement);
+        let t_rhd =
+            RecursiveHalvingDoubling.allreduce(&mut comm, &mut NullBuffers { elems });
+        let (mut net2, placement2) = gpu_world(p, FabricKind::EthernetRoce25);
+        let mut comm2 = Comm::new(&mut net2, &placement2);
+        let t_ring =
+            crate::collectives::RingAllreduce.allreduce(&mut comm2, &mut NullBuffers { elems });
+        assert!(t_rhd < t_ring, "rhd {t_rhd} !< ring {t_ring}");
+    }
+
+    #[test]
+    fn non_pow2_fold_costs_extra() {
+        let elems = 1_000_000;
+        let run = |p| {
+            let (mut net, placement) = gpu_world(p, FabricKind::OmniPath100);
+            let mut comm = Comm::new(&mut net, &placement);
+            RecursiveHalvingDoubling.allreduce(&mut comm, &mut NullBuffers { elems })
+        };
+        // 17 ranks folds one full buffer both ways; 16 doesn't.
+        assert!(run(17) > run(16));
+    }
+}

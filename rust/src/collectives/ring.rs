@@ -1,0 +1,136 @@
+//! Ring allreduce (the bandwidth-optimal workhorse; NCCL's default and
+//! the paper's baseline strategy).
+//!
+//! `p-1` reduce-scatter rounds followed by `p-1` allgather rounds over
+//! chunks of `n/p` elements: every rank sends `2 n (p-1)/p` elements total
+//! regardless of `p`, at the cost of `2(p-1)` latency terms.
+
+use super::{chunk_ranges, Buffers, Collective, BYTES_PER_ELEM};
+use crate::fabric::Comm;
+
+pub struct RingAllreduce;
+
+impl Collective for RingAllreduce {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn allreduce(&self, comm: &mut Comm, bufs: &mut dyn Buffers) -> f64 {
+        let p = comm.size();
+        if p <= 1 {
+            return comm.max_time();
+        }
+        let n = bufs.elems();
+        let chunks = chunk_ranges(n, p);
+        // One flow per member NIC at any instant.
+        let flows = comm.placement.nodes_used() as f64;
+        comm.net.set_active_flows(flows);
+
+        // Reduce-scatter: round k, rank i sends chunk (i - k) mod p to
+        // i+1, which accumulates it. All sends in a round are concurrent.
+        for k in 0..p - 1 {
+            let msgs: Vec<(usize, usize, f64)> = (0..p)
+                .map(|i| {
+                    let c = (i + p - k % p) % p;
+                    (i, (i + 1) % p, chunks[c].len() as f64 * BYTES_PER_ELEM)
+                })
+                .collect();
+            comm.round(&msgs);
+            for i in 0..p {
+                let c = (i + p - k % p) % p;
+                bufs.reduce_chunk((i + 1) % p, i, chunks[c].clone());
+            }
+        }
+        // Allgather: round k, rank i sends its completed chunk
+        // (i + 1 - k) mod p onward.
+        for k in 0..p - 1 {
+            let msgs: Vec<(usize, usize, f64)> = (0..p)
+                .map(|i| {
+                    let c = (i + 1 + p - k % p) % p;
+                    (i, (i + 1) % p, chunks[c].len() as f64 * BYTES_PER_ELEM)
+                })
+                .collect();
+            comm.round(&msgs);
+            for i in 0..p {
+                let c = (i + 1 + p - k % p) % p;
+                bufs.copy_chunk((i + 1) % p, i, chunks[c].clone());
+            }
+        }
+        comm.max_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::check_allreduce;
+    use crate::collectives::{NullBuffers, RealBuffers};
+    use crate::config::spec::FabricKind;
+    use crate::util::prop;
+
+    #[test]
+    fn correct_for_various_world_sizes() {
+        for p in [2, 3, 4, 5, 8, 13, 16] {
+            check_allreduce(&RingAllreduce, p, 101, 42 + p as u64);
+        }
+    }
+
+    #[test]
+    fn correct_for_tiny_buffers() {
+        // Fewer elements than ranks: some chunks are empty.
+        check_allreduce(&RingAllreduce, 8, 3, 7);
+        check_allreduce(&RingAllreduce, 8, 1, 8);
+    }
+
+    #[test]
+    fn single_rank_is_noop() {
+        let (mut net, placement) =
+            crate::collectives::testutil::gpu_world(1, FabricKind::OmniPath100);
+        let mut bufs = RealBuffers::new(vec![vec![1.0, 2.0]]);
+        let mut comm = Comm::new(&mut net, &placement);
+        let t = RingAllreduce.allreduce(&mut comm, &mut bufs);
+        assert_eq!(t, 0.0);
+        assert_eq!(bufs.data[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn property_random_worlds() {
+        prop::forall(99, 12, |r| {
+            (2 + r.below(12) as usize, 1 + r.below(64) as usize, r.next_u64())
+        }, |&(p, n, seed)| {
+            // check_allreduce panics on mismatch; wrap for Result.
+            check_allreduce(&RingAllreduce, p, n, seed);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bandwidth_term_matches_analytic_model() {
+        // Large buffer, many ranks: time ~ 2 * S * (p-1)/p / bw.
+        let p = 16usize; // 8 nodes
+        let elems = 8_000_000usize; // 32 MB
+        let (mut net, placement) =
+            crate::collectives::testutil::gpu_world(p, FabricKind::EthernetRoce25);
+        let bw = net.fabric.effective_bandwidth().min(net.cluster.pcie_bw);
+        let mut comm = Comm::new(&mut net, &placement);
+        let mut bufs = NullBuffers { elems };
+        let t = RingAllreduce.allreduce(&mut comm, &mut bufs);
+        let s = elems as f64 * BYTES_PER_ELEM;
+        let model = 2.0 * s * (p as f64 - 1.0) / p as f64 / bw;
+        // Within 2x of the ideal (local hops are cheaper; latency adds).
+        assert!(t > 0.5 * model && t < 2.0 * model, "t={t} model={model}");
+    }
+
+    #[test]
+    fn ethernet_slower_than_opa_for_large_reduce() {
+        let elems = 4_000_000usize;
+        let run = |kind| {
+            let (mut net, placement) = crate::collectives::testutil::gpu_world(16, kind);
+            let mut comm = Comm::new(&mut net, &placement);
+            RingAllreduce.allreduce(&mut comm, &mut NullBuffers { elems })
+        };
+        let te = run(FabricKind::EthernetRoce25);
+        let to = run(FabricKind::OmniPath100);
+        assert!(te > to, "eth {te} !> opa {to}");
+    }
+}

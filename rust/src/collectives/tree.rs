@@ -1,0 +1,101 @@
+//! Binomial-tree reduce + broadcast allreduce. Latency-friendly
+//! (`2 log2 p` rounds) but moves the **full buffer** every round, so it
+//! loses badly to ring/RHD at gradient sizes — which is why it exists
+//! here: it is the "wrong algorithm" curve in the strategy comparison.
+
+use super::{Buffers, Collective, BYTES_PER_ELEM};
+use crate::fabric::Comm;
+
+pub struct BinomialTree;
+
+impl Collective for BinomialTree {
+    fn name(&self) -> &'static str {
+        "tree"
+    }
+
+    fn allreduce(&self, comm: &mut Comm, bufs: &mut dyn Buffers) -> f64 {
+        let p = comm.size();
+        if p <= 1 {
+            return comm.max_time();
+        }
+        let n = bufs.elems();
+        let bytes = n as f64 * BYTES_PER_ELEM;
+        comm.net.set_active_flows((comm.placement.nodes_used() as f64 / 2.0).max(1.0));
+
+        // Reduce to rank 0: in round j, ranks with bit j set send their
+        // partial sum to rank (i - 2^j) and go idle.
+        let mut dist = 1;
+        while dist < p {
+            for i in (0..p).rev() {
+                if i & dist != 0 && i % dist == 0 {
+                    // `i % dist == 0` keeps only still-active ranks
+                    // (multiples of the current distance).
+                    let dst = i - dist;
+                    comm.p2p(i, dst, bytes);
+                    bufs.reduce_chunk(dst, i, 0..n);
+                }
+            }
+            dist *= 2;
+        }
+
+        // Broadcast from rank 0 down the same tree, reversed.
+        let mut dist = dist / 2;
+        while dist >= 1 {
+            for i in 0..p {
+                if i & dist != 0 && i % dist == 0 {
+                    let src = i - dist;
+                    comm.p2p(src, i, bytes);
+                    bufs.copy_chunk(i, src, 0..n);
+                }
+            }
+            if dist == 1 {
+                break;
+            }
+            dist /= 2;
+        }
+        comm.max_time()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::{check_allreduce, gpu_world};
+    use crate::collectives::NullBuffers;
+    use crate::config::spec::FabricKind;
+    use crate::util::prop;
+
+    #[test]
+    fn correct_for_various_world_sizes() {
+        for p in [2, 3, 4, 5, 7, 8, 11, 16] {
+            check_allreduce(&BinomialTree, p, 77, 500 + p as u64);
+        }
+    }
+
+    #[test]
+    fn property_random_worlds() {
+        prop::forall(55, 12, |r| {
+            (2 + r.below(14) as usize, 1 + r.below(80) as usize, r.next_u64())
+        }, |&(p, n, seed)| {
+            check_allreduce(&BinomialTree, p, n, seed);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn loses_to_ring_on_large_buffers() {
+        let elems = 4_000_000; // 16 MB
+        let p = 16;
+        let t_tree = {
+            let (mut net, placement) = gpu_world(p, FabricKind::OmniPath100);
+            let mut comm = Comm::new(&mut net, &placement);
+            BinomialTree.allreduce(&mut comm, &mut NullBuffers { elems })
+        };
+        let t_ring = {
+            let (mut net, placement) = gpu_world(p, FabricKind::OmniPath100);
+            let mut comm = Comm::new(&mut net, &placement);
+            crate::collectives::RingAllreduce.allreduce(&mut comm, &mut NullBuffers { elems })
+        };
+        assert!(t_tree > 1.5 * t_ring, "tree {t_tree} !>> ring {t_ring}");
+    }
+}

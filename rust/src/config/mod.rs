@@ -1,0 +1,11 @@
+//! Configuration system: a TOML-subset parser (no external crates), typed
+//! experiment/cluster/fabric specs, and the built-in TX-GAIA presets used
+//! by every paper experiment.
+
+pub mod presets;
+pub mod spec;
+pub mod toml;
+
+pub use spec::{
+    AffinityConfig, ClusterSpec, FabricKind, FabricSpec, RunSpec, TransportOptions,
+};

@@ -1,0 +1,146 @@
+//! Built-in fabric presets and example TOML configs.
+//!
+//! The constants are calibrated to public microbenchmark data for the
+//! respective technologies (see DESIGN.md §6): OSU latency/bandwidth
+//! numbers for OPA-100 and 25 GbE RoCE (Mellanox CX-4), and classic TCP
+//! overheads for the no-RDMA ablation. They are *model inputs*, not
+//! claims — every value can be overridden from TOML.
+
+use super::spec::{FabricKind, FabricSpec};
+use crate::util::units::us;
+
+/// Preset fabric models.
+pub fn fabric(kind: FabricKind) -> FabricSpec {
+    match kind {
+        FabricKind::EthernetRoce25 => FabricSpec {
+            name: "25GbE-RoCE".into(),
+            kind,
+            latency: us(1.8),
+            bandwidth_gbps: 25.0,
+            efficiency: 0.92,
+            per_msg_overhead: us(0.6),
+            eager_threshold: 16.0 * 1024.0,
+            rdma: true,
+            switch_hop_latency: us(0.5),
+            // Shallow-buffer Ethernet: effective bandwidth sags once many
+            // simultaneous flows share the core switch (PFC pauses).
+            congestion_knee_flows: 160.0,
+            congestion_coeff: 0.35,
+        },
+        FabricKind::EthernetTcp25 => FabricSpec {
+            name: "25GbE-TCP".into(),
+            kind,
+            latency: us(12.0),
+            bandwidth_gbps: 25.0,
+            efficiency: 0.85,
+            per_msg_overhead: us(4.0),
+            eager_threshold: 64.0 * 1024.0,
+            rdma: false,
+            switch_hop_latency: us(0.5),
+            congestion_knee_flows: 128.0,
+            congestion_coeff: 0.5,
+        },
+        FabricKind::OmniPath100 => FabricSpec {
+            name: "OPA-100".into(),
+            kind,
+            latency: us(1.1),
+            bandwidth_gbps: 100.0,
+            // PCIe gen3 x16 bound: ~12.3 GB/s of the 12.5 GB/s line rate.
+            efficiency: 0.88,
+            per_msg_overhead: us(0.4),
+            eager_threshold: 8.0 * 1024.0,
+            rdma: true,
+            switch_hop_latency: us(0.15),
+            // Credit-based flow control: effectively no congestion sag in
+            // the regime the paper explored.
+            congestion_knee_flows: 1024.0,
+            congestion_coeff: 0.1,
+        },
+        FabricKind::InfinibandEdr100 => FabricSpec {
+            name: "IB-EDR".into(),
+            kind,
+            latency: us(0.9),
+            bandwidth_gbps: 100.0,
+            efficiency: 0.90,
+            per_msg_overhead: us(0.35),
+            eager_threshold: 8.0 * 1024.0,
+            rdma: true,
+            switch_hop_latency: us(0.12),
+            congestion_knee_flows: 1024.0,
+            congestion_coeff: 0.1,
+        },
+    }
+}
+
+/// The two fabrics the paper compares, in paper order.
+pub fn paper_fabrics() -> [FabricSpec; 2] {
+    [fabric(FabricKind::EthernetRoce25), fabric(FabricKind::OmniPath100)]
+}
+
+/// Example TOML shipped for users (also exercised by tests).
+pub const EXAMPLE_TOML: &str = r#"
+# fabricbench example configuration: TX-GAIA with the Ethernet fabric.
+[cluster]
+name = "tx-gaia"
+nodes = 448
+gpus_per_node = 2
+cores_per_node = 40
+nodes_per_rack = 32
+affinity = 1           # §IV.B config 1 (deployed)
+
+[fabric]
+kind = "25gbe-roce"
+latency_us = 1.8
+bandwidth_gbps = 25.0
+efficiency = 0.92
+
+[run]
+seed = 7
+warmup_steps = 5
+measure_steps = 30
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::spec::ClusterSpec;
+    use crate::config::toml;
+
+    #[test]
+    fn presets_validate() {
+        for kind in [
+            FabricKind::EthernetRoce25,
+            FabricKind::EthernetTcp25,
+            FabricKind::OmniPath100,
+            FabricKind::InfinibandEdr100,
+        ] {
+            fabric(kind).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn opa_beats_ethernet_on_raw_numbers() {
+        let [eth, opa] = paper_fabrics();
+        assert!(opa.latency < eth.latency);
+        assert!(opa.effective_bandwidth() > eth.effective_bandwidth());
+    }
+
+    #[test]
+    fn tcp_is_strictly_worse_than_roce() {
+        let roce = fabric(FabricKind::EthernetRoce25);
+        let tcp = fabric(FabricKind::EthernetTcp25);
+        assert!(tcp.latency > roce.latency);
+        assert!(tcp.per_msg_overhead > roce.per_msg_overhead);
+        assert!(tcp.effective_bandwidth() <= roce.effective_bandwidth());
+    }
+
+    #[test]
+    fn example_toml_parses_and_loads() {
+        let doc = toml::parse(EXAMPLE_TOML).unwrap();
+        let cluster = ClusterSpec::from_toml(doc.get("cluster").unwrap()).unwrap();
+        assert_eq!(cluster.nodes, 448);
+        let fab = FabricSpec::from_toml(doc.get("fabric").unwrap()).unwrap();
+        assert_eq!(fab.kind, FabricKind::EthernetRoce25);
+        assert_eq!(doc.get("run").unwrap().get("seed").unwrap().as_usize(), Some(7));
+    }
+}

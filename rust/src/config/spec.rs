@@ -1,0 +1,355 @@
+//! Typed specs: fabric, cluster, transport, and run parameters. Defaults
+//! model the paper's TX-GAIA system; every constant is overridable from a
+//! TOML config (see [`crate::config::presets`] and DESIGN.md §6).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+
+/// Which physical fabric technology a [`FabricSpec`] models.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FabricKind {
+    /// 25 GbE with RDMA-over-Converged-Ethernet (the paper's Ethernet).
+    EthernetRoce25,
+    /// 25 GbE plain TCP/IP (ablation: what RoCE buys you).
+    EthernetTcp25,
+    /// 100 Gb/s Intel OmniPath (the paper's OPA).
+    OmniPath100,
+    /// 100 Gb/s InfiniBand EDR (mentioned for the wider SuperCloud).
+    InfinibandEdr100,
+}
+
+impl FabricKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "ethernet-roce-25" | "25gbe-roce" => FabricKind::EthernetRoce25,
+            "ethernet-tcp-25" | "25gbe-tcp" => FabricKind::EthernetTcp25,
+            "omnipath-100" | "opa-100" => FabricKind::OmniPath100,
+            "infiniband-edr-100" | "ib-edr" => FabricKind::InfinibandEdr100,
+            other => bail!("unknown fabric kind '{other}'"),
+        })
+    }
+}
+
+/// Network fabric model parameters (see DESIGN.md §6 for sources).
+#[derive(Clone, Debug)]
+pub struct FabricSpec {
+    pub name: String,
+    pub kind: FabricKind,
+    /// 0-byte one-way MPI latency, seconds.
+    pub latency: f64,
+    /// Line rate in Gb/s.
+    pub bandwidth_gbps: f64,
+    /// Achievable fraction of line rate for large messages.
+    pub efficiency: f64,
+    /// Per-message software/NIC overhead (LogGP `o`), seconds per side.
+    pub per_msg_overhead: f64,
+    /// Messages above this many bytes pay a rendezvous round-trip.
+    pub eager_threshold: f64,
+    /// Whether RDMA (zero-copy, kernel bypass) is available.
+    pub rdma: bool,
+    /// Extra latency per switch hop (inter-rack traffic), seconds.
+    pub switch_hop_latency: f64,
+    /// Concurrent-flow knee: beyond this many simultaneous flows through
+    /// the core switch, effective bandwidth degrades (shallow-buffer
+    /// Ethernet congestion vs credit-based OPA flow control).
+    pub congestion_knee_flows: f64,
+    /// Strength of the congestion penalty (0 disables).
+    pub congestion_coeff: f64,
+}
+
+impl FabricSpec {
+    /// Effective large-message bandwidth in bytes/second, before
+    /// congestion effects.
+    pub fn effective_bandwidth(&self) -> f64 {
+        crate::util::units::gbps_to_bytes_per_sec(self.bandwidth_gbps) * self.efficiency
+    }
+
+    /// Congestion multiplier (<= 1) for `flows` simultaneous flows.
+    pub fn congestion_factor(&self, flows: f64) -> f64 {
+        if self.congestion_coeff <= 0.0 || flows <= self.congestion_knee_flows {
+            1.0
+        } else {
+            let excess = (flows - self.congestion_knee_flows) / self.congestion_knee_flows;
+            1.0 / (1.0 + self.congestion_coeff * excess)
+        }
+    }
+
+    /// Build from a parsed TOML `[fabric]` table, filling defaults from the
+    /// preset of `kind`.
+    pub fn from_toml(v: &Json) -> Result<FabricSpec> {
+        let kind_str = v
+            .get("kind")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| anyhow!("fabric.kind missing"))?;
+        let kind = FabricKind::parse(kind_str)?;
+        let mut spec = crate::config::presets::fabric(kind);
+        if let Some(name) = v.get("name").and_then(|x| x.as_str()) {
+            spec.name = name.to_string();
+        }
+        let getf = |key: &str, default: f64| -> f64 {
+            v.get(key).and_then(|x| x.as_f64()).unwrap_or(default)
+        };
+        spec.latency = getf("latency_us", spec.latency * 1e6) * 1e-6;
+        spec.bandwidth_gbps = getf("bandwidth_gbps", spec.bandwidth_gbps);
+        spec.efficiency = getf("efficiency", spec.efficiency);
+        spec.per_msg_overhead = getf("per_msg_overhead_us", spec.per_msg_overhead * 1e6) * 1e-6;
+        spec.eager_threshold = getf("eager_threshold", spec.eager_threshold);
+        spec.switch_hop_latency = getf("switch_hop_latency_us", spec.switch_hop_latency * 1e6) * 1e-6;
+        spec.congestion_knee_flows = getf("congestion_knee_flows", spec.congestion_knee_flows);
+        spec.congestion_coeff = getf("congestion_coeff", spec.congestion_coeff);
+        if let Some(Json::Bool(b)) = v.get("rdma") {
+            spec.rdma = *b;
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.latency <= 0.0 || self.latency > 1e-3 {
+            bail!("fabric '{}': implausible latency {}", self.name, self.latency);
+        }
+        if self.bandwidth_gbps <= 0.0 || self.bandwidth_gbps > 1600.0 {
+            bail!("fabric '{}': implausible bandwidth", self.name);
+        }
+        if !(0.1..=1.0).contains(&self.efficiency) {
+            bail!("fabric '{}': efficiency out of (0.1, 1.0]", self.name);
+        }
+        if self.eager_threshold < 0.0 {
+            bail!("fabric '{}': negative eager threshold", self.name);
+        }
+        Ok(())
+    }
+}
+
+/// §IV.B PCIe-lane affinity configurations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AffinityConfig {
+    /// Config 1 (deployed): both GPUs + Ethernet NIC on CPU1, OPA on CPU0.
+    GpusAndEthOnCpu1,
+    /// Config 2: one GPU per socket.
+    GpuPerSocket,
+    /// Config 3: both GPUs + OPA NIC on CPU1, Ethernet on CPU0.
+    GpusAndOpaOnCpu1,
+}
+
+impl AffinityConfig {
+    pub fn all() -> [AffinityConfig; 3] {
+        [
+            AffinityConfig::GpusAndEthOnCpu1,
+            AffinityConfig::GpuPerSocket,
+            AffinityConfig::GpusAndOpaOnCpu1,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AffinityConfig::GpusAndEthOnCpu1 => "cfg1: GPUs+Eth on CPU1, OPA on CPU0",
+            AffinityConfig::GpuPerSocket => "cfg2: one GPU per socket",
+            AffinityConfig::GpusAndOpaOnCpu1 => "cfg3: GPUs+OPA on CPU1, Eth on CPU0",
+        }
+    }
+
+    /// Does GPU->NIC traffic cross the UPI inter-socket link for the given
+    /// fabric kind? (GPU index matters only for config 2.)
+    pub fn gpu_to_nic_crosses_upi(&self, gpu: usize, kind: FabricKind) -> bool {
+        let nic_on_cpu1 = match kind {
+            FabricKind::EthernetRoce25 | FabricKind::EthernetTcp25 => matches!(
+                self,
+                AffinityConfig::GpusAndEthOnCpu1 | AffinityConfig::GpuPerSocket
+            ),
+            _ => matches!(self, AffinityConfig::GpusAndOpaOnCpu1),
+        };
+        let gpu_on_cpu1 = match self {
+            AffinityConfig::GpuPerSocket => gpu % 2 == 1,
+            _ => true,
+        };
+        gpu_on_cpu1 != nic_on_cpu1
+    }
+}
+
+/// Cluster hardware model (TX-GAIA by default).
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub cores_per_node: usize,
+    pub nodes_per_rack: usize,
+    /// Effective PCIe gen3 x16 bandwidth per direction, bytes/s.
+    pub pcie_bw: f64,
+    pub pcie_latency: f64,
+    /// UPI inter-socket bandwidth, bytes/s, and latency.
+    pub upi_bw: f64,
+    pub upi_latency: f64,
+    /// Intra-node MPI (shared-memory transport) for CPU ranks.
+    pub shm_bw: f64,
+    pub shm_latency: f64,
+    pub affinity: AffinityConfig,
+}
+
+impl ClusterSpec {
+    pub fn txgaia() -> Self {
+        ClusterSpec {
+            name: "tx-gaia".into(),
+            nodes: 448,
+            gpus_per_node: 2,
+            cores_per_node: 40, // 2x Xeon Gold 6248 (20 cores each)
+            nodes_per_rack: 32,
+            pcie_bw: 12.8e9,  // gen3 x16 effective
+            pcie_latency: 1.0e-6,
+            upi_bw: 20.8e9,   // 10.4 GT/s x2 links, effective
+            upi_latency: 0.6e-6,
+            shm_bw: 10.0e9,
+            shm_latency: 0.3e-6,
+            affinity: AffinityConfig::GpusAndEthOnCpu1,
+        }
+    }
+
+    pub fn rack_of_node(&self, node: usize) -> usize {
+        node / self.nodes_per_rack
+    }
+
+    pub fn from_toml(v: &Json) -> Result<ClusterSpec> {
+        let mut c = ClusterSpec::txgaia();
+        if let Some(name) = v.get("name").and_then(|x| x.as_str()) {
+            c.name = name.to_string();
+        }
+        let getu = |key: &str, default: usize| -> usize {
+            v.get(key).and_then(|x| x.as_usize()).unwrap_or(default)
+        };
+        c.nodes = getu("nodes", c.nodes);
+        c.gpus_per_node = getu("gpus_per_node", c.gpus_per_node);
+        c.cores_per_node = getu("cores_per_node", c.cores_per_node);
+        c.nodes_per_rack = getu("nodes_per_rack", c.nodes_per_rack);
+        let getf = |key: &str, default: f64| -> f64 {
+            v.get(key).and_then(|x| x.as_f64()).unwrap_or(default)
+        };
+        c.pcie_bw = getf("pcie_gbs", c.pcie_bw / 1e9) * 1e9;
+        c.upi_bw = getf("upi_gbs", c.upi_bw / 1e9) * 1e9;
+        c.shm_bw = getf("shm_gbs", c.shm_bw / 1e9) * 1e9;
+        if let Some(a) = v.get("affinity").and_then(|x| x.as_usize()) {
+            c.affinity = match a {
+                1 => AffinityConfig::GpusAndEthOnCpu1,
+                2 => AffinityConfig::GpuPerSocket,
+                3 => AffinityConfig::GpusAndOpaOnCpu1,
+                _ => bail!("affinity must be 1..=3"),
+            };
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 || self.gpus_per_node == 0 || self.cores_per_node == 0 {
+            bail!("cluster '{}': zero-sized resource", self.name);
+        }
+        if self.nodes_per_rack == 0 {
+            bail!("cluster '{}': nodes_per_rack must be positive", self.name);
+        }
+        Ok(())
+    }
+}
+
+/// Transport feature toggles (the paper's GPUDirect/NCCL axis).
+#[derive(Clone, Copy, Debug)]
+pub struct TransportOptions {
+    /// GPUDirect RDMA: NIC reads GPU memory directly; otherwise gradients
+    /// are staged through host RAM over PCIe first.
+    pub gpudirect: bool,
+    /// Use the fabric's RDMA path (RoCE verbs / OPA PSM) vs TCP.
+    pub use_rdma: bool,
+}
+
+impl Default for TransportOptions {
+    fn default() -> Self {
+        TransportOptions { gpudirect: true, use_rdma: true }
+    }
+}
+
+/// Run-level parameters shared by the simulation experiments.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub seed: u64,
+    pub warmup_steps: usize,
+    pub measure_steps: usize,
+    /// Lognormal sigma of per-step compute jitter.
+    pub jitter_sigma: f64,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec { seed: 0xFAB0_15, warmup_steps: 5, measure_steps: 30, jitter_sigma: 0.02 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml;
+
+    #[test]
+    fn txgaia_defaults_match_paper() {
+        let c = ClusterSpec::txgaia();
+        assert_eq!(c.nodes, 448);
+        assert_eq!(c.gpus_per_node, 2);
+        assert_eq!(c.cores_per_node, 40);
+        assert_eq!(c.nodes_per_rack, 32);
+        assert_eq!(c.rack_of_node(31), 0);
+        assert_eq!(c.rack_of_node(32), 1);
+    }
+
+    #[test]
+    fn fabric_from_toml_overrides() {
+        let doc = toml::parse(
+            "kind = \"25gbe-roce\"\nlatency_us = 2.5\nbandwidth_gbps = 25.0\nefficiency = 0.9",
+        )
+        .unwrap();
+        let f = FabricSpec::from_toml(&doc).unwrap();
+        assert_eq!(f.kind, FabricKind::EthernetRoce25);
+        assert!((f.latency - 2.5e-6).abs() < 1e-12);
+        assert!((f.efficiency - 0.9).abs() < 1e-12);
+        assert!(f.rdma);
+    }
+
+    #[test]
+    fn fabric_validation_rejects_nonsense() {
+        let doc = toml::parse("kind = \"opa-100\"\nefficiency = 0.01").unwrap();
+        assert!(FabricSpec::from_toml(&doc).is_err());
+        let doc = toml::parse("kind = \"warp-drive\"").unwrap();
+        assert!(FabricSpec::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn congestion_factor_monotone() {
+        let f = crate::config::presets::fabric(FabricKind::EthernetRoce25);
+        let f1 = f.congestion_factor(f.congestion_knee_flows / 2.0);
+        let f2 = f.congestion_factor(f.congestion_knee_flows * 2.0);
+        let f3 = f.congestion_factor(f.congestion_knee_flows * 4.0);
+        assert_eq!(f1, 1.0);
+        assert!(f2 < 1.0);
+        assert!(f3 < f2);
+    }
+
+    #[test]
+    fn affinity_upi_crossing_matrix() {
+        use AffinityConfig::*;
+        // Config 1: GPUs on CPU1, Eth on CPU1 -> no crossing for Ethernet.
+        assert!(!GpusAndEthOnCpu1.gpu_to_nic_crosses_upi(0, FabricKind::EthernetRoce25));
+        // ...but OPA is on CPU0 -> crossing.
+        assert!(GpusAndEthOnCpu1.gpu_to_nic_crosses_upi(0, FabricKind::OmniPath100));
+        // Config 3 is the mirror image.
+        assert!(GpusAndOpaOnCpu1.gpu_to_nic_crosses_upi(0, FabricKind::EthernetRoce25));
+        assert!(!GpusAndOpaOnCpu1.gpu_to_nic_crosses_upi(0, FabricKind::OmniPath100));
+        // Config 2: GPU0 on CPU0 with Eth on CPU1 -> crossing; GPU1 local.
+        assert!(GpuPerSocket.gpu_to_nic_crosses_upi(0, FabricKind::EthernetRoce25));
+        assert!(!GpuPerSocket.gpu_to_nic_crosses_upi(1, FabricKind::EthernetRoce25));
+    }
+
+    #[test]
+    fn cluster_from_toml() {
+        let doc = toml::parse("nodes = 16\ngpus_per_node = 2\naffinity = 2").unwrap();
+        let c = ClusterSpec::from_toml(&doc).unwrap();
+        assert_eq!(c.nodes, 16);
+        assert_eq!(c.affinity, AffinityConfig::GpuPerSocket);
+    }
+}

@@ -1,0 +1,289 @@
+//! TOML-subset parser producing [`Json`] trees (one value model across the
+//! config and manifest paths).
+//!
+//! Supported grammar (sufficient for fabricbench configs):
+//!   * `[section]` and `[section.sub.sub]` tables
+//!   * `key = value` with value ∈ string ("..."), bool, integer, float,
+//!     array of scalars (`[1, 2, 3]`)
+//!   * `#` comments, blank lines
+//!   * dotted keys on the left (`a.b = 1`)
+//!
+//! Not supported (rejected loudly): arrays of tables, inline tables,
+//! multi-line strings, datetimes.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+pub fn parse(input: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let errline = lineno + 1;
+        if line.starts_with("[[") {
+            return Err(TomlError {
+                line: errline,
+                msg: "arrays of tables are not supported".into(),
+            });
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let inner = inner.strip_suffix(']').ok_or(TomlError {
+                line: errline,
+                msg: "unterminated section header".into(),
+            })?;
+            current_path = inner
+                .split('.')
+                .map(|p| p.trim().to_string())
+                .collect();
+            if current_path.iter().any(|p| p.is_empty()) {
+                return Err(TomlError {
+                    line: errline,
+                    msg: "empty path segment in section header".into(),
+                });
+            }
+            ensure_table(&mut root, &current_path).map_err(|msg| TomlError {
+                line: errline,
+                msg,
+            })?;
+            continue;
+        }
+        let eq = line.find('=').ok_or(TomlError {
+            line: errline,
+            msg: "expected 'key = value'".into(),
+        })?;
+        let (key_part, val_part) = line.split_at(eq);
+        let val_part = &val_part[1..];
+        let mut path = current_path.clone();
+        for seg in key_part.trim().split('.') {
+            let seg = seg.trim();
+            if seg.is_empty() {
+                return Err(TomlError {
+                    line: errline,
+                    msg: "empty key segment".into(),
+                });
+            }
+            path.push(seg.to_string());
+        }
+        let value = parse_value(val_part.trim()).map_err(|msg| TomlError {
+            line: errline,
+            msg,
+        })?;
+        insert(&mut root, &path, value).map_err(|msg| TomlError { line: errline, msg })?;
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a string literal must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), String> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => return Err(format!("'{seg}' is both a value and a table")),
+        };
+    }
+    Ok(())
+}
+
+fn insert(root: &mut BTreeMap<String, Json>, path: &[String], value: Json) -> Result<(), String> {
+    let (last, dirs) = path.split_last().expect("non-empty path");
+    let mut cur = root;
+    for seg in dirs {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => return Err(format!("'{seg}' is both a value and a table")),
+        };
+    }
+    if cur.contains_key(last) {
+        return Err(format!("duplicate key '{last}'"));
+    }
+    cur.insert(last.clone(), value);
+    Ok(())
+}
+
+fn parse_value(s: &str) -> Result<Json, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| format!("unterminated string: {s}"))?;
+        if inner.contains('"') {
+            return Err(format!("embedded quote in string: {s}"));
+        }
+        return Ok(Json::Str(inner.replace("\\n", "\n").replace("\\t", "\t")));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if s.starts_with('[') {
+        let inner = s
+            .strip_prefix('[')
+            .unwrap()
+            .strip_suffix(']')
+            .ok_or_else(|| format!("unterminated array: {s}"))?;
+        let mut out = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for item in split_array_items(trimmed)? {
+                out.push(parse_value(item.trim())?);
+            }
+        }
+        return Ok(Json::Arr(out));
+    }
+    if s == "{}" || s.starts_with('{') {
+        return Err("inline tables are not supported".into());
+    }
+    // Numbers: allow underscores as separators.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("cannot parse value: {s}"))
+}
+
+/// Split a flat array body on commas, respecting string literals.
+fn split_array_items(s: &str) -> Result<Vec<&str>, String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err("unterminated string in array".into());
+    }
+    if depth != 0 {
+        return Err("nested arrays must balance".into());
+    }
+    if !s[start..].trim().is_empty() {
+        out.push(&s[start..]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = r#"
+# comment
+title = "fabricbench"
+[fabric]
+name = "25gbe-roce"
+bandwidth_gbps = 25.0
+rdma = true
+racks = 14
+        "#;
+        let j = parse(doc).unwrap();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("fabricbench"));
+        let f = j.get("fabric").unwrap();
+        assert_eq!(f.get("bandwidth_gbps").unwrap().as_f64(), Some(25.0));
+        assert_eq!(f.get("rdma"), Some(&Json::Bool(true)));
+        assert_eq!(f.get("racks").unwrap().as_usize(), Some(14));
+    }
+
+    #[test]
+    fn nested_sections_and_dotted_keys() {
+        let doc = r#"
+[cluster.node]
+gpus = 2
+cluster.node.cores = 40
+[train]
+batch.per_gpu = 64
+        "#;
+        let j = parse(doc).unwrap();
+        // [cluster.node] then dotted key merges.
+        let node = j.get("cluster").unwrap().get("node").unwrap();
+        assert_eq!(node.get("gpus").unwrap().as_usize(), Some(2));
+        // dotted key relative to root when it repeats the section path.
+        assert!(j.get("cluster").unwrap().get("node").is_some());
+        let batch = j.get("train").unwrap().get("batch").unwrap();
+        assert_eq!(batch.get("per_gpu").unwrap().as_usize(), Some(64));
+    }
+
+    #[test]
+    fn arrays() {
+        let j = parse("gpus = [2, 4, 8]\nnames = [\"a\", \"b\"]").unwrap();
+        let arr: Vec<usize> = j
+            .get("gpus").unwrap().as_arr().unwrap()
+            .iter().map(|x| x.as_usize().unwrap()).collect();
+        assert_eq!(arr, vec![2, 4, 8]);
+        assert_eq!(
+            j.get("names").unwrap().as_arr().unwrap()[1].as_str(),
+            Some("b")
+        );
+    }
+
+    #[test]
+    fn comments_inside_strings() {
+        let j = parse("s = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn numbers_with_underscores() {
+        let j = parse("n = 83_886_080").unwrap();
+        assert_eq!(j.get("n").unwrap().as_usize(), Some(83_886_080));
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse("[unterminated").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("x = {a = 1}").is_err());
+        assert!(parse("[[tables]]").is_err());
+        assert!(parse("dup = 1\ndup = 2").is_err());
+        assert!(parse("just a line").is_err());
+    }
+
+    #[test]
+    fn value_table_conflict_rejected() {
+        assert!(parse("a = 1\n[a]\nb = 2").is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Design-choice ablations (DESIGN.md E8): what each mechanism buys.
+//!
+//! * fusion-buffer capacity sweep (Horovod's key tuning knob)
+//! * compute/communication overlap on/off
+//! * GPUDirect RDMA vs host-staged copies
+//! * RDMA (RoCE) vs plain TCP on the same 25 GbE hardware
+
+use crate::collectives::RingAllreduce;
+use crate::config::presets::fabric;
+use crate::config::spec::{ClusterSpec, FabricKind, RunSpec, TransportOptions};
+use crate::models::perf::Precision;
+use crate::models::zoo::resnet50;
+use crate::trainer::TrainerSim;
+use crate::util::table::{fnum, Table};
+use crate::util::units::MIB;
+
+fn trainer(
+    kind: FabricKind,
+    opts: TransportOptions,
+    fusion_bytes: f64,
+    overlap: bool,
+) -> TrainerSim {
+    TrainerSim {
+        arch: resnet50(),
+        fabric: fabric(kind),
+        cluster: ClusterSpec::txgaia(),
+        opts,
+        strategy: Box::new(RingAllreduce),
+        per_gpu_batch: 64,
+        precision: Precision::Fp32,
+        fusion_bytes,
+        overlap,
+        step_overhead: 0.0,
+        coordination_overhead:
+            crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+    }
+}
+
+fn spec(quick: bool) -> RunSpec {
+    RunSpec {
+        warmup_steps: 1,
+        measure_steps: if quick { 5 } else { 10 },
+        ..Default::default()
+    }
+}
+
+pub struct AblationPoint {
+    pub name: String,
+    pub images_per_sec: f64,
+}
+
+/// Fusion buffer capacity sweep at 64 GPUs on Ethernet.
+pub fn fusion_sweep(quick: bool) -> (Table, Vec<AblationPoint>) {
+    let mut t = Table::new(
+        "Ablation: Horovod fusion-buffer capacity (ResNet50, 64 GPUs, 25GbE)",
+        &["fusion buffer", "img/s"],
+    );
+    let mut pts = Vec::new();
+    for mib in [1.0, 4.0, 16.0, 64.0, 256.0] {
+        let tr = trainer(FabricKind::EthernetRoce25, TransportOptions::default(), mib * MIB, true);
+        let r = tr.run(64, &spec(quick)).unwrap();
+        t.row(vec![format!("{mib} MiB"), fnum(r.images_per_sec)]);
+        pts.push(AblationPoint { name: format!("{mib}MiB"), images_per_sec: r.images_per_sec });
+    }
+    (t, pts)
+}
+
+/// Overlap, GPUDirect and RDMA toggles at 64 GPUs.
+pub fn toggles(quick: bool) -> (Table, Vec<AblationPoint>) {
+    let mut t = Table::new(
+        "Ablation: transport/overlap toggles (ResNet50, 64 GPUs, 25GbE)",
+        &["configuration", "img/s"],
+    );
+    let cases: Vec<(&str, TransportOptions, bool)> = vec![
+        ("baseline (GPUDirect+RDMA, overlap)", TransportOptions::default(), true),
+        ("no overlap", TransportOptions::default(), false),
+        (
+            "no GPUDirect (host-staged)",
+            TransportOptions { gpudirect: false, use_rdma: true },
+            true,
+        ),
+        (
+            "no RDMA (TCP on 25GbE)",
+            TransportOptions { gpudirect: false, use_rdma: false },
+            true,
+        ),
+    ];
+    let mut pts = Vec::new();
+    for (name, opts, overlap) in cases {
+        let tr = trainer(FabricKind::EthernetRoce25, opts, 64.0 * MIB, overlap);
+        let r = tr.run(64, &spec(quick)).unwrap();
+        t.row(vec![name.to_string(), fnum(r.images_per_sec)]);
+        pts.push(AblationPoint { name: name.to_string(), images_per_sec: r.images_per_sec });
+    }
+    (t, pts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_fusion_buffers_hurt() {
+        let (_, pts) = fusion_sweep(true);
+        let tiny = pts.iter().find(|p| p.name == "1MiB").unwrap().images_per_sec;
+        let big = pts.iter().find(|p| p.name == "64MiB").unwrap().images_per_sec;
+        assert!(big > tiny, "64MiB {big} !> 1MiB {tiny}");
+    }
+
+    #[test]
+    fn every_mechanism_buys_throughput() {
+        let (_, pts) = toggles(true);
+        let base = pts[0].images_per_sec;
+        for p in &pts[1..] {
+            assert!(
+                p.images_per_sec < base,
+                "'{}' ({}) should be slower than baseline ({base})",
+                p.name,
+                p.images_per_sec
+            );
+        }
+        // TCP is the worst case.
+        let tcp = pts.last().unwrap().images_per_sec;
+        assert!(tcp < 0.95 * base, "TCP {tcp} vs baseline {base}");
+    }
+}

@@ -1,0 +1,137 @@
+//! §IV.B: PCIe-lane affinity study. Three configurations of GPU/NIC
+//! socket placement; the paper found **no statistically significant
+//! difference** and deployed config 1. We run repeated small-scale
+//! throughput measurements per configuration and apply Welch's t-test.
+
+use crate::collectives::RingAllreduce;
+use crate::config::presets::paper_fabrics;
+use crate::config::spec::{AffinityConfig, ClusterSpec, RunSpec, TransportOptions};
+use crate::models::perf::Precision;
+use crate::models::zoo::resnet50;
+use crate::trainer::TrainerSim;
+use crate::util::stats::{self, welch_t_test};
+use crate::util::table::{fnum, Table};
+use crate::util::units::MIB;
+
+pub struct AffinityResult {
+    pub fabric: String,
+    pub samples: Vec<(AffinityConfig, Vec<f64>)>,
+    /// Pairwise Welch p-values ((i, j), p).
+    pub p_values: Vec<((usize, usize), f64)>,
+}
+
+/// Repeated throughput samples for one affinity config.
+fn sample(
+    fabric: &crate::config::FabricSpec,
+    affinity: AffinityConfig,
+    reps: usize,
+    gpus: usize,
+) -> Vec<f64> {
+    let mut cluster = ClusterSpec::txgaia();
+    cluster.affinity = affinity;
+    let trainer = TrainerSim {
+        arch: resnet50(),
+        fabric: fabric.clone(),
+        cluster,
+        opts: TransportOptions::default(),
+        strategy: Box::new(RingAllreduce),
+        per_gpu_batch: 64,
+        precision: Precision::Fp32,
+        fusion_bytes: 64.0 * MIB,
+        overlap: true,
+        step_overhead: 0.0,
+        coordination_overhead:
+            crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+    };
+    (0..reps)
+        .map(|i| {
+            let spec = RunSpec {
+                seed: 0xAFF1_0000 + i as u64,
+                warmup_steps: 1,
+                measure_steps: 6,
+                ..Default::default()
+            };
+            trainer.run(gpus, &spec).unwrap().images_per_sec
+        })
+        .collect()
+}
+
+pub fn run(quick: bool) -> (Table, Vec<AffinityResult>) {
+    let reps = if quick { 8 } else { 20 };
+    let gpus = 8; // "small scale tests" in the paper
+    let mut t = Table::new(
+        "§IV.B: PCIe affinity study (ResNet50, 8 GPUs; Welch's t-test)",
+        &["fabric", "config", "mean img/s", "std", "p vs cfg1", "significant@0.05"],
+    );
+    let mut results = Vec::new();
+    for fabric in paper_fabrics() {
+        let samples: Vec<(AffinityConfig, Vec<f64>)> = AffinityConfig::all()
+            .into_iter()
+            .map(|cfg| (cfg, sample(&fabric, cfg, reps, gpus)))
+            .collect();
+        let mut p_values = Vec::new();
+        for i in 0..samples.len() {
+            for j in i + 1..samples.len() {
+                let w = welch_t_test(&samples[i].1, &samples[j].1);
+                p_values.push(((i, j), w.p_two_sided));
+            }
+        }
+        for (i, (cfg, xs)) in samples.iter().enumerate() {
+            let p = if i == 0 {
+                "-".to_string()
+            } else {
+                let w = welch_t_test(&samples[0].1, xs);
+                format!("{:.3}", w.p_two_sided)
+            };
+            let sig = if i == 0 {
+                "-".to_string()
+            } else {
+                welch_t_test(&samples[0].1, xs).significant_at_05.to_string()
+            };
+            t.row(vec![
+                fabric.name.clone(),
+                cfg.label().to_string(),
+                fnum(stats::mean(xs)),
+                fnum(stats::stddev(xs)),
+                p,
+                sig,
+            ]);
+        }
+        results.push(AffinityResult { fabric: fabric.name.clone(), samples, p_values });
+    }
+    (t, results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_significant_difference_like_the_paper() {
+        let (_, results) = run(true);
+        for r in &results {
+            for &((i, j), p) in &r.p_values {
+                assert!(
+                    p > 0.05,
+                    "{}: configs {i} vs {j} significantly different (p={p})",
+                    r.fabric
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_configs_produce_throughput() {
+        let (_, results) = run(true);
+        for r in &results {
+            for (cfg, xs) in &r.samples {
+                assert!(
+                    xs.iter().all(|&x| x > 0.0),
+                    "{}: {:?} produced non-positive throughput",
+                    r.fabric,
+                    cfg
+                );
+            }
+        }
+    }
+}

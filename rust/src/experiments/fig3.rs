@@ -1,0 +1,99 @@
+//! Fig 3: CartDG strong scaling — compute and communication time per
+//! iteration vs CPU core count, on 25 GbE and OPA-100. The paper's
+//! observations to reproduce: (a) near-identical communication time on
+//! both fabrics, (b) good compute strong-scaling, (c) the plateau between
+//! 1,280 and 2,560 cores where traffic starts crossing rack boundaries.
+
+use crate::cfd::solver::StrongScaling;
+use crate::config::presets::paper_fabrics;
+use crate::util::table::{fnum, Table};
+
+pub struct Fig3Row {
+    pub cores: usize,
+    pub fabric: String,
+    pub compute: f64,
+    pub comm: f64,
+    pub comm_wire: f64,
+    pub inter_rack: u64,
+}
+
+pub fn run(quick: bool) -> (Table, Vec<Fig3Row>) {
+    let scaling = StrongScaling::paper();
+    let cores = if quick {
+        vec![40, 320, 1280, 2560, 5120]
+    } else {
+        StrongScaling::paper_core_counts()
+    };
+    let mut rows = Vec::new();
+    let mut t = Table::new(
+        "Fig 3: CartDG strong scaling (per-iteration seconds)",
+        &["cores", "fabric", "compute (s)", "comm (s)", "comm wire (s)", "inter-rack msgs"],
+    );
+    for fabric in paper_fabrics() {
+        for pt in scaling.sweep(&fabric, &cores).unwrap() {
+            t.row(vec![
+                pt.cores.to_string(),
+                fabric.name.clone(),
+                fnum(pt.compute_time),
+                fnum(pt.comm_time),
+                fnum(pt.comm_wire_time),
+                pt.inter_rack_messages.to_string(),
+            ]);
+            rows.push(Fig3Row {
+                cores: pt.cores,
+                fabric: fabric.name.clone(),
+                compute: pt.compute_time,
+                comm: pt.comm_time,
+                comm_wire: pt.comm_wire_time,
+                inter_rack: pt.inter_rack_messages,
+            });
+        }
+    }
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_shapes_hold() {
+        let (_, rows) = run(false);
+        // (a) comm parity: for every core count, eth/opa within 2x.
+        for cores in StrongScaling::paper_core_counts() {
+            let eth = rows.iter().find(|r| r.cores == cores && r.fabric.contains("GbE")).unwrap();
+            let opa = rows.iter().find(|r| r.cores == cores && r.fabric.contains("OPA")).unwrap();
+            let ratio = eth.comm / opa.comm;
+            assert!(
+                (0.5..2.5).contains(&ratio),
+                "cores={cores}: comm ratio {ratio}"
+            );
+        }
+        // (b) compute strong-scales ~linearly over two decades.
+        let c40 = rows.iter().find(|r| r.cores == 40).unwrap().compute;
+        let c5120 = rows.iter().find(|r| r.cores == 5120).unwrap().compute;
+        assert!(c40 / c5120 > 64.0, "strong scaling {c40}/{c5120}");
+        // (c) rack boundary: no inter-rack messages at 1280, some at 2560.
+        assert_eq!(rows.iter().find(|r| r.cores == 1280).unwrap().inter_rack, 0);
+        assert!(rows.iter().find(|r| r.cores == 2560).unwrap().inter_rack > 0);
+    }
+
+    #[test]
+    fn comm_scaling_degrades_at_rack_boundary() {
+        // The paper reports a plateau between 1,280 and 2,560 cores caused
+        // by traffic crossing racks. Our model's signature of the same
+        // effect: the comm-time improvement ratio degrades at the rack
+        // crossing relative to the previous (intra-rack) doubling, and the
+        // comm cost *per element* goes up. (The full flat plateau of the
+        // paper also involves compute-side placement effects we do not
+        // model — see EXPERIMENTS.md.)
+        let (_, rows) = run(false);
+        let eth = |c: usize| rows.iter().find(|r| r.cores == c && r.fabric.contains("GbE")).unwrap();
+        let r_intra = eth(1280).comm / eth(640).comm; // both inside one rack
+        let r_cross = eth(2560).comm / eth(1280).comm; // crosses racks
+        assert!(
+            r_cross > r_intra,
+            "rack crossing should degrade scaling: intra {r_intra} cross {r_cross}"
+        );
+    }
+}

@@ -1,0 +1,134 @@
+//! Fig 5 (a-d): three all-reduce strategies per model, both fabrics,
+//! 2 -> 512 GPUs. The paper's labels COLLECTIVE0/1/2 map to our ring,
+//! recursive-halving-doubling and hierarchical implementations.
+//!
+//! Shapes to reproduce: near-linear scaling for all strategies through
+//! 256 GPUs; the two fabrics comparable through 256; ResNet50_v1.5 on
+//! Ethernet degrading at 512 GPUs (25 Gb/s bandwidth saturation at the
+//! core switch — congestion model).
+
+use crate::collectives::{Collective, Hierarchical, RecursiveHalvingDoubling, RingAllreduce};
+use crate::config::presets::paper_fabrics;
+use crate::config::spec::{ClusterSpec, RunSpec, TransportOptions};
+use crate::models::perf::Precision;
+use crate::models::zoo::paper_models;
+use crate::trainer::TrainerSim;
+use crate::util::table::{fnum, Table};
+use crate::util::units::MIB;
+
+pub const STRATEGY_LABELS: [&str; 3] = ["COLLECTIVE0(ring)", "COLLECTIVE1(rhd)", "COLLECTIVE2(hier)"];
+
+fn strategy(i: usize) -> Box<dyn Collective> {
+    match i {
+        0 => Box::new(RingAllreduce),
+        1 => Box::new(RecursiveHalvingDoubling),
+        _ => Box::new(Hierarchical::default()),
+    }
+}
+
+pub struct Fig5Row {
+    pub model: String,
+    pub strategy: String,
+    pub fabric: String,
+    pub gpus: usize,
+    pub images_per_sec: f64,
+}
+
+pub fn run(quick: bool) -> (Table, Vec<Fig5Row>) {
+    let gpu_counts = super::paper_gpu_counts(quick);
+    let run_spec = RunSpec {
+        measure_steps: if quick { 5 } else { 10 },
+        warmup_steps: 2,
+        ..Default::default()
+    };
+    let mut rows = Vec::new();
+    let mut t = Table::new(
+        "Fig 5: all-reduce strategy comparison (images/s)",
+        &["model", "strategy", "fabric", "gpus", "img/s"],
+    );
+    for arch in paper_models() {
+        for (si, label) in STRATEGY_LABELS.iter().enumerate() {
+            for fabric in paper_fabrics() {
+                let trainer = TrainerSim {
+                    arch: arch.clone(),
+                    fabric: fabric.clone(),
+                    cluster: ClusterSpec::txgaia(),
+                    opts: TransportOptions::default(),
+                    strategy: strategy(si),
+                    per_gpu_batch: super::batch_for(&arch.name),
+                    precision: Precision::Fp32,
+                    fusion_bytes: 64.0 * MIB,
+                    overlap: true,
+                    step_overhead: 0.0,
+                    coordination_overhead:
+                        crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+                };
+                for &g in &gpu_counts {
+                    let r = trainer.run(g, &run_spec).unwrap();
+                    t.row(vec![
+                        arch.name.clone(),
+                        label.to_string(),
+                        fabric.name.clone(),
+                        g.to_string(),
+                        fnum(r.images_per_sec),
+                    ]);
+                    rows.push(Fig5Row {
+                        model: arch.name.clone(),
+                        strategy: label.to_string(),
+                        fabric: fabric.name.clone(),
+                        gpus: g,
+                        images_per_sec: r.images_per_sec,
+                    });
+                }
+            }
+        }
+    }
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn find<'a>(
+        rows: &'a [Fig5Row],
+        model: &str,
+        strategy_frag: &str,
+        fabric_frag: &str,
+        gpus: usize,
+    ) -> &'a Fig5Row {
+        rows.iter()
+            .find(|r| {
+                r.model == model
+                    && r.strategy.contains(strategy_frag)
+                    && r.fabric.contains(fabric_frag)
+                    && r.gpus == gpus
+            })
+            .unwrap()
+    }
+
+    #[test]
+    fn fabrics_comparable_through_moderate_scale() {
+        let (_, rows) = run(true);
+        for model in ["resnet50", "inception_v3"] {
+            for strat in ["ring", "hier"] {
+                let eth = find(&rows, model, strat, "GbE", 32).images_per_sec;
+                let opa = find(&rows, model, strat, "OPA", 32).images_per_sec;
+                let ratio = eth / opa;
+                assert!(
+                    ratio > 0.75,
+                    "{model}/{strat}: eth/opa at 32 GPUs = {ratio}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn near_linear_scaling_for_ring() {
+        let (_, rows) = run(true);
+        let r8 = find(&rows, "resnet50", "ring", "OPA", 8).images_per_sec;
+        let r128 = find(&rows, "resnet50", "ring", "OPA", 128).images_per_sec;
+        let ratio = r128 / r8;
+        assert!(ratio > 10.0, "8->128 GPUs scaled only {ratio}x");
+    }
+}

@@ -1,0 +1,117 @@
+//! Framework comparison: the paper evaluates both TensorFlow (Horovod)
+//! and PyTorch (DDP) on the two fabrics. The architectures are identical;
+//! what differs is coordination machinery — bucketing policy, negotiation
+//! cost, dispatch overhead (see [`crate::trainer::framework`]).
+
+use crate::collectives::RingAllreduce;
+use crate::config::presets::paper_fabrics;
+use crate::config::spec::{ClusterSpec, RunSpec, TransportOptions};
+use crate::models::perf::Precision;
+use crate::models::zoo::resnet50;
+use crate::trainer::framework::{horovod_tf, pytorch_ddp, FrameworkProfile};
+use crate::trainer::TrainerSim;
+use crate::util::table::{fnum, Table};
+
+pub struct FrameworkRow {
+    pub framework: String,
+    pub fabric: String,
+    pub gpus: usize,
+    pub images_per_sec: f64,
+}
+
+fn trainer(profile: &FrameworkProfile, fabric: crate::config::FabricSpec) -> TrainerSim {
+    TrainerSim {
+        arch: resnet50(),
+        fabric,
+        cluster: ClusterSpec::txgaia(),
+        opts: TransportOptions::default(),
+        strategy: Box::new(RingAllreduce),
+        per_gpu_batch: 64,
+        precision: Precision::Fp32,
+        fusion_bytes: profile.fusion_bytes,
+        overlap: true,
+        step_overhead: profile.step_overhead,
+        coordination_overhead: profile.coordination_overhead,
+    }
+}
+
+pub fn run(quick: bool) -> (Table, Vec<FrameworkRow>) {
+    let gpu_counts = super::paper_gpu_counts(quick);
+    let spec = RunSpec {
+        warmup_steps: 1,
+        measure_steps: if quick { 5 } else { 10 },
+        ..Default::default()
+    };
+    let mut t = Table::new(
+        "Framework comparison: ResNet50 (images/s)",
+        &["framework", "fabric", "gpus", "img/s"],
+    );
+    let mut rows = Vec::new();
+    for profile in [horovod_tf(), pytorch_ddp()] {
+        for fabric in paper_fabrics() {
+            let tr = trainer(&profile, fabric.clone());
+            for &g in &gpu_counts {
+                let r = tr.run(g, &spec).unwrap();
+                t.row(vec![
+                    profile.name.to_string(),
+                    fabric.name.clone(),
+                    g.to_string(),
+                    fnum(r.images_per_sec),
+                ]);
+                rows.push(FrameworkRow {
+                    framework: profile.name.to_string(),
+                    fabric: fabric.name.clone(),
+                    gpus: g,
+                    images_per_sec: r.images_per_sec,
+                });
+            }
+        }
+    }
+    (t, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn both_frameworks_show_the_fabric_gap() {
+        let (_, rows) = run(true);
+        for fw in ["tf-horovod", "pytorch-ddp"] {
+            let eth: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.framework == fw && r.fabric.contains("GbE"))
+                .map(|r| r.images_per_sec)
+                .collect();
+            let opa: Vec<f64> = rows
+                .iter()
+                .filter(|r| r.framework == fw && r.fabric.contains("OPA"))
+                .map(|r| r.images_per_sec)
+                .collect();
+            let mean_ratio = crate::util::stats::mean(
+                &eth.iter().zip(&opa).map(|(e, o)| e / o).collect::<Vec<_>>(),
+            );
+            assert!(
+                (0.7..1.0).contains(&mean_ratio),
+                "{fw}: eth/opa mean ratio {mean_ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn frameworks_comparable_overall() {
+        // The paper's conclusion holds for both frameworks; neither should
+        // be wildly different in the simulation either.
+        let (_, rows) = run(true);
+        let at = |fw: &str, g: usize| {
+            rows.iter()
+                .find(|r| r.framework == fw && r.fabric.contains("OPA") && r.gpus == g)
+                .unwrap()
+                .images_per_sec
+        };
+        for g in [8, 32] {
+            let ratio = at("tf-horovod", g) / at("pytorch-ddp", g);
+            assert!((0.6..1.6).contains(&ratio), "gpus={g}: tf/pt ratio {ratio}");
+        }
+    }
+}

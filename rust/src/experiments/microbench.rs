@@ -1,0 +1,113 @@
+//! Methodology microbenchmarks (osu_latency / osu_bw style): raw
+//! point-to-point latency and bandwidth per fabric and protocol, plus
+//! allreduce time vs message size. These ground the fabric models before
+//! any application-level claims.
+
+use crate::cluster::Placement;
+use crate::collectives::{Collective, NullBuffers, RingAllreduce};
+use crate::config::presets::fabric;
+use crate::config::spec::{ClusterSpec, FabricKind, TransportOptions};
+use crate::fabric::{Comm, NetSim};
+use crate::util::table::Table;
+use crate::util::units::{fmt_bytes, fmt_time};
+
+pub fn all_fabric_kinds() -> [FabricKind; 4] {
+    [
+        FabricKind::EthernetRoce25,
+        FabricKind::EthernetTcp25,
+        FabricKind::OmniPath100,
+        FabricKind::InfinibandEdr100,
+    ]
+}
+
+/// Message sizes 8 B .. 64 MiB (powers of 4).
+pub fn sweep_sizes() -> Vec<f64> {
+    (0..13).map(|i| 8.0 * 4f64.powi(i)).collect()
+}
+
+/// p2p latency/bandwidth table across fabrics.
+pub fn p2p(quick: bool) -> Table {
+    let cluster = ClusterSpec::txgaia();
+    let placement = Placement::cores(&cluster, 80).unwrap(); // 2 nodes
+    let sizes = if quick {
+        vec![8.0, 65536.0, 16.0 * 1024.0 * 1024.0]
+    } else {
+        sweep_sizes()
+    };
+    let mut t = Table::new(
+        "Microbenchmark: point-to-point (node 0 -> node 1)",
+        &["fabric", "size", "one-way time", "achieved GB/s"],
+    );
+    for kind in all_fabric_kinds() {
+        let mut net = NetSim::new(fabric(kind), cluster.clone(), TransportOptions::default());
+        for &bytes in &sizes {
+            let time = net.one_way_time(&placement, 0, 40, bytes);
+            t.row(vec![
+                net.fabric.name.clone(),
+                fmt_bytes(bytes),
+                fmt_time(time),
+                format!("{:.3}", bytes / time / 1e9),
+            ]);
+        }
+    }
+    t
+}
+
+/// Allreduce time vs buffer size (16 GPUs, ring).
+pub fn allreduce(quick: bool) -> Table {
+    let cluster = ClusterSpec::txgaia();
+    let placement = Placement::gpus(&cluster, 16).unwrap();
+    let sizes: Vec<usize> = if quick {
+        vec![1 << 10, 1 << 20, 1 << 24]
+    } else {
+        (10..27).step_by(2).map(|i| 1usize << i).collect()
+    };
+    let mut t = Table::new(
+        "Microbenchmark: ring allreduce, 16 GPUs (elements are f32)",
+        &["fabric", "elements", "time", "algo GB/s"],
+    );
+    for kind in [FabricKind::EthernetRoce25, FabricKind::OmniPath100] {
+        for &elems in &sizes {
+            let mut net = NetSim::new(fabric(kind), cluster.clone(), TransportOptions::default());
+            let mut comm = Comm::new(&mut net, &placement);
+            let time = RingAllreduce.allreduce(&mut comm, &mut NullBuffers { elems });
+            let bytes = elems as f64 * 4.0;
+            t.row(vec![
+                net.fabric.name.clone(),
+                elems.to_string(),
+                fmt_time(time),
+                format!("{:.3}", 2.0 * bytes / time / 1e9),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_populate() {
+        let p = p2p(true);
+        assert_eq!(p.rows.len(), 4 * 3);
+        let a = allreduce(true);
+        assert_eq!(a.rows.len(), 2 * 3);
+    }
+
+    #[test]
+    fn latency_ordering_matches_technology() {
+        // 8-byte one-way times: IB < OPA < RoCE < TCP.
+        let cluster = ClusterSpec::txgaia();
+        let placement = Placement::cores(&cluster, 80).unwrap();
+        let time_of = |kind| {
+            let mut net = NetSim::new(fabric(kind), cluster.clone(), TransportOptions::default());
+            net.one_way_time(&placement, 0, 40, 8.0)
+        };
+        let tcp = time_of(FabricKind::EthernetTcp25);
+        let roce = time_of(FabricKind::EthernetRoce25);
+        let opa = time_of(FabricKind::OmniPath100);
+        let ib = time_of(FabricKind::InfinibandEdr100);
+        assert!(ib < opa && opa < roce && roce < tcp, "{ib} {opa} {roce} {tcp}");
+    }
+}

@@ -1,0 +1,33 @@
+//! Experiment drivers: one module per table/figure in the paper, plus the
+//! methodology microbenchmarks and the design-choice ablations. Each
+//! driver returns a [`crate::util::table::Table`] whose rows mirror what
+//! the paper reports; the benches and the CLI both call through here.
+
+pub mod ablations;
+pub mod affinity;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod frameworks;
+pub mod microbench;
+pub mod sweeps;
+pub mod table1;
+
+/// GPU counts used by Figs 4-5 (the paper scales 2 -> 512).
+pub fn paper_gpu_counts(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![2, 8, 32, 128]
+    } else {
+        vec![2, 4, 8, 16, 32, 64, 128, 256, 512]
+    }
+}
+
+/// Per-model per-GPU batch sizes (tf_cnn_benchmarks defaults; VGG16 is
+/// memory-bound at 32 on a 32 GB V100 with fp32).
+pub fn batch_for(model: &str) -> usize {
+    if model.starts_with("vgg") {
+        32
+    } else {
+        64
+    }
+}

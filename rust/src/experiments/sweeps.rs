@@ -1,0 +1,124 @@
+//! Tuning-knob sweeps the paper's §III calls out in tf_cnn_benchmarks:
+//! per-GPU batch size and full-vs-mixed precision, each crossed with the
+//! two fabrics. Also demonstrates the message-level trace: the batch
+//! sweep reports how the inter-rack byte fraction changes with scale.
+
+use crate::collectives::RingAllreduce;
+use crate::config::presets::paper_fabrics;
+use crate::config::spec::{ClusterSpec, RunSpec, TransportOptions};
+use crate::models::perf::Precision;
+use crate::models::zoo::resnet50;
+use crate::trainer::TrainerSim;
+use crate::util::table::{fnum, Table};
+use crate::util::units::MIB;
+
+fn trainer(fabric: crate::config::FabricSpec, batch: usize, precision: Precision) -> TrainerSim {
+    TrainerSim {
+        arch: resnet50(),
+        fabric,
+        cluster: ClusterSpec::txgaia(),
+        opts: TransportOptions::default(),
+        strategy: Box::new(RingAllreduce),
+        per_gpu_batch: batch,
+        precision,
+        fusion_bytes: 64.0 * MIB,
+        overlap: true,
+        step_overhead: 0.0,
+        coordination_overhead: crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+    }
+}
+
+fn spec(quick: bool) -> RunSpec {
+    RunSpec { warmup_steps: 1, measure_steps: if quick { 5 } else { 10 }, ..Default::default() }
+}
+
+/// Per-GPU batch-size sweep (ResNet50, 64 GPUs).
+pub fn batch_sweep(quick: bool) -> Table {
+    let mut t = Table::new(
+        "Sweep: per-GPU batch size (ResNet50, 64 GPUs)",
+        &["fabric", "batch", "img/s", "scaling eff"],
+    );
+    for fabric in paper_fabrics() {
+        for batch in [16usize, 32, 64, 128] {
+            let r = trainer(fabric.clone(), batch, Precision::Fp32)
+                .run(64, &spec(quick))
+                .unwrap();
+            t.row(vec![
+                fabric.name.clone(),
+                batch.to_string(),
+                fnum(r.images_per_sec),
+                format!("{:.3}", r.scaling_efficiency()),
+            ]);
+        }
+    }
+    t
+}
+
+/// fp32 vs mixed precision (ResNet50, 64 GPUs). Mixed precision shrinks
+/// compute 2-3x while gradients stay fp32 on the wire (Horovod default),
+/// so the fabric gap *widens* — a non-obvious consequence the sweep
+/// makes visible.
+pub fn precision_sweep(quick: bool) -> Table {
+    let mut t = Table::new(
+        "Sweep: precision (ResNet50, 64 GPUs)",
+        &["fabric", "precision", "img/s", "exposed comm frac"],
+    );
+    for fabric in paper_fabrics() {
+        for (label, p) in [("fp32", Precision::Fp32), ("mixed", Precision::Mixed)] {
+            let r = trainer(fabric.clone(), 64, p).run(64, &spec(quick)).unwrap();
+            t.row(vec![
+                fabric.name.clone(),
+                label.to_string(),
+                fnum(r.images_per_sec),
+                format!("{:.3}", r.comm_fraction),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(t: &Table, fabric_frag: &str, key: &str) -> f64 {
+        t.rows
+            .iter()
+            .find(|r| r[0].contains(fabric_frag) && r[1] == key)
+            .unwrap()[2]
+            .parse()
+            .unwrap()
+    }
+
+    #[test]
+    fn larger_batches_scale_better() {
+        let t = batch_sweep(true);
+        // More compute per step amortizes the (fixed-size) gradient
+        // exchange: efficiency column must be monotone in batch.
+        for fab in ["GbE", "OPA"] {
+            let effs: Vec<f64> = t
+                .rows
+                .iter()
+                .filter(|r| r[0].contains(fab))
+                .map(|r| r[3].parse().unwrap())
+                .collect();
+            for w in effs.windows(2) {
+                assert!(w[1] >= w[0] - 0.02, "{fab}: efficiency not monotone {effs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_precision_widens_fabric_gap() {
+        let t = precision_sweep(true);
+        let gap = |prec: &str| {
+            1.0 - cell(&t, "GbE", prec) / cell(&t, "OPA", prec)
+        };
+        assert!(
+            gap("mixed") > gap("fp32"),
+            "mixed gap {} !> fp32 gap {}",
+            gap("mixed"),
+            gap("fp32")
+        );
+    }
+}

@@ -1,0 +1,129 @@
+//! Table I: historical single-machine training times. The paper quotes
+//! the original papers' wall-clock numbers; we regenerate the column from
+//! the cost model (architecture FLOPs x epochs x dataset / era hardware)
+//! and print both, so the reader can see the model lands in the right
+//! order of magnitude with zero per-row tuning.
+
+use crate::cluster::gpu::{GpuModel, GTX580, K40, P100, TITAN_BLACK};
+use crate::models::perf::{step_cost, Precision};
+use crate::models::zoo;
+use crate::util::table::Table;
+
+/// ImageNet-1k training images.
+pub const IMAGENET_IMAGES: f64 = 1.281e6;
+
+struct Row {
+    model: &'static str,
+    paper_time: &'static str,
+    hardware: &'static str,
+    gpus: usize,
+    gpu: &'static GpuModel,
+    epochs: f64,
+}
+
+fn rows() -> Vec<Row> {
+    vec![
+        Row {
+            model: "alexnet",
+            paper_time: "5-7 days",
+            hardware: "2 x NVIDIA GTX 580",
+            gpus: 2,
+            gpu: &GTX580,
+            epochs: 90.0,
+        },
+        Row {
+            model: "inception_v3",
+            paper_time: "2 weeks",
+            hardware: "8 x NVIDIA Tesla K40",
+            gpus: 8,
+            gpu: &K40,
+            epochs: 100.0,
+        },
+        Row {
+            model: "resnet50",
+            paper_time: "29 hours",
+            hardware: "8 x NVIDIA Tesla P100",
+            gpus: 8,
+            gpu: &P100,
+            epochs: 90.0,
+        },
+        Row {
+            model: "vgg16",
+            paper_time: "2-3 weeks",
+            hardware: "4 x NVIDIA Titan Black",
+            gpus: 4,
+            gpu: &TITAN_BLACK,
+            epochs: 74.0,
+        },
+    ]
+}
+
+/// Multi-GPU scaling efficiency assumed for the era (single machine,
+/// data-parallel over PCIe).
+const ERA_SCALING: f64 = 0.9;
+
+/// Modeled wall-clock training time in hours.
+pub fn modeled_hours(model: &str, gpu: &GpuModel, gpus: usize, epochs: f64) -> f64 {
+    let arch = zoo::by_name(model).expect("unknown model");
+    let batch = 32;
+    let cost = step_cost(&arch, gpu, batch, Precision::Fp32, None);
+    let ips = batch as f64 / cost.total() * gpus as f64 * ERA_SCALING;
+    epochs * IMAGENET_IMAGES / ips / 3600.0
+}
+
+/// Regenerate Table I.
+pub fn run() -> Table {
+    let mut t = Table::new(
+        "Table I: Training time for deep neural networks (paper vs cost model)",
+        &["Model", "Paper time", "Hardware", "Modeled time", "Modeled hours"],
+    );
+    for r in rows() {
+        let hours = modeled_hours(r.model, r.gpu, r.gpus, r.epochs);
+        let human = if hours > 48.0 {
+            format!("{:.1} days", hours / 24.0)
+        } else {
+            format!("{hours:.0} hours")
+        };
+        t.row(vec![
+            r.model.to_string(),
+            r.paper_time.to_string(),
+            r.hardware.to_string(),
+            human,
+            format!("{hours:.1}"),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_p100_close_to_paper() {
+        // Paper: 29 hours on 8x P100. The cost model should land within 2x.
+        let h = modeled_hours("resnet50", &P100, 8, 90.0);
+        assert!((15.0..60.0).contains(&h), "modeled {h} hours");
+    }
+
+    #[test]
+    fn alexnet_gtx580_order_of_magnitude() {
+        // Paper: 5-7 days.
+        let h = modeled_hours("alexnet", &GTX580, 2, 90.0);
+        assert!((48.0..24.0 * 21.0).contains(&h), "modeled {h} hours");
+    }
+
+    #[test]
+    fn vgg16_longest_of_the_single_machine_rows() {
+        let vgg = modeled_hours("vgg16", &TITAN_BLACK, 4, 74.0);
+        let rn = modeled_hours("resnet50", &P100, 8, 90.0);
+        assert!(vgg > rn);
+    }
+
+    #[test]
+    fn table_has_four_rows() {
+        let t = run();
+        assert_eq!(t.rows.len(), 4);
+        assert!(t.to_markdown().contains("29 hours"));
+    }
+}

@@ -1,0 +1,26 @@
+//! Network fabric simulation: the substitute for TX-GAIA's physical
+//! 25 GbE-RoCE and 100 Gb OmniPath fabrics.
+//!
+//! Model family: flow-level LogGP-style costs with resource occupancy.
+//! A point-to-point message pays
+//!
+//! ```text
+//! t = o_send + L(path) + rendezvous + staging + bytes / bw(path) + o_recv
+//! ```
+//!
+//! where `L(path)` includes switch hops for inter-rack traffic, `staging`
+//! models GPUDirect-vs-host-copy PCIe/UPI segments, and `bw(path)` is the
+//! minimum along NIC / PCIe / UPI segments scaled by a congestion factor.
+//! NIC serialization is tracked as per-node occupancy so concurrent flows
+//! through one endpoint queue rather than teleport (see [`contention`]).
+
+pub mod contention;
+pub mod mpi;
+pub mod sim;
+pub mod trace;
+pub mod transport;
+
+pub use mpi::Comm;
+pub use sim::{NetSim, NetStats};
+pub use trace::{MessageEvent, Trace};
+pub use transport::MessageCost;

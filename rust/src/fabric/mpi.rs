@@ -1,0 +1,188 @@
+//! MPI-like communicator over the fabric simulator: per-rank virtual
+//! clocks, point-to-point semantics, and a barrier. Collectives and the
+//! CFD halo exchange are written against this layer.
+
+use crate::cluster::Placement;
+use crate::config::ClusterSpec;
+use crate::fabric::NetSim;
+
+/// A communicator: placement + one virtual clock per rank.
+pub struct Comm<'a> {
+    pub net: &'a mut NetSim,
+    pub placement: &'a Placement,
+    /// Virtual time at which each rank is next free.
+    pub t: Vec<f64>,
+}
+
+impl<'a> Comm<'a> {
+    pub fn new(net: &'a mut NetSim, placement: &'a Placement) -> Self {
+        let n = placement.len();
+        Comm { net, placement, t: vec![0.0; n] }
+    }
+
+    /// Start every rank's clock at the given times (e.g. staggered compute
+    /// completion for comm/compute overlap studies).
+    pub fn with_start(net: &'a mut NetSim, placement: &'a Placement, start: &[f64]) -> Self {
+        assert_eq!(start.len(), placement.len());
+        Comm { net, placement, t: start.to_vec() }
+    }
+
+    pub fn size(&self) -> usize {
+        self.placement.len()
+    }
+
+    /// Blocking send/recv pair: the receiver's clock advances to message
+    /// completion; the sender's clock advances past its send-side cost.
+    /// (Matches MPI_Send/MPI_Recv with an eager/rendezvous transport.)
+    pub fn p2p(&mut self, src: usize, dst: usize, bytes: f64) {
+        assert_ne!(src, dst, "p2p to self");
+        let ready = self.t[src].max(self.t[dst].min(self.t[src])); // sender-gated
+        let (send_release, recv_complete) = self.net.message(
+            self.placement.endpoints[src],
+            self.placement.endpoints[dst],
+            bytes,
+            ready,
+        );
+        self.t[src] = self.t[src].max(send_release);
+        // Receiver must have posted the recv: completion can't precede its
+        // own clock.
+        self.t[dst] = self.t[dst].max(recv_complete);
+    }
+
+    /// Simultaneous exchange (MPI_Sendrecv): both ranks send `bytes` to
+    /// each other; both clocks advance to the later completion.
+    pub fn sendrecv(&mut self, a: usize, b: usize, bytes: f64) {
+        assert_ne!(a, b, "sendrecv with self");
+        let ready = self.t[a].max(self.t[b]);
+        let (_, done_ab) = self.net.message(
+            self.placement.endpoints[a],
+            self.placement.endpoints[b],
+            bytes,
+            ready,
+        );
+        let (_, done_ba) = self.net.message(
+            self.placement.endpoints[b],
+            self.placement.endpoints[a],
+            bytes,
+            ready,
+        );
+        let done = done_ab.max(done_ba);
+        self.t[a] = done;
+        self.t[b] = done;
+    }
+
+    /// A synchronized communication round: all messages see the rank
+    /// clocks as they were when the round started (every rank sends and
+    /// receives simultaneously, as in a ring step). Without this, chained
+    /// `p2p` calls would serialize logically-parallel transfers.
+    /// Resource contention (NIC occupancy) still applies.
+    pub fn round(&mut self, msgs: &[(usize, usize, f64)]) {
+        let snapshot = self.t.clone();
+        let mut new_t = snapshot.clone();
+        for &(src, dst, bytes) in msgs {
+            assert_ne!(src, dst, "round message to self");
+            let (send_release, recv_complete) = self.net.message(
+                self.placement.endpoints[src],
+                self.placement.endpoints[dst],
+                bytes,
+                snapshot[src],
+            );
+            new_t[src] = new_t[src].max(send_release);
+            new_t[dst] = new_t[dst].max(recv_complete.max(snapshot[dst]));
+        }
+        self.t = new_t;
+    }
+
+    /// Dissemination barrier (log2 rounds of 0-byte exchanges).
+    pub fn barrier(&mut self) {
+        let p = self.size();
+        if p <= 1 {
+            return;
+        }
+        let mut dist = 1;
+        while dist < p {
+            for r in 0..p {
+                let peer = (r + dist) % p;
+                self.p2p(r, peer, 0.0);
+            }
+            dist *= 2;
+        }
+        let tmax = self.t.iter().cloned().fold(0.0, f64::max);
+        for t in self.t.iter_mut() {
+            *t = tmax;
+        }
+    }
+
+    /// Latest rank clock — "the collective finished at".
+    pub fn max_time(&self) -> f64 {
+        self.t.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Whether ranks a and b are in different racks.
+    pub fn crosses_rack(&self, cluster: &ClusterSpec, a: usize, b: usize) -> bool {
+        self.placement.crosses_rack(cluster, a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fabric;
+    use crate::config::spec::{ClusterSpec, FabricKind, TransportOptions};
+
+    fn setup(ranks: usize) -> (NetSim, Placement) {
+        let cluster = ClusterSpec::txgaia();
+        let placement = Placement::cores(&cluster, ranks).unwrap();
+        let net = NetSim::new(
+            fabric(FabricKind::OmniPath100),
+            cluster,
+            TransportOptions::default(),
+        );
+        (net, placement)
+    }
+
+    #[test]
+    fn p2p_advances_receiver_more_than_sender() {
+        let (mut net, placement) = setup(80);
+        let mut comm = Comm::new(&mut net, &placement);
+        comm.p2p(0, 79, 1e6); // cross-node
+        assert!(comm.t[79] > comm.t[0]);
+        assert!(comm.t[0] > 0.0, "sender pays send-side cost");
+    }
+
+    #[test]
+    fn sendrecv_symmetric() {
+        let (mut net, placement) = setup(80);
+        let mut comm = Comm::new(&mut net, &placement);
+        comm.sendrecv(0, 45, 1e5);
+        assert_eq!(comm.t[0], comm.t[45]);
+        assert!(comm.t[0] > 0.0);
+    }
+
+    #[test]
+    fn barrier_synchronizes_clocks() {
+        let (mut net, placement) = setup(16);
+        let mut comm = Comm::new(&mut net, &placement);
+        comm.t[3] = 1.0; // straggler
+        comm.barrier();
+        let t0 = comm.t[0];
+        assert!(comm.t.iter().all(|&t| (t - t0).abs() < 1e-12));
+        assert!(t0 >= 1.0);
+    }
+
+    #[test]
+    fn with_start_respects_initial_clocks() {
+        let (mut net, placement) = setup(4);
+        let start = vec![0.5, 0.1, 0.2, 0.3];
+        let comm = Comm::with_start(&mut net, &placement, &start);
+        assert_eq!(comm.t, start);
+    }
+
+    #[test]
+    fn barrier_trivial_for_one_rank() {
+        let (mut net, placement) = setup(1);
+        let mut comm = Comm::new(&mut net, &placement);
+        comm.barrier();
+        assert_eq!(comm.t[0], 0.0);
+    }
+}

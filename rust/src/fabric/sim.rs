@@ -1,0 +1,262 @@
+//! The fabric simulator: virtual-time message delivery with per-node NIC
+//! occupancy. This is the object every collective and the CFD halo
+//! exchange talk to.
+
+use crate::cluster::{Endpoint, EndpointKind, Placement};
+use crate::config::{ClusterSpec, FabricSpec, TransportOptions};
+use crate::fabric::contention::Resource;
+use crate::fabric::transport::{self, MessageGeometry};
+
+/// Aggregate statistics for a simulation run.
+#[derive(Clone, Debug, Default)]
+pub struct NetStats {
+    pub messages: u64,
+    pub bytes: f64,
+    pub inter_node_messages: u64,
+    pub inter_rack_messages: u64,
+}
+
+/// Flow-level network simulator for one fabric + cluster + transport
+/// configuration. Virtual time is `f64` seconds; rank clocks are owned by
+/// [`crate::fabric::Comm`], not by the simulator.
+pub struct NetSim {
+    pub fabric: FabricSpec,
+    pub cluster: ClusterSpec,
+    pub opts: TransportOptions,
+    /// Per-node NIC transmit/receive occupancy (full duplex: separate
+    /// resources). Indexed by node id; grown on demand.
+    nic_tx: Vec<Resource>,
+    nic_rx: Vec<Resource>,
+    /// Estimate of simultaneously active flows through the core switch,
+    /// set by the collective layer (e.g. ring => one flow per node).
+    active_flows: f64,
+    pub stats: NetStats,
+    /// Optional message-level trace (enable with [`NetSim::enable_trace`]).
+    pub trace: Option<crate::fabric::trace::Trace>,
+}
+
+impl NetSim {
+    pub fn new(fabric: FabricSpec, cluster: ClusterSpec, opts: TransportOptions) -> Self {
+        let nodes = cluster.nodes;
+        NetSim {
+            fabric,
+            cluster,
+            opts,
+            nic_tx: (0..nodes).map(|_| Resource::new(1.0)).collect(),
+            nic_rx: (0..nodes).map(|_| Resource::new(1.0)).collect(),
+            active_flows: 1.0,
+            stats: NetStats::default(),
+            trace: None,
+        }
+    }
+
+    /// Start recording every delivered message.
+    pub fn enable_trace(&mut self) {
+        self.trace = Some(crate::fabric::trace::Trace::default());
+    }
+
+    /// Reset occupancy and stats between experiments (keeps specs).
+    pub fn reset(&mut self) {
+        for r in self.nic_tx.iter_mut().chain(self.nic_rx.iter_mut()) {
+            r.reset();
+        }
+        self.stats = NetStats::default();
+        self.active_flows = 1.0;
+    }
+
+    /// Tell the congestion model how many flows are concurrently active.
+    pub fn set_active_flows(&mut self, flows: f64) {
+        self.active_flows = flows.max(1.0);
+    }
+
+    /// Deliver one message; returns (send_release_time, recv_complete_time).
+    ///
+    /// `ready` is when the payload is available on the sender. The sender
+    /// may continue at `send_release_time` (after overhead + NIC
+    /// serialization); the receiver owns the data at `recv_complete_time`.
+    pub fn message(
+        &mut self,
+        src: Endpoint,
+        dst: Endpoint,
+        bytes: f64,
+        ready: f64,
+    ) -> (f64, f64) {
+        self.stats.messages += 1;
+        self.stats.bytes += bytes;
+
+        if src.node == dst.node {
+            // Intra-node path: PCIe P2P or shared memory; no NIC.
+            let cost = transport::local_message(&self.cluster, src.kind, bytes);
+            let done = ready + cost.total(bytes);
+            return (done, done);
+        }
+
+        self.stats.inter_node_messages += 1;
+        let inter_rack = self.cluster.rack_of_node(src.node) != self.cluster.rack_of_node(dst.node);
+        if inter_rack {
+            self.stats.inter_rack_messages += 1;
+        }
+        let geo = MessageGeometry {
+            bytes,
+            inter_rack,
+            endpoint: src.kind,
+            src_slot: src.slot,
+            dst_slot: dst.slot,
+            active_flows: self.active_flows,
+        };
+        let cost = transport::network_message(&self.fabric, &self.cluster, &self.opts, &geo);
+
+        // Sender-side: software overhead, then NIC tx serialization.
+        let tx_ready = ready + cost.send_overhead;
+        let ser_bytes = bytes; // wire bytes ~= payload (headers negligible at MiB scale)
+        let tx = &mut self.nic_tx[src.node];
+        tx.bandwidth = cost.bandwidth;
+        let (tx_start, tx_ser) = tx.reserve(tx_ready, ser_bytes);
+
+        // Receive side: the payload lands after wire latency; rx port must
+        // also be free for the serialization window.
+        let rx = &mut self.nic_rx[dst.node];
+        rx.bandwidth = cost.bandwidth;
+        let (rx_start, rx_ser) = rx.reserve(tx_start + cost.latency, ser_bytes);
+
+        let send_release = tx_start + tx_ser;
+        let recv_complete = rx_start + rx_ser + cost.recv_overhead;
+        if let Some(trace) = self.trace.as_mut() {
+            trace.record(crate::fabric::trace::MessageEvent {
+                src_node: src.node,
+                dst_node: dst.node,
+                bytes,
+                start: tx_start,
+                end: recv_complete,
+                inter_rack,
+            });
+        }
+        (send_release, recv_complete)
+    }
+
+    /// One-shot convenience: time for a single message with an idle network.
+    pub fn one_way_time(&mut self, placement: &Placement, src: usize, dst: usize, bytes: f64) -> f64 {
+        self.reset();
+        let (_, done) = self.message(placement.endpoints[src], placement.endpoints[dst], bytes, 0.0);
+        done
+    }
+
+    /// Endpoint constructor for tests / microbenches.
+    pub fn endpoint(node: usize, slot: usize, kind: EndpointKind) -> Endpoint {
+        Endpoint { rank: 0, node, slot, kind }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fabric;
+    use crate::config::spec::FabricKind;
+    use crate::util::prop;
+
+    fn sim(kind: FabricKind) -> NetSim {
+        NetSim::new(fabric(kind), ClusterSpec::txgaia(), TransportOptions::default())
+    }
+
+    fn cpu_ep(node: usize) -> Endpoint {
+        NetSim::endpoint(node, 0, EndpointKind::Cpu)
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let mut s = sim(FabricKind::OmniPath100);
+        let (_, t) = s.message(cpu_ep(0), cpu_ep(1), 8.0, 0.0);
+        assert!(t < 5.0e-6, "small message took {t}");
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_messages() {
+        let mut s = sim(FabricKind::EthernetRoce25);
+        let bytes = 256.0 * 1024.0 * 1024.0;
+        let (_, t) = s.message(cpu_ep(0), cpu_ep(1), bytes, 0.0);
+        let model = bytes / s.fabric.effective_bandwidth();
+        assert!((t - model).abs() / model < 0.05, "t={t} model={model}");
+    }
+
+    #[test]
+    fn opa_faster_than_ethernet_at_all_sizes() {
+        for bytes in [8.0, 1024.0, 65536.0, 16.0 * 1024.0 * 1024.0] {
+            let mut e = sim(FabricKind::EthernetRoce25);
+            let mut o = sim(FabricKind::OmniPath100);
+            let (_, te) = e.message(cpu_ep(0), cpu_ep(1), bytes, 0.0);
+            let (_, to) = o.message(cpu_ep(0), cpu_ep(1), bytes, 0.0);
+            assert!(to < te, "bytes={bytes}: opa {to} !< eth {te}");
+        }
+    }
+
+    #[test]
+    fn nic_occupancy_serializes_fanout() {
+        // Node 0 sending to two different nodes: second flow queues on tx.
+        let mut s = sim(FabricKind::EthernetRoce25);
+        let bytes = 64.0 * 1024.0 * 1024.0;
+        let (_, t1) = s.message(cpu_ep(0), cpu_ep(1), bytes, 0.0);
+        let (_, t2) = s.message(cpu_ep(0), cpu_ep(2), bytes, 0.0);
+        assert!(t2 > t1 * 1.8, "fanout must serialize: t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn disjoint_pairs_run_in_parallel() {
+        let mut s = sim(FabricKind::EthernetRoce25);
+        let bytes = 64.0 * 1024.0 * 1024.0;
+        let (_, t1) = s.message(cpu_ep(0), cpu_ep(1), bytes, 0.0);
+        let (_, t2) = s.message(cpu_ep(2), cpu_ep(3), bytes, 0.0);
+        assert!((t1 - t2).abs() < 1e-9, "disjoint flows must not interfere");
+    }
+
+    #[test]
+    fn intra_node_faster_than_inter_node() {
+        let mut s = sim(FabricKind::OmniPath100);
+        let gpu0 = NetSim::endpoint(0, 0, EndpointKind::Gpu);
+        let gpu1 = NetSim::endpoint(0, 1, EndpointKind::Gpu);
+        let gpu2 = NetSim::endpoint(1, 0, EndpointKind::Gpu);
+        let bytes = 1024.0 * 1024.0;
+        let (_, local) = s.message(gpu0, gpu1, bytes, 0.0);
+        s.reset();
+        let (_, remote) = s.message(gpu0, gpu2, bytes, 0.0);
+        assert!(local < remote);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = sim(FabricKind::OmniPath100);
+        s.message(cpu_ep(0), cpu_ep(1), 100.0, 0.0);
+        s.message(cpu_ep(0), cpu_ep(40), 100.0, 0.0); // node 40 = rack 1
+        let gpu0 = NetSim::endpoint(0, 0, EndpointKind::Gpu);
+        let gpu1 = NetSim::endpoint(0, 1, EndpointKind::Gpu);
+        s.message(gpu0, gpu1, 100.0, 0.0);
+        assert_eq!(s.stats.messages, 3);
+        assert_eq!(s.stats.inter_node_messages, 2);
+        assert_eq!(s.stats.inter_rack_messages, 1);
+        assert_eq!(s.stats.bytes, 300.0);
+    }
+
+    #[test]
+    fn message_time_monotone_in_size() {
+        prop::forall(31, 128, |r| (r.below(24) as i32, r.below(1_000_000) as f64), |&(shift, base)| {
+            let mut s = sim(FabricKind::EthernetRoce25);
+            let b1 = base + 1.0;
+            let b2 = b1 * (1.0 + (shift as f64 + 1.0) / 4.0);
+            let (_, t1) = s.message(cpu_ep(0), cpu_ep(1), b1, 0.0);
+            s.reset();
+            let (_, t2) = s.message(cpu_ep(0), cpu_ep(1), b2, 0.0);
+            if t2 + 1e-15 < t1 {
+                return Err(format!("time not monotone: {b1}B->{t1}s, {b2}B->{t2}s"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ready_time_shifts_completion() {
+        let mut s = sim(FabricKind::OmniPath100);
+        let (_, t0) = s.message(cpu_ep(0), cpu_ep(1), 1000.0, 0.0);
+        s.reset();
+        let (_, t1) = s.message(cpu_ep(0), cpu_ep(1), 1000.0, 1.0);
+        assert!((t1 - t0 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,170 @@
+//! Message-level event tracing: when enabled on a [`crate::fabric::NetSim`],
+//! every delivered message is recorded with its endpoints, size and
+//! virtual-time window. The analysis here turns a trace into the
+//! questions a fabric engineer actually asks: which node's NIC is
+//! hottest, how much traffic crossed racks, what the utilization
+//! timeline looked like.
+
+use crate::util::table::{fnum, Table};
+use crate::util::units::{fmt_bytes, fmt_time};
+
+/// One delivered message.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MessageEvent {
+    pub src_node: usize,
+    pub dst_node: usize,
+    pub bytes: f64,
+    pub start: f64,
+    pub end: f64,
+    pub inter_rack: bool,
+}
+
+/// A recorded simulation trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<MessageEvent>,
+}
+
+impl Trace {
+    pub fn record(&mut self, ev: MessageEvent) {
+        self.events.push(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Virtual time span covered by the trace.
+    pub fn span(&self) -> (f64, f64) {
+        let lo = self.events.iter().map(|e| e.start).fold(f64::INFINITY, f64::min);
+        let hi = self.events.iter().map(|e| e.end).fold(0.0, f64::max);
+        (lo.min(hi), hi)
+    }
+
+    /// Total bytes transmitted per node (tx side), sorted descending.
+    pub fn bytes_by_node(&self) -> Vec<(usize, f64)> {
+        let mut map: std::collections::BTreeMap<usize, f64> = Default::default();
+        for e in &self.events {
+            *map.entry(e.src_node).or_insert(0.0) += e.bytes;
+        }
+        let mut v: Vec<(usize, f64)> = map.into_iter().collect();
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+
+    /// Fraction of bytes that crossed a rack boundary.
+    pub fn inter_rack_byte_fraction(&self) -> f64 {
+        let total: f64 = self.events.iter().map(|e| e.bytes).sum();
+        if total == 0.0 {
+            return 0.0;
+        }
+        let cross: f64 = self.events.iter().filter(|e| e.inter_rack).map(|e| e.bytes).sum();
+        cross / total
+    }
+
+    /// Bytes in flight per timeline bucket (for a quick utilization
+    /// profile): returns `buckets` values covering the trace span.
+    pub fn utilization_timeline(&self, buckets: usize) -> Vec<f64> {
+        assert!(buckets > 0);
+        let (lo, hi) = self.span();
+        let width = ((hi - lo) / buckets as f64).max(f64::MIN_POSITIVE);
+        let mut out = vec![0.0; buckets];
+        for e in &self.events {
+            // Spread the message's bytes across the buckets it overlaps.
+            let b0 = (((e.start - lo) / width) as usize).min(buckets - 1);
+            let b1 = (((e.end - lo) / width) as usize).min(buckets - 1);
+            let n = (b1 - b0 + 1) as f64;
+            for b in b0..=b1 {
+                out[b] += e.bytes / n;
+            }
+        }
+        out
+    }
+
+    /// Summary table for reports.
+    pub fn summary(&self, title: &str) -> Table {
+        let mut t = Table::new(title, &["metric", "value"]);
+        let total: f64 = self.events.iter().map(|e| e.bytes).sum();
+        let (lo, hi) = self.span();
+        t.row(vec!["messages".into(), self.len().to_string()]);
+        t.row(vec!["bytes".into(), fmt_bytes(total)]);
+        t.row(vec!["span".into(), fmt_time(hi - lo)]);
+        t.row(vec![
+            "inter-rack byte fraction".into(),
+            format!("{:.3}", self.inter_rack_byte_fraction()),
+        ]);
+        if let Some((node, bytes)) = self.bytes_by_node().first() {
+            t.row(vec![
+                "hottest tx node".into(),
+                format!("node {node} ({})", fmt_bytes(*bytes)),
+            ]);
+        }
+        if hi > lo {
+            t.row(vec![
+                "mean offered load".into(),
+                format!("{} GB/s", fnum(total / (hi - lo) / 1e9)),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(src: usize, dst: usize, bytes: f64, start: f64, end: f64, xr: bool) -> MessageEvent {
+        MessageEvent { src_node: src, dst_node: dst, bytes, start, end, inter_rack: xr }
+    }
+
+    fn sample() -> Trace {
+        let mut t = Trace::default();
+        t.record(ev(0, 1, 100.0, 0.0, 1.0, false));
+        t.record(ev(1, 2, 300.0, 0.5, 2.0, true));
+        t.record(ev(0, 2, 100.0, 1.0, 3.0, true));
+        t
+    }
+
+    #[test]
+    fn span_and_counts() {
+        let t = sample();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.span(), (0.0, 3.0));
+    }
+
+    #[test]
+    fn bytes_by_node_sorted() {
+        let t = sample();
+        let by = t.bytes_by_node();
+        assert_eq!(by[0], (1, 300.0));
+        assert_eq!(by[1], (0, 200.0));
+    }
+
+    #[test]
+    fn inter_rack_fraction() {
+        let t = sample();
+        assert!((t.inter_rack_byte_fraction() - 0.8).abs() < 1e-12);
+        assert_eq!(Trace::default().inter_rack_byte_fraction(), 0.0);
+    }
+
+    #[test]
+    fn utilization_conserves_bytes() {
+        let t = sample();
+        for buckets in [1, 3, 10] {
+            let tl = t.utilization_timeline(buckets);
+            let total: f64 = tl.iter().sum();
+            assert!((total - 500.0).abs() < 1e-9, "buckets={buckets}: {total}");
+        }
+    }
+
+    #[test]
+    fn summary_renders() {
+        let md = sample().summary("trace").to_markdown();
+        assert!(md.contains("hottest tx node"));
+        assert!(md.contains("inter-rack"));
+    }
+}

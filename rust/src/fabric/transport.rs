@@ -1,0 +1,256 @@
+//! Transport protocol modeling: RDMA vs TCP, eager vs rendezvous, and the
+//! GPUDirect-vs-staged-copy PCIe path (§II.B of the paper).
+//!
+//! Produces a [`MessageCost`] decomposition for a single point-to-point
+//! message given fabric, cluster, transport options, and endpoint
+//! geometry. The [`sim::NetSim`] layers NIC occupancy on top.
+
+use crate::cluster::EndpointKind;
+use crate::config::{ClusterSpec, FabricSpec, TransportOptions};
+
+/// Decomposed cost of one message (seconds / bytes-per-second).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MessageCost {
+    /// Fixed pre-wire time on the sender (software overhead + staging).
+    pub send_overhead: f64,
+    /// Wire + switch latency (propagation, hops, rendezvous handshake).
+    pub latency: f64,
+    /// Fixed post-wire time on the receiver.
+    pub recv_overhead: f64,
+    /// Effective end-to-end bandwidth for the payload, bytes/s.
+    pub bandwidth: f64,
+}
+
+impl MessageCost {
+    /// Total one-way time for `bytes`.
+    pub fn total(&self, bytes: f64) -> f64 {
+        self.send_overhead + self.latency + self.recv_overhead + bytes / self.bandwidth
+    }
+}
+
+/// Geometry of a message as seen by the transport layer.
+#[derive(Clone, Copy, Debug)]
+pub struct MessageGeometry {
+    pub bytes: f64,
+    pub inter_rack: bool,
+    pub endpoint: EndpointKind,
+    /// Sender's GPU slot (for per-socket affinity); ignored for CPU ranks.
+    pub src_slot: usize,
+    pub dst_slot: usize,
+    /// Simultaneous flows sharing the core switch (congestion model input).
+    pub active_flows: f64,
+}
+
+/// Cost of a network (inter-node) message.
+pub fn network_message(
+    fabric: &FabricSpec,
+    cluster: &ClusterSpec,
+    opts: &TransportOptions,
+    geo: &MessageGeometry,
+) -> MessageCost {
+    let rdma = fabric.rdma && opts.use_rdma;
+    // Software overhead per side: RDMA posts a verb; TCP walks the kernel
+    // stack. The fabric preset already encodes the technology difference;
+    // disabling RDMA on an RDMA-capable fabric falls back to ~TCP costs.
+    let sw = if rdma { fabric.per_msg_overhead } else { fabric.per_msg_overhead.max(4.0e-6) };
+
+    let mut latency = fabric.latency;
+    if geo.inter_rack {
+        // Leaf hop up + core hop down (single extra stage on TX-GAIA's
+        // flat Ethernet; OPA edge-director-edge).
+        latency += 2.0 * fabric.switch_hop_latency;
+    }
+    // Rendezvous protocol: large messages handshake before the payload.
+    if geo.bytes > fabric.eager_threshold {
+        latency += 2.0 * fabric.latency;
+    }
+
+    let mut bandwidth = fabric.effective_bandwidth() * fabric.congestion_factor(geo.active_flows);
+    let mut send_overhead = sw;
+    let mut recv_overhead = sw;
+
+    if geo.endpoint == EndpointKind::Gpu {
+        let src_crosses = cluster.affinity.gpu_to_nic_crosses_upi(geo.src_slot, fabric.kind);
+        let dst_crosses = cluster.affinity.gpu_to_nic_crosses_upi(geo.dst_slot, fabric.kind);
+        if opts.gpudirect && rdma {
+            // GPUDirect RDMA: NIC DMAs GPU memory. The PCIe segment is part
+            // of the pipeline; it only matters if it (or UPI) is narrower
+            // than the wire.
+            bandwidth = bandwidth.min(cluster.pcie_bw);
+            if src_crosses || dst_crosses {
+                bandwidth = bandwidth.min(cluster.upi_bw);
+                latency += cluster.upi_latency
+                    * ((src_crosses as u8 + dst_crosses as u8) as f64);
+            }
+        } else {
+            // Staged through host RAM: an extra store-and-forward copy on
+            // each side (D2H on the sender, H2D on the receiver).
+            let src_copy_bw = if src_crosses { cluster.pcie_bw.min(cluster.upi_bw) } else { cluster.pcie_bw };
+            let dst_copy_bw = if dst_crosses { cluster.pcie_bw.min(cluster.upi_bw) } else { cluster.pcie_bw };
+            send_overhead += cluster.pcie_latency + geo.bytes / src_copy_bw;
+            recv_overhead += cluster.pcie_latency + geo.bytes / dst_copy_bw;
+        }
+    }
+
+    MessageCost { send_overhead, latency, recv_overhead, bandwidth }
+}
+
+/// Cost of an intra-node message (no NIC involved).
+pub fn local_message(
+    cluster: &ClusterSpec,
+    endpoint: EndpointKind,
+    _bytes: f64,
+) -> MessageCost {
+    match endpoint {
+        // GPU peer-to-peer over PCIe (TX-GAIA: both GPUs behind CPU1, no
+        // PCIe switch, so P2P transits the root complex).
+        EndpointKind::Gpu => MessageCost {
+            send_overhead: 0.0,
+            latency: cluster.pcie_latency,
+            recv_overhead: 0.0,
+            bandwidth: cluster.pcie_bw,
+        },
+        // CPU ranks: shared-memory transport.
+        EndpointKind::Cpu => MessageCost {
+            send_overhead: 0.0,
+            latency: cluster.shm_latency,
+            recv_overhead: 0.0,
+            bandwidth: cluster.shm_bw,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fabric;
+    use crate::config::spec::{AffinityConfig, FabricKind};
+
+    fn geo(bytes: f64) -> MessageGeometry {
+        MessageGeometry {
+            bytes,
+            inter_rack: false,
+            endpoint: EndpointKind::Cpu,
+            src_slot: 0,
+            dst_slot: 0,
+            active_flows: 1.0,
+        }
+    }
+
+    #[test]
+    fn zero_byte_latency_close_to_spec() {
+        let f = fabric(FabricKind::OmniPath100);
+        let c = ClusterSpec::txgaia();
+        let cost = network_message(&f, &c, &TransportOptions::default(), &geo(0.0));
+        let t = cost.total(0.0);
+        // latency + 2x overhead, all within a couple of microseconds.
+        assert!(t > f.latency && t < f.latency + 3.0e-6, "t={t}");
+    }
+
+    #[test]
+    fn large_message_hits_line_rate() {
+        let f = fabric(FabricKind::EthernetRoce25);
+        let c = ClusterSpec::txgaia();
+        let bytes = 64.0 * 1024.0 * 1024.0;
+        let mut g = geo(bytes);
+        g.endpoint = EndpointKind::Gpu;
+        let cost = network_message(&f, &c, &TransportOptions::default(), &g);
+        let achieved = bytes / cost.total(bytes);
+        let line = f.effective_bandwidth();
+        assert!(achieved > 0.95 * line, "achieved {achieved:.3e} vs line {line:.3e}");
+    }
+
+    #[test]
+    fn opa_large_message_bounded_by_pcie() {
+        // 100 Gb/s line rate exceeds PCIe3 x16; GPUDirect path must be
+        // PCIe-bound.
+        let f = fabric(FabricKind::OmniPath100);
+        let mut c = ClusterSpec::txgaia();
+        c.affinity = AffinityConfig::GpusAndOpaOnCpu1; // no UPI crossing
+        let mut g = geo(1e9);
+        g.endpoint = EndpointKind::Gpu;
+        let cost = network_message(&f, &c, &TransportOptions::default(), &g);
+        assert!(cost.bandwidth <= c.pcie_bw);
+        assert!(cost.bandwidth >= 0.9 * c.pcie_bw.min(f.effective_bandwidth()));
+    }
+
+    #[test]
+    fn rendezvous_penalty_above_threshold() {
+        let f = fabric(FabricKind::EthernetRoce25);
+        let c = ClusterSpec::txgaia();
+        let small = network_message(&f, &c, &TransportOptions::default(), &geo(1024.0));
+        let large = network_message(
+            &f, &c, &TransportOptions::default(), &geo(f.eager_threshold * 2.0),
+        );
+        assert!(large.latency > small.latency);
+        assert!((large.latency - small.latency - 2.0 * f.latency).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inter_rack_adds_hops() {
+        let f = fabric(FabricKind::OmniPath100);
+        let c = ClusterSpec::txgaia();
+        let mut g = geo(1024.0);
+        let intra = network_message(&f, &c, &TransportOptions::default(), &g);
+        g.inter_rack = true;
+        let inter = network_message(&f, &c, &TransportOptions::default(), &g);
+        assert!((inter.latency - intra.latency - 2.0 * f.switch_hop_latency).abs() < 1e-15);
+    }
+
+    #[test]
+    fn staged_copy_slower_than_gpudirect() {
+        let f = fabric(FabricKind::EthernetRoce25);
+        let c = ClusterSpec::txgaia();
+        let mut g = geo(8.0 * 1024.0 * 1024.0);
+        g.endpoint = EndpointKind::Gpu;
+        let gd = network_message(&f, &c, &TransportOptions::default(), &g);
+        let staged = network_message(
+            &f,
+            &c,
+            &TransportOptions { gpudirect: false, use_rdma: true },
+            &g,
+        );
+        assert!(staged.total(g.bytes) > gd.total(g.bytes));
+    }
+
+    #[test]
+    fn tcp_fallback_has_higher_overhead() {
+        let f = fabric(FabricKind::EthernetRoce25);
+        let c = ClusterSpec::txgaia();
+        let g = geo(1024.0);
+        let rdma = network_message(&f, &c, &TransportOptions::default(), &g);
+        let tcp = network_message(
+            &f,
+            &c,
+            &TransportOptions { gpudirect: true, use_rdma: false },
+            &g,
+        );
+        assert!(tcp.send_overhead > rdma.send_overhead);
+    }
+
+    #[test]
+    fn upi_crossing_penalty_config2() {
+        // Config 2: GPU0 on CPU0, Ethernet NIC on CPU1 -> GPU0 crosses UPI.
+        let f = fabric(FabricKind::EthernetRoce25);
+        let mut c = ClusterSpec::txgaia();
+        c.affinity = AffinityConfig::GpuPerSocket;
+        let mut g = geo(1e6);
+        g.endpoint = EndpointKind::Gpu;
+        g.src_slot = 0;
+        g.dst_slot = 0;
+        let crossing = network_message(&f, &c, &TransportOptions::default(), &g);
+        g.src_slot = 1;
+        g.dst_slot = 1;
+        let local = network_message(&f, &c, &TransportOptions::default(), &g);
+        assert!(crossing.total(g.bytes) > local.total(g.bytes));
+    }
+
+    #[test]
+    fn local_paths() {
+        let c = ClusterSpec::txgaia();
+        let gpu = local_message(&c, EndpointKind::Gpu, 1e6);
+        let cpu = local_message(&c, EndpointKind::Cpu, 1e6);
+        assert_eq!(gpu.bandwidth, c.pcie_bw);
+        assert_eq!(cpu.bandwidth, c.shm_bw);
+    }
+}

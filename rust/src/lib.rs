@@ -1,0 +1,43 @@
+//! # fabricbench
+//!
+//! A benchmarking framework for network fabrics under data-distributed
+//! training of deep neural networks — a from-scratch reproduction of
+//! *"Benchmarking network fabrics for data distributed training of deep
+//! neural networks"* (Samsi et al., IEEE HPEC 2020,
+//! DOI 10.1109/HPEC43674.2020.9286232).
+//!
+//! The paper measured a real 448-node cluster (TX-GAIA) with dual 25 GbE
+//! RoCE / 100 Gb OmniPath fabrics and up to 512 V100 GPUs. This library
+//! replaces every hardware component with a calibrated, testable
+//! simulation substrate while keeping the *numerics* of data-parallel
+//! training real through a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: a discrete-event fabric
+//!   simulator, real-arithmetic collective library, DNN cost models, a
+//!   data-parallel training coordinator, a CFD (CartDG-like) substrate,
+//!   and one experiment driver per table/figure in the paper.
+//! * **L2 (python/compile/model.py)** — a JAX CNN whose train-step /
+//!   SGD / predict functions are AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (tiled MXU matmul,
+//!   fused SGD) called by L2; lowered with `interpret=True` so the HLO
+//!   runs on the PJRT CPU client loaded by [`runtime`].
+//!
+//! Python never runs on the measured path: `make artifacts` runs once,
+//! then the `fabricbench` binary is self-contained.
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod calibrate;
+pub mod cfd;
+pub mod cli;
+pub mod cluster;
+pub mod collectives;
+pub mod config;
+pub mod experiments;
+pub mod fabric;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod trainer;
+pub mod util;

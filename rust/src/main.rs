@@ -1,0 +1,325 @@
+//! fabricbench CLI — the launcher for every paper experiment.
+//!
+//! ```text
+//! fabricbench <command> [options]
+//!
+//! Commands (paper artifacts):
+//!   table1               Table I:  historical training times
+//!   fig3                 Fig 3:    CartDG strong scaling, both fabrics
+//!   fig4                 Fig 4:    CNN training throughput, both fabrics
+//!   fig5                 Fig 5:    all-reduce strategy comparison
+//!   affinity             §IV.B:    PCIe affinity study (Welch t-test)
+//!   microbench           OSU-style fabric micro-benchmarks
+//!   ablations            design-choice ablations (fusion, overlap, ...)
+//!   all                  run every experiment above
+//!
+//! Commands (real three-layer stack):
+//!   train-real           E2E: real AOT training, loss curve, accuracy
+//!   calibrate            measure the real PJRT train-step throughput
+//!   cfd-kernel           time the real DG kernel on this machine
+//!
+//! Options:
+//!   --quick              smaller sweeps (CI-sized)
+//!   --workers N          train-real: data-parallel workers   [4]
+//!   --steps N            train-real: training steps          [300]
+//!   --lr X               train-real: learning rate           [0.1]
+//!   --fabric NAME        train-real: 25gbe-roce | opa-100    [25gbe-roce]
+//!   --out DIR            results directory                   [results]
+//! ```
+
+use anyhow::{bail, Result};
+use fabricbench::cli::Args;
+use fabricbench::config::spec::FabricKind;
+use fabricbench::experiments::{ablations, affinity, fig3, fig4, fig5, microbench, table1};
+use fabricbench::metrics::Recorder;
+use fabricbench::util::table::fnum;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> Result<()> {
+    let quick = args.flag("quick");
+    let rec = match args.get("out") {
+        Some(dir) => Recorder::at(std::path::Path::new(dir)),
+        None => Recorder::new(),
+    };
+    match args.command.as_str() {
+        "table1" => cmd_table1(&rec),
+        "fig3" => cmd_fig3(&rec, quick),
+        "fig4" => cmd_fig4(&rec, quick),
+        "fig5" => cmd_fig5(&rec, quick),
+        "affinity" => cmd_affinity(&rec, quick),
+        "microbench" => cmd_microbench(&rec, quick),
+        "ablations" => cmd_ablations(&rec, quick),
+        "all" => {
+            cmd_table1(&rec)?;
+            cmd_fig3(&rec, quick)?;
+            cmd_fig4(&rec, quick)?;
+            cmd_fig5(&rec, quick)?;
+            cmd_affinity(&rec, quick)?;
+            cmd_microbench(&rec, quick)?;
+            cmd_ablations(&rec, quick)
+        }
+        "run" => cmd_run_config(args, &rec),
+        "frameworks" => cmd_frameworks(&rec, quick),
+        "sweeps" => cmd_sweeps(&rec, quick),
+        "train-real" => cmd_train_real(args, &rec),
+        "calibrate" => cmd_calibrate(args, &rec),
+        "cfd-kernel" => cmd_cfd_kernel(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try 'fabricbench help')"),
+    }
+}
+
+const HELP: &str = r#"fabricbench — network-fabric benchmarking for data-distributed DNN training
+(reproduction of Samsi et al., IEEE HPEC 2020)
+
+usage: fabricbench <command> [--quick] [options]
+
+paper artifacts : table1 fig3 fig4 fig5 affinity microbench ablations all
+extensions      : frameworks (TF-Horovod vs PyTorch-DDP)  sweeps (batch, precision)
+                  run --config configs/<file>.toml (custom scenario)
+real stack      : train-real [--workers N --steps N --lr X --fabric F]
+                  calibrate [--steps N]   cfd-kernel
+"#;
+
+fn cmd_sweeps(rec: &Recorder, quick: bool) -> Result<()> {
+    rec.emit("sweep_batch", &fabricbench::experiments::sweeps::batch_sweep(quick));
+    rec.emit("sweep_precision", &fabricbench::experiments::sweeps::precision_sweep(quick));
+    Ok(())
+}
+
+fn cmd_frameworks(rec: &Recorder, quick: bool) -> Result<()> {
+    let (table, _) = fabricbench::experiments::frameworks::run(quick);
+    rec.emit("framework_comparison", &table);
+    Ok(())
+}
+
+/// Run a custom scenario described by a TOML config file.
+fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
+    use fabricbench::config::spec::{ClusterSpec, FabricSpec, RunSpec};
+    let path = args
+        .get("config")
+        .ok_or_else(|| anyhow::anyhow!("run requires --config <file.toml>"))?;
+    let text = std::fs::read_to_string(path)?;
+    let doc = fabricbench::config::toml::parse(&text)?;
+    let cluster = match doc.get("cluster") {
+        Some(v) => ClusterSpec::from_toml(v)?,
+        None => ClusterSpec::txgaia(),
+    };
+    let fabric = FabricSpec::from_toml(
+        doc.get("fabric")
+            .ok_or_else(|| anyhow::anyhow!("config missing [fabric]"))?,
+    )?;
+    let train = doc
+        .get("train")
+        .ok_or_else(|| anyhow::anyhow!("config missing [train]"))?;
+    let model = train
+        .get("model")
+        .and_then(|x| x.as_str())
+        .unwrap_or("resnet50");
+    let arch = fabricbench::models::zoo::by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let gpus = train.get("gpus").and_then(|x| x.as_usize()).unwrap_or(8);
+    let per_gpu_batch = train
+        .get("per_gpu_batch")
+        .and_then(|x| x.as_usize())
+        .unwrap_or(64);
+    let fusion_mib = train
+        .get("fusion_mib")
+        .and_then(|x| x.as_f64())
+        .unwrap_or(64.0);
+    let overlap = !matches!(
+        train.get("overlap"),
+        Some(fabricbench::util::json::Json::Bool(false))
+    );
+    let mut run_spec = RunSpec::default();
+    if let Some(r) = doc.get("run") {
+        if let Some(seed) = r.get("seed").and_then(|x| x.as_usize()) {
+            run_spec.seed = seed as u64;
+        }
+        if let Some(w) = r.get("warmup_steps").and_then(|x| x.as_usize()) {
+            run_spec.warmup_steps = w;
+        }
+        if let Some(m) = r.get("measure_steps").and_then(|x| x.as_usize()) {
+            run_spec.measure_steps = m;
+        }
+    }
+    let name = arch.name.clone();
+    let trainer = fabricbench::trainer::TrainerSim {
+        arch,
+        fabric: fabric.clone(),
+        cluster,
+        opts: Default::default(),
+        strategy: Box::new(fabricbench::collectives::RingAllreduce),
+        per_gpu_batch,
+        precision: fabricbench::models::perf::Precision::Fp32,
+        fusion_bytes: fusion_mib * fabricbench::util::units::MIB,
+        overlap,
+        step_overhead: 0.0,
+        coordination_overhead:
+            fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+    };
+    let r = trainer.run(gpus, &run_spec)?;
+    let mut t = fabricbench::util::table::Table::new(
+        &format!("custom run: {name} on {} ({gpus} GPUs)", fabric.name),
+        &["metric", "value"],
+    );
+    t.row(vec!["images/s".into(), fnum(r.images_per_sec)]);
+    t.row(vec!["step time mean (ms)".into(), fnum(r.step_time_mean * 1e3)]);
+    t.row(vec!["step time p95 (ms)".into(), fnum(r.step_time_p95 * 1e3)]);
+    t.row(vec!["scaling efficiency".into(), format!("{:.3}", r.scaling_efficiency())]);
+    t.row(vec!["exposed comm fraction".into(), format!("{:.3}", r.comm_fraction)]);
+    rec.emit("custom_run", &t);
+    Ok(())
+}
+
+fn cmd_table1(rec: &Recorder) -> Result<()> {
+    rec.emit("table1_training_times", &table1::run());
+    Ok(())
+}
+
+fn cmd_fig3(rec: &Recorder, quick: bool) -> Result<()> {
+    let (table, _) = fig3::run(quick);
+    rec.emit("fig3_cartdg_scaling", &table);
+    Ok(())
+}
+
+fn cmd_fig4(rec: &Recorder, quick: bool) -> Result<()> {
+    let (table, rows) = fig4::run(quick);
+    rec.emit("fig4_throughput", &table);
+    println!(
+        "mean Ethernet deficit vs OPA: {:.2}%  (paper: 12.78%)\n",
+        fig4::mean_ethernet_deficit(&rows)
+    );
+    Ok(())
+}
+
+fn cmd_fig5(rec: &Recorder, quick: bool) -> Result<()> {
+    let (table, _) = fig5::run(quick);
+    rec.emit("fig5_allreduce_strategies", &table);
+    Ok(())
+}
+
+fn cmd_affinity(rec: &Recorder, quick: bool) -> Result<()> {
+    let (table, results) = affinity::run(quick);
+    rec.emit("affinity_study", &table);
+    for r in &results {
+        let worst = r
+            .p_values
+            .iter()
+            .map(|&(_, p)| p)
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "{}: smallest pairwise p-value {:.3} -> {}",
+            r.fabric,
+            worst,
+            if worst > 0.05 {
+                "no statistically significant difference (matches paper)"
+            } else {
+                "SIGNIFICANT (differs from paper)"
+            }
+        );
+    }
+    println!();
+    Ok(())
+}
+
+fn cmd_microbench(rec: &Recorder, quick: bool) -> Result<()> {
+    rec.emit("microbench_p2p", &microbench::p2p(quick));
+    rec.emit("microbench_allreduce", &microbench::allreduce(quick));
+    Ok(())
+}
+
+fn cmd_ablations(rec: &Recorder, quick: bool) -> Result<()> {
+    let (t1, _) = ablations::fusion_sweep(quick);
+    rec.emit("ablation_fusion", &t1);
+    let (t2, _) = ablations::toggles(quick);
+    rec.emit("ablation_toggles", &t2);
+    Ok(())
+}
+
+fn cmd_train_real(args: &Args, rec: &Recorder) -> Result<()> {
+    let workers = args.get_usize("workers", 4)?;
+    let steps = args.get_usize("steps", 300)?;
+    let lr = args.get_f64("lr", 0.1)? as f32;
+    let kind = FabricKind::parse(args.get("fabric").unwrap_or("25gbe-roce"))?;
+    let fabric = fabricbench::config::presets::fabric(kind);
+
+    let engine = fabricbench::runtime::engine::Engine::load_default()?;
+    println!(
+        "platform: {}  model: {} ({} params)",
+        engine.platform(),
+        engine.manifest.model,
+        engine.manifest.param_count
+    );
+    let mut trainer = fabricbench::trainer::real::RealTrainer::new(engine)?;
+    let report = trainer.train(workers, steps, lr, &fabric, Some(20))?;
+
+    let mut t = fabricbench::util::table::Table::new(
+        "E2E real training (AOT JAX/Pallas via PJRT + real ring all-reduce)",
+        &["step", "loss"],
+    );
+    for (i, l) in report.losses.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == report.losses.len() {
+            t.row(vec![i.to_string(), format!("{l:.4}")]);
+        }
+    }
+    rec.emit("e2e_loss_curve", &t);
+    println!(
+        "workers: {}  steps: {}  final loss: {:.4}  held-out accuracy: {:.1}%",
+        report.workers,
+        report.steps,
+        report.losses.last().unwrap(),
+        100.0 * report.final_accuracy
+    );
+    println!(
+        "wall-clock: {} images/s (real CPU compute) | simulated {} all-reduce time: {}",
+        fnum(report.images_per_sec_wall),
+        fabric.name,
+        fabricbench::util::units::fmt_time(report.virtual_comm_time)
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args, rec: &Recorder) -> Result<()> {
+    let steps = args.get_usize("steps", 20)?;
+    let engine = fabricbench::runtime::engine::Engine::load_default()?;
+    let cal = fabricbench::calibrate::run(&engine, steps)?;
+    println!(
+        "real train_step: {:.3} ms/step | {:.1} images/s | {:.3} GFLOP/s achieved",
+        cal.wall_per_step * 1e3,
+        cal.images_per_sec,
+        cal.achieved_flops / 1e9
+    );
+    let path = fabricbench::calibrate::save(&cal, &rec.dir)?;
+    println!("[saved {}]", path.display());
+    Ok(())
+}
+
+fn cmd_cfd_kernel() -> Result<()> {
+    let kernel = fabricbench::cfd::dg::DgKernel::new();
+    let t = kernel.measure_per_elem_seconds(64, 5);
+    let flops = fabricbench::cfd::dg::DgKernel::flops_per_elem();
+    println!(
+        "real DG kernel: {:.2} us/element ({} FLOPs) -> {:.2} GFLOP/s/core",
+        t * 1e6,
+        flops,
+        flops / t / 1e9
+    );
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Result recording: every experiment saves its table as CSV under
+//! results/ (and the CLI prints markdown), so EXPERIMENTS.md numbers have
+//! on-disk provenance.
+
+use crate::util::table::Table;
+use std::path::{Path, PathBuf};
+
+/// Where experiment results are written.
+pub struct Recorder {
+    pub dir: PathBuf,
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder { dir: PathBuf::from("results") }
+    }
+
+    pub fn at(dir: &Path) -> Self {
+        Recorder { dir: dir.to_path_buf() }
+    }
+
+    /// Save a table as CSV; returns the path written.
+    pub fn save(&self, name: &str, table: &Table) -> std::io::Result<PathBuf> {
+        table.save_csv(&self.dir, name)
+    }
+
+    /// Print markdown and save CSV in one call.
+    pub fn emit(&self, name: &str, table: &Table) {
+        println!("{}", table.to_markdown());
+        match self.save(name, table) {
+            Ok(path) => println!("[saved {}]", path.display()),
+            Err(e) => eprintln!("warning: could not save {name}.csv: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_roundtrip() {
+        let dir = std::env::temp_dir().join("fabricbench_metrics_test");
+        let rec = Recorder::at(&dir);
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into()]);
+        let path = rec.save("demo", &t).unwrap();
+        assert!(std::fs::read_to_string(path).unwrap().contains('1'));
+    }
+}

@@ -1,0 +1,251 @@
+//! Architecture descriptions: a small layer algebra that tracks spatial
+//! shape, trainable parameters and forward FLOPs per image. Gradient
+//! tensor sizes (what the all-reduce actually moves) fall out of the same
+//! description.
+
+/// One trainable (or shape-changing) layer.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    /// Trainable parameters.
+    pub params: u64,
+    /// Forward FLOPs per image (1 multiply-add = 2 FLOPs).
+    pub flops_fwd: f64,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    Conv2d,
+    Fc,
+    BatchNorm,
+    Pool,
+    Act,
+}
+
+/// A full architecture with its running shape already resolved.
+#[derive(Clone, Debug)]
+pub struct Arch {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Reference single-V100 fp32 throughput (img/s) used to calibrate the
+    /// efficiency ratio (public tf_cnn_benchmarks numbers; DESIGN.md §6).
+    pub v100_fp32_images_per_sec: f64,
+}
+
+impl Arch {
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    pub fn flops_fwd_per_image(&self) -> f64 {
+        self.layers.iter().map(|l| l.flops_fwd).sum()
+    }
+
+    /// Bytes of gradients all-reduced per step (fp32 wire format).
+    pub fn gradient_bytes(&self) -> f64 {
+        self.total_params() as f64 * 4.0
+    }
+
+    /// Per-tensor gradient sizes in forward order (for the fusion buffer).
+    pub fn gradient_tensor_bytes(&self) -> Vec<f64> {
+        self.layers
+            .iter()
+            .filter(|l| l.params > 0)
+            .map(|l| l.params as f64 * 4.0)
+            .collect()
+    }
+}
+
+/// Builder that threads the activation shape through the network.
+pub struct ArchBuilder {
+    name: String,
+    h: usize,
+    w: usize,
+    c: usize,
+    layers: Vec<Layer>,
+}
+
+impl ArchBuilder {
+    pub fn new(name: &str, h: usize, w: usize, c: usize) -> Self {
+        ArchBuilder { name: name.to_string(), h, w, c, layers: Vec::new() }
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.h, self.w, self.c)
+    }
+
+    fn out_dim(dim: usize, k: usize, stride: usize, pad: usize) -> usize {
+        (dim + 2 * pad - k) / stride + 1
+    }
+
+    /// Convolution; `bias` toggles a bias vector (ResNet-style convs have
+    /// none, classic VGG/AlexNet convs do).
+    pub fn conv(
+        self,
+        name: &str,
+        out_c: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        bias: bool,
+    ) -> Self {
+        self.conv_rect(name, out_c, (k, k), stride, (pad, pad), bias)
+    }
+
+    /// Rectangular-kernel convolution (Inception's 1x7 / 7x1 factorization).
+    pub fn conv_rect(
+        mut self,
+        name: &str,
+        out_c: usize,
+        k: (usize, usize),
+        stride: usize,
+        pad: (usize, usize),
+        bias: bool,
+    ) -> Self {
+        let oh = Self::out_dim(self.h, k.0, stride, pad.0);
+        let ow = Self::out_dim(self.w, k.1, stride, pad.1);
+        let weights = (k.0 * k.1 * self.c * out_c) as u64;
+        let params = weights + if bias { out_c as u64 } else { 0 };
+        let flops = 2.0 * (k.0 * k.1 * self.c) as f64 * (out_c * oh * ow) as f64;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv2d,
+            params,
+            flops_fwd: flops,
+        });
+        self.h = oh;
+        self.w = ow;
+        self.c = out_c;
+        self
+    }
+
+    /// Batch norm over the current channel count (gamma + beta trainable).
+    pub fn bn(mut self, name: &str) -> Self {
+        let c = self.c;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::BatchNorm,
+            params: 2 * c as u64,
+            // Normalize + scale + shift: ~4 FLOPs/element.
+            flops_fwd: 4.0 * (self.h * self.w * c) as f64,
+        });
+        self
+    }
+
+    pub fn relu(mut self, name: &str) -> Self {
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Act,
+            params: 0,
+            flops_fwd: (self.h * self.w * self.c) as f64,
+        });
+        self
+    }
+
+    pub fn pool(mut self, name: &str, k: usize, stride: usize, pad: usize) -> Self {
+        let oh = Self::out_dim(self.h, k, stride, pad);
+        let ow = Self::out_dim(self.w, k, stride, pad);
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Pool,
+            params: 0,
+            flops_fwd: ((k * k) as f64) * (oh * ow * self.c) as f64,
+        });
+        self.h = oh;
+        self.w = ow;
+        self
+    }
+
+    /// Global average pool to 1x1.
+    pub fn global_pool(mut self, name: &str) -> Self {
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Pool,
+            params: 0,
+            flops_fwd: (self.h * self.w * self.c) as f64,
+        });
+        self.h = 1;
+        self.w = 1;
+        self
+    }
+
+    /// Flatten + fully-connected (with bias).
+    pub fn fc(mut self, name: &str, out: usize) -> Self {
+        let inp = self.h * self.w * self.c;
+        self.layers.push(Layer {
+            name: name.to_string(),
+            kind: LayerKind::Fc,
+            params: (inp * out + out) as u64,
+            flops_fwd: 2.0 * (inp * out) as f64,
+        });
+        self.h = 1;
+        self.w = 1;
+        self.c = out;
+        self
+    }
+
+    /// Override the running channel count (after a concat of parallel
+    /// branches built separately).
+    pub fn set_channels(mut self, c: usize) -> Self {
+        self.c = c;
+        self
+    }
+
+    /// Merge layers built for a parallel branch (shape bookkeeping is the
+    /// caller's responsibility via `set_channels`).
+    pub fn absorb(mut self, layers: Vec<Layer>) -> Self {
+        self.layers.extend(layers);
+        self
+    }
+
+    pub fn build(self, v100_fp32_images_per_sec: f64) -> Arch {
+        Arch { name: self.name, layers: self.layers, v100_fp32_images_per_sec }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_and_params() {
+        // 224x224x3, 7x7/2 pad 3 -> 112x112x64 (the ResNet stem).
+        let b = ArchBuilder::new("t", 224, 224, 3).conv("stem", 64, 7, 2, 3, false);
+        assert_eq!(b.shape(), (112, 112, 64));
+        let l = &b.layers[0];
+        assert_eq!(l.params, 7 * 7 * 3 * 64);
+        let expected_flops = 2.0 * (7.0 * 7.0 * 3.0) * (64.0 * 112.0 * 112.0);
+        assert!((l.flops_fwd - expected_flops).abs() < 1.0);
+    }
+
+    #[test]
+    fn fc_params() {
+        let b = ArchBuilder::new("t", 1, 1, 2048).fc("fc", 1000);
+        assert_eq!(b.layers[0].params, 2048 * 1000 + 1000);
+    }
+
+    #[test]
+    fn pool_halves() {
+        let b = ArchBuilder::new("t", 112, 112, 64).pool("p", 3, 2, 1);
+        assert_eq!(b.shape(), (56, 56, 64));
+    }
+
+    #[test]
+    fn gradient_tensors_skip_paramless_layers() {
+        let a = ArchBuilder::new("t", 8, 8, 3)
+            .conv("c", 4, 3, 1, 1, true)
+            .relu("r")
+            .fc("f", 10)
+            .build(100.0);
+        assert_eq!(a.gradient_tensor_bytes().len(), 2);
+        assert_eq!(a.gradient_bytes(), a.total_params() as f64 * 4.0);
+    }
+
+    #[test]
+    fn bias_toggle() {
+        let with = ArchBuilder::new("t", 8, 8, 3).conv("c", 4, 3, 1, 1, true);
+        let without = ArchBuilder::new("t", 8, 8, 3).conv("c", 4, 3, 1, 1, false);
+        assert_eq!(with.layers[0].params - without.layers[0].params, 4);
+    }
+}

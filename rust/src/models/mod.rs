@@ -1,0 +1,12 @@
+//! DNN workload models: layer-level architecture descriptions (parameter
+//! counts and FLOPs derived from first principles), the model zoo used in
+//! the paper's Figs 4-5 and Table I, and the GPU step-time performance
+//! model calibrated against published tf_cnn_benchmarks throughput.
+
+pub mod arch;
+pub mod perf;
+pub mod zoo;
+
+pub use arch::{Arch, Layer, LayerKind};
+pub use perf::{Precision, StepCost};
+pub use zoo::{alexnet, inception_v3, paper_models, resnet50, resnet50_v15, vgg16};

@@ -1,0 +1,500 @@
+//! The model zoo: the paper's four benchmark networks plus AlexNet
+//! (Table I). Parameter counts are asserted against published values in
+//! the tests below — the layer algebra must reproduce them from first
+//! principles, they are not hard-coded.
+
+use super::arch::{Arch, ArchBuilder, Layer};
+
+/// VGG16 (configuration D, 224x224): 138,357,544 parameters.
+pub fn vgg16() -> Arch {
+    let mut b = ArchBuilder::new("vgg16", 224, 224, 3);
+    let cfg: &[&[usize]] = &[&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
+    for (s, stage) in cfg.iter().enumerate() {
+        for (i, &c) in stage.iter().enumerate() {
+            b = b.conv(&format!("conv{}_{}", s + 1, i + 1), c, 3, 1, 1, true);
+            b = b.relu(&format!("relu{}_{}", s + 1, i + 1));
+        }
+        b = b.pool(&format!("pool{}", s + 1), 2, 2, 0);
+    }
+    b = b.fc("fc6", 4096).relu("relu6");
+    b = b.fc("fc7", 4096).relu("relu7");
+    b = b.fc("fc8", 1000);
+    // tf_cnn_benchmarks V100 fp32: ~125 img/s (VGG16 is GEMM-heavy and
+    // runs at high MXU/SM efficiency, but 30.9 GFLOPs/image is 4x RN50).
+    b.build(125.0)
+}
+
+/// AlexNet (torchvision variant): 61,100,840 parameters.
+pub fn alexnet() -> Arch {
+    ArchBuilder::new("alexnet", 224, 224, 3)
+        .conv("conv1", 64, 11, 4, 2, true)
+        .relu("relu1")
+        .pool("pool1", 3, 2, 0)
+        .conv("conv2", 192, 5, 1, 2, true)
+        .relu("relu2")
+        .pool("pool2", 3, 2, 0)
+        .conv("conv3", 384, 3, 1, 1, true)
+        .relu("relu3")
+        .conv("conv4", 256, 3, 1, 1, true)
+        .relu("relu4")
+        .conv("conv5", 256, 3, 1, 1, true)
+        .relu("relu5")
+        .pool("pool5", 3, 2, 0)
+        .fc("fc6", 4096)
+        .relu("relu6")
+        .fc("fc7", 4096)
+        .relu("relu7")
+        .fc("fc8", 1000)
+        .build(2400.0)
+}
+
+/// Bottleneck residual block shared by both ResNet50 variants.
+///
+/// `stride_on_3x3` distinguishes v1 (stride on the first 1x1) from v1.5
+/// (stride on the 3x3) — identical parameters, ~12% more FLOPs for v1.5.
+fn bottleneck(
+    b: ArchBuilder,
+    name: &str,
+    width: usize,
+    stride: usize,
+    downsample: bool,
+    stride_on_3x3: bool,
+) -> ArchBuilder {
+    let (h, w, c_in) = b.shape();
+    let out_c = width * 4;
+    let (s1, s3) = if stride_on_3x3 { (1, stride) } else { (stride, 1) };
+    let mut b = b
+        .conv(&format!("{name}.conv1"), width, 1, s1, 0, false)
+        .bn(&format!("{name}.bn1"))
+        .relu(&format!("{name}.relu1"))
+        .conv(&format!("{name}.conv2"), width, 3, s3, 1, false)
+        .bn(&format!("{name}.bn2"))
+        .relu(&format!("{name}.relu2"))
+        .conv(&format!("{name}.conv3"), out_c, 1, 1, 0, false)
+        .bn(&format!("{name}.bn3"));
+    if downsample {
+        // Projection shortcut: computed on the block's input shape.
+        let side = ArchBuilder::new("side", h, w, c_in)
+            .conv(&format!("{name}.downsample.conv"), out_c, 1, stride, 0, false)
+            .bn(&format!("{name}.downsample.bn"));
+        let layers: Vec<Layer> = side.build(0.0).layers;
+        b = b.absorb(layers);
+    }
+    b.relu(&format!("{name}.relu3"))
+}
+
+fn resnet50_variant(name: &str, stride_on_3x3: bool, ref_ips: f64) -> Arch {
+    let mut b = ArchBuilder::new(name, 224, 224, 3)
+        .conv("stem.conv", 64, 7, 2, 3, false)
+        .bn("stem.bn")
+        .relu("stem.relu")
+        .pool("stem.maxpool", 3, 2, 1);
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)];
+    for (si, &(width, blocks, stride)) in stages.iter().enumerate() {
+        for blk in 0..blocks {
+            let s = if blk == 0 { stride } else { 1 };
+            let ds = blk == 0; // stage entry always projects (channel change)
+            b = bottleneck(
+                b,
+                &format!("layer{}.{}", si + 1, blk),
+                width,
+                s,
+                ds,
+                stride_on_3x3,
+            );
+        }
+    }
+    b.global_pool("avgpool").fc("fc", 1000).build(ref_ips)
+}
+
+/// ResNet50 v1: 25,557,032 parameters, ~3.86 GFLOPs/image forward.
+pub fn resnet50() -> Arch {
+    resnet50_variant("resnet50", false, 365.0)
+}
+
+/// ResNet50 v1.5: same parameters, stride moved to the 3x3 conv
+/// (~4.3 GFLOPs/image forward, a few percent slower in img/s).
+pub fn resnet50_v15() -> Arch {
+    resnet50_variant("resnet50_v1.5", true, 340.0)
+}
+
+/// Basic residual block (ResNet-18/34): two 3x3 convs.
+fn basic_block(b: ArchBuilder, name: &str, width: usize, stride: usize, downsample: bool) -> ArchBuilder {
+    let (h, w, c_in) = b.shape();
+    let mut b = b
+        .conv(&format!("{name}.conv1"), width, 3, stride, 1, false)
+        .bn(&format!("{name}.bn1"))
+        .relu(&format!("{name}.relu1"))
+        .conv(&format!("{name}.conv2"), width, 3, 1, 1, false)
+        .bn(&format!("{name}.bn2"));
+    if downsample {
+        let side = ArchBuilder::new("side", h, w, c_in)
+            .conv(&format!("{name}.downsample.conv"), width, 1, stride, 0, false)
+            .bn(&format!("{name}.downsample.bn"));
+        b = b.absorb(side.build(0.0).layers);
+    }
+    b.relu(&format!("{name}.relu2"))
+}
+
+/// Generic torchvision-style ResNet with basic blocks (18/34).
+fn resnet_basic(name: &str, blocks: [usize; 4], ref_ips: f64) -> Arch {
+    let mut b = ArchBuilder::new(name, 224, 224, 3)
+        .conv("stem.conv", 64, 7, 2, 3, false)
+        .bn("stem.bn")
+        .relu("stem.relu")
+        .pool("stem.maxpool", 3, 2, 1);
+    let widths = [64usize, 128, 256, 512];
+    for (si, (&width, &count)) in widths.iter().zip(&blocks).enumerate() {
+        for blk in 0..count {
+            let stride = if si > 0 && blk == 0 { 2 } else { 1 };
+            let ds = blk == 0 && (si > 0 || width != 64);
+            b = basic_block(b, &format!("layer{}.{}", si + 1, blk), width, stride, ds);
+        }
+    }
+    b.global_pool("avgpool").fc("fc", 1000).build(ref_ips)
+}
+
+/// Generic bottleneck ResNet of any depth (50/101/152 share the recipe).
+fn resnet_bottleneck(name: &str, blocks: [usize; 4], ref_ips: f64) -> Arch {
+    let mut b = ArchBuilder::new(name, 224, 224, 3)
+        .conv("stem.conv", 64, 7, 2, 3, false)
+        .bn("stem.bn")
+        .relu("stem.relu")
+        .pool("stem.maxpool", 3, 2, 1);
+    let widths = [64usize, 128, 256, 512];
+    for (si, (&width, &count)) in widths.iter().zip(&blocks).enumerate() {
+        for blk in 0..count {
+            let stride = if si > 0 && blk == 0 { 2 } else { 1 };
+            b = bottleneck(
+                b,
+                &format!("layer{}.{}", si + 1, blk),
+                width,
+                stride,
+                blk == 0,
+                true, // v1.5-style stride placement (torchvision)
+            );
+        }
+    }
+    b.global_pool("avgpool").fc("fc", 1000).build(ref_ips)
+}
+
+/// ResNet18: 11,689,512 parameters.
+pub fn resnet18() -> Arch {
+    resnet_basic("resnet18", [2, 2, 2, 2], 1600.0)
+}
+
+/// ResNet34: 21,797,672 parameters.
+pub fn resnet34() -> Arch {
+    resnet_basic("resnet34", [3, 4, 6, 3], 900.0)
+}
+
+/// ResNet101: 44,549,160 parameters.
+pub fn resnet101() -> Arch {
+    resnet_bottleneck("resnet101", [3, 4, 23, 3], 210.0)
+}
+
+/// ResNet152: 60,192,808 parameters.
+pub fn resnet152() -> Arch {
+    resnet_bottleneck("resnet152", [3, 8, 36, 3], 145.0)
+}
+
+/// Inception v3 (299x299): ~23.8 M parameters (torchvision, no aux head).
+pub fn inception_v3() -> Arch {
+    // Helper: a conv-bn-relu unit appended to a detached builder.
+    fn unit(
+        h: usize,
+        w: usize,
+        c: usize,
+        out_c: usize,
+        k: (usize, usize),
+        stride: usize,
+        pad: (usize, usize),
+        name: &str,
+    ) -> (Vec<Layer>, (usize, usize, usize)) {
+        let b = ArchBuilder::new("u", h, w, c)
+            .conv_rect(name, out_c, k, stride, pad, false)
+            .bn(&format!("{name}.bn"))
+            .relu(&format!("{name}.relu"));
+        let shape = b.shape();
+        (b.build(0.0).layers, shape)
+    }
+
+    let mut layers: Vec<Layer> = Vec::new();
+    // Stem.
+    let (ls, s) = unit(299, 299, 3, 32, (3, 3), 2, (0, 0), "Conv2d_1a");
+    layers.extend(ls);
+    let (ls, s) = unit(s.0, s.1, s.2, 32, (3, 3), 1, (0, 0), "Conv2d_2a");
+    layers.extend(ls);
+    let (ls, s) = unit(s.0, s.1, s.2, 64, (3, 3), 1, (1, 1), "Conv2d_2b");
+    layers.extend(ls);
+    // maxpool 3/2
+    // maxpool 3/2: 147 -> 73
+    let (mut h, mut w, mut c);
+    h = (s.0 - 3) / 2 + 1;
+    w = (s.1 - 3) / 2 + 1;
+    c = s.2;
+    let (ls, s) = unit(h, w, c, 80, (1, 1), 1, (0, 0), "Conv2d_3b");
+    layers.extend(ls);
+    let (ls, s) = unit(s.0, s.1, s.2, 192, (3, 3), 1, (0, 0), "Conv2d_4a");
+    layers.extend(ls);
+    h = (s.0 - 3) / 2 + 1;
+    w = (s.1 - 3) / 2 + 1;
+    c = s.2; // 35x35x192
+
+    // Inception-A blocks (x3): branches 1x1(64), 5x5(48->64),
+    // 3x3dbl(64->96->96), pool-proj(32/64/64).
+    for (i, pool_c) in [32usize, 64, 64].iter().enumerate() {
+        let n = format!("Mixed_5{}", (b'b' + i as u8) as char);
+        let mut out = 0;
+        let (ls, _) = unit(h, w, c, 64, (1, 1), 1, (0, 0), &format!("{n}.b1x1"));
+        layers.extend(ls);
+        out += 64;
+        let (ls, s2) = unit(h, w, c, 48, (1, 1), 1, (0, 0), &format!("{n}.b5x5_1"));
+        layers.extend(ls);
+        let (ls, _) = unit(s2.0, s2.1, s2.2, 64, (5, 5), 1, (2, 2), &format!("{n}.b5x5_2"));
+        layers.extend(ls);
+        out += 64;
+        let (ls, s2) = unit(h, w, c, 64, (1, 1), 1, (0, 0), &format!("{n}.b3x3dbl_1"));
+        layers.extend(ls);
+        let (ls, s2) = unit(s2.0, s2.1, s2.2, 96, (3, 3), 1, (1, 1), &format!("{n}.b3x3dbl_2"));
+        layers.extend(ls);
+        let (ls, _) = unit(s2.0, s2.1, s2.2, 96, (3, 3), 1, (1, 1), &format!("{n}.b3x3dbl_3"));
+        layers.extend(ls);
+        out += 96;
+        let (ls, _) = unit(h, w, c, *pool_c, (1, 1), 1, (0, 0), &format!("{n}.bpool"));
+        layers.extend(ls);
+        out += pool_c;
+        c = out; // 256 / 288 / 288
+    }
+
+    // Reduction-A (Mixed_6a): 3x3(384)/2 + 3x3dbl(64->96->96/2) + maxpool.
+    {
+        let n = "Mixed_6a";
+        let (ls, s1) = unit(h, w, c, 384, (3, 3), 2, (0, 0), &format!("{n}.b3x3"));
+        layers.extend(ls);
+        let (ls, s2) = unit(h, w, c, 64, (1, 1), 1, (0, 0), &format!("{n}.b3x3dbl_1"));
+        layers.extend(ls);
+        let (ls, s2) = unit(s2.0, s2.1, s2.2, 96, (3, 3), 1, (1, 1), &format!("{n}.b3x3dbl_2"));
+        layers.extend(ls);
+        let (ls, _) = unit(s2.0, s2.1, s2.2, 96, (3, 3), 2, (0, 0), &format!("{n}.b3x3dbl_3"));
+        layers.extend(ls);
+        h = s1.0;
+        w = s1.1;
+        c = 384 + 96 + c; // + pooled passthrough (17x17x768)
+    }
+
+    // Inception-B blocks (x4) with 7x7 factorization; channel args
+    // 128,160,160,192.
+    for (i, &mid) in [128usize, 160, 160, 192].iter().enumerate() {
+        let n = format!("Mixed_6{}", (b'b' + i as u8) as char);
+        let mut out = 0;
+        let (ls, _) = unit(h, w, c, 192, (1, 1), 1, (0, 0), &format!("{n}.b1x1"));
+        layers.extend(ls);
+        out += 192;
+        // 1x1 -> 1x7 -> 7x1
+        let (ls, s2) = unit(h, w, c, mid, (1, 1), 1, (0, 0), &format!("{n}.b7_1"));
+        layers.extend(ls);
+        let (ls, s2) = unit(s2.0, s2.1, s2.2, mid, (1, 7), 1, (0, 3), &format!("{n}.b7_2"));
+        layers.extend(ls);
+        let (ls, _) = unit(s2.0, s2.1, s2.2, 192, (7, 1), 1, (3, 0), &format!("{n}.b7_3"));
+        layers.extend(ls);
+        out += 192;
+        // double 7x7
+        let (ls, s2) = unit(h, w, c, mid, (1, 1), 1, (0, 0), &format!("{n}.b7dbl_1"));
+        layers.extend(ls);
+        let (ls, s2) = unit(s2.0, s2.1, s2.2, mid, (7, 1), 1, (3, 0), &format!("{n}.b7dbl_2"));
+        layers.extend(ls);
+        let (ls, s2) = unit(s2.0, s2.1, s2.2, mid, (1, 7), 1, (0, 3), &format!("{n}.b7dbl_3"));
+        layers.extend(ls);
+        let (ls, s2) = unit(s2.0, s2.1, s2.2, mid, (7, 1), 1, (3, 0), &format!("{n}.b7dbl_4"));
+        layers.extend(ls);
+        let (ls, _) = unit(s2.0, s2.1, s2.2, 192, (1, 7), 1, (0, 3), &format!("{n}.b7dbl_5"));
+        layers.extend(ls);
+        out += 192;
+        let (ls, _) = unit(h, w, c, 192, (1, 1), 1, (0, 0), &format!("{n}.bpool"));
+        layers.extend(ls);
+        out += 192;
+        c = out; // 768
+    }
+
+    // Reduction-B (Mixed_7a).
+    {
+        let n = "Mixed_7a";
+        let (ls, s2) = unit(h, w, c, 192, (1, 1), 1, (0, 0), &format!("{n}.b3x3_1"));
+        layers.extend(ls);
+        let (ls, s1) = unit(s2.0, s2.1, s2.2, 320, (3, 3), 2, (0, 0), &format!("{n}.b3x3_2"));
+        layers.extend(ls);
+        let (ls, s2) = unit(h, w, c, 192, (1, 1), 1, (0, 0), &format!("{n}.b7x7_1"));
+        layers.extend(ls);
+        let (ls, s2) = unit(s2.0, s2.1, s2.2, 192, (1, 7), 1, (0, 3), &format!("{n}.b7x7_2"));
+        layers.extend(ls);
+        let (ls, s2) = unit(s2.0, s2.1, s2.2, 192, (7, 1), 1, (3, 0), &format!("{n}.b7x7_3"));
+        layers.extend(ls);
+        let (ls, _) = unit(s2.0, s2.1, s2.2, 192, (3, 3), 2, (0, 0), &format!("{n}.b7x7_4"));
+        layers.extend(ls);
+        h = s1.0;
+        w = s1.1;
+        c = 320 + 192 + c; // 8x8x1280
+    }
+
+    // Inception-C blocks (x2, Mixed_7b/7c).
+    for i in 0..2 {
+        let n = format!("Mixed_7{}", (b'b' + i as u8) as char);
+        let mut out = 0;
+        let (ls, _) = unit(h, w, c, 320, (1, 1), 1, (0, 0), &format!("{n}.b1x1"));
+        layers.extend(ls);
+        out += 320;
+        // 3x3 branch: 1x1(384) -> {1x3, 3x1} concat.
+        let (ls, s2) = unit(h, w, c, 384, (1, 1), 1, (0, 0), &format!("{n}.b3x3_1"));
+        layers.extend(ls);
+        let (ls, _) = unit(s2.0, s2.1, s2.2, 384, (1, 3), 1, (0, 1), &format!("{n}.b3x3_2a"));
+        layers.extend(ls);
+        let (ls, _) = unit(s2.0, s2.1, s2.2, 384, (3, 1), 1, (1, 0), &format!("{n}.b3x3_2b"));
+        layers.extend(ls);
+        out += 768;
+        // dbl branch: 1x1(448) -> 3x3(384) -> {1x3, 3x1}.
+        let (ls, s2) = unit(h, w, c, 448, (1, 1), 1, (0, 0), &format!("{n}.b3x3dbl_1"));
+        layers.extend(ls);
+        let (ls, s2) = unit(s2.0, s2.1, s2.2, 384, (3, 3), 1, (1, 1), &format!("{n}.b3x3dbl_2"));
+        layers.extend(ls);
+        let (ls, _) = unit(s2.0, s2.1, s2.2, 384, (1, 3), 1, (0, 1), &format!("{n}.b3x3dbl_3a"));
+        layers.extend(ls);
+        let (ls, _) = unit(s2.0, s2.1, s2.2, 384, (3, 1), 1, (1, 0), &format!("{n}.b3x3dbl_3b"));
+        layers.extend(ls);
+        out += 768;
+        let (ls, _) = unit(h, w, c, 192, (1, 1), 1, (0, 0), &format!("{n}.bpool"));
+        layers.extend(ls);
+        out += 192;
+        c = out; // 2048
+    }
+
+    let mut b = ArchBuilder::new("inception_v3", h, w, 0).set_channels(c);
+    b = b.absorb(layers);
+    b.global_pool("avgpool").fc("fc", 1000).build(240.0)
+}
+
+/// The four models of Figs 4-5, in paper display order.
+pub fn paper_models() -> Vec<Arch> {
+    vec![resnet50(), resnet50_v15(), vgg16(), inception_v3()]
+}
+
+/// Look up by CLI name.
+pub fn by_name(name: &str) -> Option<Arch> {
+    match name.to_ascii_lowercase().as_str() {
+        "resnet50" | "rn50" => Some(resnet50()),
+        "resnet50_v1.5" | "resnet50_v15" | "rn50v15" => Some(resnet50_v15()),
+        "vgg16" => Some(vgg16()),
+        "inception_v3" | "inceptionv3" => Some(inception_v3()),
+        "alexnet" => Some(alexnet()),
+        "resnet18" => Some(resnet18()),
+        "resnet34" => Some(resnet34()),
+        "resnet101" => Some(resnet101()),
+        "resnet152" => Some(resnet152()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(got: f64, want: f64, tol: f64) -> bool {
+        (got - want).abs() / want <= tol
+    }
+
+    #[test]
+    fn vgg16_param_count_exact() {
+        assert_eq!(vgg16().total_params(), 138_357_544);
+    }
+
+    #[test]
+    fn alexnet_param_count_exact() {
+        assert_eq!(alexnet().total_params(), 61_100_840);
+    }
+
+    #[test]
+    fn resnet50_param_count_exact() {
+        assert_eq!(resnet50().total_params(), 25_557_032);
+    }
+
+    #[test]
+    fn resnet50_variants_share_params() {
+        assert_eq!(resnet50().total_params(), resnet50_v15().total_params());
+    }
+
+    #[test]
+    fn resnet50_v15_more_flops() {
+        let v1 = resnet50().flops_fwd_per_image();
+        let v15 = resnet50_v15().flops_fwd_per_image();
+        assert!(v15 > 1.05 * v1, "v1.5 {v15:.3e} !> v1 {v1:.3e}");
+        // Published: ~3.86 vs ~4.3 GFLOPs forward (2*MACs).
+        assert!(close(v1, 2.0 * 3.86e9, 0.10), "v1 flops {v1:.3e}");
+    }
+
+    #[test]
+    fn inception_v3_params_close_to_published() {
+        let p = inception_v3().total_params() as f64;
+        // torchvision (no aux): 23.8 M. Allow 5% for head/count conventions.
+        assert!(close(p, 23.8e6, 0.05), "inception params {p}");
+    }
+
+    #[test]
+    fn vgg16_flops_close_to_published() {
+        let f = vgg16().flops_fwd_per_image();
+        assert!(close(f, 2.0 * 15.47e9, 0.08), "vgg16 flops {f:.3e}");
+    }
+
+    #[test]
+    fn alexnet_flops_close_to_published() {
+        let f = alexnet().flops_fwd_per_image();
+        assert!(close(f, 2.0 * 0.71e9, 0.15), "alexnet flops {f:.3e}");
+    }
+
+    #[test]
+    fn gradient_bytes_match_params() {
+        for a in paper_models() {
+            assert_eq!(a.gradient_bytes(), a.total_params() as f64 * 4.0);
+            let per_tensor: f64 = a.gradient_tensor_bytes().iter().sum();
+            assert!((per_tensor - a.gradient_bytes()).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("resnet50").is_some());
+        assert!(by_name("VGG16").is_some());
+        assert!(by_name("resnet152").is_some());
+        assert!(by_name("resnet999").is_none());
+    }
+
+    #[test]
+    fn resnet18_param_count_exact() {
+        assert_eq!(resnet18().total_params(), 11_689_512);
+    }
+
+    #[test]
+    fn resnet34_param_count_exact() {
+        assert_eq!(resnet34().total_params(), 21_797_672);
+    }
+
+    #[test]
+    fn resnet101_param_count_exact() {
+        assert_eq!(resnet101().total_params(), 44_549_160);
+    }
+
+    #[test]
+    fn resnet152_param_count_exact() {
+        assert_eq!(resnet152().total_params(), 60_192_808);
+    }
+
+    #[test]
+    fn resnet_family_flops_ordering() {
+        let f18 = resnet18().flops_fwd_per_image();
+        let f34 = resnet34().flops_fwd_per_image();
+        let f50 = resnet50_v15().flops_fwd_per_image();
+        let f101 = resnet101().flops_fwd_per_image();
+        let f152 = resnet152().flops_fwd_per_image();
+        assert!(f18 < f34 && f34 < f50 && f50 < f101 && f101 < f152);
+    }
+}

@@ -1,0 +1,241 @@
+//! Artifact manifest: the contract between python/compile/aot.py and the
+//! rust runtime (shapes, argument order, file names) plus the initial
+//! parameter blob.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub batch: usize,
+    pub image: Vec<usize>,
+    pub classes: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+    pub train_step: ArtifactSpec,
+    pub sgd_update: ArtifactSpec,
+    pub predict: ArtifactSpec,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let get_str = |k: &str| -> Result<String> {
+            Ok(j.get(k)
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("manifest missing '{k}'"))?
+                .to_string())
+        };
+        let get_usize = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing '{k}'"))
+        };
+        let params = j
+            .get("params")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'params'"))?
+            .iter()
+            .map(|p| -> Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(|x| x.as_arr())
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<_>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifact = |name: &str| -> Result<ArtifactSpec> {
+            let a = j
+                .get("artifacts")
+                .and_then(|x| x.get(name))
+                .ok_or_else(|| anyhow!("manifest missing artifact '{name}'"))?;
+            let strings = |k: &str| -> Result<Vec<String>> {
+                Ok(a.get(k)
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow!("artifact '{name}' missing '{k}'"))?
+                    .iter()
+                    .map(|s| s.as_str().unwrap_or_default().to_string())
+                    .collect())
+            };
+            Ok(ArtifactSpec {
+                file: a
+                    .get("file")
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("artifact '{name}' missing file"))?
+                    .to_string(),
+                inputs: strings("inputs")?,
+                outputs: strings("outputs")?,
+            })
+        };
+        let m = Manifest {
+            model: get_str("model")?,
+            batch: get_usize("batch")?,
+            image: j
+                .get("image")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("manifest missing 'image'"))?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect(),
+            classes: get_usize("classes")?,
+            param_count: get_usize("param_count")?,
+            params,
+            train_step: artifact("train_step")?,
+            sgd_update: artifact("sgd_update")?,
+            predict: artifact("predict")?,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let total: usize = self.params.iter().map(|p| p.elems()).sum();
+        if total != self.param_count {
+            bail!("param_count {} != sum of shapes {}", self.param_count, total);
+        }
+        let n = self.params.len();
+        if self.train_step.inputs.len() != n + 2 {
+            bail!("train_step inputs: {} != {}", self.train_step.inputs.len(), n + 2);
+        }
+        if self.train_step.outputs.len() != n + 1 {
+            bail!("train_step outputs mismatch");
+        }
+        if self.sgd_update.inputs.len() != 2 * n + 1 || self.sgd_update.outputs.len() != n {
+            bail!("sgd_update arity mismatch");
+        }
+        Ok(())
+    }
+
+    /// Load init_params.bin: one Vec<f32> per parameter, manifest order.
+    pub fn load_init_params(&self, dir: &Path) -> Result<Vec<Vec<f32>>> {
+        let bytes = std::fs::read(dir.join("init_params.bin"))
+            .with_context(|| "reading init_params.bin")?;
+        if bytes.len() != 4 * self.param_count {
+            bail!(
+                "init_params.bin has {} bytes, expected {}",
+                bytes.len(),
+                4 * self.param_count
+            );
+        }
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0usize;
+        for p in &self.params {
+            let n = p.elems();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[off + 4 * i..off + 4 * i + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += 4 * n;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": "minicnn", "batch": 32, "image": [16, 16, 3], "classes": 10,
+      "param_count": 14,
+      "params": [
+        {"name": "w", "shape": [3, 4]},
+        {"name": "b", "shape": [2]}
+      ],
+      "artifacts": {
+        "train_step": {"file": "t.hlo.txt", "inputs": ["w", "b", "x", "y"],
+                        "outputs": ["loss", "gw", "gb"]},
+        "sgd_update": {"file": "s.hlo.txt",
+                        "inputs": ["w", "b", "gw", "gb", "lr"],
+                        "outputs": ["w", "b"]},
+        "predict": {"file": "p.hlo.txt", "inputs": ["w", "b", "x"],
+                     "outputs": ["logits"]}
+      }
+    }"#;
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model, "minicnn");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].elems(), 12);
+        assert_eq!(m.train_step.inputs.len(), 4);
+    }
+
+    #[test]
+    fn rejects_inconsistent_param_count() {
+        let bad = SAMPLE.replace("\"param_count\": 14", "\"param_count\": 99");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let bad = SAMPLE.replace(
+            "\"inputs\": [\"w\", \"b\", \"x\", \"y\"]",
+            "\"inputs\": [\"w\", \"x\", \"y\"]",
+        );
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn init_params_roundtrip() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let dir = std::env::temp_dir().join("fabricbench_artifacts_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<f32> = (0..14).map(|i| i as f32 * 0.5).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("init_params.bin"), &bytes).unwrap();
+        let params = m.load_init_params(&dir).unwrap();
+        assert_eq!(params.len(), 2);
+        assert_eq!(params[0].len(), 12);
+        assert_eq!(params[1], vec![6.0, 6.5]);
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        if let Some(dir) = crate::runtime::artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert_eq!(m.model, "minicnn");
+            let params = m.load_init_params(&dir).unwrap();
+            assert_eq!(params.len(), m.params.len());
+        }
+    }
+}

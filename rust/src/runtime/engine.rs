@@ -1,0 +1,116 @@
+//! PJRT execution engine: compile HLO-text artifacts once, execute many
+//! times with f32/i32 buffers. Wraps the `xla` crate (xla_extension
+//! 0.5.1, CPU plugin).
+
+use super::artifacts::Manifest;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub output_arity: usize,
+}
+
+/// Typed input for [`Executable::run`].
+pub enum Input<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+    ScalarF32(f32),
+}
+
+impl Executable {
+    /// Execute with the given inputs; returns one `Vec<f32>` per output
+    /// (the caller knows the shapes from the manifest).
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                Ok(match inp {
+                    Input::F32(data, shape) => {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(data).reshape(&dims)?
+                    }
+                    Input::I32(data, shape) => {
+                        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(data).reshape(&dims)?
+                    }
+                    Input::ScalarF32(v) => xla::Literal::scalar(*v),
+                })
+            })
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        let result = self.exe.execute::<&xla::Literal>(&refs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.output_arity {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.output_arity
+            );
+        }
+        parts
+            .into_iter()
+            .map(|p| {
+                // Scalars and tensors alike: flatten to f32.
+                let p = match p.ty()? {
+                    xla::ElementType::F32 => p,
+                    _ => p.convert(xla::PrimitiveType::F32)?,
+                };
+                Ok(p.to_vec::<f32>()?)
+            })
+            .collect()
+    }
+}
+
+/// The engine owns the PJRT client and the compiled artifacts.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Load the manifest and create a CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, dir: dir.to_path_buf(), manifest })
+    }
+
+    /// Load from the default artifacts location.
+    pub fn load_default() -> Result<Engine> {
+        let dir = super::artifacts_dir()
+            .context("artifacts/ not found — run `make artifacts` first")?;
+        Self::load(&dir)
+    }
+
+    /// Compile one artifact by manifest name ("train_step", ...).
+    pub fn compile(&self, name: &str) -> Result<Executable> {
+        let spec = match name {
+            "train_step" => &self.manifest.train_step,
+            "sgd_update" => &self.manifest.sgd_update,
+            "predict" => &self.manifest.predict,
+            other => bail!("unknown artifact '{other}'"),
+        };
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.file))?;
+        Ok(Executable { exe, name: name.to_string(), output_arity: spec.outputs.len() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

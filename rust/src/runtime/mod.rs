@@ -1,0 +1,32 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `make artifacts` (python/compile/aot.py) and executes them on the CPU
+//! PJRT client. This is the only place the `xla` crate is touched; Python
+//! never runs here.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactSpec, Manifest, ParamSpec};
+pub use engine::Engine;
+
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: $FABRICBENCH_ARTIFACTS, ./artifacts, or
+/// the crate-root artifacts/.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("FABRICBENCH_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    for cand in [
+        Path::new("artifacts").to_path_buf(),
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    ] {
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+    }
+    None
+}

@@ -1,0 +1,284 @@
+//! The data-parallel training coordinator (simulated timeline).
+//!
+//! Horovod-like execution per synchronous step:
+//!
+//! 1. every GPU computes forward+backward (compute time from the
+//!    calibrated perf model, with lognormal jitter per rank);
+//! 2. gradients become available *during* the backward pass in backward
+//!    layer order; the fusion buffer coalesces them into buckets;
+//! 3. buckets are all-reduced over the simulated fabric on a single
+//!    communication stream (allreduce of bucket b starts when its
+//!    gradients are ready on every... rank it reaches, and after bucket
+//!    b-1's allreduce — Horovod's coordinator serializes collectives);
+//! 4. the optimizer applies updates; the step ends when the slowest rank
+//!    finishes.
+//!
+//! Overlap of (2) and (3) is the `overlap` knob — one of the paper-adjacent
+//! ablations.
+
+use crate::cluster::Placement;
+use crate::collectives::{fuse, Collective, NullBuffers, BYTES_PER_ELEM};
+use crate::config::{ClusterSpec, FabricSpec, RunSpec, TransportOptions};
+use crate::fabric::{Comm, NetSim};
+use crate::models::perf::{step_cost, Precision};
+use crate::models::Arch;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Simulated trainer configuration.
+pub struct TrainerSim {
+    pub arch: Arch,
+    pub fabric: FabricSpec,
+    pub cluster: ClusterSpec,
+    pub opts: TransportOptions,
+    pub strategy: Box<dyn Collective>,
+    pub per_gpu_batch: usize,
+    pub precision: Precision,
+    /// Horovod fusion buffer capacity in bytes (default 64 MiB).
+    pub fusion_bytes: f64,
+    /// Overlap backprop with gradient all-reduce.
+    pub overlap: bool,
+    /// Fixed per-step overhead outside compute and communication
+    /// (framework dispatch); see [`crate::trainer::framework`].
+    pub step_overhead: f64,
+    /// Fixed serial cost per collective on the communication stream:
+    /// Horovod's coordinator negotiation cycle + NCCL launch (Horovod's
+    /// default cycle time is ~1 ms). This is what makes pathologically
+    /// small fusion buffers lose, exactly as Horovod's tuning guide warns.
+    pub coordination_overhead: f64,
+}
+
+/// Default per-collective coordination overhead, seconds (Horovod cycle).
+pub const DEFAULT_COORDINATION_OVERHEAD: f64 = 1.0e-3;
+
+/// Result of a throughput measurement.
+#[derive(Clone, Debug)]
+pub struct ThroughputResult {
+    pub gpus: usize,
+    pub images_per_sec: f64,
+    pub step_time_mean: f64,
+    pub step_time_p95: f64,
+    /// Mean fraction of the step spent in non-overlapped communication.
+    pub comm_fraction: f64,
+    /// Ideal images/sec if scaling were perfectly linear from 1 GPU.
+    pub linear_images_per_sec: f64,
+}
+
+impl ThroughputResult {
+    pub fn scaling_efficiency(&self) -> f64 {
+        self.images_per_sec / self.linear_images_per_sec
+    }
+}
+
+impl TrainerSim {
+    /// Simulate training on `gpus` GPUs and return throughput statistics.
+    pub fn run(&self, gpus: usize, run: &RunSpec) -> anyhow::Result<ThroughputResult> {
+        anyhow::ensure!(gpus >= 1, "need at least one GPU");
+        let placement = Placement::gpus(&self.cluster, gpus)?;
+        let mut net = NetSim::new(self.fabric.clone(), self.cluster.clone(), self.opts);
+        let mut rng = Rng::new(run.seed ^ (gpus as u64) << 32 ^ self.arch.total_params());
+
+        let cost = step_cost(
+            &self.arch,
+            &crate::cluster::gpu::V100,
+            self.per_gpu_batch,
+            self.precision,
+            None,
+        );
+        let buckets = fuse(&self.arch.gradient_tensor_bytes(), self.fusion_bytes);
+
+        let mut step_times = Vec::with_capacity(run.measure_steps);
+        let mut comm_fracs = Vec::with_capacity(run.measure_steps);
+        for step in 0..run.warmup_steps + run.measure_steps {
+            net.reset();
+            let (step_time, comm_frac) =
+                self.simulate_step(&mut net, &placement, &cost, &buckets, &mut rng, gpus);
+            if step >= run.warmup_steps {
+                step_times.push(step_time);
+                comm_fracs.push(comm_frac);
+            }
+        }
+
+        let mean = stats::mean(&step_times);
+        let single = {
+            // 1-GPU reference for scaling efficiency: pure compute.
+            self.per_gpu_batch as f64 / cost.total()
+        };
+        Ok(ThroughputResult {
+            gpus,
+            images_per_sec: gpus as f64 * self.per_gpu_batch as f64 / mean,
+            step_time_mean: mean,
+            step_time_p95: stats::percentile(&step_times, 95.0),
+            comm_fraction: stats::mean(&comm_fracs),
+            linear_images_per_sec: single * gpus as f64,
+        })
+    }
+
+    /// One synchronous step; returns (step_time, comm_fraction).
+    fn simulate_step(
+        &self,
+        net: &mut NetSim,
+        placement: &Placement,
+        cost: &crate::models::perf::StepCost,
+        buckets: &[crate::collectives::Bucket],
+        rng: &mut Rng,
+        gpus: usize,
+    ) -> (f64, f64) {
+        // Per-rank compute times with jitter.
+        let jitter: Vec<f64> = (0..gpus)
+            .map(|_| rng.lognormal_median(1.0, 0.02))
+            .collect();
+        let fwd: Vec<f64> = jitter.iter().map(|j| cost.fwd * j).collect();
+        let bwd: Vec<f64> = jitter.iter().map(|j| cost.bwd * j).collect();
+        let compute_done: Vec<f64> =
+            fwd.iter().zip(&bwd).map(|(f, b)| f + b).collect();
+
+        if gpus == 1 {
+            return (compute_done[0] + cost.optimizer + self.step_overhead, 0.0);
+        }
+
+        // Bucket b's gradients are ready on rank r at
+        // fwd[r] + bwd[r] * ready_frac(b) (backward produces gradients
+        // progressively). Without overlap, everything waits for compute.
+        let mut prev_done: Vec<f64> = vec![0.0; gpus];
+        let mut comm_done: Vec<f64> = vec![0.0; gpus];
+        let mut total_comm_exposed = 0.0f64;
+        for (bi, bucket) in buckets.iter().enumerate() {
+            let start: Vec<f64> = (0..gpus)
+                .map(|r| {
+                    let ready = if self.overlap {
+                        fwd[r] + bwd[r] * bucket.ready_frac
+                    } else {
+                        compute_done[r]
+                    };
+                    ready.max(prev_done[r]) + self.coordination_overhead
+                })
+                .collect();
+            let elems = (bucket.bytes / BYTES_PER_ELEM).ceil() as usize;
+            let mut comm = Comm::with_start(net, placement, &start);
+            let mut bufs = NullBuffers { elems };
+            self.strategy.allreduce(&mut comm, &mut bufs);
+            comm_done.copy_from_slice(&comm.t);
+            prev_done.copy_from_slice(&comm.t);
+            let _ = bi;
+            let max_start = start.iter().cloned().fold(0.0, f64::max);
+            let max_done = comm_done.iter().cloned().fold(0.0, f64::max);
+            total_comm_exposed += max_done - max_start;
+        }
+
+        let end = (0..gpus)
+            .map(|r| comm_done[r].max(compute_done[r]) + cost.optimizer)
+            .fold(0.0, f64::max)
+            + self.step_overhead;
+        let compute_max = compute_done.iter().cloned().fold(0.0, f64::max);
+        let exposed = (end - cost.optimizer - compute_max).max(0.0).min(total_comm_exposed);
+        (end, exposed / end)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{Hierarchical, RingAllreduce};
+    use crate::config::presets::fabric;
+    use crate::config::spec::FabricKind;
+    use crate::models::zoo::{resnet50, resnet50_v15};
+    use crate::util::units::MIB;
+
+    fn trainer(kind: FabricKind, overlap: bool) -> TrainerSim {
+        TrainerSim {
+            arch: resnet50(),
+            fabric: fabric(kind),
+            cluster: ClusterSpec::txgaia(),
+            opts: TransportOptions::default(),
+            strategy: Box::new(RingAllreduce),
+            per_gpu_batch: 64,
+            precision: Precision::Fp32,
+            fusion_bytes: 64.0 * MIB,
+            overlap,
+            step_overhead: 0.0,
+            coordination_overhead: DEFAULT_COORDINATION_OVERHEAD,
+        }
+    }
+
+    #[test]
+    fn single_gpu_matches_calibration() {
+        let t = trainer(FabricKind::OmniPath100, true);
+        let r = t.run(1, &RunSpec::default()).unwrap();
+        let want = t.arch.v100_fp32_images_per_sec;
+        assert!(
+            (r.images_per_sec - want).abs() / want < 0.08,
+            "1-GPU {} vs calibration {}",
+            r.images_per_sec,
+            want
+        );
+    }
+
+    #[test]
+    fn throughput_increases_with_gpus() {
+        let t = trainer(FabricKind::OmniPath100, true);
+        let spec = RunSpec { measure_steps: 10, ..Default::default() };
+        let r2 = t.run(2, &spec).unwrap();
+        let r8 = t.run(8, &spec).unwrap();
+        let r32 = t.run(32, &spec).unwrap();
+        assert!(r8.images_per_sec > 2.0 * r2.images_per_sec);
+        assert!(r32.images_per_sec > 2.0 * r8.images_per_sec);
+    }
+
+    #[test]
+    fn scaling_efficiency_reasonable_at_64() {
+        let t = trainer(FabricKind::OmniPath100, true);
+        let spec = RunSpec { measure_steps: 8, ..Default::default() };
+        let r = t.run(64, &spec).unwrap();
+        let eff = r.scaling_efficiency();
+        assert!(eff > 0.6 && eff <= 1.0, "efficiency {eff}");
+    }
+
+    #[test]
+    fn ethernet_slower_than_opa() {
+        let spec = RunSpec { measure_steps: 8, ..Default::default() };
+        let eth = trainer(FabricKind::EthernetRoce25, true).run(32, &spec).unwrap();
+        let opa = trainer(FabricKind::OmniPath100, true).run(32, &spec).unwrap();
+        assert!(
+            eth.images_per_sec < opa.images_per_sec,
+            "eth {} !< opa {}",
+            eth.images_per_sec,
+            opa.images_per_sec
+        );
+    }
+
+    #[test]
+    fn overlap_helps() {
+        let spec = RunSpec { measure_steps: 8, ..Default::default() };
+        let with = trainer(FabricKind::EthernetRoce25, true).run(32, &spec).unwrap();
+        let without = trainer(FabricKind::EthernetRoce25, false).run(32, &spec).unwrap();
+        assert!(with.images_per_sec > without.images_per_sec);
+    }
+
+    #[test]
+    fn hierarchical_strategy_runs() {
+        let mut t = trainer(FabricKind::EthernetRoce25, true);
+        t.strategy = Box::new(Hierarchical::default());
+        let spec = RunSpec { measure_steps: 5, ..Default::default() };
+        let r = t.run(16, &spec).unwrap();
+        assert!(r.images_per_sec > 0.0);
+    }
+
+    #[test]
+    fn v15_slower_than_v1_per_gpu() {
+        let spec = RunSpec { measure_steps: 5, ..Default::default() };
+        let mut t = trainer(FabricKind::OmniPath100, true);
+        let v1 = t.run(8, &spec).unwrap();
+        t.arch = resnet50_v15();
+        let v15 = t.run(8, &spec).unwrap();
+        assert!(v15.images_per_sec < v1.images_per_sec);
+    }
+
+    #[test]
+    fn comm_fraction_grows_on_slower_fabric() {
+        let spec = RunSpec { measure_steps: 8, ..Default::default() };
+        let eth = trainer(FabricKind::EthernetRoce25, false).run(64, &spec).unwrap();
+        let opa = trainer(FabricKind::OmniPath100, false).run(64, &spec).unwrap();
+        assert!(eth.comm_fraction > opa.comm_fraction);
+    }
+}

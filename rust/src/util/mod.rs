@@ -1,0 +1,11 @@
+//! Shared substrates built from scratch (the execution environment has no
+//! third-party crates beyond `xla`/`anyhow`/`thiserror`): deterministic
+//! PRNG, statistics, JSON, tables/CSV, unit formatting, and a miniature
+//! property-testing harness.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod units;

@@ -1,0 +1,111 @@
+//! Miniature property-testing harness (the `proptest` crate is not
+//! available in this offline environment). Provides seeded generators and
+//! a `forall` runner with failure reporting including the case seed, so a
+//! failing case can be replayed deterministically.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (kept modest; properties here are cheap).
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `prop` over `cases` generated inputs. On failure, panics with the
+/// case index and derived seed for replay.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let case_seed = root.next_u64();
+        let mut rng = Rng::new(case_seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {case_seed:#x}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a vector of f32 in [-bound, bound] of length in [1, max_len].
+pub fn vec_f32(rng: &mut Rng, max_len: usize, bound: f32) -> Vec<f32> {
+    let len = 1 + rng.below(max_len as u64) as usize;
+    (0..len)
+        .map(|_| rng.uniform_in(-bound as f64, bound as f64) as f32)
+        .collect()
+}
+
+/// Generate an integer in [lo, hi] inclusive.
+pub fn int_in(rng: &mut Rng, lo: u64, hi: u64) -> u64 {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Generate a power of two in [1, max_pow2_exp].
+pub fn pow2(rng: &mut Rng, max_exp: u32) -> u64 {
+    1u64 << rng.below(max_exp as u64 + 1)
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(1, 64, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(2, 64, |r| r.below(10), |&x| {
+            if x < 5 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 5"))
+            }
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let v = vec_f32(&mut rng, 16, 2.0);
+            assert!(!v.is_empty() && v.len() <= 16);
+            assert!(v.iter().all(|x| x.abs() <= 2.0));
+            let k = int_in(&mut rng, 5, 9);
+            assert!((5..=9).contains(&k));
+            let p = pow2(&mut rng, 6);
+            assert!(p.is_power_of_two() && p <= 64);
+        }
+    }
+
+    #[test]
+    fn assert_close_detects_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-7], 1e-6, 1e-6).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-6, 1e-6).is_err());
+    }
+}

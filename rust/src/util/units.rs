@@ -1,0 +1,152 @@
+//! Units: bytes, bandwidths, durations — parsing (for configs) and
+//! humanized formatting (for reports). All internal math is SI: bytes,
+//! bytes/second, seconds.
+
+pub const KIB: f64 = 1024.0;
+pub const MIB: f64 = 1024.0 * 1024.0;
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Gigabits/second -> bytes/second.
+pub fn gbps_to_bytes_per_sec(gbps: f64) -> f64 {
+    gbps * 1e9 / 8.0
+}
+
+/// Bytes/second -> gigabits/second.
+pub fn bytes_per_sec_to_gbps(bps: f64) -> f64 {
+    bps * 8.0 / 1e9
+}
+
+/// Microseconds -> seconds.
+pub fn us(x: f64) -> f64 {
+    x * 1e-6
+}
+
+/// Parse "64MiB", "25Gbps", "1.5us", "12GB/s", plain numbers, etc.
+/// Returns the value in base units (bytes, bytes/s, or seconds) along with
+/// the detected dimension.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Quantity {
+    Bytes(f64),
+    BytesPerSec(f64),
+    Seconds(f64),
+    Scalar(f64),
+}
+
+pub fn parse_quantity(input: &str) -> Result<Quantity, String> {
+    let s = input.trim();
+    let split = s
+        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+' || c == 'e' || c == 'E'))
+        .unwrap_or(s.len());
+    // Guard against "1e5" being split at 'e' when no unit follows a digit.
+    let (num_str, unit) = {
+        let (n, u) = s.split_at(split);
+        (n.trim(), u.trim())
+    };
+    let value: f64 = num_str
+        .parse()
+        .map_err(|_| format!("bad number in quantity '{input}'"))?;
+    let q = match unit {
+        "" => Quantity::Scalar(value),
+        "B" => Quantity::Bytes(value),
+        "KiB" => Quantity::Bytes(value * KIB),
+        "MiB" => Quantity::Bytes(value * MIB),
+        "GiB" => Quantity::Bytes(value * GIB),
+        "KB" => Quantity::Bytes(value * 1e3),
+        "MB" => Quantity::Bytes(value * 1e6),
+        "GB" => Quantity::Bytes(value * 1e9),
+        "Gbps" | "Gb/s" => Quantity::BytesPerSec(gbps_to_bytes_per_sec(value)),
+        "Mbps" | "Mb/s" => Quantity::BytesPerSec(value * 1e6 / 8.0),
+        "GB/s" => Quantity::BytesPerSec(value * 1e9),
+        "MB/s" => Quantity::BytesPerSec(value * 1e6),
+        "ns" => Quantity::Seconds(value * 1e-9),
+        "us" | "µs" => Quantity::Seconds(value * 1e-6),
+        "ms" => Quantity::Seconds(value * 1e-3),
+        "s" => Quantity::Seconds(value),
+        _ => return Err(format!("unknown unit '{unit}' in '{input}'")),
+    };
+    Ok(q)
+}
+
+/// Humanize a byte count.
+pub fn fmt_bytes(b: f64) -> String {
+    let a = b.abs();
+    if a >= GIB {
+        format!("{:.2} GiB", b / GIB)
+    } else if a >= MIB {
+        format!("{:.2} MiB", b / MIB)
+    } else if a >= KIB {
+        format!("{:.2} KiB", b / KIB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Humanize a duration in seconds.
+pub fn fmt_time(t: f64) -> String {
+    let a = t.abs();
+    if a >= 3600.0 {
+        format!("{:.2} h", t / 3600.0)
+    } else if a >= 60.0 {
+        format!("{:.2} min", t / 60.0)
+    } else if a >= 1.0 {
+        format!("{t:.3} s")
+    } else if a >= 1e-3 {
+        format!("{:.3} ms", t * 1e3)
+    } else if a >= 1e-6 {
+        format!("{:.3} us", t * 1e6)
+    } else {
+        format!("{:.1} ns", t * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_conversions() {
+        assert!((gbps_to_bytes_per_sec(25.0) - 3.125e9).abs() < 1.0);
+        assert!((bytes_per_sec_to_gbps(12.5e9) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_byte_units() {
+        assert_eq!(parse_quantity("64MiB").unwrap(), Quantity::Bytes(64.0 * MIB));
+        assert_eq!(parse_quantity("2KB").unwrap(), Quantity::Bytes(2000.0));
+        assert_eq!(parse_quantity("3 GiB").unwrap(), Quantity::Bytes(3.0 * GIB));
+    }
+
+    #[test]
+    fn parse_bandwidth_units() {
+        match parse_quantity("25Gbps").unwrap() {
+            Quantity::BytesPerSec(b) => assert!((b - 3.125e9).abs() < 1.0),
+            q => panic!("wrong dimension {q:?}"),
+        }
+        match parse_quantity("12.8GB/s").unwrap() {
+            Quantity::BytesPerSec(b) => assert!((b - 12.8e9).abs() < 1.0),
+            q => panic!("wrong dimension {q:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_time_units() {
+        assert_eq!(parse_quantity("1.5us").unwrap(), Quantity::Seconds(1.5e-6));
+        assert_eq!(parse_quantity("3ms").unwrap(), Quantity::Seconds(3e-3));
+    }
+
+    #[test]
+    fn parse_scalar_and_errors() {
+        assert_eq!(parse_quantity("42").unwrap(), Quantity::Scalar(42.0));
+        assert!(parse_quantity("12 parsecs").is_err());
+        assert!(parse_quantity("abc").is_err());
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(64.0 * MIB), "64.00 MiB");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(90.0), "1.50 min");
+        assert_eq!(fmt_time(1.25e-6), "1.250 us");
+    }
+}

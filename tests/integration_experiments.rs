@@ -1,0 +1,97 @@
+//! Integration tests: experiment drivers end-to-end (quick sweeps),
+//! CSV emission, and cross-module consistency.
+
+use fabricbench::experiments::{ablations, affinity, fig3, fig4, fig5, microbench, table1};
+use fabricbench::metrics::Recorder;
+
+#[test]
+fn table1_emits_and_saves() {
+    let t = table1::run();
+    assert_eq!(t.rows.len(), 4);
+    let dir = std::env::temp_dir().join("fb_it_table1");
+    let rec = Recorder::at(&dir);
+    let path = rec.save("table1", &t).unwrap();
+    let csv = std::fs::read_to_string(path).unwrap();
+    assert!(csv.lines().count() == 5);
+    assert!(csv.contains("resnet50"));
+}
+
+#[test]
+fn fig3_quick_has_both_fabrics() {
+    let (t, rows) = fig3::run(true);
+    assert!(t.rows.len() >= 10);
+    assert!(rows.iter().any(|r| r.fabric.contains("GbE")));
+    assert!(rows.iter().any(|r| r.fabric.contains("OPA")));
+    // Strong scaling sanity on the quick sweep.
+    for fab in ["GbE", "OPA"] {
+        let pts: Vec<_> = rows.iter().filter(|r| r.fabric.contains(fab)).collect();
+        assert!(pts.windows(2).all(|w| w[1].compute <= w[0].compute));
+    }
+}
+
+#[test]
+fn fig4_quick_deficit_and_monotonicity() {
+    let (t, rows) = fig4::run(true);
+    assert_eq!(t.rows.len(), rows.len());
+    let deficit = fig4::mean_ethernet_deficit(&rows);
+    assert!(deficit > 0.0, "Ethernet should lose on average, got {deficit}%");
+    // Every (model, fabric) series is monotone in GPUs.
+    for r in &rows {
+        assert!(r.images_per_sec > 0.0);
+        assert!(r.scaling_eff <= 1.05);
+    }
+}
+
+#[test]
+fn fig5_quick_strategies_consistent() {
+    let (_, rows) = fig5::run(true);
+    // Same cell from different strategies should be within 3x (they all
+    // hide most comm under compute at quick scales).
+    let cell = |strategy: &str| {
+        rows.iter()
+            .find(|r| {
+                r.model == "resnet50"
+                    && r.strategy.contains(strategy)
+                    && r.fabric.contains("OPA")
+                    && r.gpus == 32
+            })
+            .unwrap()
+            .images_per_sec
+    };
+    let ring = cell("ring");
+    let rhd = cell("rhd");
+    let hier = cell("hier");
+    for (name, v) in [("rhd", rhd), ("hier", hier)] {
+        let ratio = v / ring;
+        assert!((0.33..3.0).contains(&ratio), "{name}: ratio to ring = {ratio}");
+    }
+}
+
+#[test]
+fn affinity_not_significant() {
+    let (_, results) = affinity::run(true);
+    for r in results {
+        for ((_, _), p) in r.p_values {
+            assert!(p > 0.05);
+        }
+    }
+}
+
+#[test]
+fn microbench_tables_consistent_with_specs() {
+    let t = microbench::p2p(true);
+    // Large-message achieved GB/s column must be below each line rate.
+    for row in &t.rows {
+        let gbs: f64 = row[3].parse().unwrap();
+        assert!(gbs < 13.0, "achieved {gbs} GB/s exceeds any fabric here");
+    }
+}
+
+#[test]
+fn ablations_quick() {
+    let (t1, pts1) = ablations::fusion_sweep(true);
+    assert_eq!(t1.rows.len(), pts1.len());
+    let (t2, pts2) = ablations::toggles(true);
+    assert_eq!(t2.rows.len(), pts2.len());
+    assert!(pts2[0].images_per_sec > 0.0);
+}

@@ -1,0 +1,82 @@
+//! Failure-injection integration tests: the system must fail loudly and
+//! informatively, never silently.
+
+use fabricbench::cluster::Placement;
+use fabricbench::config::spec::{ClusterSpec, FabricSpec, FabricKind};
+use fabricbench::config::toml;
+use fabricbench::runtime::Manifest;
+
+#[test]
+fn oversubscribed_placement_rejected() {
+    let c = ClusterSpec::txgaia();
+    let too_many = c.nodes * c.gpus_per_node + 1;
+    let err = Placement::gpus(&c, too_many).unwrap_err();
+    assert!(err.to_string().contains("nodes"), "unhelpful error: {err}");
+}
+
+#[test]
+fn corrupt_manifest_rejected() {
+    for bad in [
+        "{",                         // truncated
+        "[]",                        // wrong top-level type
+        r#"{"model": "m"}"#,         // missing fields
+    ] {
+        assert!(Manifest::parse(bad).is_err(), "accepted: {bad}");
+    }
+}
+
+#[test]
+fn missing_artifacts_dir_is_clean_error() {
+    std::env::set_var("FABRICBENCH_ARTIFACTS", "/nonexistent/nowhere");
+    // artifacts_dir falls back to the real ./artifacts if present; force a
+    // direct load of the bogus path instead.
+    let err = Manifest::load(std::path::Path::new("/nonexistent/nowhere")).unwrap_err();
+    assert!(format!("{err:#}").contains("manifest"));
+    std::env::remove_var("FABRICBENCH_ARTIFACTS");
+}
+
+#[test]
+fn invalid_fabric_toml_rejected() {
+    for doc in [
+        "kind = \"warp\"",
+        "kind = \"opa-100\"\nlatency_us = -1.0",
+        "kind = \"opa-100\"\nefficiency = 2.0",
+        "kind = \"opa-100\"\nbandwidth_gbps = 0.0",
+    ] {
+        let v = toml::parse(doc).unwrap();
+        assert!(FabricSpec::from_toml(&v).is_err(), "accepted: {doc}");
+    }
+}
+
+#[test]
+fn zero_sized_cluster_rejected() {
+    let v = toml::parse("nodes = 0").unwrap();
+    assert!(ClusterSpec::from_toml(&v).is_err());
+}
+
+#[test]
+fn fabric_kind_parse_errors_are_informative() {
+    let err = FabricKind::parse("token-ring").unwrap_err();
+    assert!(err.to_string().contains("token-ring"));
+}
+
+#[test]
+fn init_params_wrong_size_rejected() {
+    let m = Manifest::parse(
+        r#"{
+      "model": "m", "batch": 2, "image": [2, 2, 1], "classes": 2,
+      "param_count": 4,
+      "params": [{"name": "w", "shape": [4]}],
+      "artifacts": {
+        "train_step": {"file": "t", "inputs": ["w", "x", "y"], "outputs": ["loss", "gw"]},
+        "sgd_update": {"file": "s", "inputs": ["w", "gw", "lr"], "outputs": ["w"]},
+        "predict": {"file": "p", "inputs": ["w", "x"], "outputs": ["logits"]}
+      }
+    }"#,
+    )
+    .unwrap();
+    let dir = std::env::temp_dir().join("fb_it_badbin");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("init_params.bin"), [0u8; 8]).unwrap(); // 8 != 16
+    assert!(m.load_init_params(&dir).is_err());
+}

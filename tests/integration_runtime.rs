@@ -1,0 +1,97 @@
+//! Integration tests for the three-layer stack: AOT artifacts -> PJRT
+//! runtime -> real training. These run only when `make artifacts` has
+//! produced the artifacts directory (they are the repo's core end-to-end
+//! signal, also exercised by examples/e2e_training.rs).
+
+use fabricbench::config::presets::fabric;
+use fabricbench::config::spec::FabricKind;
+use fabricbench::runtime::engine::{Engine, Input};
+use fabricbench::runtime::Manifest;
+use fabricbench::trainer::data::SyntheticDataset;
+use fabricbench::trainer::real::RealTrainer;
+
+fn engine() -> Option<Engine> {
+    fabricbench::runtime::artifacts_dir().map(|d| Engine::load(&d).unwrap())
+}
+
+#[test]
+fn manifest_and_params_agree() {
+    let Some(dir) = fabricbench::runtime::artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let params = m.load_init_params(&dir).unwrap();
+    assert_eq!(params.len(), m.params.len());
+    for (p, spec) in params.iter().zip(&m.params) {
+        assert_eq!(p.len(), spec.elems());
+        assert!(p.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn predict_artifact_runs_and_shapes_match() {
+    let Some(engine) = engine() else { return };
+    let predict = engine.compile("predict").unwrap();
+    let m = &engine.manifest;
+    let params = m.load_init_params(&engine.dir).unwrap();
+    let dataset = SyntheticDataset::new(5, 0.25);
+    let (x, _) = dataset.batch(0, 0, 1, m.batch);
+    let img_shape = [m.batch, m.image[0], m.image[1], m.image[2]];
+    let mut inputs: Vec<Input> = params
+        .iter()
+        .zip(&m.params)
+        .map(|(p, s)| Input::F32(p, &s.shape))
+        .collect();
+    inputs.push(Input::F32(&x, &img_shape));
+    let out = predict.run(&inputs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), m.batch * m.classes);
+    assert!(out[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_gradients_match_param_shapes() {
+    let Some(engine) = engine() else { return };
+    let ts = engine.compile("train_step").unwrap();
+    let m = &engine.manifest;
+    let params = m.load_init_params(&engine.dir).unwrap();
+    let dataset = SyntheticDataset::new(6, 0.25);
+    let (x, y) = dataset.batch(0, 0, 1, m.batch);
+    let img_shape = [m.batch, m.image[0], m.image[1], m.image[2]];
+    let label_shape = [m.batch];
+    let mut inputs: Vec<Input> = params
+        .iter()
+        .zip(&m.params)
+        .map(|(p, s)| Input::F32(p, &s.shape))
+        .collect();
+    inputs.push(Input::F32(&x, &img_shape));
+    inputs.push(Input::I32(&y, &label_shape));
+    let out = ts.run(&inputs).unwrap();
+    assert_eq!(out.len(), 1 + m.params.len());
+    assert!(out[0][0] > 0.0, "initial loss must be positive");
+    for (g, spec) in out[1..].iter().zip(&m.params) {
+        assert_eq!(g.len(), spec.elems());
+    }
+}
+
+#[test]
+fn data_parallel_equals_single_worker_big_batch_direction() {
+    // With equal data, 2-worker averaged gradients == the mean of the two
+    // per-worker gradients; training with them must reduce loss.
+    let Some(engine) = engine() else { return };
+    let mut t = RealTrainer::new(engine).unwrap();
+    let report = t.train(2, 8, 0.1, &fabric(FabricKind::OmniPath100), None).unwrap();
+    assert!(report.losses.last().unwrap() < &report.losses[0]);
+}
+
+#[test]
+fn longer_training_reaches_high_accuracy() {
+    // The cornerstone E2E assertion (kept moderate for CI time).
+    let Some(engine) = engine() else { return };
+    let mut t = RealTrainer::new(engine).unwrap();
+    let report = t.train(4, 60, 0.1, &fabric(FabricKind::EthernetRoce25), None).unwrap();
+    assert!(
+        report.final_accuracy > 0.6,
+        "accuracy after 60 steps: {}",
+        report.final_accuracy
+    );
+    assert!(report.virtual_comm_time > 0.0);
+}
