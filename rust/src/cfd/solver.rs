@@ -91,8 +91,8 @@ impl StrongScaling {
         let part = MeshPartition::new(self.mesh, cores);
         let placement = Placement::cores(&self.cluster, cores)?;
         let mut net = NetSim::new(fabric.clone(), self.cluster.clone(), TransportOptions::default());
-        // Every rank exchanges with ~6 neighbors concurrently.
-        net.set_active_flows(placement.nodes_used() as f64);
+        // All face messages of a stage form one event-engine batch below,
+        // so per-NIC and per-uplink contention is observed, not estimated.
 
         let elems = part.elems_per_rank();
         let compute_time =

@@ -27,7 +27,6 @@ impl Collective for Hierarchical {
         let bytes = n as f64 * BYTES_PER_ELEM;
         let groups = comm.placement.by_node();
         let leaders: Vec<usize> = groups.iter().map(|g| g[0]).collect();
-        comm.net.set_active_flows(leaders.len() as f64);
 
         // Phase 1: intra-node reduce to the leader.
         for g in &groups {

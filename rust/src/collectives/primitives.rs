@@ -24,13 +24,16 @@ pub fn broadcast(comm: &mut Comm, bufs: &mut dyn Buffers, root: usize) -> f64 {
     }
     let mut d = dist / 2;
     while d >= 1 {
-        for i in 0..p {
-            if i & d != 0 && i % d == 0 && i < p {
-                let src = rel(i - d);
-                let dst = rel(i);
-                comm.p2p(src, dst, bytes);
-                bufs.copy_chunk(dst, src, 0..n);
-            }
+        // Every transfer of one tree level is concurrent: one round.
+        let level: Vec<(usize, usize)> = (0..p)
+            .filter(|i| i & d != 0 && i % d == 0)
+            .map(|i| (rel(i - d), rel(i)))
+            .collect();
+        let msgs: Vec<(usize, usize, f64)> =
+            level.iter().map(|&(src, dst)| (src, dst, bytes)).collect();
+        comm.round(&msgs);
+        for &(src, dst) in &level {
+            bufs.copy_chunk(dst, src, 0..n);
         }
         if d == 1 {
             break;

@@ -23,25 +23,33 @@ impl Collective for RecursiveHalvingDoubling {
         }
         let n = bufs.elems();
         let full_bytes = n as f64 * BYTES_PER_ELEM;
-        comm.net.set_active_flows(comm.placement.nodes_used() as f64);
 
         // Largest power of two <= p.
         let p2 = usize::BITS as usize - 1 - p.leading_zeros() as usize;
         let p2 = 1usize << p2;
         let rem = p - p2;
 
-        // Fold: ranks p2..p send their whole buffer into ranks 0..rem.
-        for i in 0..rem {
-            let extra = p2 + i;
-            comm.p2p(extra, i, full_bytes);
-            bufs.reduce_chunk(i, extra, 0..n);
+        // Fold: ranks p2..p send their whole buffer into ranks 0..rem —
+        // all transfers are concurrent, so they form one engine round.
+        if rem > 0 {
+            let msgs: Vec<(usize, usize, f64)> =
+                (0..rem).map(|i| (p2 + i, i, full_bytes)).collect();
+            comm.round(&msgs);
+            for i in 0..rem {
+                bufs.reduce_chunk(i, p2 + i, 0..n);
+            }
         }
 
         // Recursive halving (reduce-scatter) among ranks 0..p2: each rank
-        // tracks the segment it is responsible for.
+        // tracks the segment it is responsible for. Every exchange of one
+        // distance level happens simultaneously (as real MPI pairwise
+        // exchanges do), so each level is one communication round.
         let mut seg: Vec<Range<usize>> = (0..p2).map(|_| 0..n).collect();
         let mut dist = p2 / 2;
         while dist >= 1 {
+            let mut msgs: Vec<(usize, usize, f64)> = Vec::with_capacity(p2);
+            let mut updates: Vec<(usize, usize, Range<usize>, Range<usize>)> =
+                Vec::with_capacity(p2 / 2);
             for i in 0..p2 {
                 let partner = i ^ dist;
                 if partner < i {
@@ -60,9 +68,12 @@ impl Collective for RecursiveHalvingDoubling {
                     (upper.clone(), lower.clone())
                 };
                 // Each sends the half the partner keeps.
-                let bytes_ip = keep_p.len() as f64 * BYTES_PER_ELEM;
-                let bytes_pi = keep_i.len() as f64 * BYTES_PER_ELEM;
-                comm.sendrecv(i, partner, bytes_ip.max(bytes_pi));
+                msgs.push((i, partner, keep_p.len() as f64 * BYTES_PER_ELEM));
+                msgs.push((partner, i, keep_i.len() as f64 * BYTES_PER_ELEM));
+                updates.push((i, partner, keep_i, keep_p));
+            }
+            comm.round(&msgs);
+            for (i, partner, keep_i, keep_p) in updates {
                 bufs.reduce_chunk(partner, i, keep_p.clone());
                 bufs.reduce_chunk(i, partner, keep_i.clone());
                 seg[i] = keep_i;
@@ -71,16 +82,23 @@ impl Collective for RecursiveHalvingDoubling {
             dist /= 2;
         }
 
-        // Recursive doubling (allgather): mirror image.
+        // Recursive doubling (allgather): mirror image, one round per
+        // distance level.
         let mut dist = 1;
         while dist < p2 {
+            let mut msgs: Vec<(usize, usize, f64)> = Vec::with_capacity(p2);
+            let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(p2 / 2);
             for i in 0..p2 {
                 let partner = i ^ dist;
                 if partner < i {
                     continue;
                 }
-                let bytes = seg[i].len().max(seg[partner].len()) as f64 * BYTES_PER_ELEM;
-                comm.sendrecv(i, partner, bytes);
+                msgs.push((i, partner, seg[i].len() as f64 * BYTES_PER_ELEM));
+                msgs.push((partner, i, seg[partner].len() as f64 * BYTES_PER_ELEM));
+                pairs.push((i, partner));
+            }
+            comm.round(&msgs);
+            for (i, partner) in pairs {
                 bufs.copy_chunk(partner, i, seg[i].clone());
                 bufs.copy_chunk(i, partner, seg[partner].clone());
                 // Both now own the union (contiguous by construction).
@@ -92,11 +110,14 @@ impl Collective for RecursiveHalvingDoubling {
             dist *= 2;
         }
 
-        // Unfold: results back to the folded ranks.
-        for i in 0..rem {
-            let extra = p2 + i;
-            comm.p2p(i, extra, full_bytes);
-            bufs.copy_chunk(extra, i, 0..n);
+        // Unfold: results back to the folded ranks, again as one round.
+        if rem > 0 {
+            let msgs: Vec<(usize, usize, f64)> =
+                (0..rem).map(|i| (i, p2 + i, full_bytes)).collect();
+            comm.round(&msgs);
+            for i in 0..rem {
+                bufs.copy_chunk(p2 + i, i, 0..n);
+            }
         }
         comm.max_time()
     }

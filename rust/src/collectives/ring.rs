@@ -22,9 +22,8 @@ impl Collective for RingAllreduce {
         }
         let n = bufs.elems();
         let chunks = chunk_ranges(n, p);
-        // One flow per member NIC at any instant.
-        let flows = comm.placement.nodes_used() as f64;
-        comm.net.set_active_flows(flows);
+        // Concurrency is observed by the event engine per round (one flow
+        // per member NIC at any instant); nothing to declare up front.
 
         // Reduce-scatter: round k, rank i sends chunk (i - k) mod p to
         // i+1, which accumulates it. All sends in a round are concurrent.

@@ -20,20 +20,21 @@ impl Collective for BinomialTree {
         }
         let n = bufs.elems();
         let bytes = n as f64 * BYTES_PER_ELEM;
-        comm.net.set_active_flows((comm.placement.nodes_used() as f64 / 2.0).max(1.0));
 
         // Reduce to rank 0: in round j, ranks with bit j set send their
-        // partial sum to rank (i - 2^j) and go idle.
+        // partial sum to rank (i - 2^j) and go idle. All sends of one
+        // level are concurrent — one engine round per level.
         let mut dist = 1;
         while dist < p {
-            for i in (0..p).rev() {
-                if i & dist != 0 && i % dist == 0 {
-                    // `i % dist == 0` keeps only still-active ranks
-                    // (multiples of the current distance).
-                    let dst = i - dist;
-                    comm.p2p(i, dst, bytes);
-                    bufs.reduce_chunk(dst, i, 0..n);
-                }
+            // `i % dist == 0` keeps only still-active ranks (multiples of
+            // the current distance).
+            let senders: Vec<usize> =
+                (0..p).filter(|i| i & dist != 0 && i % dist == 0).collect();
+            let msgs: Vec<(usize, usize, f64)> =
+                senders.iter().map(|&i| (i, i - dist, bytes)).collect();
+            comm.round(&msgs);
+            for &i in &senders {
+                bufs.reduce_chunk(i - dist, i, 0..n);
             }
             dist *= 2;
         }
@@ -41,12 +42,13 @@ impl Collective for BinomialTree {
         // Broadcast from rank 0 down the same tree, reversed.
         let mut dist = dist / 2;
         while dist >= 1 {
-            for i in 0..p {
-                if i & dist != 0 && i % dist == 0 {
-                    let src = i - dist;
-                    comm.p2p(src, i, bytes);
-                    bufs.copy_chunk(i, src, 0..n);
-                }
+            let receivers: Vec<usize> =
+                (0..p).filter(|i| i & dist != 0 && i % dist == 0).collect();
+            let msgs: Vec<(usize, usize, f64)> =
+                receivers.iter().map(|&i| (i - dist, i, bytes)).collect();
+            comm.round(&msgs);
+            for &i in &receivers {
+                bufs.copy_chunk(i, i - dist, 0..n);
             }
             if dist == 1 {
                 break;

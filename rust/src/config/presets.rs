@@ -26,6 +26,9 @@ pub fn fabric(kind: FabricKind) -> FabricSpec {
             // simultaneous flows share the core switch (PFC pauses).
             congestion_knee_flows: 160.0,
             congestion_coeff: 0.35,
+            // 32 nodes/rack at 25 Gb/s behind ~8x25G uplinks (4:1
+            // oversubscription), typical of the deployed leaf switches.
+            rack_uplink_gbps: 200.0,
         },
         FabricKind::EthernetTcp25 => FabricSpec {
             name: "25GbE-TCP".into(),
@@ -39,6 +42,7 @@ pub fn fabric(kind: FabricKind) -> FabricSpec {
             switch_hop_latency: us(0.5),
             congestion_knee_flows: 128.0,
             congestion_coeff: 0.5,
+            rack_uplink_gbps: 200.0,
         },
         FabricKind::OmniPath100 => FabricSpec {
             name: "OPA-100".into(),
@@ -55,6 +59,9 @@ pub fn fabric(kind: FabricKind) -> FabricSpec {
             // the regime the paper explored.
             congestion_knee_flows: 1024.0,
             congestion_coeff: 0.1,
+            // OPA edge-director fabric: 8x100G uplinks per edge switch
+            // (2:1 taper), so rack crossings rarely bottleneck.
+            rack_uplink_gbps: 800.0,
         },
         FabricKind::InfinibandEdr100 => FabricSpec {
             name: "IB-EDR".into(),
@@ -68,6 +75,7 @@ pub fn fabric(kind: FabricKind) -> FabricSpec {
             switch_hop_latency: us(0.12),
             congestion_knee_flows: 1024.0,
             congestion_coeff: 0.1,
+            rack_uplink_gbps: 800.0,
         },
     }
 }

@@ -55,6 +55,11 @@ pub struct FabricSpec {
     pub congestion_knee_flows: f64,
     /// Strength of the congestion penalty (0 disables).
     pub congestion_coeff: f64,
+    /// Aggregate rack-to-core uplink bandwidth in Gb/s (each direction).
+    /// The discrete-event engine models every inter-rack flow as holding a
+    /// share of its source rack's up-link and its destination rack's
+    /// down-link, so oversubscribed leaf-spine designs contend here.
+    pub rack_uplink_gbps: f64,
 }
 
 impl FabricSpec {
@@ -62,6 +67,11 @@ impl FabricSpec {
     /// congestion effects.
     pub fn effective_bandwidth(&self) -> f64 {
         crate::util::units::gbps_to_bytes_per_sec(self.bandwidth_gbps) * self.efficiency
+    }
+
+    /// Rack up-link capacity in bytes/second (per direction).
+    pub fn rack_uplink_bandwidth(&self) -> f64 {
+        crate::util::units::gbps_to_bytes_per_sec(self.rack_uplink_gbps) * self.efficiency
     }
 
     /// Congestion multiplier (<= 1) for `flows` simultaneous flows.
@@ -97,6 +107,7 @@ impl FabricSpec {
         spec.switch_hop_latency = getf("switch_hop_latency_us", spec.switch_hop_latency * 1e6) * 1e-6;
         spec.congestion_knee_flows = getf("congestion_knee_flows", spec.congestion_knee_flows);
         spec.congestion_coeff = getf("congestion_coeff", spec.congestion_coeff);
+        spec.rack_uplink_gbps = getf("rack_uplink_gbps", spec.rack_uplink_gbps);
         if let Some(Json::Bool(b)) = v.get("rdma") {
             spec.rdma = *b;
         }
@@ -116,6 +127,9 @@ impl FabricSpec {
         }
         if self.eager_threshold < 0.0 {
             bail!("fabric '{}': negative eager threshold", self.name);
+        }
+        if self.rack_uplink_gbps <= 0.0 {
+            bail!("fabric '{}': rack uplink must be positive", self.name);
         }
         Ok(())
     }

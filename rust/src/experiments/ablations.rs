@@ -5,6 +5,7 @@
 //! * GPUDirect RDMA vs host-staged copies
 //! * RDMA (RoCE) vs plain TCP on the same 25 GbE hardware
 
+use super::sweeps::{CellOut, Runner};
 use crate::collectives::RingAllreduce;
 use crate::config::presets::fabric;
 use crate::config::spec::{ClusterSpec, FabricKind, RunSpec, TransportOptions};
@@ -36,8 +37,9 @@ fn trainer(
     }
 }
 
-fn spec(quick: bool) -> RunSpec {
+fn spec(quick: bool, seed: u64) -> RunSpec {
     RunSpec {
+        seed,
         warmup_steps: 1,
         measure_steps: if quick { 5 } else { 10 },
         ..Default::default()
@@ -51,26 +53,41 @@ pub struct AblationPoint {
 
 /// Fusion buffer capacity sweep at 64 GPUs on Ethernet.
 pub fn fusion_sweep(quick: bool) -> (Table, Vec<AblationPoint>) {
+    fusion_sweep_with(quick, &Runner::sequential())
+}
+
+pub fn fusion_sweep_with(quick: bool, runner: &Runner) -> (Table, Vec<AblationPoint>) {
+    let items: Vec<f64> = vec![1.0, 4.0, 16.0, 64.0, 256.0];
+    let cells = runner.map_cells(
+        "ablation_fusion",
+        &items,
+        |mib| format!("{mib}MiB:quick={quick}"),
+        |_, mib, seed| {
+            let tr =
+                trainer(FabricKind::EthernetRoce25, TransportOptions::default(), mib * MIB, true);
+            let r = tr.run(64, &spec(quick, seed)).unwrap();
+            CellOut::new(vec![format!("{mib} MiB"), fnum(r.images_per_sec)])
+                .val("img_s", r.images_per_sec)
+        },
+    );
     let mut t = Table::new(
         "Ablation: Horovod fusion-buffer capacity (ResNet50, 64 GPUs, 25GbE)",
         &["fusion buffer", "img/s"],
     );
     let mut pts = Vec::new();
-    for mib in [1.0, 4.0, 16.0, 64.0, 256.0] {
-        let tr = trainer(FabricKind::EthernetRoce25, TransportOptions::default(), mib * MIB, true);
-        let r = tr.run(64, &spec(quick)).unwrap();
-        t.row(vec![format!("{mib} MiB"), fnum(r.images_per_sec)]);
-        pts.push(AblationPoint { name: format!("{mib}MiB"), images_per_sec: r.images_per_sec });
+    for (mib, cell) in items.iter().zip(cells) {
+        pts.push(AblationPoint { name: format!("{mib}MiB"), images_per_sec: cell.get("img_s") });
+        t.row(cell.row);
     }
     (t, pts)
 }
 
 /// Overlap, GPUDirect and RDMA toggles at 64 GPUs.
 pub fn toggles(quick: bool) -> (Table, Vec<AblationPoint>) {
-    let mut t = Table::new(
-        "Ablation: transport/overlap toggles (ResNet50, 64 GPUs, 25GbE)",
-        &["configuration", "img/s"],
-    );
+    toggles_with(quick, &Runner::sequential())
+}
+
+pub fn toggles_with(quick: bool, runner: &Runner) -> (Table, Vec<AblationPoint>) {
     let cases: Vec<(&str, TransportOptions, bool)> = vec![
         ("baseline (GPUDirect+RDMA, overlap)", TransportOptions::default(), true),
         ("no overlap", TransportOptions::default(), false),
@@ -85,12 +102,25 @@ pub fn toggles(quick: bool) -> (Table, Vec<AblationPoint>) {
             true,
         ),
     ];
+    let cells = runner.map_cells(
+        "ablation_toggles",
+        &cases,
+        |(name, _, _)| format!("{name}:quick={quick}"),
+        |_, (name, opts, overlap), seed| {
+            let tr = trainer(FabricKind::EthernetRoce25, *opts, 64.0 * MIB, *overlap);
+            let r = tr.run(64, &spec(quick, seed)).unwrap();
+            CellOut::new(vec![name.to_string(), fnum(r.images_per_sec)])
+                .val("img_s", r.images_per_sec)
+        },
+    );
+    let mut t = Table::new(
+        "Ablation: transport/overlap toggles (ResNet50, 64 GPUs, 25GbE)",
+        &["configuration", "img/s"],
+    );
     let mut pts = Vec::new();
-    for (name, opts, overlap) in cases {
-        let tr = trainer(FabricKind::EthernetRoce25, opts, 64.0 * MIB, overlap);
-        let r = tr.run(64, &spec(quick)).unwrap();
-        t.row(vec![name.to_string(), fnum(r.images_per_sec)]);
-        pts.push(AblationPoint { name: name.to_string(), images_per_sec: r.images_per_sec });
+    for ((name, _, _), cell) in cases.iter().zip(cells) {
+        pts.push(AblationPoint { name: name.to_string(), images_per_sec: cell.get("img_s") });
+        t.row(cell.row);
     }
     (t, pts)
 }

@@ -3,7 +3,12 @@
 //! observations to reproduce: (a) near-identical communication time on
 //! both fabrics, (b) good compute strong-scaling, (c) the plateau between
 //! 1,280 and 2,560 cores where traffic starts crossing rack boundaries.
+//!
+//! Each (fabric, cores) point is one independent simulation, fanned out
+//! over a [`sweeps::Runner`] — the halo-exchange round of the larger core
+//! counts is the heaviest single batch the event engine runs.
 
+use super::sweeps::{CellOut, Runner};
 use crate::cfd::solver::StrongScaling;
 use crate::config::presets::paper_fabrics;
 use crate::util::table::{fnum, Table};
@@ -18,36 +23,58 @@ pub struct Fig3Row {
 }
 
 pub fn run(quick: bool) -> (Table, Vec<Fig3Row>) {
-    let scaling = StrongScaling::paper();
+    run_with(quick, &Runner::sequential())
+}
+
+pub fn run_with(quick: bool, runner: &Runner) -> (Table, Vec<Fig3Row>) {
     let cores = if quick {
         vec![40, 320, 1280, 2560, 5120]
     } else {
         StrongScaling::paper_core_counts()
     };
-    let mut rows = Vec::new();
-    let mut t = Table::new(
-        "Fig 3: CartDG strong scaling (per-iteration seconds)",
-        &["cores", "fabric", "compute (s)", "comm (s)", "comm wire (s)", "inter-rack msgs"],
-    );
+    let mut items = Vec::new();
     for fabric in paper_fabrics() {
-        for pt in scaling.sweep(&fabric, &cores).unwrap() {
-            t.row(vec![
-                pt.cores.to_string(),
+        for &c in &cores {
+            items.push((fabric.clone(), c));
+        }
+    }
+    let cells = runner.map_cells(
+        "fig3",
+        &items,
+        |(fabric, c)| format!("{}:{c}", fabric.name),
+        |_, (fabric, c), _seed| {
+            // The CFD point is deterministic (no jitter model): the seed
+            // is unused but the cell is still cached/parallelized.
+            let pt = StrongScaling::paper().run_point(fabric, *c).unwrap();
+            CellOut::new(vec![
+                c.to_string(),
                 fabric.name.clone(),
                 fnum(pt.compute_time),
                 fnum(pt.comm_time),
                 fnum(pt.comm_wire_time),
                 pt.inter_rack_messages.to_string(),
-            ]);
-            rows.push(Fig3Row {
-                cores: pt.cores,
-                fabric: fabric.name.clone(),
-                compute: pt.compute_time,
-                comm: pt.comm_time,
-                comm_wire: pt.comm_wire_time,
-                inter_rack: pt.inter_rack_messages,
-            });
-        }
+            ])
+            .val("compute", pt.compute_time)
+            .val("comm", pt.comm_time)
+            .val("comm_wire", pt.comm_wire_time)
+            .val("inter_rack", pt.inter_rack_messages as f64)
+        },
+    );
+    let mut t = Table::new(
+        "Fig 3: CartDG strong scaling (per-iteration seconds)",
+        &["cores", "fabric", "compute (s)", "comm (s)", "comm wire (s)", "inter-rack msgs"],
+    );
+    let mut rows = Vec::new();
+    for ((fabric, c), cell) in items.iter().zip(cells) {
+        rows.push(Fig3Row {
+            cores: *c,
+            fabric: fabric.name.clone(),
+            compute: cell.get("compute"),
+            comm: cell.get("comm"),
+            comm_wire: cell.get("comm_wire"),
+            inter_rack: cell.get("inter_rack") as u64,
+        });
+        t.row(cell.row);
     }
     (t, rows)
 }
@@ -87,10 +114,11 @@ mod tests {
         // comm cost *per element* goes up. (The full flat plateau of the
         // paper also involves compute-side placement effects we do not
         // model — see EXPERIMENTS.md.)
-        let (_, rows) = run(false);
-        let eth = |c: usize| rows.iter().find(|r| r.cores == c && r.fabric.contains("GbE")).unwrap();
-        let r_intra = eth(1280).comm / eth(640).comm; // both inside one rack
-        let r_cross = eth(2560).comm / eth(1280).comm; // crosses racks
+        let scaling = StrongScaling::paper();
+        let eth_fabric = crate::config::presets::fabric(crate::config::spec::FabricKind::EthernetRoce25);
+        let eth = |c: usize| scaling.run_point(&eth_fabric, c).unwrap();
+        let r_intra = eth(1280).comm_time / eth(640).comm_time; // both inside one rack
+        let r_cross = eth(2560).comm_time / eth(1280).comm_time; // crosses racks
         assert!(
             r_cross > r_intra,
             "rack crossing should degrade scaling: intra {r_intra} cross {r_cross}"

@@ -3,7 +3,11 @@
 //! Horovod/NCCL-style (ring allreduce, 64 MiB fusion, overlap on).
 //!
 //! Paper headline: Ethernet averages **-12.78%** images/s vs OmniPath.
+//!
+//! Cell-parallel: the (model x fabric x gpus) grid fans out over a
+//! [`sweeps::Runner`] with deterministic per-cell seeds.
 
+use super::sweeps::{CellOut, Runner};
 use crate::collectives::RingAllreduce;
 use crate::config::presets::paper_fabrics;
 use crate::config::spec::{ClusterSpec, RunSpec, TransportOptions};
@@ -22,19 +26,25 @@ pub struct Fig4Row {
 }
 
 pub fn run(quick: bool) -> (Table, Vec<Fig4Row>) {
+    run_with(quick, &Runner::sequential())
+}
+
+pub fn run_with(quick: bool, runner: &Runner) -> (Table, Vec<Fig4Row>) {
     let gpu_counts = super::paper_gpu_counts(quick);
-    let run_spec = RunSpec {
-        measure_steps: if quick { 6 } else { 12 },
-        warmup_steps: 2,
-        ..Default::default()
-    };
-    let mut rows = Vec::new();
-    let mut t = Table::new(
-        "Fig 4: distributed training throughput (images/s)",
-        &["model", "fabric", "gpus", "img/s", "scaling eff"],
-    );
+    let measure_steps = if quick { 6 } else { 12 };
+    let mut items = Vec::new();
     for arch in paper_models() {
         for fabric in paper_fabrics() {
+            for &g in &gpu_counts {
+                items.push((arch.clone(), fabric.clone(), g));
+            }
+        }
+    }
+    let cells = runner.map_cells(
+        "fig4",
+        &items,
+        |(arch, fabric, g)| format!("{}:{}:{g}:steps={measure_steps}", arch.name, fabric.name),
+        |_, (arch, fabric, g), seed| {
             let trainer = TrainerSim {
                 arch: arch.clone(),
                 fabric: fabric.clone(),
@@ -49,24 +59,33 @@ pub fn run(quick: bool) -> (Table, Vec<Fig4Row>) {
                 coordination_overhead:
                     crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
             };
-            for &g in &gpu_counts {
-                let r = trainer.run(g, &run_spec).unwrap();
-                t.row(vec![
-                    arch.name.clone(),
-                    fabric.name.clone(),
-                    g.to_string(),
-                    fnum(r.images_per_sec),
-                    format!("{:.3}", r.scaling_efficiency()),
-                ]);
-                rows.push(Fig4Row {
-                    model: arch.name.clone(),
-                    fabric: fabric.name.clone(),
-                    gpus: g,
-                    images_per_sec: r.images_per_sec,
-                    scaling_eff: r.scaling_efficiency(),
-                });
-            }
-        }
+            let run_spec = RunSpec { seed, measure_steps, warmup_steps: 2, ..Default::default() };
+            let r = trainer.run(*g, &run_spec).unwrap();
+            CellOut::new(vec![
+                arch.name.clone(),
+                fabric.name.clone(),
+                g.to_string(),
+                fnum(r.images_per_sec),
+                format!("{:.3}", r.scaling_efficiency()),
+            ])
+            .val("img_s", r.images_per_sec)
+            .val("eff", r.scaling_efficiency())
+        },
+    );
+    let mut t = Table::new(
+        "Fig 4: distributed training throughput (images/s)",
+        &["model", "fabric", "gpus", "img/s", "scaling eff"],
+    );
+    let mut rows = Vec::new();
+    for ((arch, fabric, g), cell) in items.iter().zip(cells) {
+        rows.push(Fig4Row {
+            model: arch.name.clone(),
+            fabric: fabric.name.clone(),
+            gpus: *g,
+            images_per_sec: cell.get("img_s"),
+            scaling_eff: cell.get("eff"),
+        });
+        t.row(cell.row);
     }
     (t, rows)
 }

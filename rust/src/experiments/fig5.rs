@@ -5,8 +5,14 @@
 //! Shapes to reproduce: near-linear scaling for all strategies through
 //! 256 GPUs; the two fabrics comparable through 256; ResNet50_v1.5 on
 //! Ethernet degrading at 512 GPUs (25 Gb/s bandwidth saturation at the
-//! core switch — congestion model).
+//! core switch — the event engine's batch congestion model).
+//!
+//! The grid is cell-parallel: `run_with` fans the
+//! (model x strategy x fabric x gpus) product out over a
+//! [`sweeps::Runner`], one independent simulation per cell with a
+//! deterministic per-cell seed.
 
+use super::sweeps::{CellOut, Runner};
 use crate::collectives::{Collective, Hierarchical, RecursiveHalvingDoubling, RingAllreduce};
 use crate::config::presets::paper_fabrics;
 use crate::config::spec::{ClusterSpec, RunSpec, TransportOptions};
@@ -35,53 +41,69 @@ pub struct Fig5Row {
 }
 
 pub fn run(quick: bool) -> (Table, Vec<Fig5Row>) {
+    run_with(quick, &Runner::sequential())
+}
+
+pub fn run_with(quick: bool, runner: &Runner) -> (Table, Vec<Fig5Row>) {
     let gpu_counts = super::paper_gpu_counts(quick);
-    let run_spec = RunSpec {
-        measure_steps: if quick { 5 } else { 10 },
-        warmup_steps: 2,
-        ..Default::default()
-    };
-    let mut rows = Vec::new();
+    let measure_steps = if quick { 5 } else { 10 };
+    let mut items = Vec::new();
+    for arch in paper_models() {
+        for (si, label) in STRATEGY_LABELS.iter().enumerate() {
+            for fabric in paper_fabrics() {
+                for &g in &gpu_counts {
+                    items.push((arch.clone(), si, *label, fabric.clone(), g));
+                }
+            }
+        }
+    }
+    let cells = runner.map_cells(
+        "fig5",
+        &items,
+        |(arch, _, label, fabric, g)| {
+            format!("{}:{label}:{}:{g}:steps={measure_steps}", arch.name, fabric.name)
+        },
+        |_, (arch, si, label, fabric, g), seed| {
+            let trainer = TrainerSim {
+                arch: arch.clone(),
+                fabric: fabric.clone(),
+                cluster: ClusterSpec::txgaia(),
+                opts: TransportOptions::default(),
+                strategy: strategy(*si),
+                per_gpu_batch: super::batch_for(&arch.name),
+                precision: Precision::Fp32,
+                fusion_bytes: 64.0 * MIB,
+                overlap: true,
+                step_overhead: 0.0,
+                coordination_overhead:
+                    crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+            };
+            let run_spec = RunSpec { seed, measure_steps, warmup_steps: 2, ..Default::default() };
+            let r = trainer.run(*g, &run_spec).unwrap();
+            CellOut::new(vec![
+                arch.name.clone(),
+                label.to_string(),
+                fabric.name.clone(),
+                g.to_string(),
+                fnum(r.images_per_sec),
+            ])
+            .val("img_s", r.images_per_sec)
+        },
+    );
     let mut t = Table::new(
         "Fig 5: all-reduce strategy comparison (images/s)",
         &["model", "strategy", "fabric", "gpus", "img/s"],
     );
-    for arch in paper_models() {
-        for (si, label) in STRATEGY_LABELS.iter().enumerate() {
-            for fabric in paper_fabrics() {
-                let trainer = TrainerSim {
-                    arch: arch.clone(),
-                    fabric: fabric.clone(),
-                    cluster: ClusterSpec::txgaia(),
-                    opts: TransportOptions::default(),
-                    strategy: strategy(si),
-                    per_gpu_batch: super::batch_for(&arch.name),
-                    precision: Precision::Fp32,
-                    fusion_bytes: 64.0 * MIB,
-                    overlap: true,
-                    step_overhead: 0.0,
-                    coordination_overhead:
-                        crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
-                };
-                for &g in &gpu_counts {
-                    let r = trainer.run(g, &run_spec).unwrap();
-                    t.row(vec![
-                        arch.name.clone(),
-                        label.to_string(),
-                        fabric.name.clone(),
-                        g.to_string(),
-                        fnum(r.images_per_sec),
-                    ]);
-                    rows.push(Fig5Row {
-                        model: arch.name.clone(),
-                        strategy: label.to_string(),
-                        fabric: fabric.name.clone(),
-                        gpus: g,
-                        images_per_sec: r.images_per_sec,
-                    });
-                }
-            }
-        }
+    let mut rows = Vec::new();
+    for ((arch, _, label, fabric, g), cell) in items.iter().zip(cells) {
+        rows.push(Fig5Row {
+            model: arch.name.clone(),
+            strategy: label.to_string(),
+            fabric: fabric.name.clone(),
+            gpus: *g,
+            images_per_sec: cell.get("img_s"),
+        });
+        t.row(cell.row);
     }
     (t, rows)
 }
@@ -130,5 +152,14 @@ mod tests {
         let r128 = find(&rows, "resnet50", "ring", "OPA", 128).images_per_sec;
         let ratio = r128 / r8;
         assert!(ratio > 10.0, "8->128 GPUs scaled only {ratio}x");
+    }
+
+    #[test]
+    fn parallel_run_matches_sequential_exactly() {
+        // The acceptance property: same base seed => byte-identical CSV,
+        // independent of the worker count.
+        let (seq, _) = run_with(true, &Runner::sequential());
+        let (par, _) = run_with(true, &Runner::new(4));
+        assert_eq!(seq.to_csv(), par.to_csv());
     }
 }

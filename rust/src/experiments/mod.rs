@@ -2,6 +2,12 @@
 //! methodology microbenchmarks and the design-choice ablations. Each
 //! driver returns a [`crate::util::table::Table`] whose rows mirror what
 //! the paper reports; the benches and the CLI both call through here.
+//!
+//! The grid-shaped drivers (table1, fig3, fig4, fig5, ablations, sweeps)
+//! expose a `run_with(quick, &sweeps::Runner)` entry point that fans
+//! independent grid cells out across threads with deterministic per-cell
+//! seeds and JSON result caching — `run(quick)` is the sequential,
+//! uncached wrapper. See [`sweeps`] for the executor.
 
 pub mod ablations;
 pub mod affinity;
@@ -12,6 +18,8 @@ pub mod frameworks;
 pub mod microbench;
 pub mod sweeps;
 pub mod table1;
+
+pub use sweeps::Runner;
 
 /// GPU counts used by Figs 4-5 (the paper scales 2 -> 512).
 pub fn paper_gpu_counts(quick: bool) -> Vec<usize> {

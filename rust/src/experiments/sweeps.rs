@@ -1,7 +1,26 @@
-//! Tuning-knob sweeps the paper's §III calls out in tf_cnn_benchmarks:
-//! per-GPU batch size and full-vs-mixed precision, each crossed with the
-//! two fabrics. Also demonstrates the message-level trace: the batch
-//! sweep reports how the inter-rack byte fraction changes with scale.
+//! Sweep infrastructure + the tuning-knob sweeps of §III.
+//!
+//! # `Runner`: parallel grid execution with caching
+//!
+//! Every experiment grid (fig3/fig4/fig5/table1/ablations and the batch /
+//! precision sweeps here) decomposes into independent **cells** — one
+//! simulation with its own config coordinates. [`Runner`] executes a
+//! cell list:
+//!
+//! * **fan-out**: `--jobs N` worker threads pull cells off a shared
+//!   atomic cursor (work stealing), so the full non-quick grids scale
+//!   with cores; results are reassembled in cell order, so the emitted
+//!   CSV is byte-identical regardless of `jobs`;
+//! * **deterministic seeding**: each cell derives its RNG seed as
+//!   `base_seed XOR fnv1a(cell key)` — independent of scheduling order,
+//!   worker count, and of which other cells run;
+//! * **caching**: with a cache directory set, each finished cell is
+//!   stored as a JSON artifact named by the FNV-1a hash of its full
+//!   config key (cache version + experiment + coordinates + base seed);
+//!   re-runs verify the stored key and skip the simulation on a hit.
+//!
+//! The sequential path is the same code with `jobs = 1`, which is what
+//! makes the parallel/sequential-equivalence guarantee trivial.
 
 use crate::collectives::RingAllreduce;
 use crate::config::presets::paper_fabrics;
@@ -9,8 +28,217 @@ use crate::config::spec::{ClusterSpec, RunSpec, TransportOptions};
 use crate::models::perf::Precision;
 use crate::models::zoo::resnet50;
 use crate::trainer::TrainerSim;
+use crate::util::json::{self, Json};
 use crate::util::table::{fnum, Table};
 use crate::util::units::MIB;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Bump when cell semantics change so stale artifacts never resurface.
+pub const CACHE_VERSION: &str = "v1";
+
+/// FNV-1a 64-bit hash (stable across platforms and runs).
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// One grid cell's result: the table row plus named numeric side-values
+/// the drivers' typed row structs are rebuilt from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellOut {
+    pub row: Vec<String>,
+    pub vals: Vec<(String, f64)>,
+}
+
+impl CellOut {
+    pub fn new(row: Vec<String>) -> CellOut {
+        CellOut { row, vals: Vec::new() }
+    }
+
+    pub fn val(mut self, key: &str, v: f64) -> CellOut {
+        self.vals.push((key.to_string(), v));
+        self
+    }
+
+    pub fn get(&self, key: &str) -> f64 {
+        self.vals
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("cell missing value '{key}'"))
+    }
+
+    fn to_json(&self, full_key: &str) -> Json {
+        json::obj(vec![
+            ("key", json::s(full_key)),
+            (
+                "row",
+                json::arr(self.row.iter().map(|c| json::s(c))),
+            ),
+            (
+                "vals",
+                Json::Obj(
+                    self.vals
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json, expect_key: &str) -> Option<CellOut> {
+        if j.get("key")?.as_str()? != expect_key {
+            return None; // hash collision or stale artifact
+        }
+        let row = j
+            .get("row")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_str().map(|s| s.to_string()))
+            .collect::<Option<Vec<_>>>()?;
+        let vals = j
+            .get("vals")?
+            .as_obj()?
+            .iter()
+            .map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+            .collect::<Option<Vec<_>>>()?;
+        Some(CellOut { row, vals })
+    }
+}
+
+/// Parallel sweep executor. See the module docs.
+pub struct Runner {
+    /// Worker threads (1 = sequential, same code path).
+    pub jobs: usize,
+    /// Cell artifact cache directory (`None` disables caching).
+    pub cache_dir: Option<PathBuf>,
+    /// Base seed every cell seed is derived from.
+    pub seed: u64,
+}
+
+impl Runner {
+    /// The sequential, uncached runner every `run(quick)` wrapper uses.
+    pub fn sequential() -> Runner {
+        Runner { jobs: 1, cache_dir: None, seed: RunSpec::default().seed }
+    }
+
+    pub fn new(jobs: usize) -> Runner {
+        Runner { jobs: jobs.max(1), ..Runner::sequential() }
+    }
+
+    pub fn with_cache(mut self, dir: &Path) -> Runner {
+        self.cache_dir = Some(dir.to_path_buf());
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Runner {
+        self.seed = seed;
+        self
+    }
+
+    /// Deterministic per-cell seed (scheduling-independent).
+    pub fn cell_seed(&self, cell_key: &str) -> u64 {
+        self.seed ^ fnv1a(cell_key)
+    }
+
+    /// Map `f` over `items` on `jobs` threads; results in item order.
+    pub fn map<I, O, F>(&self, items: &[I], f: F) -> Vec<O>
+    where
+        I: Sync,
+        O: Send,
+        F: Fn(usize, &I) -> O + Sync,
+    {
+        let jobs = self.jobs.max(1).min(items.len().max(1));
+        if jobs <= 1 {
+            return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, O)>();
+        std::thread::scope(|scope| {
+            for _ in 0..jobs {
+                let tx = tx.clone();
+                let next = &next;
+                let f = &f;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let out = f(i, &items[i]);
+                    if tx.send((i, out)).is_err() {
+                        break;
+                    }
+                });
+            }
+        });
+        drop(tx);
+        let mut slots: Vec<Option<O>> = (0..items.len()).map(|_| None).collect();
+        for (i, o) in rx {
+            slots[i] = Some(o);
+        }
+        slots
+            .into_iter()
+            .map(|o| o.expect("sweep worker dropped a cell"))
+            .collect()
+    }
+
+    /// Map with per-cell seeding and the JSON artifact cache. `key_of`
+    /// must encode every config coordinate that affects the result.
+    pub fn map_cells<I, K, F>(&self, kind: &str, items: &[I], key_of: K, f: F) -> Vec<CellOut>
+    where
+        I: Sync,
+        K: Fn(&I) -> String + Sync,
+        F: Fn(usize, &I, u64) -> CellOut + Sync,
+    {
+        self.map(items, |i, item| {
+            let cell_key = format!("{CACHE_VERSION}:{kind}:{}", key_of(item));
+            let seed = self.cell_seed(&cell_key);
+            let full_key = format!("{cell_key}:seed={:016x}", self.seed);
+            if let Some(dir) = &self.cache_dir {
+                if let Some(hit) = cache_load(dir, kind, &full_key) {
+                    return hit;
+                }
+            }
+            let out = f(i, item, seed);
+            if let Some(dir) = &self.cache_dir {
+                cache_store(dir, kind, &full_key, &out);
+            }
+            out
+        })
+    }
+}
+
+fn cache_path(dir: &Path, kind: &str, full_key: &str) -> PathBuf {
+    dir.join(format!("{kind}-{:016x}.json", fnv1a(full_key)))
+}
+
+fn cache_load(dir: &Path, kind: &str, full_key: &str) -> Option<CellOut> {
+    let text = std::fs::read_to_string(cache_path(dir, kind, full_key)).ok()?;
+    let j = Json::parse(&text).ok()?;
+    CellOut::from_json(&j, full_key)
+}
+
+fn cache_store(dir: &Path, kind: &str, full_key: &str, cell: &CellOut) {
+    // Caching is best-effort: an unwritable directory must not fail runs.
+    if std::fs::create_dir_all(dir).is_err() {
+        return;
+    }
+    let _ = std::fs::write(
+        cache_path(dir, kind, full_key),
+        cell.to_json(full_key).to_string(),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The §III tuning-knob sweeps (batch size, precision), Runner-backed.
+// ---------------------------------------------------------------------------
 
 fn trainer(fabric: crate::config::FabricSpec, batch: usize, precision: Precision) -> TrainerSim {
     TrainerSim {
@@ -28,28 +256,49 @@ fn trainer(fabric: crate::config::FabricSpec, batch: usize, precision: Precision
     }
 }
 
-fn spec(quick: bool) -> RunSpec {
-    RunSpec { warmup_steps: 1, measure_steps: if quick { 5 } else { 10 }, ..Default::default() }
+fn spec(quick: bool, seed: u64) -> RunSpec {
+    RunSpec {
+        seed,
+        warmup_steps: 1,
+        measure_steps: if quick { 5 } else { 10 },
+        ..Default::default()
+    }
 }
 
 /// Per-GPU batch-size sweep (ResNet50, 64 GPUs).
 pub fn batch_sweep(quick: bool) -> Table {
-    let mut t = Table::new(
-        "Sweep: per-GPU batch size (ResNet50, 64 GPUs)",
-        &["fabric", "batch", "img/s", "scaling eff"],
-    );
+    batch_sweep_with(quick, &Runner::sequential())
+}
+
+pub fn batch_sweep_with(quick: bool, runner: &Runner) -> Table {
+    let mut items = Vec::new();
     for fabric in paper_fabrics() {
         for batch in [16usize, 32, 64, 128] {
-            let r = trainer(fabric.clone(), batch, Precision::Fp32)
-                .run(64, &spec(quick))
+            items.push((fabric.clone(), batch));
+        }
+    }
+    let cells = runner.map_cells(
+        "sweep_batch",
+        &items,
+        |(fabric, batch)| format!("{}:{batch}:quick={quick}", fabric.name),
+        |_, (fabric, batch), seed| {
+            let r = trainer(fabric.clone(), *batch, Precision::Fp32)
+                .run(64, &spec(quick, seed))
                 .unwrap();
-            t.row(vec![
+            CellOut::new(vec![
                 fabric.name.clone(),
                 batch.to_string(),
                 fnum(r.images_per_sec),
                 format!("{:.3}", r.scaling_efficiency()),
-            ]);
-        }
+            ])
+        },
+    );
+    let mut t = Table::new(
+        "Sweep: per-GPU batch size (ResNet50, 64 GPUs)",
+        &["fabric", "batch", "img/s", "scaling eff"],
+    );
+    for c in cells {
+        t.row(c.row);
     }
     t
 }
@@ -59,20 +308,38 @@ pub fn batch_sweep(quick: bool) -> Table {
 /// so the fabric gap *widens* — a non-obvious consequence the sweep
 /// makes visible.
 pub fn precision_sweep(quick: bool) -> Table {
-    let mut t = Table::new(
-        "Sweep: precision (ResNet50, 64 GPUs)",
-        &["fabric", "precision", "img/s", "exposed comm frac"],
-    );
+    precision_sweep_with(quick, &Runner::sequential())
+}
+
+pub fn precision_sweep_with(quick: bool, runner: &Runner) -> Table {
+    let mut items = Vec::new();
     for fabric in paper_fabrics() {
         for (label, p) in [("fp32", Precision::Fp32), ("mixed", Precision::Mixed)] {
-            let r = trainer(fabric.clone(), 64, p).run(64, &spec(quick)).unwrap();
-            t.row(vec![
+            items.push((fabric.clone(), label, p));
+        }
+    }
+    let cells = runner.map_cells(
+        "sweep_precision",
+        &items,
+        |(fabric, label, _)| format!("{}:{label}:quick={quick}", fabric.name),
+        |_, (fabric, label, p), seed| {
+            let r = trainer(fabric.clone(), 64, *p)
+                .run(64, &spec(quick, seed))
+                .unwrap();
+            CellOut::new(vec![
                 fabric.name.clone(),
                 label.to_string(),
                 fnum(r.images_per_sec),
                 format!("{:.3}", r.comm_fraction),
-            ]);
-        }
+            ])
+        },
+    );
+    let mut t = Table::new(
+        "Sweep: precision (ResNet50, 64 GPUs)",
+        &["fabric", "precision", "img/s", "exposed comm frac"],
+    );
+    for c in cells {
+        t.row(c.row);
     }
     t
 }
@@ -120,5 +387,80 @@ mod tests {
             gap("mixed"),
             gap("fp32")
         );
+    }
+
+    #[test]
+    fn fnv1a_stable_and_distinct() {
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_ne!(fnv1a("fig5:a"), fnv1a("fig5:b"));
+        assert_eq!(fnv1a("same"), fnv1a("same"));
+    }
+
+    #[test]
+    fn map_preserves_order_across_jobs() {
+        let items: Vec<usize> = (0..97).collect();
+        let seq = Runner::sequential().map(&items, |_, &x| x * x);
+        let par = Runner::new(4).map(&items, |_, &x| x * x);
+        assert_eq!(seq, par);
+        assert_eq!(seq[10], 100);
+    }
+
+    #[test]
+    fn cell_seed_independent_of_jobs_and_order() {
+        let a = Runner::new(1);
+        let b = Runner::new(8);
+        assert_eq!(a.cell_seed("fig5:resnet50:OPA:64"), b.cell_seed("fig5:resnet50:OPA:64"));
+        assert_ne!(a.cell_seed("x"), a.cell_seed("y"));
+    }
+
+    #[test]
+    fn cache_roundtrip_and_key_check() {
+        let dir = std::env::temp_dir().join("fb_sweep_cache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let out = CellOut::new(vec!["a".into(), "1.5".into()]).val("img_s", 1.5);
+        cache_store(&dir, "demo", "v1:demo:k", &out);
+        let hit = cache_load(&dir, "demo", "v1:demo:k").unwrap();
+        assert_eq!(hit, out);
+        // A different key must miss even if the file existed under a
+        // colliding name (key is verified inside the artifact).
+        assert!(cache_load(&dir, "demo", "v1:demo:other").is_none());
+    }
+
+    #[test]
+    fn map_cells_uses_cache_on_second_run() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let dir = std::env::temp_dir().join("fb_sweep_cache_test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let runner = Runner::new(1).with_cache(&dir);
+        let items = vec![1usize, 2, 3];
+        let calls = AtomicUsize::new(0);
+        let run = |r: &Runner| {
+            r.map_cells(
+                "t",
+                &items,
+                |i| i.to_string(),
+                |_, i, _| {
+                    calls.fetch_add(1, Ordering::SeqCst);
+                    CellOut::new(vec![i.to_string()])
+                },
+            )
+        };
+        let first = run(&runner);
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+        let second = run(&runner);
+        assert_eq!(calls.load(Ordering::SeqCst), 3, "second run must be all cache hits");
+        assert_eq!(first, second);
+        // A different base seed must not reuse the artifacts.
+        let other = Runner::new(1).with_cache(&dir).with_seed(99);
+        let third = run(&other);
+        assert_eq!(calls.load(Ordering::SeqCst), 6);
+        assert_eq!(first, third);
+    }
+
+    #[test]
+    fn sweeps_identical_sequential_vs_parallel() {
+        let seq = batch_sweep_with(true, &Runner::sequential());
+        let par = batch_sweep_with(true, &Runner { jobs: 4, cache_dir: None, ..Runner::sequential() });
+        assert_eq!(seq.to_csv(), par.to_csv(), "CSV must not depend on --jobs");
     }
 }

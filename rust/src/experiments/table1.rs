@@ -3,7 +3,12 @@
 //! the cost model (architecture FLOPs x epochs x dataset / era hardware)
 //! and print both, so the reader can see the model lands in the right
 //! order of magnitude with zero per-row tuning.
+//!
+//! The four rows are independent cells and run through the same
+//! [`sweeps::Runner`] plumbing as the big grids (trivially parallel, and
+//! cacheable like everything else).
 
+use super::sweeps::{CellOut, Runner};
 use crate::cluster::gpu::{GpuModel, GTX580, K40, P100, TITAN_BLACK};
 use crate::models::perf::{step_cost, Precision};
 use crate::models::zoo;
@@ -73,24 +78,37 @@ pub fn modeled_hours(model: &str, gpu: &GpuModel, gpus: usize, epochs: f64) -> f
 
 /// Regenerate Table I.
 pub fn run() -> Table {
+    run_with(&Runner::sequential())
+}
+
+pub fn run_with(runner: &Runner) -> Table {
+    let items = rows();
+    let cells = runner.map_cells(
+        "table1",
+        &items,
+        |r| r.model.to_string(),
+        |_, r, _seed| {
+            let hours = modeled_hours(r.model, r.gpu, r.gpus, r.epochs);
+            let human = if hours > 48.0 {
+                format!("{:.1} days", hours / 24.0)
+            } else {
+                format!("{hours:.0} hours")
+            };
+            CellOut::new(vec![
+                r.model.to_string(),
+                r.paper_time.to_string(),
+                r.hardware.to_string(),
+                human,
+                format!("{hours:.1}"),
+            ])
+        },
+    );
     let mut t = Table::new(
         "Table I: Training time for deep neural networks (paper vs cost model)",
         &["Model", "Paper time", "Hardware", "Modeled time", "Modeled hours"],
     );
-    for r in rows() {
-        let hours = modeled_hours(r.model, r.gpu, r.gpus, r.epochs);
-        let human = if hours > 48.0 {
-            format!("{:.1} days", hours / 24.0)
-        } else {
-            format!("{hours:.0} hours")
-        };
-        t.row(vec![
-            r.model.to_string(),
-            r.paper_time.to_string(),
-            r.hardware.to_string(),
-            human,
-            format!("{hours:.1}"),
-        ]);
+    for c in cells {
+        t.row(c.row);
     }
     t
 }

@@ -1,8 +1,28 @@
-//! Resource occupancy: serialization of concurrent flows through a shared
-//! resource (NIC port, PCIe link). A `Resource` hands out transmission
-//! slots; a flow that arrives while the resource is busy waits.
+//! Contention machinery for the discrete-event fabric engine.
+//!
+//! Two generations of model live here:
+//!
+//! * [`Resource`] — the original scalar-occupancy model (a serializing
+//!   queue with a single `available_at` clock). The event engine no longer
+//!   uses it on the message path; it is kept because it is a useful
+//!   building block for microbenches and as the reference the engine's
+//!   aggregate-throughput behavior is checked against.
+//! * [`FlowResources`] + [`max_min_rates`] — the fluid-flow model: every
+//!   in-flight message holds a set of shared capacities (its source NIC
+//!   transmit port, destination NIC receive port, and the rack up/down
+//!   links when it crosses racks), and the instantaneous rate of every
+//!   flow is the **max-min fair** allocation subject to per-flow caps
+//!   (PCIe/UPI limits from the transport layer). Rates are recomputed by
+//!   [`crate::fabric::NetSim`] on every flow arrival and departure.
+//!
+//! The solver is classic progressive filling: raise all unfrozen flows'
+//! rates at the same speed until a flow hits its own cap or some resource
+//! saturates, freeze the affected flows, repeat. Termination: every
+//! iteration with a positive increment freezes at least one flow (the
+//! increment is the minimum of the freeze conditions), so the loop runs at
+//! most `flows` times.
 
-/// A serializing resource with a fixed bandwidth.
+/// A serializing resource with a fixed bandwidth (legacy scalar model).
 #[derive(Clone, Debug)]
 pub struct Resource {
     /// Bytes/second this resource can move.
@@ -39,6 +59,113 @@ impl Resource {
     }
 }
 
+/// Maximum shared resources one flow can hold: src NIC tx, dst NIC rx,
+/// source-rack up-link, destination-rack down-link.
+pub const MAX_FLOW_RESOURCES: usize = 4;
+
+/// The (small) set of resource ids one flow occupies.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FlowResources {
+    ids: [usize; MAX_FLOW_RESOURCES],
+    n: usize,
+}
+
+impl FlowResources {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, id: usize) {
+        debug_assert!(self.n < MAX_FLOW_RESOURCES);
+        self.ids[self.n] = id;
+        self.n += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.ids[..self.n].iter().copied()
+    }
+}
+
+/// Max-min fair rate allocation by progressive filling.
+///
+/// * `caps[r]` — capacity of resource `r` in bytes/s (must be positive
+///   for every resource referenced by a flow).
+/// * `flow_caps[i]` — flow `i`'s own rate ceiling (transport bandwidth).
+/// * `flow_res[i]` — the resources flow `i` occupies (ids index `caps`).
+///
+/// Returns the per-flow rates. A flow with no resources gets its cap.
+pub fn max_min_rates(caps: &[f64], flow_caps: &[f64], flow_res: &[FlowResources]) -> Vec<f64> {
+    let n = flow_caps.len();
+    let mut rate = vec![0.0; n];
+    let mut frozen = vec![false; n];
+    let mut remaining = caps.to_vec();
+    let mut load = vec![0usize; caps.len()];
+    for fr in flow_res {
+        for id in fr.iter() {
+            load[id] += 1;
+        }
+    }
+    let mut unfrozen = n;
+    while unfrozen > 0 {
+        // Largest equal increment every unfrozen flow can absorb.
+        let mut delta = f64::INFINITY;
+        for i in 0..n {
+            if !frozen[i] {
+                delta = delta.min(flow_caps[i] - rate[i]);
+            }
+        }
+        for (r, &l) in load.iter().enumerate() {
+            if l > 0 {
+                delta = delta.min(remaining[r] / l as f64);
+            }
+        }
+        if delta.is_finite() && delta > 0.0 {
+            for i in 0..n {
+                if !frozen[i] {
+                    rate[i] += delta;
+                }
+            }
+            for (r, &l) in load.iter().enumerate() {
+                if l > 0 {
+                    remaining[r] -= delta * l as f64;
+                }
+            }
+        }
+        // Freeze flows that hit their cap or sit on a drained resource.
+        let mut newly = 0;
+        for i in 0..n {
+            if frozen[i] {
+                continue;
+            }
+            let cap_hit = rate[i] >= flow_caps[i] * (1.0 - 1e-12);
+            let res_hit = flow_res[i]
+                .iter()
+                .any(|r| remaining[r] <= caps[r] * 1e-12);
+            if cap_hit || res_hit {
+                frozen[i] = true;
+                newly += 1;
+                for r in flow_res[i].iter() {
+                    load[r] -= 1;
+                }
+            }
+        }
+        if newly == 0 {
+            // Numerical stall (degenerate inputs): stop raising rates.
+            break;
+        }
+        unfrozen -= newly;
+    }
+    rate
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,5 +197,115 @@ mod tests {
         r.reset();
         assert_eq!(r.busy, 0.0);
         assert_eq!(r.available_at, 0.0);
+    }
+
+    fn fr(ids: &[usize]) -> FlowResources {
+        let mut f = FlowResources::new();
+        for &id in ids {
+            f.push(id);
+        }
+        f
+    }
+
+    #[test]
+    fn single_flow_gets_its_cap() {
+        let rates = max_min_rates(&[10.0, 10.0], &[3.0], &[fr(&[0, 1])]);
+        assert_eq!(rates, vec![3.0]);
+    }
+
+    #[test]
+    fn two_flows_share_a_bottleneck_equally() {
+        // Both flows want 10, the shared resource has 10 -> 5 each.
+        let rates = max_min_rates(&[10.0], &[10.0, 10.0], &[fr(&[0]), fr(&[0])]);
+        assert!((rates[0] - 5.0).abs() < 1e-9);
+        assert!((rates[1] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capped_flow_releases_headroom() {
+        // Flow 0 capped at 2; flow 1 takes the remaining 8.
+        let rates = max_min_rates(&[10.0], &[2.0, 100.0], &[fr(&[0]), fr(&[0])]);
+        assert!((rates[0] - 2.0).abs() < 1e-9, "{rates:?}");
+        assert!((rates[1] - 8.0).abs() < 1e-9, "{rates:?}");
+    }
+
+    #[test]
+    fn disjoint_flows_independent() {
+        let rates = max_min_rates(&[4.0, 6.0], &[10.0, 10.0], &[fr(&[0]), fr(&[1])]);
+        assert!((rates[0] - 4.0).abs() < 1e-9);
+        assert!((rates[1] - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multi_resource_bottleneck_is_the_minimum() {
+        // Flow crosses NIC (cap 10 shared with another flow) and an uplink
+        // of 3: uplink binds it; the NIC peer then takes the NIC headroom.
+        let rates = max_min_rates(
+            &[10.0, 3.0],
+            &[100.0, 100.0],
+            &[fr(&[0, 1]), fr(&[0])],
+        );
+        assert!((rates[0] - 3.0).abs() < 1e-9, "{rates:?}");
+        assert!((rates[1] - 7.0).abs() < 1e-9, "{rates:?}");
+    }
+
+    #[test]
+    fn conservation_and_fairness_random() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xC0FFEE);
+        for _ in 0..200 {
+            let n_res = 1 + rng.below(5) as usize;
+            let caps: Vec<f64> = (0..n_res).map(|_| rng.uniform_in(1.0, 20.0)).collect();
+            let n_flows = 1 + rng.below(8) as usize;
+            let mut flow_caps = Vec::new();
+            let mut flow_res = Vec::new();
+            for _ in 0..n_flows {
+                flow_caps.push(rng.uniform_in(0.5, 30.0));
+                let k = 1 + rng.below(2) as usize;
+                let mut f = FlowResources::new();
+                let mut used = Vec::new();
+                for _ in 0..k {
+                    let r = rng.below(n_res as u64) as usize;
+                    if !used.contains(&r) {
+                        f.push(r);
+                        used.push(r);
+                    }
+                }
+                flow_res.push(f);
+            }
+            let rates = max_min_rates(&caps, &flow_caps, &flow_res);
+            // No flow exceeds its cap; no resource is oversubscribed.
+            for (i, &r) in rates.iter().enumerate() {
+                assert!(r <= flow_caps[i] * (1.0 + 1e-9), "flow {i} over cap");
+                assert!(r >= 0.0);
+            }
+            for (r, &cap) in caps.iter().enumerate() {
+                let used: f64 = rates
+                    .iter()
+                    .zip(&flow_res)
+                    .filter(|(_, fr)| fr.iter().any(|id| id == r))
+                    .map(|(rate, _)| rate)
+                    .sum();
+                assert!(used <= cap * (1.0 + 1e-9), "resource {r} oversubscribed");
+            }
+            // Work-conserving: every flow is blocked by its cap or by a
+            // saturated resource.
+            for (i, &r) in rates.iter().enumerate() {
+                let at_cap = r >= flow_caps[i] * (1.0 - 1e-6);
+                let blocked = flow_res[i].iter().any(|id| {
+                    let used: f64 = rates
+                        .iter()
+                        .zip(&flow_res)
+                        .filter(|(_, fr)| fr.iter().any(|x| x == id))
+                        .map(|(rate, _)| rate)
+                        .sum();
+                    used >= caps[id] * (1.0 - 1e-6)
+                });
+                assert!(
+                    at_cap || blocked || flow_res[i].is_empty(),
+                    "flow {i} rate {r} is not work-conserving"
+                );
+            }
+        }
     }
 }

@@ -1,18 +1,22 @@
 //! Network fabric simulation: the substitute for TX-GAIA's physical
 //! 25 GbE-RoCE and 100 Gb OmniPath fabrics.
 //!
-//! Model family: flow-level LogGP-style costs with resource occupancy.
-//! A point-to-point message pays
+//! Model family: a **discrete-event fluid-flow engine** on top of
+//! LogGP-style per-message costs. An uncontended point-to-point message
+//! pays
 //!
 //! ```text
-//! t = o_send + L(path) + rendezvous + staging + bytes / bw(path) + o_recv
+//! t = o_send + bytes / bw(path) + L(path) + rendezvous + staging + o_recv
 //! ```
 //!
 //! where `L(path)` includes switch hops for inter-rack traffic, `staging`
 //! models GPUDirect-vs-host-copy PCIe/UPI segments, and `bw(path)` is the
-//! minimum along NIC / PCIe / UPI segments scaled by a congestion factor.
-//! NIC serialization is tracked as per-node occupancy so concurrent flows
-//! through one endpoint queue rather than teleport (see [`contention`]).
+//! minimum along NIC / PCIe / UPI segments. Messages submitted together
+//! as one round are concurrent *flows*: each holds its source NIC tx
+//! port, destination NIC rx port and (inter-rack) the rack up/down links,
+//! and the engine advances virtual time event by event, recomputing
+//! **max-min fair** rates on every flow arrival/departure (see
+//! [`contention`] and the module docs in [`sim`] / `fabric/README.md`).
 
 pub mod contention;
 pub mod mpi;
@@ -21,6 +25,6 @@ pub mod trace;
 pub mod transport;
 
 pub use mpi::Comm;
-pub use sim::{NetSim, NetStats};
+pub use sim::{FlowReq, FlowTimes, NetSim, NetStats};
 pub use trace::{MessageEvent, Trace};
 pub use transport::MessageCost;

@@ -4,6 +4,7 @@
 
 use crate::cluster::Placement;
 use crate::config::ClusterSpec;
+use crate::fabric::sim::FlowReq;
 use crate::fabric::NetSim;
 
 /// A communicator: placement + one virtual clock per rank.
@@ -36,7 +37,7 @@ impl<'a> Comm<'a> {
     /// (Matches MPI_Send/MPI_Recv with an eager/rendezvous transport.)
     pub fn p2p(&mut self, src: usize, dst: usize, bytes: f64) {
         assert_ne!(src, dst, "p2p to self");
-        let ready = self.t[src].max(self.t[dst].min(self.t[src])); // sender-gated
+        let ready = self.t[src]; // sender-gated
         let (send_release, recv_complete) = self.net.message(
             self.placement.endpoints[src],
             self.placement.endpoints[dst],
@@ -50,50 +51,62 @@ impl<'a> Comm<'a> {
     }
 
     /// Simultaneous exchange (MPI_Sendrecv): both ranks send `bytes` to
-    /// each other; both clocks advance to the later completion.
+    /// each other; both clocks advance to the later completion. The two
+    /// flows are submitted as one event-engine batch, so they genuinely
+    /// overlap in virtual time (full duplex on disjoint tx/rx ports).
     pub fn sendrecv(&mut self, a: usize, b: usize, bytes: f64) {
         assert_ne!(a, b, "sendrecv with self");
         let ready = self.t[a].max(self.t[b]);
-        let (_, done_ab) = self.net.message(
-            self.placement.endpoints[a],
-            self.placement.endpoints[b],
-            bytes,
-            ready,
-        );
-        let (_, done_ba) = self.net.message(
-            self.placement.endpoints[b],
-            self.placement.endpoints[a],
-            bytes,
-            ready,
-        );
-        let done = done_ab.max(done_ba);
+        let times = self.net.transfer_batch(&[
+            FlowReq {
+                src: self.placement.endpoints[a],
+                dst: self.placement.endpoints[b],
+                bytes,
+                ready,
+            },
+            FlowReq {
+                src: self.placement.endpoints[b],
+                dst: self.placement.endpoints[a],
+                bytes,
+                ready,
+            },
+        ]);
+        let done = times[0].recv_complete.max(times[1].recv_complete);
         self.t[a] = done;
         self.t[b] = done;
     }
 
     /// A synchronized communication round: all messages see the rank
     /// clocks as they were when the round started (every rank sends and
-    /// receives simultaneously, as in a ring step). Without this, chained
-    /// `p2p` calls would serialize logically-parallel transfers.
-    /// Resource contention (NIC occupancy) still applies.
+    /// receives simultaneously, as in a ring step) and are submitted to
+    /// the event engine as ONE batch — concurrently in-flight flows share
+    /// NIC ports and rack up-links max-min fairly instead of paying the
+    /// old scalar congestion estimate.
     pub fn round(&mut self, msgs: &[(usize, usize, f64)]) {
         let snapshot = self.t.clone();
+        let reqs: Vec<FlowReq> = msgs
+            .iter()
+            .map(|&(src, dst, bytes)| {
+                assert_ne!(src, dst, "round message to self");
+                FlowReq {
+                    src: self.placement.endpoints[src],
+                    dst: self.placement.endpoints[dst],
+                    bytes,
+                    ready: snapshot[src],
+                }
+            })
+            .collect();
+        let times = self.net.transfer_batch(&reqs);
         let mut new_t = snapshot.clone();
-        for &(src, dst, bytes) in msgs {
-            assert_ne!(src, dst, "round message to self");
-            let (send_release, recv_complete) = self.net.message(
-                self.placement.endpoints[src],
-                self.placement.endpoints[dst],
-                bytes,
-                snapshot[src],
-            );
-            new_t[src] = new_t[src].max(send_release);
-            new_t[dst] = new_t[dst].max(recv_complete.max(snapshot[dst]));
+        for (&(src, dst, _), ft) in msgs.iter().zip(&times) {
+            new_t[src] = new_t[src].max(ft.send_release);
+            new_t[dst] = new_t[dst].max(ft.recv_complete.max(snapshot[dst]));
         }
         self.t = new_t;
     }
 
-    /// Dissemination barrier (log2 rounds of 0-byte exchanges).
+    /// Dissemination barrier (log2 rounds of 0-byte exchanges); every
+    /// round's notifications are one concurrent batch.
     pub fn barrier(&mut self) {
         let p = self.size();
         if p <= 1 {
@@ -101,10 +114,9 @@ impl<'a> Comm<'a> {
         }
         let mut dist = 1;
         while dist < p {
-            for r in 0..p {
-                let peer = (r + dist) % p;
-                self.p2p(r, peer, 0.0);
-            }
+            let msgs: Vec<(usize, usize, f64)> =
+                (0..p).map(|r| (r, (r + dist) % p, 0.0)).collect();
+            self.round(&msgs);
             dist *= 2;
         }
         let tmax = self.t.iter().cloned().fold(0.0, f64::max);

@@ -3,7 +3,10 @@
 //!
 //! Produces a [`MessageCost`] decomposition for a single point-to-point
 //! message given fabric, cluster, transport options, and endpoint
-//! geometry. The [`sim::NetSim`] layers NIC occupancy on top.
+//! geometry. The returned `bandwidth` is this flow's **uncontended rate
+//! cap** (wire rate bounded by PCIe/UPI segments); the discrete-event
+//! engine in [`crate::fabric::sim`] layers NIC/up-link sharing and
+//! switch-level congestion on top, so no concurrency factor appears here.
 
 use crate::cluster::EndpointKind;
 use crate::config::{ClusterSpec, FabricSpec, TransportOptions};
@@ -37,8 +40,6 @@ pub struct MessageGeometry {
     /// Sender's GPU slot (for per-socket affinity); ignored for CPU ranks.
     pub src_slot: usize,
     pub dst_slot: usize,
-    /// Simultaneous flows sharing the core switch (congestion model input).
-    pub active_flows: f64,
 }
 
 /// Cost of a network (inter-node) message.
@@ -65,7 +66,7 @@ pub fn network_message(
         latency += 2.0 * fabric.latency;
     }
 
-    let mut bandwidth = fabric.effective_bandwidth() * fabric.congestion_factor(geo.active_flows);
+    let mut bandwidth = fabric.effective_bandwidth();
     let mut send_overhead = sw;
     let mut recv_overhead = sw;
 
@@ -133,7 +134,6 @@ mod tests {
             endpoint: EndpointKind::Cpu,
             src_slot: 0,
             dst_slot: 0,
-            active_flows: 1.0,
         }
     }
 

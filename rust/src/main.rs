@@ -20,6 +20,9 @@
 //!
 //! Options:
 //!   --quick              smaller sweeps (CI-sized)
+//!   --jobs N             worker threads for grid experiments [1]
+//!   --cache              cache per-cell JSON results under <out>/cache
+//!   --seed S             base seed for per-cell seed derivation
 //!   --workers N          train-real: data-parallel workers   [4]
 //!   --steps N            train-real: training steps          [300]
 //!   --lr X               train-real: learning rate           [0.1]
@@ -30,6 +33,7 @@
 use anyhow::{bail, Result};
 use fabricbench::cli::Args;
 use fabricbench::config::spec::FabricKind;
+use fabricbench::experiments::sweeps::Runner;
 use fabricbench::experiments::{ablations, affinity, fig3, fig4, fig5, microbench, table1};
 use fabricbench::metrics::Recorder;
 use fabricbench::util::table::fnum;
@@ -54,26 +58,35 @@ fn run(args: &Args) -> Result<()> {
         Some(dir) => Recorder::at(std::path::Path::new(dir)),
         None => Recorder::new(),
     };
+    // Grid execution: --jobs N worker threads; --cache stores per-cell
+    // JSON artifacts under <out>/cache keyed by config hash, so repeated
+    // runs of unchanged cells are free. Output is byte-identical for a
+    // fixed seed regardless of --jobs.
+    let mut runner = Runner::new(args.get_usize("jobs", 1)?)
+        .with_seed(args.get_u64("seed", Runner::sequential().seed)?);
+    if args.flag("cache") {
+        runner = runner.with_cache(&rec.dir.join("cache"));
+    }
     match args.command.as_str() {
-        "table1" => cmd_table1(&rec),
-        "fig3" => cmd_fig3(&rec, quick),
-        "fig4" => cmd_fig4(&rec, quick),
-        "fig5" => cmd_fig5(&rec, quick),
+        "table1" => cmd_table1(&rec, &runner),
+        "fig3" => cmd_fig3(&rec, quick, &runner),
+        "fig4" => cmd_fig4(&rec, quick, &runner),
+        "fig5" => cmd_fig5(&rec, quick, &runner),
         "affinity" => cmd_affinity(&rec, quick),
         "microbench" => cmd_microbench(&rec, quick),
-        "ablations" => cmd_ablations(&rec, quick),
+        "ablations" => cmd_ablations(&rec, quick, &runner),
         "all" => {
-            cmd_table1(&rec)?;
-            cmd_fig3(&rec, quick)?;
-            cmd_fig4(&rec, quick)?;
-            cmd_fig5(&rec, quick)?;
+            cmd_table1(&rec, &runner)?;
+            cmd_fig3(&rec, quick, &runner)?;
+            cmd_fig4(&rec, quick, &runner)?;
+            cmd_fig5(&rec, quick, &runner)?;
             cmd_affinity(&rec, quick)?;
             cmd_microbench(&rec, quick)?;
-            cmd_ablations(&rec, quick)
+            cmd_ablations(&rec, quick, &runner)
         }
         "run" => cmd_run_config(args, &rec),
         "frameworks" => cmd_frameworks(&rec, quick),
-        "sweeps" => cmd_sweeps(&rec, quick),
+        "sweeps" => cmd_sweeps(&rec, quick, &runner),
         "train-real" => cmd_train_real(args, &rec),
         "calibrate" => cmd_calibrate(args, &rec),
         "cfd-kernel" => cmd_cfd_kernel(),
@@ -88,18 +101,31 @@ fn run(args: &Args) -> Result<()> {
 const HELP: &str = r#"fabricbench — network-fabric benchmarking for data-distributed DNN training
 (reproduction of Samsi et al., IEEE HPEC 2020)
 
-usage: fabricbench <command> [--quick] [options]
+usage: fabricbench <command> [--quick] [--jobs N] [--cache] [options]
 
 paper artifacts : table1 fig3 fig4 fig5 affinity microbench ablations all
 extensions      : frameworks (TF-Horovod vs PyTorch-DDP)  sweeps (batch, precision)
                   run --config configs/<file>.toml (custom scenario)
 real stack      : train-real [--workers N --steps N --lr X --fabric F]
                   calibrate [--steps N]   cfd-kernel
+
+grid execution (table1/fig3/fig4/fig5/ablations/sweeps):
+  --jobs N             fan independent grid cells out over N threads [1];
+                       CSV output is identical for any N at a fixed seed
+  --cache              reuse per-cell JSON artifacts under <out>/cache,
+                       keyed by a hash of the cell config + seed
+  --seed S             base seed; each cell derives seed XOR fnv1a(key)
 "#;
 
-fn cmd_sweeps(rec: &Recorder, quick: bool) -> Result<()> {
-    rec.emit("sweep_batch", &fabricbench::experiments::sweeps::batch_sweep(quick));
-    rec.emit("sweep_precision", &fabricbench::experiments::sweeps::precision_sweep(quick));
+fn cmd_sweeps(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
+    rec.emit(
+        "sweep_batch",
+        &fabricbench::experiments::sweeps::batch_sweep_with(quick, runner),
+    );
+    rec.emit(
+        "sweep_precision",
+        &fabricbench::experiments::sweeps::precision_sweep_with(quick, runner),
+    );
     Ok(())
 }
 
@@ -188,19 +214,19 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
     Ok(())
 }
 
-fn cmd_table1(rec: &Recorder) -> Result<()> {
-    rec.emit("table1_training_times", &table1::run());
+fn cmd_table1(rec: &Recorder, runner: &Runner) -> Result<()> {
+    rec.emit("table1_training_times", &table1::run_with(runner));
     Ok(())
 }
 
-fn cmd_fig3(rec: &Recorder, quick: bool) -> Result<()> {
-    let (table, _) = fig3::run(quick);
+fn cmd_fig3(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
+    let (table, _) = fig3::run_with(quick, runner);
     rec.emit("fig3_cartdg_scaling", &table);
     Ok(())
 }
 
-fn cmd_fig4(rec: &Recorder, quick: bool) -> Result<()> {
-    let (table, rows) = fig4::run(quick);
+fn cmd_fig4(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
+    let (table, rows) = fig4::run_with(quick, runner);
     rec.emit("fig4_throughput", &table);
     println!(
         "mean Ethernet deficit vs OPA: {:.2}%  (paper: 12.78%)\n",
@@ -209,8 +235,8 @@ fn cmd_fig4(rec: &Recorder, quick: bool) -> Result<()> {
     Ok(())
 }
 
-fn cmd_fig5(rec: &Recorder, quick: bool) -> Result<()> {
-    let (table, _) = fig5::run(quick);
+fn cmd_fig5(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
+    let (table, _) = fig5::run_with(quick, runner);
     rec.emit("fig5_allreduce_strategies", &table);
     Ok(())
 }
@@ -245,10 +271,10 @@ fn cmd_microbench(rec: &Recorder, quick: bool) -> Result<()> {
     Ok(())
 }
 
-fn cmd_ablations(rec: &Recorder, quick: bool) -> Result<()> {
-    let (t1, _) = ablations::fusion_sweep(quick);
+fn cmd_ablations(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
+    let (t1, _) = ablations::fusion_sweep_with(quick, runner);
     rec.emit("ablation_fusion", &t1);
-    let (t2, _) = ablations::toggles(quick);
+    let (t2, _) = ablations::toggles_with(quick, runner);
     rec.emit("ablation_toggles", &t2);
     Ok(())
 }

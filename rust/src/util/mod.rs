@@ -1,7 +1,7 @@
-//! Shared substrates built from scratch (the execution environment has no
-//! third-party crates beyond `xla`/`anyhow`/`thiserror`): deterministic
-//! PRNG, statistics, JSON, tables/CSV, unit formatting, and a miniature
-//! property-testing harness.
+//! Shared substrates built from scratch (the execution environment is
+//! fully offline: `anyhow` is vendored and `xla` is stubbed, nothing else
+//! is available): deterministic PRNG, statistics, JSON, tables/CSV, unit
+//! formatting, and a miniature property-testing harness.
 
 pub mod json;
 pub mod prop;

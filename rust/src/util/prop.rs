@@ -42,6 +42,18 @@ pub fn int_in(rng: &mut Rng, lo: u64, hi: u64) -> u64 {
     lo + rng.below(hi - lo + 1)
 }
 
+/// Generate exactly `len` *integer-valued* f32 in [-bound, bound].
+///
+/// Sums of a few thousand such values stay exactly representable in f32,
+/// so every reduction order produces bit-identical results — this is the
+/// generator behind the bit-for-bit collective correctness suite (a
+/// tolerance-free oracle that float reassociation cannot weaken).
+pub fn vec_f32_int(rng: &mut Rng, len: usize, bound: u32) -> Vec<f32> {
+    (0..len)
+        .map(|_| rng.below(2 * bound as u64 + 1) as f32 - bound as f32)
+        .collect()
+}
+
 /// Generate a power of two in [1, max_pow2_exp].
 pub fn pow2(rng: &mut Rng, max_exp: u32) -> u64 {
     1u64 << rng.below(max_exp as u64 + 1)
@@ -100,6 +112,16 @@ mod tests {
             let p = pow2(&mut rng, 6);
             assert!(p.is_power_of_two() && p <= 64);
         }
+    }
+
+    #[test]
+    fn int_valued_floats_are_integers_in_range() {
+        let mut rng = Rng::new(17);
+        let v = vec_f32_int(&mut rng, 10_000, 8);
+        assert_eq!(v.len(), 10_000);
+        assert!(v.iter().all(|x| x.fract() == 0.0 && x.abs() <= 8.0));
+        // Both signs appear.
+        assert!(v.iter().any(|&x| x > 0.0) && v.iter().any(|&x| x < 0.0));
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Property-based correctness suite for the collective library.
+//!
+//! The oracle is **bit-for-bit**: buffers are filled with integer-valued
+//! f32 (via `util::prop::vec_f32_int`), whose sums over <= 17 ranks stay
+//! exactly representable, so every reduction order must produce the
+//! identical bit pattern as the naive rank-order sum. No tolerance means
+//! a chunk-bookkeeping bug of even one element cannot hide behind float
+//! reassociation.
+//!
+//! Grid (per the issue): ranks in 2..=17, elems in {1, 7, 1024, 100_003},
+//! algorithm in {ring, tree, recursive halving-doubling, hierarchical,
+//! pipelined ring} — one test per algorithm so the grid shards across
+//! the test harness's threads — plus a randomized `prop::forall` sweep
+//! over all five.
+
+use fabricbench::cluster::Placement;
+use fabricbench::collectives::{
+    BinomialTree, Collective, Hierarchical, PipelinedRing, RealBuffers,
+    RecursiveHalvingDoubling, RingAllreduce,
+};
+use fabricbench::config::presets::fabric;
+use fabricbench::config::spec::{ClusterSpec, FabricKind, TransportOptions};
+use fabricbench::fabric::{Comm, NetSim};
+use fabricbench::util::prop;
+use fabricbench::util::rng::Rng;
+
+const RANKS: std::ops::RangeInclusive<usize> = 2..=17;
+const ELEMS: [usize; 4] = [1, 7, 1024, 100_003];
+
+fn int_buffers(ranks: usize, elems: usize, seed: u64) -> RealBuffers {
+    let mut rng = Rng::new(seed);
+    RealBuffers::new((0..ranks).map(|_| prop::vec_f32_int(&mut rng, elems, 8)).collect())
+}
+
+fn naive_sum(bufs: &RealBuffers) -> Vec<f32> {
+    let n = bufs.data[0].len();
+    let mut out = vec![0.0f32; n];
+    for b in &bufs.data {
+        for (o, x) in out.iter_mut().zip(b) {
+            *o += *x;
+        }
+    }
+    out
+}
+
+/// Run `algo` over a simulated OPA GPU world and demand exact equality
+/// with the naive sum on every rank.
+fn check_exact(algo: &dyn Collective, ranks: usize, elems: usize, seed: u64) -> Result<(), String> {
+    let cluster = ClusterSpec::txgaia();
+    let placement = Placement::gpus(&cluster, ranks).unwrap();
+    let mut net = NetSim::new(
+        fabric(FabricKind::OmniPath100),
+        cluster,
+        TransportOptions::default(),
+    );
+    let mut bufs = int_buffers(ranks, elems, seed);
+    let expect = naive_sum(&bufs);
+    let mut comm = Comm::new(&mut net, &placement);
+    let t = algo.allreduce(&mut comm, &mut bufs);
+    if ranks > 1 && !(t > 0.0) {
+        return Err(format!("{}: no virtual time elapsed (p={ranks})", algo.name()));
+    }
+    for (r, buf) in bufs.data.iter().enumerate() {
+        for (i, (&got, &want)) in buf.iter().zip(&expect).enumerate() {
+            if got.to_bits() != want.to_bits() {
+                return Err(format!(
+                    "{}: rank {r} elem {i}: {got} != {want} bit-for-bit (p={ranks}, n={elems}, seed={seed:#x})",
+                    algo.name()
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn grid(algo: &dyn Collective) {
+    for ranks in RANKS {
+        for &elems in &ELEMS {
+            let seed = 0xB17F_0B17 ^ ((ranks as u64) << 32) ^ elems as u64;
+            if let Err(msg) = check_exact(algo, ranks, elems, seed) {
+                panic!("{msg}");
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_bit_for_bit_grid() {
+    grid(&RingAllreduce);
+}
+
+#[test]
+fn tree_bit_for_bit_grid() {
+    grid(&BinomialTree);
+}
+
+#[test]
+fn recursive_halving_doubling_bit_for_bit_grid() {
+    grid(&RecursiveHalvingDoubling);
+}
+
+#[test]
+fn hierarchical_bit_for_bit_grid() {
+    grid(&Hierarchical::default());
+}
+
+#[test]
+fn pipelined_ring_bit_for_bit_grid() {
+    // Cover several segment counts including degenerate (1 = plain ring)
+    // and more segments than elements.
+    for segments in [1usize, 3, 4, 9] {
+        let algo = PipelinedRing { segments };
+        for ranks in RANKS {
+            for &elems in &[1usize, 7, 1024] {
+                let seed = 0x5E6_0000 ^ ((segments as u64) << 40) ^ ((ranks as u64) << 20) ^ elems as u64;
+                if let Err(msg) = check_exact(&algo, ranks, elems, seed) {
+                    panic!("{msg}");
+                }
+            }
+        }
+        // One large-buffer point per segment count keeps runtime sane.
+        if let Err(msg) = check_exact(&algo, 17, 100_003, 0x5E6_1111 ^ segments as u64) {
+            panic!("{msg}");
+        }
+    }
+}
+
+#[test]
+fn randomized_cross_algorithm_property() {
+    // Random (algorithm, ranks, elems, seed) tuples on top of the
+    // exhaustive grid — catches interactions the grid's fixed seeds miss.
+    let algos: Vec<Box<dyn Collective>> = vec![
+        Box::new(RingAllreduce),
+        Box::new(BinomialTree),
+        Box::new(RecursiveHalvingDoubling),
+        Box::new(Hierarchical::default()),
+        Box::new(PipelinedRing { segments: 4 }),
+    ];
+    prop::forall(
+        0xA11_4ED0CE,
+        48,
+        |r| {
+            (
+                r.below(algos.len() as u64) as usize,
+                2 + r.below(16) as usize,
+                1 + r.below(2048) as usize,
+                r.next_u64(),
+            )
+        },
+        |&(ai, ranks, elems, seed)| check_exact(algos[ai].as_ref(), ranks, elems, seed),
+    );
+}

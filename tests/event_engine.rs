@@ -1,0 +1,129 @@
+//! Integration tests for the discrete-event fabric engine: closed-form
+//! parity for uncontended flows, monotonicity of contended collectives,
+//! and scheduling-independence of batch results.
+
+use fabricbench::cluster::{EndpointKind, Placement};
+use fabricbench::collectives::{Collective, NullBuffers, RingAllreduce};
+use fabricbench::config::presets::fabric;
+use fabricbench::config::spec::{ClusterSpec, FabricKind, TransportOptions};
+use fabricbench::fabric::transport::{self, MessageGeometry};
+use fabricbench::fabric::{Comm, FlowReq, NetSim};
+
+fn sim(kind: FabricKind) -> NetSim {
+    NetSim::new(fabric(kind), ClusterSpec::txgaia(), TransportOptions::default())
+}
+
+fn cpu_ep(node: usize) -> fabricbench::cluster::Endpoint {
+    NetSim::endpoint(node, 0, EndpointKind::Cpu)
+}
+
+#[test]
+fn uncontended_flow_matches_closed_form_within_1e9s() {
+    // The parity bound from the issue: |event engine - analytic| < 1e-9 s
+    // for a single flow, across fabrics, endpoint kinds and sizes
+    // straddling the eager/rendezvous threshold and the inter-rack hop.
+    for kind in [
+        FabricKind::EthernetRoce25,
+        FabricKind::EthernetTcp25,
+        FabricKind::OmniPath100,
+        FabricKind::InfinibandEdr100,
+    ] {
+        for endpoint in [EndpointKind::Cpu, EndpointKind::Gpu] {
+            for inter_rack in [false, true] {
+                for bytes in [0.0, 8.0, 1024.0, 65536.0, 1e6, 128.0 * 1024.0 * 1024.0] {
+                    let mut s = sim(kind);
+                    let dst_node = if inter_rack { 40 } else { 1 };
+                    let src = NetSim::endpoint(0, 0, endpoint);
+                    let dst = NetSim::endpoint(dst_node, 0, endpoint);
+                    let (_, t) = s.message(src, dst, bytes, 0.0);
+                    let geo = MessageGeometry {
+                        bytes,
+                        inter_rack,
+                        endpoint,
+                        src_slot: 0,
+                        dst_slot: 0,
+                    };
+                    let cost =
+                        transport::network_message(&s.fabric, &s.cluster, &s.opts, &geo);
+                    let model = cost.total(bytes);
+                    assert!(
+                        (t - model).abs() < 1e-9,
+                        "{kind:?}/{endpoint:?}/inter_rack={inter_rack}/{bytes}B: engine {t} vs closed form {model}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn contended_ring_allreduce_monotone_in_message_size() {
+    // Contention-accurate timings must still be monotone: a bigger buffer
+    // can never finish earlier. 32 GPUs on Ethernet makes every round a
+    // genuinely concurrent batch over shared rack infrastructure.
+    for kind in [FabricKind::EthernetRoce25, FabricKind::OmniPath100] {
+        let cluster = ClusterSpec::txgaia();
+        let placement = Placement::gpus(&cluster, 32).unwrap();
+        let mut last = 0.0;
+        for elems in [1usize, 64, 4096, 65_536, 1 << 20, 1 << 22] {
+            let mut net = NetSim::new(fabric(kind), cluster.clone(), TransportOptions::default());
+            let mut comm = Comm::new(&mut net, &placement);
+            let t = RingAllreduce.allreduce(&mut comm, &mut NullBuffers { elems });
+            assert!(
+                t + 1e-12 >= last,
+                "{kind:?}: ring allreduce not monotone: {elems} elems -> {t} s (prev {last} s)"
+            );
+            last = t;
+        }
+    }
+}
+
+#[test]
+fn batch_results_independent_of_request_order() {
+    // Reversing the submission order of a concurrent round must not
+    // change any flow's completion time (virtual time has no scheduling
+    // bias): the engine is event-driven, not submission-driven.
+    let bytes = 8.0 * 1024.0 * 1024.0;
+    let reqs: Vec<FlowReq> = (0..12)
+        .map(|i| FlowReq {
+            // Three flows share each of four source nodes -> contended.
+            src: cpu_ep(i % 4),
+            dst: cpu_ep(8 + i),
+            bytes: bytes * (1.0 + i as f64 / 12.0),
+            ready: 1e-5 * i as f64,
+        })
+        .collect();
+    let mut s = sim(FabricKind::EthernetRoce25);
+    let fwd = s.transfer_batch(&reqs);
+    let mut s2 = sim(FabricKind::EthernetRoce25);
+    let rev_reqs: Vec<FlowReq> = reqs.iter().rev().copied().collect();
+    let rev = s2.transfer_batch(&rev_reqs);
+    for (i, ft) in fwd.iter().enumerate() {
+        let rt = rev[reqs.len() - 1 - i];
+        assert!(
+            (ft.recv_complete - rt.recv_complete).abs() < 1e-9,
+            "flow {i}: order-dependent completion {} vs {}",
+            ft.recv_complete,
+            rt.recv_complete
+        );
+    }
+    assert_eq!(s.stats.peak_concurrent_flows, 12);
+}
+
+#[test]
+fn work_conservation_through_a_shared_port() {
+    // However many flows share one tx port, the port drains total bytes
+    // at its capacity: the last completion must sit at (+overheads) the
+    // aggregate serialization time, never earlier.
+    let mut s = sim(FabricKind::OmniPath100);
+    let bytes = 4.0 * 1024.0 * 1024.0;
+    let n = 6;
+    let reqs: Vec<FlowReq> = (0..n)
+        .map(|i| FlowReq { src: cpu_ep(0), dst: cpu_ep(1 + i), bytes, ready: 0.0 })
+        .collect();
+    let times = s.transfer_batch(&reqs);
+    let last = times.iter().map(|t| t.recv_complete).fold(0.0, f64::max);
+    let drain = n as f64 * bytes / s.fabric.effective_bandwidth();
+    assert!(last >= drain, "last completion {last} beats aggregate drain {drain}");
+    assert!(last < drain * 1.1, "sharing overhead implausibly high: {last} vs {drain}");
+}

@@ -1,0 +1,81 @@
+//! Golden-file regression tests: the CSV artifacts of the deterministic
+//! experiment drivers (`table1`, `fig3`) are compared byte-for-byte
+//! against fixtures under `tests/golden/`.
+//!
+//! * First run (fixture missing): the current output is recorded and the
+//!   test passes — the bootstrap is itself the regen path, so a fresh
+//!   checkout self-seeds on its first `cargo test`.
+//! * Mismatch: the test fails with the offset/line/column of the first
+//!   differing byte and both lines.
+//! * Intentional change: `FABRICBENCH_REGEN_GOLDEN=1 cargo test -q`
+//!   rewrites the fixtures.
+
+use fabricbench::experiments::{fig3, table1};
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("golden")
+}
+
+fn check_golden(name: &str, csv: &str) {
+    let path = golden_dir().join(format!("{name}.csv"));
+    let regen = std::env::var("FABRICBENCH_REGEN_GOLDEN").is_ok();
+    if regen || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, csv).unwrap();
+        if !regen {
+            eprintln!(
+                "golden: bootstrapped {} — first run records the current output",
+                path.display()
+            );
+        }
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    if want == csv {
+        return;
+    }
+    let pos = want
+        .bytes()
+        .zip(csv.bytes())
+        .position(|(a, b)| a != b)
+        .unwrap_or_else(|| want.len().min(csv.len()));
+    let upto = &csv[..pos.min(csv.len())];
+    let line = upto.matches('\n').count() + 1;
+    let col = pos - upto.rfind('\n').map_or(0, |i| i + 1);
+    panic!(
+        "golden mismatch for '{name}': first differing byte at offset {pos} (line {line}, column {col})\n\
+         expected {} bytes, got {} bytes\n\
+         expected line: {:?}\n\
+         actual   line: {:?}\n\
+         If the change is intentional, regenerate with:\n\
+         FABRICBENCH_REGEN_GOLDEN=1 cargo test -q golden",
+        want.len(),
+        csv.len(),
+        want.lines().nth(line - 1).unwrap_or("<past end>"),
+        csv.lines().nth(line - 1).unwrap_or("<past end>"),
+    );
+}
+
+#[test]
+fn table1_csv_matches_golden() {
+    check_golden("table1", &table1::run().to_csv());
+}
+
+#[test]
+fn fig3_quick_csv_matches_golden() {
+    // The CFD model has no stochastic terms, so the quick sweep is fully
+    // deterministic — any CSV drift is a genuine model/engine change.
+    let (t, _) = fig3::run(true);
+    check_golden("fig3_quick", &t.to_csv());
+}
+
+#[test]
+fn golden_runs_are_reproducible_in_process() {
+    // The property the fixtures rely on: two in-process runs are
+    // byte-identical (no hidden wall-clock or HashMap-order dependence).
+    assert_eq!(table1::run().to_csv(), table1::run().to_csv());
+    let (a, _) = fig3::run(true);
+    let (b, _) = fig3::run(true);
+    assert_eq!(a.to_csv(), b.to_csv());
+}

@@ -1,0 +1,205 @@
+//! Minimal, source-compatible subset of the `anyhow` crate for fully
+//! offline builds. Implements the surface fabricbench uses:
+//!
+//! * [`Error`] — a boxed dynamic error with a context chain
+//! * [`Result<T>`] — alias with `Error` as the default error type
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`
+//!
+//! Display mirrors real anyhow: `{}` shows the outermost message, `{:#}`
+//! shows the whole chain joined by `": "`, `{:?}` shows the chain on
+//! separate lines (the "Caused by" report form, simplified).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Dynamic error type: a chain of messages, outermost first.
+pub struct Error {
+    /// msgs[0] is the outermost context; the root cause is last.
+    chain: Vec<String>,
+    /// The original typed error, if this was built from one.
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()], source: None }
+    }
+
+    /// Build from a typed error.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { chain: vec![error.to_string()], source: Some(Box::new(error)) }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    /// Attempt to downcast the original typed error.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.source.as_deref().and_then(|e| e.downcast_ref::<E>())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow: Error does NOT implement std::error::Error (that
+// would conflict with the blanket From below).
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "boom 42");
+        let e = e.context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: boom 42");
+        assert!(format!("{e:?}").contains("Caused by"));
+    }
+
+    #[test]
+    fn ensure_and_question_mark() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            let s = "7";
+            let v: i32 = s.parse()?; // ParseIntError -> Error via From
+            Ok(v + x)
+        }
+        assert_eq!(f(1).unwrap(), 8);
+        assert!(f(-1).unwrap_err().to_string().contains("positive"));
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<i32> = None;
+        let err = none.context("missing value").unwrap_err();
+        assert_eq!(err.to_string(), "missing value");
+    }
+}

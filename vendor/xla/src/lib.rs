@@ -1,0 +1,170 @@
+//! API-compatible stub of the `xla` crate (xla_extension 0.5.1 PJRT
+//! bindings) for offline builds where the native XLA library is absent.
+//!
+//! Everything type-checks against the surface `fabricbench::runtime`
+//! uses; the only runtime behavior is a clean error from
+//! [`PjRtClient::cpu`], so `Engine::load` fails with an informative
+//! message and every simulation path (which never touches PJRT) works
+//! normally. Swap this path dependency for the real crate to run the
+//! AOT-compiled artifacts.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversion
+/// into `anyhow::Error`.
+#[derive(Debug)]
+pub struct Error {
+    pub msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error {
+        msg: "XLA/PJRT backend unavailable in this offline build (xla stub crate); \
+              simulation paths are unaffected"
+            .to_string(),
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    F64,
+    S32,
+    Pred,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    F64,
+    S32,
+    Pred,
+}
+
+/// Host-side tensor value (stub: carries nothing).
+#[derive(Debug, Default)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal::default()
+    }
+
+    pub fn scalar<T: Copy>(_v: T) -> Literal {
+        Literal::default()
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Err(unavailable())
+    }
+
+    pub fn convert(&self, _ty: PrimitiveType) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_vec<T: Copy + Default>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Loaded executable handle (stub; cannot be constructed at runtime).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client (stub: creation always fails cleanly).
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+}
+
+/// Parsed HLO module proto (stub).
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// XLA computation wrapper (stub).
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline"));
+    }
+}
