@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
                 arch: arch.clone(),
                 fabric: fabric(kind),
                 cluster: ClusterSpec::txgaia(),
-                opts: TransportOptions { gpudirect: use_rdma, use_rdma },
+                opts: TransportOptions { gpudirect: use_rdma, use_rdma, ..Default::default() },
                 strategy: Box::new(RingAllreduce),
                 per_gpu_batch: batch_for(&arch.name),
                 precision: Precision::Fp32,

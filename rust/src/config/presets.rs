@@ -102,6 +102,13 @@ latency_us = 1.8
 bandwidth_gbps = 25.0
 efficiency = 0.92
 
+[transport]
+gpudirect = true
+use_rdma = true
+num_streams = 2        # concurrent collective channels (1 = serialized)
+# rendezvous_threshold_bytes = 32768.0
+# chunk_mib = 16.0     # chunk-pipeline buckets above this size
+
 [run]
 seed = 7
 warmup_steps = 5
@@ -150,5 +157,10 @@ mod tests {
         let fab = FabricSpec::from_toml(doc.get("fabric").unwrap()).unwrap();
         assert_eq!(fab.kind, FabricKind::EthernetRoce25);
         assert_eq!(doc.get("run").unwrap().get("seed").unwrap().as_usize(), Some(7));
+        let transport =
+            crate::config::spec::TransportOptions::from_toml(doc.get("transport").unwrap())
+                .unwrap();
+        assert_eq!(transport.num_streams, 2);
+        assert!(transport.gpudirect && transport.use_rdma);
     }
 }

@@ -264,7 +264,9 @@ impl ClusterSpec {
     }
 }
 
-/// Transport feature toggles (the paper's GPUDirect/NCCL axis).
+/// Transport feature toggles (the paper's GPUDirect/NCCL axis) plus the
+/// communication-stream knobs consumed by the trainer's multi-stream
+/// scheduler ([`crate::trainer::scheduler`]).
 #[derive(Clone, Copy, Debug)]
 pub struct TransportOptions {
     /// GPUDirect RDMA: NIC reads GPU memory directly; otherwise gradients
@@ -272,11 +274,95 @@ pub struct TransportOptions {
     pub gpudirect: bool,
     /// Use the fabric's RDMA path (RoCE verbs / OPA PSM) vs TCP.
     pub use_rdma: bool,
+    /// Concurrent collective channels (NCCL channels / Horovod cycles).
+    /// 1 = the serialized per-bucket coordinator; >1 lets logically
+    /// independent fusion buckets overlap on the fabric.
+    pub num_streams: usize,
+    /// Message size (bytes) above which a point-to-point transfer uses
+    /// the rendezvous protocol and cannot complete before the receiver
+    /// has posted its recv. `None` falls back to the fabric's
+    /// `eager_threshold`.
+    pub rendezvous_threshold: Option<f64>,
+    /// Chunk-pipeline fusion buckets larger than this many bytes through
+    /// back-to-back sub-collectives on their stream (one logical launch:
+    /// the coordination cycle is paid once per bucket). `None` disables.
+    pub chunk_bytes: Option<f64>,
 }
 
 impl Default for TransportOptions {
     fn default() -> Self {
-        TransportOptions { gpudirect: true, use_rdma: true }
+        TransportOptions {
+            gpudirect: true,
+            use_rdma: true,
+            num_streams: 1,
+            rendezvous_threshold: None,
+            chunk_bytes: None,
+        }
+    }
+}
+
+impl TransportOptions {
+    /// Build from a parsed TOML `[transport]` table, filling defaults.
+    /// A key that is present with the wrong type is an error, not a
+    /// silently kept default.
+    pub fn from_toml(v: &Json) -> Result<TransportOptions> {
+        let getb = |key: &str| -> Result<Option<bool>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(Json::Bool(b)) => Ok(Some(*b)),
+                Some(_) => bail!("transport.{key} must be a boolean"),
+            }
+        };
+        let getf = |key: &str| -> Result<Option<f64>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => match x.as_f64() {
+                    Some(f) => Ok(Some(f)),
+                    None => bail!("transport.{key} must be a number"),
+                },
+            }
+        };
+        let mut t = TransportOptions::default();
+        if let Some(b) = getb("gpudirect")? {
+            t.gpudirect = b;
+        }
+        if let Some(b) = getb("use_rdma")? {
+            t.use_rdma = b;
+        }
+        if let Some(x) = getf("num_streams")? {
+            if x.fract() != 0.0 || x < 0.0 {
+                bail!("transport.num_streams must be a non-negative integer, got {x}");
+            }
+            t.num_streams = x as usize;
+        }
+        if let Some(x) = getf("rendezvous_threshold_bytes")? {
+            t.rendezvous_threshold = Some(x);
+        }
+        if let Some(x) = getf("chunk_mib")? {
+            t.chunk_bytes = Some(x * crate::util::units::MIB);
+        }
+        t.validate()?;
+        Ok(t)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.num_streams == 0 {
+            bail!("transport: num_streams must be >= 1");
+        }
+        if self.num_streams > 64 {
+            bail!("transport: num_streams {} is implausible (max 64)", self.num_streams);
+        }
+        if let Some(x) = self.rendezvous_threshold {
+            if x < 0.0 {
+                bail!("transport: negative rendezvous threshold");
+            }
+        }
+        if let Some(x) = self.chunk_bytes {
+            if x <= 0.0 {
+                bail!("transport: chunk size must be positive");
+            }
+        }
+        Ok(())
     }
 }
 
@@ -357,6 +443,42 @@ mod tests {
         // Config 2: GPU0 on CPU0 with Eth on CPU1 -> crossing; GPU1 local.
         assert!(GpuPerSocket.gpu_to_nic_crosses_upi(0, FabricKind::EthernetRoce25));
         assert!(!GpuPerSocket.gpu_to_nic_crosses_upi(1, FabricKind::EthernetRoce25));
+    }
+
+    #[test]
+    fn transport_from_toml_defaults_and_overrides() {
+        let t = TransportOptions::from_toml(&toml::parse("").unwrap()).unwrap();
+        assert!(t.gpudirect && t.use_rdma);
+        assert_eq!(t.num_streams, 1);
+        assert!(t.rendezvous_threshold.is_none());
+        assert!(t.chunk_bytes.is_none());
+
+        let doc = toml::parse(
+            "gpudirect = false\nnum_streams = 4\nrendezvous_threshold_bytes = 32768.0\nchunk_mib = 16.0",
+        )
+        .unwrap();
+        let t = TransportOptions::from_toml(&doc).unwrap();
+        assert!(!t.gpudirect);
+        assert_eq!(t.num_streams, 4);
+        assert_eq!(t.rendezvous_threshold, Some(32768.0));
+        assert_eq!(t.chunk_bytes, Some(16.0 * 1024.0 * 1024.0));
+    }
+
+    #[test]
+    fn transport_validation_rejects_nonsense() {
+        assert!(TransportOptions::from_toml(&toml::parse("num_streams = 0").unwrap()).is_err());
+        assert!(
+            TransportOptions::from_toml(&toml::parse("rendezvous_threshold_bytes = -1.0").unwrap())
+                .is_err()
+        );
+        assert!(TransportOptions::from_toml(&toml::parse("chunk_mib = 0.0").unwrap()).is_err());
+        // Wrong types and fractional stream counts are loud, not silently
+        // kept defaults.
+        assert!(
+            TransportOptions::from_toml(&toml::parse("num_streams = \"4\"").unwrap()).is_err()
+        );
+        assert!(TransportOptions::from_toml(&toml::parse("num_streams = 2.7").unwrap()).is_err());
+        assert!(TransportOptions::from_toml(&toml::parse("gpudirect = 1").unwrap()).is_err());
     }
 
     #[test]

@@ -17,6 +17,15 @@
 //! and the engine advances virtual time event by event, recomputing
 //! **max-min fair** rates on every flow arrival/departure (see
 //! [`contention`] and the module docs in [`sim`] / `fabric/README.md`).
+//!
+//! Batches accept **heterogeneous per-flow ready times**, which is what
+//! lets the trainer's multi-stream scheduler
+//! ([`crate::trainer::scheduler`]) submit the next rounds of several
+//! concurrent collectives as a single batch: flows join the fluid model
+//! when their stream reaches them and share ports fairly from that
+//! instant. Point-to-point transfers follow MPI's eager/rendezvous split
+//! (see [`mpi`]): rendezvous-sized messages wait for the receiver's
+//! recv-post before the payload moves.
 
 pub mod contention;
 pub mod mpi;
@@ -24,7 +33,7 @@ pub mod sim;
 pub mod trace;
 pub mod transport;
 
-pub use mpi::Comm;
+pub use mpi::{Comm, CommOp};
 pub use sim::{FlowReq, FlowTimes, NetSim, NetStats};
 pub use trace::{MessageEvent, Trace};
 pub use transport::MessageCost;

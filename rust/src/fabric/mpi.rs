@@ -1,11 +1,67 @@
 //! MPI-like communicator over the fabric simulator: per-rank virtual
 //! clocks, point-to-point semantics, and a barrier. Collectives and the
 //! CFD halo exchange are written against this layer.
+//!
+//! # Eager vs rendezvous point-to-point
+//!
+//! [`Comm::p2p`] models the MPI transport split: messages at or below the
+//! rendezvous threshold (the fabric's `eager_threshold`, overridable via
+//! [`TransportOptions::rendezvous_threshold`]) are *eager* — the sender
+//! fires as soon as its own clock allows and the payload lands in the
+//! receiver's bounce buffer. Above the threshold the transfer is
+//! *rendezvous*: the payload cannot move before the receiver has posted
+//! its recv, so the flow's ready time is `max(t[src], t[dst])`. (Before
+//! this gate existed a rendezvous-sized message could "complete" at a
+//! receiver whose clock had not yet reached its recv-post — the PR 1
+//! latent bug.)
+//!
+//! # Op recording
+//!
+//! [`Comm::recorder`] builds a communicator that captures the *schedule*
+//! of a collective (which rounds / point-to-points it issues, in order)
+//! without touching the event engine or the clocks. The multi-stream
+//! scheduler ([`crate::trainer::scheduler`]) replays recorded schedules
+//! from several streams as merged event-engine batches so concurrent
+//! collectives genuinely contend for NIC and up-link bandwidth.
 
 use crate::cluster::Placement;
-use crate::config::ClusterSpec;
-use crate::fabric::sim::FlowReq;
+use crate::config::{ClusterSpec, TransportOptions};
+use crate::fabric::sim::{FlowReq, FlowTimes};
 use crate::fabric::NetSim;
+
+/// One entry of a recorded communication schedule (see [`Comm::recorder`]).
+#[derive(Clone, Debug)]
+pub enum CommOp {
+    /// A synchronized round of concurrent messages (src, dst, bytes).
+    Round(Vec<(usize, usize, f64)>),
+    /// A blocking send/recv pair.
+    P2p(usize, usize, f64),
+    /// A simultaneous pairwise exchange.
+    Sendrecv(usize, usize, f64),
+    /// All clocks jump to the global maximum (end of a barrier).
+    SyncAll,
+}
+
+/// Apply one finished round's flow times to the rank clocks, exactly as
+/// [`Comm::round`] does (shared so the multi-stream scheduler's replay is
+/// bit-identical to direct execution).
+pub(crate) fn apply_round(
+    t: &mut [f64],
+    snapshot: &[f64],
+    msgs: &[(usize, usize, f64)],
+    times: &[FlowTimes],
+) {
+    for (&(src, dst, _), ft) in msgs.iter().zip(times) {
+        t[src] = t[src].max(ft.send_release);
+        t[dst] = t[dst].max(ft.recv_complete.max(snapshot[dst]));
+    }
+}
+
+/// Does a `bytes`-sized point-to-point use the rendezvous protocol (and
+/// therefore gate on the receiver having posted its recv)?
+pub(crate) fn is_rendezvous(opts: &TransportOptions, eager_threshold: f64, bytes: f64) -> bool {
+    bytes > opts.rendezvous_threshold.unwrap_or(eager_threshold)
+}
 
 /// A communicator: placement + one virtual clock per rank.
 pub struct Comm<'a> {
@@ -13,19 +69,34 @@ pub struct Comm<'a> {
     pub placement: &'a Placement,
     /// Virtual time at which each rank is next free.
     pub t: Vec<f64>,
+    /// When set, operations are recorded instead of executed.
+    record: Option<Vec<CommOp>>,
 }
 
 impl<'a> Comm<'a> {
     pub fn new(net: &'a mut NetSim, placement: &'a Placement) -> Self {
         let n = placement.len();
-        Comm { net, placement, t: vec![0.0; n] }
+        Comm { net, placement, t: vec![0.0; n], record: None }
     }
 
     /// Start every rank's clock at the given times (e.g. staggered compute
     /// completion for comm/compute overlap studies).
     pub fn with_start(net: &'a mut NetSim, placement: &'a Placement, start: &[f64]) -> Self {
         assert_eq!(start.len(), placement.len());
-        Comm { net, placement, t: start.to_vec() }
+        Comm { net, placement, t: start.to_vec(), record: None }
+    }
+
+    /// A recording communicator: collective algorithms run against it to
+    /// capture their message schedule (clocks stay at zero, the event
+    /// engine is never called). Retrieve the ops with [`Comm::take_record`].
+    pub fn recorder(net: &'a mut NetSim, placement: &'a Placement) -> Self {
+        let n = placement.len();
+        Comm { net, placement, t: vec![0.0; n], record: Some(Vec::new()) }
+    }
+
+    /// The ops captured since construction (recording communicators only).
+    pub fn take_record(&mut self) -> Option<Vec<CommOp>> {
+        self.record.take()
     }
 
     pub fn size(&self) -> usize {
@@ -34,10 +105,21 @@ impl<'a> Comm<'a> {
 
     /// Blocking send/recv pair: the receiver's clock advances to message
     /// completion; the sender's clock advances past its send-side cost.
-    /// (Matches MPI_Send/MPI_Recv with an eager/rendezvous transport.)
+    /// Rendezvous-sized messages (see the module docs) additionally wait
+    /// for the receiver's clock before the payload moves.
     pub fn p2p(&mut self, src: usize, dst: usize, bytes: f64) {
         assert_ne!(src, dst, "p2p to self");
-        let ready = self.t[src]; // sender-gated
+        if let Some(rec) = self.record.as_mut() {
+            rec.push(CommOp::P2p(src, dst, bytes));
+            return;
+        }
+        let ready = if is_rendezvous(&self.net.opts, self.net.fabric.eager_threshold, bytes) {
+            // Rendezvous: the payload moves only once the receiver has
+            // posted its recv.
+            self.t[src].max(self.t[dst])
+        } else {
+            self.t[src] // eager: sender-gated
+        };
         let (send_release, recv_complete) = self.net.message(
             self.placement.endpoints[src],
             self.placement.endpoints[dst],
@@ -56,6 +138,10 @@ impl<'a> Comm<'a> {
     /// overlap in virtual time (full duplex on disjoint tx/rx ports).
     pub fn sendrecv(&mut self, a: usize, b: usize, bytes: f64) {
         assert_ne!(a, b, "sendrecv with self");
+        if let Some(rec) = self.record.as_mut() {
+            rec.push(CommOp::Sendrecv(a, b, bytes));
+            return;
+        }
         let ready = self.t[a].max(self.t[b]);
         let times = self.net.transfer_batch(&[
             FlowReq {
@@ -83,6 +169,13 @@ impl<'a> Comm<'a> {
     /// NIC ports and rack up-links max-min fairly instead of paying the
     /// old scalar congestion estimate.
     pub fn round(&mut self, msgs: &[(usize, usize, f64)]) {
+        if let Some(rec) = self.record.as_mut() {
+            for &(src, dst, _) in msgs {
+                assert_ne!(src, dst, "round message to self");
+            }
+            rec.push(CommOp::Round(msgs.to_vec()));
+            return;
+        }
         let snapshot = self.t.clone();
         let reqs: Vec<FlowReq> = msgs
             .iter()
@@ -97,12 +190,7 @@ impl<'a> Comm<'a> {
             })
             .collect();
         let times = self.net.transfer_batch(&reqs);
-        let mut new_t = snapshot.clone();
-        for (&(src, dst, _), ft) in msgs.iter().zip(&times) {
-            new_t[src] = new_t[src].max(ft.send_release);
-            new_t[dst] = new_t[dst].max(ft.recv_complete.max(snapshot[dst]));
-        }
-        self.t = new_t;
+        apply_round(&mut self.t, &snapshot, msgs, &times);
     }
 
     /// Dissemination barrier (log2 rounds of 0-byte exchanges); every
@@ -118,6 +206,10 @@ impl<'a> Comm<'a> {
                 (0..p).map(|r| (r, (r + dist) % p, 0.0)).collect();
             self.round(&msgs);
             dist *= 2;
+        }
+        if let Some(rec) = self.record.as_mut() {
+            rec.push(CommOp::SyncAll);
+            return;
         }
         let tmax = self.t.iter().cloned().fold(0.0, f64::max);
         for t in self.t.iter_mut() {
@@ -196,5 +288,67 @@ mod tests {
         let mut comm = Comm::new(&mut net, &placement);
         comm.barrier();
         assert_eq!(comm.t[0], 0.0);
+    }
+
+    #[test]
+    fn rendezvous_waits_for_receiver_post() {
+        // Large (rendezvous-sized) message to a busy receiver: the payload
+        // cannot move before the receiver's clock, so the *sender* is held
+        // past the receiver's recv-post time too.
+        let (mut net, placement) = setup(80);
+        let big = 2.0 * net.fabric.eager_threshold;
+        let mut comm = Comm::new(&mut net, &placement);
+        comm.t[79] = 1.0; // receiver busy until t=1
+        comm.p2p(0, 79, big);
+        assert!(comm.t[0] >= 1.0, "rendezvous sender released at {} < recv post", comm.t[0]);
+        assert!(comm.t[79] > 1.0);
+    }
+
+    #[test]
+    fn eager_message_is_sender_gated() {
+        // Small (eager) message: the sender fires immediately regardless
+        // of the receiver's clock; the receiver keeps its later clock.
+        let (mut net, placement) = setup(80);
+        let small = 64.0; // well below every preset's eager threshold
+        let mut comm = Comm::new(&mut net, &placement);
+        comm.t[79] = 1.0;
+        comm.p2p(0, 79, small);
+        assert!(comm.t[0] < 1e-3, "eager sender must not wait: {}", comm.t[0]);
+        assert_eq!(comm.t[79], 1.0);
+    }
+
+    #[test]
+    fn rendezvous_threshold_override_respected() {
+        let cluster = ClusterSpec::txgaia();
+        let placement = Placement::cores(&cluster, 80).unwrap();
+        let opts = TransportOptions {
+            rendezvous_threshold: Some(1e12), // everything eager
+            ..Default::default()
+        };
+        let mut net = NetSim::new(fabric(FabricKind::OmniPath100), cluster, opts);
+        let big = 1e8;
+        let mut comm = Comm::new(&mut net, &placement);
+        comm.t[79] = 10.0;
+        comm.p2p(0, 79, big);
+        assert!(comm.t[0] < 10.0, "override must keep the transfer eager");
+    }
+
+    #[test]
+    fn recorder_captures_schedule_without_time() {
+        let (mut net, placement) = setup(8);
+        let mut comm = Comm::recorder(&mut net, &placement);
+        comm.p2p(0, 1, 100.0);
+        comm.sendrecv(2, 3, 50.0);
+        comm.round(&[(0, 4, 10.0), (1, 5, 10.0)]);
+        comm.barrier();
+        assert!(comm.t.iter().all(|&t| t == 0.0), "recording must not advance clocks");
+        let ops = comm.take_record().unwrap();
+        assert!(matches!(ops[0], CommOp::P2p(0, 1, _)));
+        assert!(matches!(ops[1], CommOp::Sendrecv(2, 3, _)));
+        assert!(matches!(ops[2], CommOp::Round(ref m) if m.len() == 2));
+        // Barrier = log2(8) notification rounds + the final clock sync.
+        assert!(matches!(ops.last(), Some(CommOp::SyncAll)));
+        assert_eq!(ops.len(), 3 + 3 + 1);
+        assert_eq!(net.stats.messages, 0, "recording must not touch the engine");
     }
 }

@@ -62,7 +62,10 @@ pub fn network_message(
         latency += 2.0 * fabric.switch_hop_latency;
     }
     // Rendezvous protocol: large messages handshake before the payload.
-    if geo.bytes > fabric.eager_threshold {
+    // Same classification as the recv-post ordering gate in Comm::p2p, so
+    // a TransportOptions::rendezvous_threshold override moves the
+    // handshake cost and the ordering semantics together.
+    if crate::fabric::mpi::is_rendezvous(opts, fabric.eager_threshold, geo.bytes) {
         latency += 2.0 * fabric.latency;
     }
 
@@ -187,6 +190,20 @@ mod tests {
     }
 
     #[test]
+    fn rendezvous_threshold_override_moves_handshake() {
+        // The TransportOptions override reclassifies the message for the
+        // handshake cost too, not just the recv-post ordering gate.
+        let f = fabric(FabricKind::EthernetRoce25);
+        let c = ClusterSpec::txgaia();
+        let big = geo(f.eager_threshold * 2.0);
+        let eager_opts =
+            TransportOptions { rendezvous_threshold: Some(1e12), ..Default::default() };
+        let forced_eager = network_message(&f, &c, &eager_opts, &big);
+        let default = network_message(&f, &c, &TransportOptions::default(), &big);
+        assert!((default.latency - forced_eager.latency - 2.0 * f.latency).abs() < 1e-12);
+    }
+
+    #[test]
     fn inter_rack_adds_hops() {
         let f = fabric(FabricKind::OmniPath100);
         let c = ClusterSpec::txgaia();
@@ -207,7 +224,7 @@ mod tests {
         let staged = network_message(
             &f,
             &c,
-            &TransportOptions { gpudirect: false, use_rdma: true },
+            &TransportOptions { gpudirect: false, ..Default::default() },
             &g,
         );
         assert!(staged.total(g.bytes) > gd.total(g.bytes));
@@ -222,7 +239,7 @@ mod tests {
         let tcp = network_message(
             &f,
             &c,
-            &TransportOptions { gpudirect: true, use_rdma: false },
+            &TransportOptions { use_rdma: false, ..Default::default() },
             &g,
         );
         assert!(tcp.send_overhead > rdma.send_overhead);

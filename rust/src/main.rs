@@ -23,6 +23,7 @@
 //!   --jobs N             worker threads for grid experiments [1]
 //!   --cache              cache per-cell JSON results under <out>/cache
 //!   --seed S             base seed for per-cell seed derivation
+//!   --streams N          run: concurrent communication streams [1]
 //!   --workers N          train-real: data-parallel workers   [4]
 //!   --steps N            train-real: training steps          [300]
 //!   --lr X               train-real: learning rate           [0.1]
@@ -115,6 +116,11 @@ grid execution (table1/fig3/fig4/fig5/ablations/sweeps):
   --cache              reuse per-cell JSON artifacts under <out>/cache,
                        keyed by a hash of the cell config + seed
   --seed S             base seed; each cell derives seed XOR fnv1a(key)
+
+trainer communication (run --config):
+  --streams N          concurrent collective channels for the overlap
+                       scheduler [1 = serialized coordinator]; also
+                       settable as [transport] num_streams in the TOML
 "#;
 
 fn cmd_sweeps(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
@@ -137,7 +143,7 @@ fn cmd_frameworks(rec: &Recorder, quick: bool) -> Result<()> {
 
 /// Run a custom scenario described by a TOML config file.
 fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
-    use fabricbench::config::spec::{ClusterSpec, FabricSpec, RunSpec};
+    use fabricbench::config::spec::{ClusterSpec, FabricSpec, RunSpec, TransportOptions};
     let path = args
         .get("config")
         .ok_or_else(|| anyhow::anyhow!("run requires --config <file.toml>"))?;
@@ -147,6 +153,14 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
         Some(v) => ClusterSpec::from_toml(v)?,
         None => ClusterSpec::txgaia(),
     };
+    let mut opts = match doc.get("transport") {
+        Some(v) => TransportOptions::from_toml(v)?,
+        None => TransportOptions::default(),
+    };
+    if args.get("streams").is_some() {
+        opts.num_streams = args.get_usize("streams", opts.num_streams)?;
+        opts.validate()?;
+    }
     let fabric = FabricSpec::from_toml(
         doc.get("fabric")
             .ok_or_else(|| anyhow::anyhow!("config missing [fabric]"))?,
@@ -190,7 +204,7 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
         arch,
         fabric: fabric.clone(),
         cluster,
-        opts: Default::default(),
+        opts,
         strategy: Box::new(fabricbench::collectives::RingAllreduce),
         per_gpu_batch,
         precision: fabricbench::models::perf::Precision::Fp32,
@@ -210,6 +224,7 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
     t.row(vec!["step time p95 (ms)".into(), fnum(r.step_time_p95 * 1e3)]);
     t.row(vec!["scaling efficiency".into(), format!("{:.3}", r.scaling_efficiency())]);
     t.row(vec!["exposed comm fraction".into(), format!("{:.3}", r.comm_fraction)]);
+    t.row(vec!["comm streams".into(), opts.num_streams.to_string()]);
     rec.emit("custom_run", &t);
     Ok(())
 }
@@ -276,6 +291,8 @@ fn cmd_ablations(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
     rec.emit("ablation_fusion", &t1);
     let (t2, _) = ablations::toggles_with(quick, runner);
     rec.emit("ablation_toggles", &t2);
+    let (t3, _) = ablations::streams_sweep_with(quick, runner);
+    rec.emit("ablation_streams", &t3);
     Ok(())
 }
 

@@ -6,22 +6,26 @@
 //!    calibrated perf model, with lognormal jitter per rank);
 //! 2. gradients become available *during* the backward pass in backward
 //!    layer order; the fusion buffer coalesces them into buckets;
-//! 3. buckets are all-reduced over the simulated fabric on a single
-//!    communication stream (allreduce of bucket b starts when its
-//!    gradients are ready on every... rank it reaches, and after bucket
-//!    b-1's allreduce — Horovod's coordinator serializes collectives);
+//! 3. buckets are all-reduced over the simulated fabric by the
+//!    multi-stream scheduler ([`crate::trainer::scheduler`]): with
+//!    `opts.num_streams == 1` collectives serialize exactly like
+//!    Horovod's coordinator; with more streams, logically independent
+//!    buckets overlap on the fabric like NCCL channels;
 //! 4. the optimizer applies updates; the step ends when the slowest rank
 //!    finishes.
 //!
 //! Overlap of (2) and (3) is the `overlap` knob — one of the paper-adjacent
-//! ablations.
+//! ablations. Exposed communication time is measured as the union of the
+//! collectives' busy intervals past the end of compute (overlapping
+//! streams are not double-counted).
 
 use crate::cluster::Placement;
-use crate::collectives::{fuse, Collective, NullBuffers, BYTES_PER_ELEM};
+use crate::collectives::{fuse, Collective, BYTES_PER_ELEM};
 use crate::config::{ClusterSpec, FabricSpec, RunSpec, TransportOptions};
-use crate::fabric::{Comm, NetSim};
+use crate::fabric::NetSim;
 use crate::models::perf::{step_cost, Precision};
 use crate::models::Arch;
+use crate::trainer::scheduler::{self, BucketWork, SchedulerConfig};
 use crate::util::rng::Rng;
 use crate::util::stats;
 
@@ -140,38 +144,40 @@ impl TrainerSim {
         // Bucket b's gradients are ready on rank r at
         // fwd[r] + bwd[r] * ready_frac(b) (backward produces gradients
         // progressively). Without overlap, everything waits for compute.
-        let mut prev_done: Vec<f64> = vec![0.0; gpus];
-        let mut comm_done: Vec<f64> = vec![0.0; gpus];
-        let mut total_comm_exposed = 0.0f64;
-        for (bi, bucket) in buckets.iter().enumerate() {
-            let start: Vec<f64> = (0..gpus)
-                .map(|r| {
-                    let ready = if self.overlap {
-                        fwd[r] + bwd[r] * bucket.ready_frac
-                    } else {
-                        compute_done[r]
-                    };
-                    ready.max(prev_done[r]) + self.coordination_overhead
-                })
-                .collect();
-            let elems = (bucket.bytes / BYTES_PER_ELEM).ceil() as usize;
-            let mut comm = Comm::with_start(net, placement, &start);
-            let mut bufs = NullBuffers { elems };
-            self.strategy.allreduce(&mut comm, &mut bufs);
-            comm_done.copy_from_slice(&comm.t);
-            prev_done.copy_from_slice(&comm.t);
-            let _ = bi;
-            let max_start = start.iter().cloned().fold(0.0, f64::max);
-            let max_done = comm_done.iter().cloned().fold(0.0, f64::max);
-            total_comm_exposed += max_done - max_start;
-        }
+        let works: Vec<BucketWork> = buckets
+            .iter()
+            .map(|bucket| BucketWork {
+                elems: (bucket.bytes / BYTES_PER_ELEM).ceil() as usize,
+                bytes: bucket.bytes,
+                ready: (0..gpus)
+                    .map(|r| {
+                        if self.overlap {
+                            fwd[r] + bwd[r] * bucket.ready_frac
+                        } else {
+                            compute_done[r]
+                        }
+                    })
+                    .collect(),
+            })
+            .collect();
+        let cfg = SchedulerConfig {
+            num_streams: self.opts.num_streams,
+            coordination_overhead: self.coordination_overhead,
+            chunk_bytes: self.opts.chunk_bytes,
+        };
+        let timeline =
+            scheduler::run_step(net, placement, self.strategy.as_ref(), &works, &cfg);
 
         let end = (0..gpus)
-            .map(|r| comm_done[r].max(compute_done[r]) + cost.optimizer)
+            .map(|r| timeline.comm_done[r].max(compute_done[r]) + cost.optimizer)
             .fold(0.0, f64::max)
             + self.step_overhead;
         let compute_max = compute_done.iter().cloned().fold(0.0, f64::max);
-        let exposed = (end - cost.optimizer - compute_max).max(0.0).min(total_comm_exposed);
+        // Exposed communication: the merged busy-interval union of the
+        // collectives, clipped to the region after compute ends. (The old
+        // per-bucket span sum over-counted once buckets overlapped across
+        // streams, and silently folded coordination gaps into "comm".)
+        let exposed = scheduler::exposed_after(&timeline.intervals, compute_max);
         (end, exposed / end)
     }
 }

@@ -1,13 +1,17 @@
 //! Data-parallel training: the simulated coordinator that produces the
-//! paper's images/second numbers (Figs 4-5), the synthetic input pipeline,
-//! and the **real** mini-training path that executes the AOT-compiled
-//! JAX/Pallas artifacts through PJRT with genuine gradient all-reduction.
+//! paper's images/second numbers (Figs 4-5), the multi-stream overlap
+//! scheduler that decides *when* each fused bucket's collective runs, the
+//! synthetic input pipeline, and the **real** mini-training path that
+//! executes the AOT-compiled JAX/Pallas artifacts through PJRT with
+//! genuine gradient all-reduction.
 
 pub mod coordinator;
 pub mod data;
 pub mod framework;
 pub mod real;
+pub mod scheduler;
 
 pub use coordinator::{ThroughputResult, TrainerSim};
 pub use framework::FrameworkProfile;
 pub use data::SyntheticDataset;
+pub use scheduler::{BucketWork, SchedulerConfig, StepTimeline};

@@ -1,0 +1,733 @@
+#!/usr/bin/env python3
+"""Bootstrap generator for the golden CSV fixtures.
+
+Faithful Python mirror of the two *deterministic* Rust experiment drivers
+whose CSVs are pinned by ``tests/golden_outputs.rs``:
+
+* ``table1::run()``      -> ``tests/golden/table1.csv``
+* ``fig3::run(true)``    -> ``tests/golden/fig3_quick.csv``
+
+The Rust code is the source of truth. This script exists because the
+fixtures must live in-tree (CI forbids first-run self-seeding via
+``FABRICBENCH_REQUIRE_GOLDEN=1``) and the original bootstrap environment
+had no Rust toolchain to run ``FABRICBENCH_REGEN_GOLDEN=1 cargo test``.
+Every formula below mirrors its Rust counterpart (referenced in comments);
+both drivers are RNG-free and the fixtures quantize to <= 4 significant
+digits, so an IEEE-754-faithful port reproduces the same bytes. After any
+intentional model change, regenerate with the cargo path and commit the
+diff; keep this mirror in sync or delete it once a toolchain is ambient.
+
+Usage: python3 tools/gen_golden.py [--out-dir tests/golden]
+"""
+
+import argparse
+import os
+
+# ---------------------------------------------------------------------------
+# util/table.rs
+# ---------------------------------------------------------------------------
+
+
+def fnum(x: float) -> str:
+    """Mirror of util::table::fnum."""
+    if x == 0.0:
+        return "0"
+    a = abs(x)
+    if a >= 1000.0:
+        return f"{x:.0f}"
+    if a >= 10.0:
+        return f"{x:.1f}"
+    if a >= 0.01:
+        return f"{x:.3f}"
+    mant, exp = f"{x:.3e}".split("e")
+    return f"{mant}e{int(exp)}"  # Rust LowerExp: no '+', no leading zeros
+
+
+def csv_cell(c: str) -> str:
+    if "," in c or '"' in c or "\n" in c:
+        return '"' + c.replace('"', '""') + '"'
+    return c
+
+
+def to_csv(headers, rows) -> str:
+    out = ",".join(csv_cell(h) for h in headers) + "\n"
+    for row in rows:
+        out += ",".join(csv_cell(c) for c in row) + "\n"
+    return out
+
+
+# ---------------------------------------------------------------------------
+# models/arch.rs — the layer algebra (params + forward FLOPs only)
+# ---------------------------------------------------------------------------
+
+
+class ArchBuilder:
+    def __init__(self, h, w, c):
+        self.h, self.w, self.c = h, w, c
+        self.layers = []  # (params:int, flops:float)
+
+    @staticmethod
+    def _out(dim, k, stride, pad):
+        return (dim + 2 * pad - k) // stride + 1
+
+    def conv_rect(self, out_c, k, stride, pad, bias):
+        k0, k1 = k
+        p0, p1 = pad
+        oh = self._out(self.h, k0, stride, p0)
+        ow = self._out(self.w, k1, stride, p1)
+        params = k0 * k1 * self.c * out_c + (out_c if bias else 0)
+        flops = 2.0 * float(k0 * k1 * self.c) * float(out_c * oh * ow)
+        self.layers.append((params, flops))
+        self.h, self.w, self.c = oh, ow, out_c
+        return self
+
+    def conv(self, out_c, k, stride, pad, bias):
+        return self.conv_rect(out_c, (k, k), stride, (pad, pad), bias)
+
+    def bn(self):
+        self.layers.append((2 * self.c, 4.0 * float(self.h * self.w * self.c)))
+        return self
+
+    def relu(self):
+        self.layers.append((0, float(self.h * self.w * self.c)))
+        return self
+
+    def pool(self, k, stride, pad):
+        oh = self._out(self.h, k, stride, pad)
+        ow = self._out(self.w, k, stride, pad)
+        self.layers.append((0, float(k * k) * float(oh * ow * self.c)))
+        self.h, self.w = oh, ow
+        return self
+
+    def global_pool(self):
+        self.layers.append((0, float(self.h * self.w * self.c)))
+        self.h = self.w = 1
+        return self
+
+    def fc(self, out):
+        inp = self.h * self.w * self.c
+        self.layers.append((inp * out + out, 2.0 * float(inp * out)))
+        self.h, self.w, self.c = 1, 1, out
+        return self
+
+    def total_params(self):
+        return sum(p for p, _ in self.layers)
+
+    def flops_fwd(self):
+        s = 0.0
+        for _, f in self.layers:
+            s += f
+        return s
+
+
+def vgg16():
+    b = ArchBuilder(224, 224, 3)
+    for stage in ([64, 64], [128, 128], [256, 256, 256], [512, 512, 512], [512, 512, 512]):
+        for c in stage:
+            b.conv(c, 3, 1, 1, True).relu()
+        b.pool(2, 2, 0)
+    b.fc(4096).relu().fc(4096).relu().fc(1000)
+    return b, 125.0
+
+
+def alexnet():
+    b = ArchBuilder(224, 224, 3)
+    b.conv(64, 11, 4, 2, True).relu().pool(3, 2, 0)
+    b.conv(192, 5, 1, 2, True).relu().pool(3, 2, 0)
+    b.conv(384, 3, 1, 1, True).relu()
+    b.conv(256, 3, 1, 1, True).relu()
+    b.conv(256, 3, 1, 1, True).relu().pool(3, 2, 0)
+    b.fc(4096).relu().fc(4096).relu().fc(1000)
+    return b, 2400.0
+
+
+def _bottleneck(b, width, stride, downsample, stride_on_3x3):
+    h, w, c_in = b.h, b.w, b.c
+    out_c = width * 4
+    s1, s3 = (1, stride) if stride_on_3x3 else (stride, 1)
+    b.conv(width, 1, s1, 0, False).bn().relu()
+    b.conv(width, 3, s3, 1, False).bn().relu()
+    b.conv(out_c, 1, 1, 0, False).bn()
+    if downsample:
+        side = ArchBuilder(h, w, c_in).conv(out_c, 1, stride, 0, False).bn()
+        b.layers.extend(side.layers)
+    b.relu()
+    return b
+
+
+def resnet50():
+    b = ArchBuilder(224, 224, 3)
+    b.conv(64, 7, 2, 3, False).bn().relu().pool(3, 2, 1)
+    for width, blocks, stride in [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)]:
+        for blk in range(blocks):
+            s = stride if blk == 0 else 1
+            _bottleneck(b, width, s, blk == 0, False)  # v1: stride on 1x1
+    b.global_pool().fc(1000)
+    return b, 365.0
+
+
+def inception_v3():
+    layers = []
+
+    def unit(h, w, c, out_c, k, stride, pad):
+        u = ArchBuilder(h, w, c).conv_rect(out_c, k, stride, pad, False).bn().relu()
+        layers.extend(u.layers)
+        return u.h, u.w, u.c
+
+    s = unit(299, 299, 3, 32, (3, 3), 2, (0, 0))
+    s = unit(s[0], s[1], s[2], 32, (3, 3), 1, (0, 0))
+    s = unit(s[0], s[1], s[2], 64, (3, 3), 1, (1, 1))
+    h = (s[0] - 3) // 2 + 1
+    w = (s[1] - 3) // 2 + 1
+    c = s[2]
+    s = unit(h, w, c, 80, (1, 1), 1, (0, 0))
+    s = unit(s[0], s[1], s[2], 192, (3, 3), 1, (0, 0))
+    h = (s[0] - 3) // 2 + 1
+    w = (s[1] - 3) // 2 + 1
+    c = s[2]
+
+    for pool_c in (32, 64, 64):  # Inception-A
+        out = 0
+        unit(h, w, c, 64, (1, 1), 1, (0, 0))
+        out += 64
+        s2 = unit(h, w, c, 48, (1, 1), 1, (0, 0))
+        unit(s2[0], s2[1], s2[2], 64, (5, 5), 1, (2, 2))
+        out += 64
+        s2 = unit(h, w, c, 64, (1, 1), 1, (0, 0))
+        s2 = unit(s2[0], s2[1], s2[2], 96, (3, 3), 1, (1, 1))
+        unit(s2[0], s2[1], s2[2], 96, (3, 3), 1, (1, 1))
+        out += 96
+        unit(h, w, c, pool_c, (1, 1), 1, (0, 0))
+        out += pool_c
+        c = out
+
+    # Reduction-A
+    s1 = unit(h, w, c, 384, (3, 3), 2, (0, 0))
+    s2 = unit(h, w, c, 64, (1, 1), 1, (0, 0))
+    s2 = unit(s2[0], s2[1], s2[2], 96, (3, 3), 1, (1, 1))
+    unit(s2[0], s2[1], s2[2], 96, (3, 3), 2, (0, 0))
+    h, w = s1[0], s1[1]
+    c = 384 + 96 + c
+
+    for mid in (128, 160, 160, 192):  # Inception-B
+        out = 0
+        unit(h, w, c, 192, (1, 1), 1, (0, 0))
+        out += 192
+        s2 = unit(h, w, c, mid, (1, 1), 1, (0, 0))
+        s2 = unit(s2[0], s2[1], s2[2], mid, (1, 7), 1, (0, 3))
+        unit(s2[0], s2[1], s2[2], 192, (7, 1), 1, (3, 0))
+        out += 192
+        s2 = unit(h, w, c, mid, (1, 1), 1, (0, 0))
+        s2 = unit(s2[0], s2[1], s2[2], mid, (7, 1), 1, (3, 0))
+        s2 = unit(s2[0], s2[1], s2[2], mid, (1, 7), 1, (0, 3))
+        s2 = unit(s2[0], s2[1], s2[2], mid, (7, 1), 1, (3, 0))
+        unit(s2[0], s2[1], s2[2], 192, (1, 7), 1, (0, 3))
+        out += 192
+        unit(h, w, c, 192, (1, 1), 1, (0, 0))
+        out += 192
+        c = out
+
+    # Reduction-B
+    s2 = unit(h, w, c, 192, (1, 1), 1, (0, 0))
+    s1 = unit(s2[0], s2[1], s2[2], 320, (3, 3), 2, (0, 0))
+    s2 = unit(h, w, c, 192, (1, 1), 1, (0, 0))
+    s2 = unit(s2[0], s2[1], s2[2], 192, (1, 7), 1, (0, 3))
+    s2 = unit(s2[0], s2[1], s2[2], 192, (7, 1), 1, (3, 0))
+    unit(s2[0], s2[1], s2[2], 192, (3, 3), 2, (0, 0))
+    h, w = s1[0], s1[1]
+    c = 320 + 192 + c
+
+    for _ in range(2):  # Inception-C
+        out = 0
+        unit(h, w, c, 320, (1, 1), 1, (0, 0))
+        out += 320
+        s2 = unit(h, w, c, 384, (1, 1), 1, (0, 0))
+        unit(s2[0], s2[1], s2[2], 384, (1, 3), 1, (0, 1))
+        unit(s2[0], s2[1], s2[2], 384, (3, 1), 1, (1, 0))
+        out += 768
+        s2 = unit(h, w, c, 448, (1, 1), 1, (0, 0))
+        s2 = unit(s2[0], s2[1], s2[2], 384, (3, 3), 1, (1, 1))
+        unit(s2[0], s2[1], s2[2], 384, (1, 3), 1, (0, 1))
+        unit(s2[0], s2[1], s2[2], 384, (3, 1), 1, (1, 0))
+        out += 768
+        unit(h, w, c, 192, (1, 1), 1, (0, 0))
+        out += 192
+        c = out
+
+    b = ArchBuilder(h, w, 0)
+    b.c = c
+    b.layers = layers + b.layers
+    b.global_pool().fc(1000)
+    return b, 240.0
+
+
+# ---------------------------------------------------------------------------
+# models/perf.rs + experiments/table1.rs
+# ---------------------------------------------------------------------------
+
+V100_PEAK_FP32 = 15.7e12
+BWD_OVER_FWD = 2.0
+IMAGENET_IMAGES = 1.281e6
+ERA_SCALING = 0.9
+
+# cluster/gpu.rs: (peak_fp32, mem_bw)
+GPUS = {
+    "GTX580": (1.58e12, 192.0e9),
+    "K40": (5.0e12, 288.0e9),
+    "P100": (10.6e12, 732.0e9),
+    "TITAN_BLACK": (5.1e12, 336.0e9),
+}
+
+
+def modeled_hours(arch, ref_ips, gpu, gpus, epochs):
+    flops_fwd = arch.flops_fwd()
+    eff = (flops_fwd * (1.0 + BWD_OVER_FWD) * ref_ips) / V100_PEAK_FP32
+    peak, mem_bw = gpu
+    sustained = peak * eff
+    batch = 32
+    fwd = flops_fwd * float(batch) / sustained
+    bwd = fwd * BWD_OVER_FWD
+    optimizer = 5.0 * 4.0 * float(arch.total_params()) / mem_bw
+    total = fwd + bwd + optimizer
+    ips = float(batch) / total * float(gpus) * ERA_SCALING
+    return epochs * IMAGENET_IMAGES / ips / 3600.0
+
+
+def table1_csv():
+    rows_spec = [
+        ("alexnet", "5-7 days", "2 x NVIDIA GTX 580", 2, GPUS["GTX580"], 90.0, alexnet),
+        ("inception_v3", "2 weeks", "8 x NVIDIA Tesla K40", 8, GPUS["K40"], 100.0, inception_v3),
+        ("resnet50", "29 hours", "8 x NVIDIA Tesla P100", 8, GPUS["P100"], 90.0, resnet50),
+        ("vgg16", "2-3 weeks", "4 x NVIDIA Titan Black", 4, GPUS["TITAN_BLACK"], 74.0, vgg16),
+    ]
+    rows = []
+    for model, paper, hw, n, gpu, epochs, builder in rows_spec:
+        arch, ref_ips = builder()
+        hours = modeled_hours(arch, ref_ips, gpu, n, epochs)
+        human = f"{hours / 24.0:.1f} days" if hours > 48.0 else f"{hours:.0f} hours"
+        rows.append([model, paper, hw, human, f"{hours:.1f}"])
+    headers = ["Model", "Paper time", "Hardware", "Modeled time", "Modeled hours"]
+    return to_csv(headers, rows)
+
+
+# ---------------------------------------------------------------------------
+# fabric presets + cluster (config/presets.rs, config/spec.rs)
+# ---------------------------------------------------------------------------
+
+
+class Fabric:
+    def __init__(self, name, latency_us, bw_gbps, eff, overhead_us, eager, hop_us, knee, coeff, uplink_gbps):
+        self.name = name
+        self.latency = latency_us * 1e-6
+        self.bandwidth_gbps = bw_gbps
+        self.efficiency = eff
+        self.per_msg_overhead = overhead_us * 1e-6
+        self.eager_threshold = eager
+        self.switch_hop_latency = hop_us * 1e-6
+        self.congestion_knee_flows = knee
+        self.congestion_coeff = coeff
+        self.rack_uplink_gbps = uplink_gbps
+
+    def effective_bandwidth(self):
+        return self.bandwidth_gbps * 1e9 / 8.0 * self.efficiency
+
+    def rack_uplink_bandwidth(self):
+        return self.rack_uplink_gbps * 1e9 / 8.0 * self.efficiency
+
+    def congestion_factor(self, flows):
+        if self.congestion_coeff <= 0.0 or flows <= self.congestion_knee_flows:
+            return 1.0
+        excess = (flows - self.congestion_knee_flows) / self.congestion_knee_flows
+        return 1.0 / (1.0 + self.congestion_coeff * excess)
+
+
+ETH = Fabric("25GbE-RoCE", 1.8, 25.0, 0.92, 0.6, 16.0 * 1024.0, 0.5, 160.0, 0.35, 200.0)
+OPA = Fabric("OPA-100", 1.1, 100.0, 0.88, 0.4, 8.0 * 1024.0, 0.15, 1024.0, 0.1, 800.0)
+
+CLUSTER_NODES = 448
+CORES_PER_NODE = 40
+NODES_PER_RACK = 32
+SHM_BW = 10.0e9
+SHM_LATENCY = 0.3e-6
+
+
+# ---------------------------------------------------------------------------
+# cfd/mesh.rs
+# ---------------------------------------------------------------------------
+
+PAPER_MESH = (32, 32, 32)
+DG_NODES_1D = 8
+FIELDS = 5
+FACE_BYTES_PER_ELEM = float(DG_NODES_1D * DG_NODES_1D * FIELDS * 8)
+
+
+def factor3(p):
+    best = (p, 1, 1)
+    best_score = float("inf")
+    i = 1
+    while i * i * i <= p:
+        if p % i == 0:
+            q = p // i
+            j = i
+            while j * j <= q:
+                if q % j == 0:
+                    k = q // j
+                    a, b, c = float(k), float(j), float(i)
+                    score = a * b + b * c + a * c
+                    if score < best_score:
+                        best_score = score
+                        best = (k, j, i)
+                j += 1
+        i += 1
+    return best
+
+
+class MeshPartition:
+    def __init__(self, mesh, ranks):
+        self.mesh = mesh
+        self.grid = factor3(ranks)
+        self.ranks = ranks
+
+    def block_dims(self):
+        return (
+            -(-self.mesh[0] // self.grid[0]),
+            -(-self.mesh[1] // self.grid[1]),
+            -(-self.mesh[2] // self.grid[2]),
+        )
+
+    def elems_per_rank(self):
+        b = self.block_dims()
+        return b[0] * b[1] * b[2]
+
+    def rank_of(self, x, y, z):
+        return (z * self.grid[1] + y) * self.grid[0] + x
+
+    def coords_of(self, rank):
+        gx, gy = self.grid[0], self.grid[1]
+        return (rank % gx, (rank // gx) % gy, rank // (gx * gy))
+
+    def neighbors(self, rank):
+        x, y, z = self.coords_of(rank)
+        gx, gy, gz = self.grid
+        b = self.block_dims()
+        faces = [
+            ((x + gx - 1) % gx, y, z, b[1] * b[2]),
+            ((x + 1) % gx, y, z, b[1] * b[2]),
+            (x, (y + gy - 1) % gy, z, b[0] * b[2]),
+            (x, (y + 1) % gy, z, b[0] * b[2]),
+            (x, y, (z + gz - 1) % gz, b[0] * b[1]),
+            (x, y, (z + 1) % gz, b[0] * b[1]),
+        ]
+        out = []
+        for nx, ny, nz, area in faces:
+            n = self.rank_of(nx, ny, nz)
+            if n != rank:
+                out.append((n, area))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# fabric/sim.rs + fabric/contention.rs — the fluid event engine
+# ---------------------------------------------------------------------------
+
+
+def time_eps(t):
+    return 1e-12 * (1.0 + abs(t))
+
+
+def byte_eps(b):
+    return 1e-12 * (1.0 + b)
+
+
+def max_min_rates(caps, flow_caps, flow_res):
+    n = len(flow_caps)
+    rate = [0.0] * n
+    frozen = [False] * n
+    remaining = list(caps)
+    load = [0] * len(caps)
+    for fr in flow_res:
+        for rid in fr:
+            load[rid] += 1
+    unfrozen = n
+    while unfrozen > 0:
+        delta = float("inf")
+        for i in range(n):
+            if not frozen[i]:
+                d = flow_caps[i] - rate[i]
+                if d < delta:
+                    delta = d
+        for r, l in enumerate(load):
+            if l > 0:
+                d = remaining[r] / float(l)
+                if d < delta:
+                    delta = d
+        if delta != float("inf") and delta > 0.0:
+            for i in range(n):
+                if not frozen[i]:
+                    rate[i] += delta
+            for r, l in enumerate(load):
+                if l > 0:
+                    remaining[r] -= delta * float(l)
+        newly = 0
+        for i in range(n):
+            if frozen[i]:
+                continue
+            cap_hit = rate[i] >= flow_caps[i] * (1.0 - 1e-12)
+            res_hit = any(remaining[r] <= caps[r] * 1e-12 for r in flow_res[i])
+            if cap_hit or res_hit:
+                frozen[i] = True
+                newly += 1
+                for r in flow_res[i]:
+                    load[r] -= 1
+        if newly == 0:
+            break
+        unfrozen -= newly
+    return rate
+
+
+class NetSim:
+    """Mirror of fabric::sim::NetSim for CPU endpoints, fresh per batch."""
+
+    def __init__(self, fabric):
+        self.fabric = fabric
+        self.n_nodes = CLUSTER_NODES
+        self.n_racks = -(-CLUSTER_NODES // NODES_PER_RACK)
+        nic = fabric.effective_bandwidth()
+        uplink = fabric.rack_uplink_bandwidth()
+        self.res_caps = [nic] * (2 * self.n_nodes) + [uplink] * (2 * self.n_racks)
+        self.inter_rack_messages = 0
+
+    def network_cost(self, bytes_, inter_rack):
+        # transport::network_message for a CPU endpoint with RDMA on.
+        f = self.fabric
+        sw = f.per_msg_overhead
+        latency = f.latency
+        if inter_rack:
+            latency += 2.0 * f.switch_hop_latency
+        if bytes_ > f.eager_threshold:
+            latency += 2.0 * f.latency
+        return sw, latency, sw, f.effective_bandwidth()
+
+    def transfer_batch(self, reqs):
+        """reqs: list of (src_node, dst_node, bytes, ready).
+        Returns list of (send_release, recv_complete)."""
+        out = [(0.0, 0.0)] * len(reqs)
+        flows = []  # dicts
+        for i, (src_node, dst_node, bytes_, ready) in enumerate(reqs):
+            if src_node == dst_node:
+                done = ready + (SHM_LATENCY + bytes_ / SHM_BW)
+                out[i] = (done, done)
+                continue
+            src_rack = src_node // NODES_PER_RACK
+            dst_rack = dst_node // NODES_PER_RACK
+            inter_rack = src_rack != dst_rack
+            if inter_rack:
+                self.inter_rack_messages += 1
+            send_ov, latency, recv_ov, bw = self.network_cost(bytes_, inter_rack)
+            res = [src_node, self.n_nodes + dst_node]
+            if inter_rack:
+                res.append(2 * self.n_nodes + src_rack)
+                res.append(2 * self.n_nodes + self.n_racks + dst_rack)
+            arrival = ready + send_ov  # busy_until all zero: fresh engine
+            flows.append(
+                dict(
+                    req_idx=i,
+                    src_node=src_node,
+                    arrival=arrival,
+                    bytes=bytes_,
+                    cap=bw,
+                    latency=latency,
+                    recv_overhead=recv_ov,
+                    res=res,
+                )
+            )
+        if not flows:
+            return out
+
+        srcs = sorted(set(f["src_node"] for f in flows))
+        factor = self.fabric.congestion_factor(float(len(srcs)))
+
+        load = {}
+        contended = False
+        for f in flows:
+            for rid in f["res"]:
+                load[rid] = load.get(rid, 0) + 1
+                if load[rid] > 1:
+                    contended = True
+        if contended:
+            finishes = self.fluid_finishes(flows, factor)
+        else:
+            finishes = [f["arrival"] + f["bytes"] / (f["cap"] * factor) for f in flows]
+
+        for f, fin in zip(flows, finishes):
+            recv_complete = fin + f["latency"] + f["recv_overhead"]
+            out[f["req_idx"]] = (fin, recv_complete)
+        return out
+
+    def fluid_finishes(self, flows, factor):
+        n = len(flows)
+        ids = sorted(set(rid for f in flows for rid in f["res"]))
+        id_pos = {rid: k for k, rid in enumerate(ids)}
+        caps = [self.res_caps[rid] * factor for rid in ids]
+        res = [[id_pos[rid] for rid in f["res"]] for f in flows]
+        fcaps = [f["cap"] * factor for f in flows]
+        arrivals = [f["arrival"] for f in flows]
+        sizes = [f["bytes"] for f in flows]
+
+        order = sorted(range(n), key=lambda i: arrivals[i])
+        finish = [0.0] * n
+        remaining = list(sizes)
+        active = []
+        ptr = 0
+        t = arrivals[order[0]]
+        max_events = 512 + 40_000_000 // (n + 64)
+        events = 0
+        while True:
+            while ptr < n and arrivals[order[ptr]] <= t + time_eps(t):
+                fi = order[ptr]
+                ptr += 1
+                if remaining[fi] <= byte_eps(sizes[fi]):
+                    finish[fi] = arrivals[fi]
+                else:
+                    active.append(fi)
+            if not active:
+                if ptr >= n:
+                    break
+                t = arrivals[order[ptr]]
+                continue
+
+            a_caps = [fcaps[fi] for fi in active]
+            a_res = [res[fi] for fi in active]
+            rates = max_min_rates(caps, a_caps, a_res)
+
+            events += 1
+            if events > max_events:
+                for k, fi in enumerate(active):
+                    finish[fi] = t + remaining[fi] / rates[k] if rates[k] > 0.0 else t
+                while ptr < n:
+                    fi = order[ptr]
+                    ptr += 1
+                    # f64::MIN_POSITIVE (smallest positive normal)
+                    finish[fi] = arrivals[fi] + sizes[fi] / max(fcaps[fi], 2.2250738585072014e-308)
+                break
+
+            t_next = float("inf")
+            for k, fi in enumerate(active):
+                if rates[k] > 0.0:
+                    cand = t + remaining[fi] / rates[k]
+                    if cand < t_next:
+                        t_next = cand
+            if ptr < n and arrivals[order[ptr]] < t_next:
+                t_next = arrivals[order[ptr]]
+            if t_next == float("inf"):
+                for fi in active:
+                    finish[fi] = t
+                active = []
+                continue
+
+            dt = max(t_next - t, 0.0)
+            for k, fi in enumerate(active):
+                remaining[fi] -= rates[k] * dt
+            t = t_next
+
+            still = []
+            for fi in active:
+                if remaining[fi] <= byte_eps(sizes[fi]):
+                    finish[fi] = t
+                else:
+                    still.append(fi)
+            active = still
+            if not active and ptr >= n:
+                break
+        return finish
+
+
+# ---------------------------------------------------------------------------
+# cfd/solver.rs — StrongScaling::run_point + fig3 quick sweep
+# ---------------------------------------------------------------------------
+
+CORE_PEAK_FLOPS = 80.0e9
+CARTDG_EFFICIENCY = 0.10
+NS_PHYSICS_FACTOR = 10.0
+IMBALANCE_FRACTION = 0.03
+RK_STAGES = 4
+DG_FLOPS_PER_ELEM = 3.0 * float(FIELDS) * float(DG_NODES_1D**3 * DG_NODES_1D) * 2.0
+PER_ELEM_SECONDS = NS_PHYSICS_FACTOR * DG_FLOPS_PER_ELEM / (CORE_PEAK_FLOPS * CARTDG_EFFICIENCY)
+
+
+def run_point(fabric, cores):
+    part = MeshPartition(PAPER_MESH, cores)
+    net = NetSim(fabric)
+    elems = part.elems_per_rank()
+    compute_time = float(RK_STAGES) * float(elems) * PER_ELEM_SECONDS
+
+    msgs = []
+    for r in range(cores):
+        for n, face_elems in part.neighbors(r):
+            msgs.append((r, n, float(face_elems) * FACE_BYTES_PER_ELEM))
+
+    # Comm::round over a fresh communicator (all clocks zero).
+    reqs = [(src // CORES_PER_NODE, dst // CORES_PER_NODE, b, 0.0) for src, dst, b in msgs]
+    times = net.transfer_batch(reqs)
+    t = [0.0] * cores
+    for (src, dst, _), (send_release, recv_complete) in zip(msgs, times):
+        if send_release > t[src]:
+            t[src] = send_release
+        rc = max(recv_complete, 0.0)
+        if rc > t[dst]:
+            t[dst] = rc
+    wire_per_stage = max(t) if t else 0.0
+
+    interior_window = float(elems) * PER_ELEM_SECONDS
+    msgs_per_rank = float(len(part.neighbors(0)))
+    sync_overhead = msgs_per_rank * (fabric.per_msg_overhead + fabric.latency)
+    if net.inter_rack_messages > 0:
+        sync_overhead += 2.0 * fabric.switch_hop_latency
+    imbalance = IMBALANCE_FRACTION * interior_window
+    exposed = max(wire_per_stage - interior_window, 0.0) + sync_overhead + imbalance
+    return (
+        compute_time,
+        float(RK_STAGES) * exposed,
+        float(RK_STAGES) * wire_per_stage,
+        net.inter_rack_messages,
+    )
+
+
+def fig3_quick_csv():
+    headers = ["cores", "fabric", "compute (s)", "comm (s)", "comm wire (s)", "inter-rack msgs"]
+    rows = []
+    for fabric in (ETH, OPA):
+        for cores in (40, 320, 1280, 2560, 5120):
+            compute, comm, wire, inter_rack = run_point(fabric, cores)
+            rows.append([str(cores), fabric.name, fnum(compute), fnum(comm), fnum(wire), str(inter_rack)])
+    return to_csv(headers, rows)
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    default_out = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+    ap.add_argument("--out-dir", default=default_out)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # Sanity pins from the Rust test suite (zoo.rs asserts these exactly).
+    assert vgg16()[0].total_params() == 138_357_544
+    assert alexnet()[0].total_params() == 61_100_840
+    assert resnet50()[0].total_params() == 25_557_032
+    inception_params = inception_v3()[0].total_params()
+    assert abs(inception_params - 23.8e6) / 23.8e6 < 0.05, inception_params
+    assert factor3(40) == (5, 4, 2)
+    assert MeshPartition(PAPER_MESH, 64).elems_per_rank() == 512
+
+    for name, csv in (("table1", table1_csv()), ("fig3_quick", fig3_quick_csv())):
+        path = os.path.join(args.out_dir, f"{name}.csv")
+        with open(path, "w") as fh:
+            fh.write(csv)
+        print(f"wrote {path} ({len(csv)} bytes)")
+
+
+if __name__ == "__main__":
+    main()
