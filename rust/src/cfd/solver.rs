@@ -90,7 +90,8 @@ impl StrongScaling {
     pub fn run_point(&self, fabric: &FabricSpec, cores: usize) -> anyhow::Result<ScalingPoint> {
         let part = MeshPartition::new(self.mesh, cores);
         let placement = Placement::cores(&self.cluster, cores)?;
-        let mut net = NetSim::new(fabric.clone(), self.cluster.clone(), TransportOptions::default());
+        let mut net =
+            NetSim::try_new(fabric.clone(), self.cluster.clone(), TransportOptions::default())?;
         // All face messages of a stage form one event-engine batch below,
         // so per-NIC and per-uplink contention is observed, not estimated.
 
@@ -143,7 +144,11 @@ impl StrongScaling {
     }
 
     /// Full strong-scaling sweep.
-    pub fn sweep(&self, fabric: &FabricSpec, core_counts: &[usize]) -> anyhow::Result<Vec<ScalingPoint>> {
+    pub fn sweep(
+        &self,
+        fabric: &FabricSpec,
+        core_counts: &[usize],
+    ) -> anyhow::Result<Vec<ScalingPoint>> {
         core_counts.iter().map(|&c| self.run_point(fabric, c)).collect()
     }
 
@@ -203,7 +208,12 @@ mod tests {
         let s = StrongScaling::paper();
         let f = fabric(FabricKind::OmniPath100);
         let p = s.run_point(&f, 40).unwrap();
-        assert!(p.compute_time > 5.0 * p.comm_time, "compute {} comm {}", p.compute_time, p.comm_time);
+        assert!(
+            p.compute_time > 5.0 * p.comm_time,
+            "compute {} comm {}",
+            p.compute_time,
+            p.comm_time
+        );
     }
 
     #[test]

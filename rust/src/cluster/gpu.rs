@@ -58,9 +58,9 @@ pub const TITAN_BLACK: GpuModel = GpuModel {
 /// Look up a model by (case-insensitive) name fragment.
 pub fn by_name(name: &str) -> Option<&'static GpuModel> {
     let n = name.to_ascii_lowercase();
-    [&V100, &P100, &K40, &GTX580, &TITAN_BLACK]
-        .into_iter()
-        .find(|g| g.name.to_ascii_lowercase().contains(&n) || n.contains(&g.name.to_ascii_lowercase()))
+    [&V100, &P100, &K40, &GTX580, &TITAN_BLACK].into_iter().find(|g| {
+        g.name.to_ascii_lowercase().contains(&n) || n.contains(&g.name.to_ascii_lowercase())
+    })
 }
 
 #[cfg(test)]

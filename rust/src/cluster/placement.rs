@@ -79,7 +79,11 @@ impl Placement {
         self.endpoints[a].node == self.endpoints[b].node
     }
 
-    /// Do two ranks sit in different racks?
+    /// Do two ranks sit in different racks, by the *cluster's* rack
+    /// scalar? NOTE: the engine classifies inter-ToR traffic through the
+    /// fabric topology (`Topology::tor_of_node`), which only coincides
+    /// with this when `[topology] leaf_ports` is unset — prefer
+    /// [`crate::fabric::Comm::crosses_rack`] anywhere a `NetSim` exists.
     pub fn crosses_rack(&self, cluster: &ClusterSpec, a: usize, b: usize) -> bool {
         cluster.rack_of_node(self.endpoints[a].node)
             != cluster.rack_of_node(self.endpoints[b].node)
@@ -92,6 +96,25 @@ impl Placement {
             groups[e.node].push(e.rank);
         }
         groups
+    }
+
+    /// Group an arbitrary subset of ranks by a key of their *node* —
+    /// e.g. the topology's ToR or dragonfly-group index. Groups come out
+    /// in ascending key order; within a group, ranks keep their input
+    /// order. This is what makes leader election topology-aware: the
+    /// hierarchical collective groups per-node leaders by
+    /// `Topology::tor_of_node` instead of a rack scalar.
+    pub fn group_by_node<F: Fn(usize) -> usize>(
+        &self,
+        ranks: &[usize],
+        key: F,
+    ) -> Vec<Vec<usize>> {
+        let mut map: std::collections::BTreeMap<usize, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for &r in ranks {
+            map.entry(key(self.endpoints[r].node)).or_default().push(r);
+        }
+        map.into_values().collect()
     }
 }
 
@@ -138,6 +161,19 @@ mod tests {
         let c = ClusterSpec::txgaia();
         assert!(Placement::gpus(&c, 2 * 448 + 1).is_err());
         assert!(Placement::gpus(&c, 0).is_err());
+    }
+
+    #[test]
+    fn group_by_node_partitions_and_orders() {
+        let c = ClusterSpec::txgaia();
+        let p = Placement::gpus(&c, 12).unwrap(); // 6 nodes
+        // Key = node / 2: three groups of two nodes each.
+        let leaders: Vec<usize> = (0..6).map(|n| 2 * n).collect(); // rank 2n on node n
+        let groups = p.group_by_node(&leaders, |node| node / 2);
+        assert_eq!(groups, vec![vec![0, 2], vec![4, 6], vec![8, 10]]);
+        // Subset order within a group follows input order.
+        let groups = p.group_by_node(&[10, 0, 4], |node| node / 2);
+        assert_eq!(groups, vec![vec![0], vec![4], vec![10]]);
     }
 
     #[test]

@@ -1,8 +1,18 @@
-//! Hierarchical (NCCL-style) allreduce: intra-node reduce to a per-node
-//! leader over PCIe, ring allreduce among leaders over the fabric, then
-//! intra-node broadcast. With 2 GPUs/node (TX-GAIA) this halves the
-//! number of NIC flows vs a flat ring and keeps the PCIe hops off the
-//! wire path — the configuration Horovod+NCCL used in the paper.
+//! Hierarchical (NCCL-style) allreduce with topology-aware leader
+//! election: intra-node reduce to a per-node leader over PCIe, ring
+//! allreduce among node leaders **within each ToR** (the logically
+//! parallel per-ToR rings batch their rounds together so they contend
+//! realistically at the leaf tier), a ring among per-ToR leaders across
+//! the spine tier, a fan-out back to the node leaders, and an intra-node
+//! broadcast. ToR membership comes from the fabric's
+//! [`crate::fabric::topology::Topology`], not from a rack scalar — so
+//! placements that span several leaf switches only cross the
+//! oversubscribed uplinks during the (short) inter-ToR phase.
+//!
+//! With every rank under a single ToR this degenerates to exactly the
+//! pre-topology algorithm: intra-node reduce, one ring over node
+//! leaders, intra-node broadcast — the configuration Horovod+NCCL used
+//! in the paper (2 GPUs/node on TX-GAIA).
 
 use super::{Buffers, Collective, BYTES_PER_ELEM};
 use crate::fabric::Comm;
@@ -28,7 +38,8 @@ impl Collective for Hierarchical {
         let groups = comm.placement.by_node();
         let leaders: Vec<usize> = groups.iter().map(|g| g[0]).collect();
 
-        // Phase 1: intra-node reduce to the leader.
+        // Phase 1: intra-node reduce to the leader (PCIe, point-to-point
+        // links — no shared fabric resources).
         for g in &groups {
             let leader = g[0];
             for &r in &g[1..] {
@@ -37,10 +48,42 @@ impl Collective for Hierarchical {
             }
         }
 
-        // Phase 2: ring among leaders. Build a sub-communicator view by
-        // running ring manually over leader indices.
         if leaders.len() > 1 {
-            ring_over_subset(comm, bufs, &leaders, n);
+            // Phase 2a: ring allreduce among node leaders within each
+            // ToR. The per-ToR rings are logically parallel; their
+            // rounds are submitted as merged batches so same-tier links
+            // contend realistically. After this, every node leader holds
+            // its ToR's partial sum.
+            let tors: Vec<Vec<usize>> = {
+                let topo = &comm.net.topology;
+                comm.placement.group_by_node(&leaders, |node| topo.tor_of_node(node))
+            };
+            ring_over_groups(comm, bufs, &tors, n);
+
+            if tors.len() > 1 {
+                // Phase 2b: ring among the per-ToR leaders — the only
+                // phase whose flows cross the (possibly oversubscribed)
+                // leaf->spine uplinks.
+                let tor_leaders: Vec<usize> = tors.iter().map(|g| g[0]).collect();
+                ring_over_groups(comm, bufs, std::slice::from_ref(&tor_leaders), n);
+
+                // Phase 2c: fan the global sum back out to the other
+                // node leaders, all ToRs in one concurrent round.
+                let mut msgs = Vec::new();
+                let mut copies = Vec::new();
+                for g in &tors {
+                    for &r in &g[1..] {
+                        msgs.push((g[0], r, bytes));
+                        copies.push((r, g[0]));
+                    }
+                }
+                if !msgs.is_empty() {
+                    comm.round(&msgs);
+                    for (dst, src) in copies {
+                        bufs.copy_chunk(dst, src, 0..n);
+                    }
+                }
+            }
         }
 
         // Phase 3: intra-node broadcast from the leader.
@@ -55,42 +98,66 @@ impl Collective for Hierarchical {
     }
 }
 
-/// Ring allreduce restricted to `members` (global rank ids).
-fn ring_over_subset(comm: &mut Comm, bufs: &mut dyn Buffers, members: &[usize], n: usize) {
-    let p = members.len();
-    let chunks = super::chunk_ranges(n, p);
-    for k in 0..p - 1 {
-        let msgs: Vec<(usize, usize, f64)> = (0..p)
-            .map(|idx| {
+/// Ring allreduce (reduce-scatter + allgather) run over several disjoint
+/// member groups in lockstep: round `k` of every group that still has a
+/// round `k` is submitted as ONE communication round, so the logically
+/// parallel rings share links instead of serializing. A single group is
+/// exactly the classic ring over that subset.
+fn ring_over_groups(comm: &mut Comm, bufs: &mut dyn Buffers, groups: &[Vec<usize>], n: usize) {
+    let max_p = groups.iter().map(|g| g.len()).max().unwrap_or(0);
+    if max_p < 2 {
+        return;
+    }
+    // Chunk tables depend only on (n, group size): compute them once
+    // ahead of the round loops, exactly as the old single-ring code did.
+    let chunk_tables: Vec<Vec<std::ops::Range<usize>>> =
+        groups.iter().map(|g| super::chunk_ranges(n, g.len().max(1))).collect();
+    // Reduce-scatter rounds.
+    for k in 0..max_p - 1 {
+        let mut msgs: Vec<(usize, usize, f64)> = Vec::new();
+        let mut reduces: Vec<(usize, usize, std::ops::Range<usize>)> = Vec::new();
+        for (members, chunks) in groups.iter().zip(&chunk_tables) {
+            let p = members.len();
+            if p < 2 || k >= p - 1 {
+                continue;
+            }
+            for idx in 0..p {
                 let c = (idx + p - k) % p;
-                (
+                msgs.push((
                     members[idx],
                     members[(idx + 1) % p],
                     chunks[c].len() as f64 * BYTES_PER_ELEM,
-                )
-            })
-            .collect();
+                ));
+                reduces.push((members[(idx + 1) % p], members[idx], chunks[c].clone()));
+            }
+        }
         comm.round(&msgs);
-        for idx in 0..p {
-            let c = (idx + p - k) % p;
-            bufs.reduce_chunk(members[(idx + 1) % p], members[idx], chunks[c].clone());
+        for (dst, src, range) in reduces {
+            bufs.reduce_chunk(dst, src, range);
         }
     }
-    for k in 0..p - 1 {
-        let msgs: Vec<(usize, usize, f64)> = (0..p)
-            .map(|idx| {
+    // Allgather rounds.
+    for k in 0..max_p - 1 {
+        let mut msgs: Vec<(usize, usize, f64)> = Vec::new();
+        let mut copies: Vec<(usize, usize, std::ops::Range<usize>)> = Vec::new();
+        for (members, chunks) in groups.iter().zip(&chunk_tables) {
+            let p = members.len();
+            if p < 2 || k >= p - 1 {
+                continue;
+            }
+            for idx in 0..p {
                 let c = (idx + 1 + p - k) % p;
-                (
+                msgs.push((
                     members[idx],
                     members[(idx + 1) % p],
                     chunks[c].len() as f64 * BYTES_PER_ELEM,
-                )
-            })
-            .collect();
+                ));
+                copies.push((members[(idx + 1) % p], members[idx], chunks[c].clone()));
+            }
+        }
         comm.round(&msgs);
-        for idx in 0..p {
-            let c = (idx + 1 + p - k) % p;
-            bufs.copy_chunk(members[(idx + 1) % p], members[idx], chunks[c].clone());
+        for (dst, src, range) in copies {
+            bufs.copy_chunk(dst, src, range);
         }
     }
 }
@@ -98,10 +165,12 @@ fn ring_over_subset(comm: &mut Comm, bufs: &mut dyn Buffers, members: &[usize], 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::collectives::RingAllreduce;
+    use crate::cluster::Placement;
     use crate::collectives::testutil::{check_allreduce, gpu_world};
-    use crate::collectives::NullBuffers;
-    use crate::config::spec::FabricKind;
+    use crate::collectives::{NullBuffers, RingAllreduce};
+    use crate::config::presets::fabric;
+    use crate::config::spec::{ClusterSpec, FabricKind, TransportOptions};
+    use crate::fabric::NetSim;
     use crate::util::prop;
 
     #[test]
@@ -170,5 +239,69 @@ mod tests {
         let mut comm = Comm::new(&mut net, &placement);
         Hierarchical::default().allreduce(&mut comm, &mut NullBuffers { elems: 1000 });
         assert_eq!(net.stats.inter_node_messages, 0);
+    }
+
+    /// Cluster with tiny racks so modest rank counts span several ToRs.
+    fn small_rack_world(ranks: usize) -> (NetSim, Placement) {
+        let mut cluster = ClusterSpec::txgaia();
+        cluster.nodes_per_rack = 2; // 4 GPUs per ToR
+        let placement = Placement::gpus(&cluster, ranks).unwrap();
+        let net = NetSim::new(
+            fabric(FabricKind::EthernetRoce25),
+            cluster,
+            TransportOptions::default(),
+        );
+        (net, placement)
+    }
+
+    #[test]
+    fn tor_aware_election_crosses_uplinks_less_than_flat_ring() {
+        // 24 GPUs on 12 nodes over 6 two-node ToRs: the flat ring crosses
+        // a ToR boundary ~6 times per round for 2*(12-1) leader rounds;
+        // the ToR-aware hierarchy confines uplink crossings to the short
+        // inter-ToR-leader ring.
+        let elems = 50_000;
+        let (mut net_h, placement_h) = small_rack_world(24);
+        {
+            let mut comm = Comm::new(&mut net_h, &placement_h);
+            Hierarchical::default().allreduce(&mut comm, &mut NullBuffers { elems });
+        }
+        let (mut net_f, placement_f) = small_rack_world(24);
+        {
+            let mut comm = Comm::new(&mut net_f, &placement_f);
+            RingAllreduce.allreduce(&mut comm, &mut NullBuffers { elems });
+        }
+        assert!(net_h.stats.inter_rack_messages > 0, "multi-ToR world must cross uplinks");
+        assert!(
+            net_h.stats.inter_rack_messages < net_f.stats.inter_rack_messages,
+            "hierarchical {} !< flat ring {}",
+            net_h.stats.inter_rack_messages,
+            net_f.stats.inter_rack_messages
+        );
+    }
+
+    #[test]
+    fn multi_tor_hierarchy_still_correct() {
+        // Same oracle as check_allreduce but over the small-rack cluster,
+        // so leader election genuinely goes multi-tier (2..=5 ToRs).
+        use crate::collectives::testutil::naive_sum;
+        for ranks in [5usize, 8, 12, 17] {
+            let (mut net, placement) = small_rack_world(ranks);
+            let mut bufs =
+                crate::collectives::testutil::random_buffers(ranks, 97, 7 + ranks as u64);
+            let expect = naive_sum(&bufs);
+            let mut comm = Comm::new(&mut net, &placement);
+            let t = Hierarchical::default().allreduce(&mut comm, &mut bufs);
+            assert!(t > 0.0);
+            for (r, buf) in bufs.data.iter().enumerate() {
+                for (i, (got, want)) in buf.iter().zip(&expect).enumerate() {
+                    let tol = 1e-4 * want.abs().max(1.0);
+                    assert!(
+                        (got - want).abs() <= tol,
+                        "rank {r} elem {i}: {got} vs {want} (ranks={ranks})"
+                    );
+                }
+            }
+        }
     }
 }

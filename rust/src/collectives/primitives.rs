@@ -195,7 +195,8 @@ mod tests {
         // Expected: chunk c (positional) of every rank ends equal to chunk
         // c of rank c.
         let chunks = chunk_ranges(n, p);
-        let expect: Vec<Vec<f32>> = (0..p).map(|c| bufs.data[c][chunks[c].clone()].to_vec()).collect();
+        let expect: Vec<Vec<f32>> =
+            (0..p).map(|c| bufs.data[c][chunks[c].clone()].to_vec()).collect();
         let mut comm = Comm::new(&mut net, &placement);
         allgather(&mut comm, &mut bufs);
         for r in 0..p {

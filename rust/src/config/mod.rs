@@ -7,5 +7,6 @@ pub mod spec;
 pub mod toml;
 
 pub use spec::{
-    AffinityConfig, ClusterSpec, FabricKind, FabricSpec, RunSpec, TransportOptions,
+    AffinityConfig, ClusterSpec, FabricKind, FabricSpec, RunSpec, TopologyKind, TopologySpec,
+    TransportOptions,
 };

@@ -6,7 +6,7 @@
 //! overheads for the no-RDMA ablation. They are *model inputs*, not
 //! claims — every value can be overridden from TOML.
 
-use super::spec::{FabricKind, FabricSpec};
+use super::spec::{FabricKind, FabricSpec, TopologySpec};
 use crate::util::units::us;
 
 /// Preset fabric models.
@@ -29,6 +29,10 @@ pub fn fabric(kind: FabricKind) -> FabricSpec {
             // 32 nodes/rack at 25 Gb/s behind ~8x25G uplinks (4:1
             // oversubscription), typical of the deployed leaf switches.
             rack_uplink_gbps: 200.0,
+            // Default topology = one spine fed by the scalar uplink above
+            // (bit-for-bit the legacy two-tier model); override with a
+            // `[topology]` table for explicit fat-tree / dragonfly tiers.
+            topology: TopologySpec::default(),
         },
         FabricKind::EthernetTcp25 => FabricSpec {
             name: "25GbE-TCP".into(),
@@ -43,6 +47,7 @@ pub fn fabric(kind: FabricKind) -> FabricSpec {
             congestion_knee_flows: 128.0,
             congestion_coeff: 0.5,
             rack_uplink_gbps: 200.0,
+            topology: TopologySpec::default(),
         },
         FabricKind::OmniPath100 => FabricSpec {
             name: "OPA-100".into(),
@@ -62,6 +67,7 @@ pub fn fabric(kind: FabricKind) -> FabricSpec {
             // OPA edge-director fabric: 8x100G uplinks per edge switch
             // (2:1 taper), so rack crossings rarely bottleneck.
             rack_uplink_gbps: 800.0,
+            topology: TopologySpec::default(),
         },
         FabricKind::InfinibandEdr100 => FabricSpec {
             name: "IB-EDR".into(),
@@ -76,6 +82,7 @@ pub fn fabric(kind: FabricKind) -> FabricSpec {
             congestion_knee_flows: 1024.0,
             congestion_coeff: 0.1,
             rack_uplink_gbps: 800.0,
+            topology: TopologySpec::default(),
         },
     }
 }
@@ -108,6 +115,16 @@ use_rdma = true
 num_streams = 2        # concurrent collective channels (1 = serialized)
 # rendezvous_threshold_bytes = 32768.0
 # chunk_mib = 16.0     # chunk-pipeline buckets above this size
+
+[topology]
+kind = "fat-tree"      # or "dragonfly" (adds per-group global links)
+spines = 2             # ECMP width of the leaf->spine tier
+oversubscription = 4.0 # leaf->spine taper (4:1). Omit this AND
+                       # uplink_gbps to fall back to the fabric's scalar
+                       # rack_uplink_gbps (the legacy model, bit-for-bit)
+# leaf_ports = 32      # node-facing ports per ToR [cluster nodes_per_rack]
+# uplink_gbps = 200.0  # explicit per-ToR aggregate uplink (overrides ratio)
+# ecmp_seed = 1        # seed of the deterministic ECMP route hash
 
 [run]
 seed = 7
@@ -162,5 +179,16 @@ mod tests {
                 .unwrap();
         assert_eq!(transport.num_streams, 2);
         assert!(transport.gpudirect && transport.use_rdma);
+        let topo = TopologySpec::from_toml(doc.get("topology").unwrap()).unwrap();
+        assert_eq!(topo.spines, 2);
+        assert_eq!(topo.oversubscription, Some(4.0));
+        topo.validate_for(&cluster).unwrap();
+    }
+
+    #[test]
+    fn preset_topology_is_the_legacy_default() {
+        for kind in [FabricKind::EthernetRoce25, FabricKind::OmniPath100] {
+            assert_eq!(fabric(kind).topology, TopologySpec::default());
+        }
     }
 }

@@ -30,6 +30,250 @@ impl FabricKind {
     }
 }
 
+/// Which multi-tier interconnect shape a [`TopologySpec`] describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    /// Two-level folded Clos: node -> ToR (leaf) -> spine, with ECMP
+    /// across spines and a configurable leaf->spine oversubscription.
+    FatTree,
+    /// Dragonfly-style: ToRs are grouped; inter-group traffic also claims
+    /// the source group's aggregate global-egress link and the
+    /// destination group's global-ingress link.
+    Dragonfly,
+}
+
+impl TopologyKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fat-tree" | "fattree" | "clos" => TopologyKind::FatTree,
+            "dragonfly" => TopologyKind::Dragonfly,
+            other => {
+                bail!("unknown topology kind '{other}' (expected 'fat-tree' or 'dragonfly')")
+            }
+        })
+    }
+}
+
+/// Declarative description of the switch tiers above the NICs. The
+/// runtime link graph is built by [`crate::fabric::topology::Topology`];
+/// the default spec reproduces the legacy scalar rack-uplink model
+/// **bit-for-bit** (one spine, uplink capacity from the fabric's
+/// `rack_uplink_gbps`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TopologySpec {
+    pub kind: TopologyKind,
+    /// Downlink (node-facing) ports per leaf/ToR switch. `None` uses the
+    /// cluster's `nodes_per_rack` (ToR == rack, the legacy grouping).
+    pub leaf_ports: Option<usize>,
+    /// Explicit leaf-switch count; `None` derives `ceil(nodes / ports)`.
+    pub tors: Option<usize>,
+    /// Spine/core switches; inter-ToR routes pick one by ECMP hash.
+    pub spines: usize,
+    /// Leaf->spine oversubscription ratio (>= 1.0; 1.0 = full bisection).
+    /// Aggregate uplink per ToR = `leaf_ports x NIC rate / ratio`, split
+    /// evenly across the spines. `None` (with no `uplink_gbps`) falls
+    /// back to the fabric's scalar `rack_uplink_gbps` — the legacy
+    /// two-tier model, bit-for-bit.
+    pub oversubscription: Option<f64>,
+    /// Explicit aggregate per-ToR uplink in Gb/s (takes precedence over
+    /// `oversubscription`; same efficiency derating as the NIC rate).
+    pub uplink_gbps: Option<f64>,
+    /// Dragonfly only: number of ToR groups.
+    pub groups: usize,
+    /// Dragonfly only: oversubscription of each group's aggregate global
+    /// links relative to the group's injection bandwidth (>= 1.0).
+    pub global_oversubscription: f64,
+    /// Seed of the order-independent ECMP route hash.
+    pub ecmp_seed: u64,
+}
+
+impl Default for TopologySpec {
+    fn default() -> Self {
+        TopologySpec {
+            kind: TopologyKind::FatTree,
+            leaf_ports: None,
+            tors: None,
+            spines: 1,
+            oversubscription: None,
+            uplink_gbps: None,
+            groups: 1,
+            global_oversubscription: 1.0,
+            ecmp_seed: 0xEC4D_0001,
+        }
+    }
+}
+
+impl TopologySpec {
+    /// Build from a parsed TOML `[topology]` table, filling defaults. A
+    /// key that is present with the wrong type is an error, not a
+    /// silently kept default (same contract as `[transport]`).
+    pub fn from_toml(v: &Json) -> Result<TopologySpec> {
+        let getf = |key: &str| -> Result<Option<f64>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => match x.as_f64() {
+                    Some(f) => Ok(Some(f)),
+                    None => bail!("topology.{key} must be a number"),
+                },
+            }
+        };
+        let getu = |key: &str| -> Result<Option<usize>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => match x.as_f64() {
+                    Some(f) if f.fract() == 0.0 && f >= 0.0 => Ok(Some(f as usize)),
+                    Some(f) => bail!("topology.{key} must be a non-negative integer, got {f}"),
+                    None => bail!("topology.{key} must be a non-negative integer"),
+                },
+            }
+        };
+        let mut t = TopologySpec::default();
+        if let Some(k) = v.get("kind") {
+            match k.as_str() {
+                Some(s) => t.kind = TopologyKind::parse(s)?,
+                None => bail!("topology.kind must be a string"),
+            }
+        }
+        if let Some(x) = getu("leaf_ports")? {
+            t.leaf_ports = Some(x);
+        }
+        if let Some(x) = getu("tors")? {
+            t.tors = Some(x);
+        }
+        if let Some(x) = getu("spines")? {
+            t.spines = x;
+        }
+        if let Some(x) = getf("oversubscription")? {
+            t.oversubscription = Some(x);
+        }
+        if let Some(x) = getf("uplink_gbps")? {
+            t.uplink_gbps = Some(x);
+        }
+        if let Some(x) = getu("groups")? {
+            t.groups = x;
+        }
+        if let Some(x) = getf("global_oversubscription")? {
+            t.global_oversubscription = x;
+        }
+        if let Some(x) = getu("ecmp_seed")? {
+            // The TOML layer carries numbers as f64: integers of 2^53 or
+            // more may already have been silently rounded before we see
+            // them, so reject the whole range loudly.
+            if x as u64 >= (1u64 << 53) {
+                bail!("topology.ecmp_seed {x} is not exactly representable (must be < 2^53)");
+            }
+            t.ecmp_seed = x as u64;
+        }
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Cluster-independent validation (shapes and capacities).
+    pub fn validate(&self) -> Result<()> {
+        if self.spines == 0 {
+            bail!("topology: spines must be >= 1");
+        }
+        if self.spines > 4096 {
+            bail!("topology: {} spines is implausible (max 4096)", self.spines);
+        }
+        // Tier-shape bound: keeps `tors * ports` and the link-table size
+        // far from usize overflow, so oversized configs fail loudly here
+        // instead of panicking (or allocating absurdly) in the builder.
+        const MAX_TIER: usize = 1 << 20;
+        if let Some(p) = self.leaf_ports {
+            if p == 0 || p > MAX_TIER {
+                bail!("topology: leaf_ports {p} out of range 1..={MAX_TIER}");
+            }
+        }
+        if let Some(t) = self.tors {
+            if t == 0 || t > MAX_TIER {
+                bail!("topology: tors {t} out of range 1..={MAX_TIER}");
+            }
+        }
+        if let Some(r) = self.oversubscription {
+            if !r.is_finite() || r < 1.0 {
+                bail!("topology: oversubscription ratio {r} must be >= 1 (1.0 = full bisection)");
+            }
+        }
+        if let Some(g) = self.uplink_gbps {
+            if !(g > 0.0) {
+                bail!("topology: uplink_gbps {g} is a zero-capacity link");
+            }
+        }
+        if self.groups == 0 || self.groups > MAX_TIER {
+            bail!("topology: groups {} out of range 1..={MAX_TIER}", self.groups);
+        }
+        if !self.global_oversubscription.is_finite() || self.global_oversubscription < 1.0 {
+            bail!(
+                "topology: global_oversubscription {} must be >= 1",
+                self.global_oversubscription
+            );
+        }
+        Ok(())
+    }
+
+    /// Validation against a concrete cluster: the leaf tier must have a
+    /// downlink port for every node, the link table must stay a sane
+    /// size, and dragonfly groups need ToRs.
+    pub fn validate_for(&self, cluster: &ClusterSpec) -> Result<()> {
+        self.validate()?;
+        let ports = self.leaf_ports.unwrap_or(cluster.nodes_per_rack);
+        let tors = self.tors.unwrap_or_else(|| cluster.nodes.div_ceil(ports));
+        // Bound the up/down link table (tors x spines entries per
+        // direction): a validated spec must never drive the builder into
+        // a multi-GiB allocation.
+        if tors.saturating_mul(self.spines) > (1 << 22) {
+            bail!(
+                "topology: {} ToR(s) x {} spine(s) is an implausibly large link table",
+                tors,
+                self.spines
+            );
+        }
+        if tors * ports < cluster.nodes {
+            bail!(
+                "topology: {} nodes exceed the leaf tier's {} downlink ports \
+                 ({} ToR(s) x {} port(s))",
+                cluster.nodes,
+                tors * ports,
+                tors,
+                ports
+            );
+        }
+        // When link capacity is *derived from port counts* (the
+        // oversubscription path, and dragonfly's global links), a ragged
+        // last ToR would get an uplink sized for ports it does not have —
+        // silently modeling the wrong fabric. The legacy scalar/explicit
+        // uplink paths keep the old partial-rack semantics.
+        if (self.oversubscription.is_some() || self.kind == TopologyKind::Dragonfly)
+            && self.uplink_gbps.is_none()
+            && cluster.nodes % ports != 0
+        {
+            bail!(
+                "topology: {} nodes do not fill {}-port ToRs evenly; align leaf_ports \
+                 or set uplink_gbps explicitly",
+                cluster.nodes,
+                ports
+            );
+        }
+        if self.kind == TopologyKind::Dragonfly {
+            if self.groups > tors {
+                bail!("topology: {} dragonfly groups but only {} ToR(s)", self.groups, tors);
+            }
+            // Ragged partitions would silently realize fewer groups than
+            // configured (and mis-size the last group's global links):
+            // require an even split instead of modeling the wrong fabric.
+            if tors % self.groups != 0 {
+                bail!(
+                    "topology: {} ToR(s) do not divide evenly into {} dragonfly group(s)",
+                    tors,
+                    self.groups
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Network fabric model parameters (see DESIGN.md §6 for sources).
 #[derive(Clone, Debug)]
 pub struct FabricSpec {
@@ -59,7 +303,12 @@ pub struct FabricSpec {
     /// The discrete-event engine models every inter-rack flow as holding a
     /// share of its source rack's up-link and its destination rack's
     /// down-link, so oversubscribed leaf-spine designs contend here.
+    /// With the default [`TopologySpec`] this scalar *is* the per-ToR
+    /// uplink capacity; an explicit `[topology]` table supersedes it.
     pub rack_uplink_gbps: f64,
+    /// Switch tiers above the NICs (fat-tree / dragonfly). The default
+    /// reproduces the scalar rack-uplink model bit-for-bit.
+    pub topology: TopologySpec,
 }
 
 impl FabricSpec {
@@ -104,7 +353,8 @@ impl FabricSpec {
         spec.efficiency = getf("efficiency", spec.efficiency);
         spec.per_msg_overhead = getf("per_msg_overhead_us", spec.per_msg_overhead * 1e6) * 1e-6;
         spec.eager_threshold = getf("eager_threshold", spec.eager_threshold);
-        spec.switch_hop_latency = getf("switch_hop_latency_us", spec.switch_hop_latency * 1e6) * 1e-6;
+        spec.switch_hop_latency =
+            getf("switch_hop_latency_us", spec.switch_hop_latency * 1e6) * 1e-6;
         spec.congestion_knee_flows = getf("congestion_knee_flows", spec.congestion_knee_flows);
         spec.congestion_coeff = getf("congestion_coeff", spec.congestion_coeff);
         spec.rack_uplink_gbps = getf("rack_uplink_gbps", spec.rack_uplink_gbps);
@@ -131,6 +381,7 @@ impl FabricSpec {
         if self.rack_uplink_gbps <= 0.0 {
             bail!("fabric '{}': rack uplink must be positive", self.name);
         }
+        self.topology.validate()?;
         Ok(())
     }
 }
@@ -487,5 +738,87 @@ mod tests {
         let c = ClusterSpec::from_toml(&doc).unwrap();
         assert_eq!(c.nodes, 16);
         assert_eq!(c.affinity, AffinityConfig::GpuPerSocket);
+    }
+
+    #[test]
+    fn topology_from_toml_defaults_and_overrides() {
+        let t = TopologySpec::from_toml(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(t, TopologySpec::default());
+        assert_eq!(t.kind, TopologyKind::FatTree);
+        assert_eq!(t.spines, 1);
+        assert!(t.oversubscription.is_none() && t.uplink_gbps.is_none());
+
+        let doc = toml::parse(
+            "kind = \"fat-tree\"\nspines = 4\noversubscription = 2.0\nleaf_ports = 16\necmp_seed = 7",
+        )
+        .unwrap();
+        let t = TopologySpec::from_toml(&doc).unwrap();
+        assert_eq!(t.spines, 4);
+        assert_eq!(t.oversubscription, Some(2.0));
+        assert_eq!(t.leaf_ports, Some(16));
+        assert_eq!(t.ecmp_seed, 7);
+
+        let doc = toml::parse("kind = \"dragonfly\"\ngroups = 4\nglobal_oversubscription = 2.0")
+            .unwrap();
+        let t = TopologySpec::from_toml(&doc).unwrap();
+        assert_eq!(t.kind, TopologyKind::Dragonfly);
+        assert_eq!(t.groups, 4);
+    }
+
+    #[test]
+    fn topology_validation_rejects_nonsense() {
+        // Value errors: zero-capacity link, oversubscription below 1,
+        // degenerate tier shapes.
+        for doc in [
+            "uplink_gbps = 0.0",
+            "uplink_gbps = -5.0",
+            "oversubscription = 0.5",
+            "spines = 0",
+            "leaf_ports = 0",
+            "tors = 0",
+            "groups = 0",
+            "global_oversubscription = 0.9",
+            "kind = \"moebius-strip\"",
+        ] {
+            assert!(
+                TopologySpec::from_toml(&toml::parse(doc).unwrap()).is_err(),
+                "'{doc}' should be rejected"
+            );
+        }
+        // Type errors are loud, not silently kept defaults.
+        for doc in [
+            "spines = \"two\"",
+            "spines = 1.5",
+            "oversubscription = true",
+            "kind = 4",
+            "leaf_ports = -3",
+        ] {
+            assert!(
+                TopologySpec::from_toml(&toml::parse(doc).unwrap()).is_err(),
+                "'{doc}' should be a type error"
+            );
+        }
+    }
+
+    #[test]
+    fn topology_validate_for_checks_leaf_port_budget() {
+        let mut cluster = ClusterSpec::txgaia();
+        cluster.nodes = 16;
+        cluster.nodes_per_rack = 4;
+        // 2 ToRs x 4 ports = 8 downlinks cannot host 16 nodes.
+        let spec = TopologySpec { tors: Some(2), leaf_ports: Some(4), ..Default::default() };
+        let err = spec.validate_for(&cluster).unwrap_err().to_string();
+        assert!(err.contains("leaf"), "unexpected error: {err}");
+        // Enough ports (derived ToR count) passes.
+        let spec = TopologySpec { leaf_ports: Some(4), ..Default::default() };
+        spec.validate_for(&cluster).unwrap();
+        // Dragonfly with more groups than ToRs is rejected.
+        let spec = TopologySpec {
+            kind: TopologyKind::Dragonfly,
+            leaf_ports: Some(4),
+            groups: 9,
+            ..Default::default()
+        };
+        assert!(spec.validate_for(&cluster).is_err());
     }
 }

@@ -5,11 +5,12 @@
 //! * GPUDirect RDMA vs host-staged copies
 //! * RDMA (RoCE) vs plain TCP on the same 25 GbE hardware
 //! * communication-stream count (the multi-stream overlap scheduler)
+//! * leaf->spine oversubscription of the fabric topology
 
 use super::sweeps::{CellOut, Runner};
-use crate::collectives::RingAllreduce;
+use crate::collectives::{RecursiveHalvingDoubling, RingAllreduce};
 use crate::config::presets::fabric;
-use crate::config::spec::{ClusterSpec, FabricKind, RunSpec, TransportOptions};
+use crate::config::spec::{ClusterSpec, FabricKind, FabricSpec, RunSpec, TransportOptions};
 use crate::models::perf::Precision;
 use crate::models::zoo::resnet50;
 use crate::trainer::TrainerSim;
@@ -17,14 +18,14 @@ use crate::util::table::{fnum, Table};
 use crate::util::units::MIB;
 
 fn trainer(
-    kind: FabricKind,
+    fabric: FabricSpec,
     opts: TransportOptions,
     fusion_bytes: f64,
     overlap: bool,
 ) -> TrainerSim {
     TrainerSim {
         arch: resnet50(),
-        fabric: fabric(kind),
+        fabric,
         cluster: ClusterSpec::txgaia(),
         opts,
         strategy: Box::new(RingAllreduce),
@@ -64,8 +65,12 @@ pub fn fusion_sweep_with(quick: bool, runner: &Runner) -> (Table, Vec<AblationPo
         &items,
         |mib| format!("{mib}MiB:quick={quick}"),
         |_, mib, seed| {
-            let tr =
-                trainer(FabricKind::EthernetRoce25, TransportOptions::default(), mib * MIB, true);
+            let tr = trainer(
+                fabric(FabricKind::EthernetRoce25),
+                TransportOptions::default(),
+                mib * MIB,
+                true,
+            );
             let r = tr.run(64, &spec(quick, seed)).unwrap();
             CellOut::new(vec![format!("{mib} MiB"), fnum(r.images_per_sec)])
                 .val("img_s", r.images_per_sec)
@@ -108,7 +113,7 @@ pub fn toggles_with(quick: bool, runner: &Runner) -> (Table, Vec<AblationPoint>)
         &cases,
         |(name, _, _)| format!("{name}:quick={quick}"),
         |_, (name, opts, overlap), seed| {
-            let tr = trainer(FabricKind::EthernetRoce25, *opts, 64.0 * MIB, *overlap);
+            let tr = trainer(fabric(FabricKind::EthernetRoce25), *opts, 64.0 * MIB, *overlap);
             let r = tr.run(64, &spec(quick, seed)).unwrap();
             CellOut::new(vec![name.to_string(), fnum(r.images_per_sec)])
                 .val("img_s", r.images_per_sec)
@@ -160,7 +165,7 @@ pub fn streams_sweep_with(quick: bool, runner: &Runner) -> (Table, Vec<StreamsPo
             // in scheduling. That makes "streams > 1 strictly reduces
             // step time" a property of the scheduler, not of seed luck.
             let opts = TransportOptions { num_streams: *streams, ..Default::default() };
-            let tr = trainer(fabric.kind, opts, 64.0 * MIB, true);
+            let tr = trainer(fabric.clone(), opts, 64.0 * MIB, true);
             let r = tr.run(32, &spec(quick, runner.seed)).unwrap();
             CellOut::new(vec![
                 fabric.name.clone(),
@@ -183,6 +188,87 @@ pub fn streams_sweep_with(quick: bool, runner: &Runner) -> (Table, Vec<StreamsPo
         pts.push(StreamsPoint {
             fabric: fabric.name.clone(),
             streams: *streams,
+            images_per_sec: cell.get("img_s"),
+            step_time_mean: cell.get("step_s"),
+            comm_fraction: cell.get("comm_frac"),
+        });
+        t.row(cell.row);
+    }
+    (t, pts)
+}
+
+/// One cell of the oversubscription ablation.
+pub struct OversubPoint {
+    pub fabric: String,
+    pub ratio: f64,
+    pub gpus: usize,
+    pub images_per_sec: f64,
+    pub step_time_mean: f64,
+    pub comm_fraction: f64,
+}
+
+/// Leaf->spine oversubscription sweep: fabric x {1:1, 2:1, 4:1, 8:1} x
+/// GPU counts spanning the single-ToR -> multi-ToR boundary (64 GPUs
+/// fill one 32-node rack on TX-GAIA; 128 span two).
+///
+/// Cells are deliberately **seed-paired**: every cell runs at the
+/// runner's base seed, so all ratios see identical compute jitter and
+/// the taper is the only variable — "worse oversubscription never helps"
+/// is a property of the topology, not of seed luck.
+///
+/// The strategy is recursive halving-doubling: its long-distance levels
+/// put *every* rank pair across the bisection simultaneously, which is
+/// the traffic that actually exercises the uplink tier (a flat ring
+/// crosses each uplink with at most one flow per round and barely
+/// notices the taper — itself a finding this sweep makes visible).
+pub fn oversubscription(quick: bool) -> (Table, Vec<OversubPoint>) {
+    oversubscription_with(quick, &Runner::sequential())
+}
+
+pub fn oversubscription_with(quick: bool, runner: &Runner) -> (Table, Vec<OversubPoint>) {
+    let gpu_counts: Vec<usize> = if quick { vec![8, 32, 128] } else { vec![8, 16, 32, 64, 128] };
+    let ratios = [1.0f64, 2.0, 4.0, 8.0];
+    let mut items: Vec<(crate::config::FabricSpec, f64, usize)> = Vec::new();
+    for fab in crate::config::presets::paper_fabrics() {
+        for &ratio in &ratios {
+            for &g in &gpu_counts {
+                items.push((fab.clone(), ratio, g));
+            }
+        }
+    }
+    let cells = runner.map_cells(
+        "ablation_oversubscription",
+        &items,
+        |(fab, ratio, g)| format!("{}:os={ratio}:gpus={g}:quick={quick}", fab.name),
+        |_, (fab, ratio, g), _seed| {
+            let mut fab = fab.clone();
+            fab.topology.oversubscription = Some(*ratio);
+            let mut tr = trainer(fab, TransportOptions::default(), 64.0 * MIB, true);
+            tr.strategy = Box::new(RecursiveHalvingDoubling);
+            let r = tr.run(*g, &spec(quick, runner.seed)).unwrap();
+            CellOut::new(vec![
+                tr.fabric.name.clone(),
+                format!("{ratio}:1"),
+                g.to_string(),
+                fnum(r.images_per_sec),
+                fnum(r.step_time_mean * 1e3),
+                format!("{:.3}", r.comm_fraction),
+            ])
+            .val("img_s", r.images_per_sec)
+            .val("step_s", r.step_time_mean)
+            .val("comm_frac", r.comm_fraction)
+        },
+    );
+    let mut t = Table::new(
+        "Ablation: leaf->spine oversubscription (ResNet50, RHD allreduce, overlap on)",
+        &["fabric", "oversub", "gpus", "img/s", "step ms", "exposed comm frac"],
+    );
+    let mut pts = Vec::new();
+    for ((fab, ratio, g), cell) in items.iter().zip(cells) {
+        pts.push(OversubPoint {
+            fabric: fab.name.clone(),
+            ratio: *ratio,
+            gpus: *g,
             images_per_sec: cell.get("img_s"),
             step_time_mean: cell.get("step_s"),
             comm_fraction: cell.get("comm_frac"),
@@ -219,6 +305,50 @@ mod tests {
         // TCP is the worst case.
         let tcp = pts.last().unwrap().images_per_sec;
         assert!(tcp < 0.95 * base, "TCP {tcp} vs baseline {base}");
+    }
+
+    #[test]
+    fn oversubscription_grid_monotone_and_placement_gated() {
+        let (t, pts) = oversubscription(true);
+        assert_eq!(pts.len(), 24); // 2 fabrics x 4 ratios x 3 gpu counts
+        assert_eq!(t.rows.len(), 24);
+        let eth = |ratio: f64, gpus: usize| {
+            pts.iter()
+                .find(|p| p.fabric.contains("GbE") && p.ratio == ratio && p.gpus == gpus)
+                .unwrap()
+                .step_time_mean
+        };
+        // (a) 8 GPUs sit inside one ToR: the taper is invisible, and the
+        // seed-paired cells are *bit-identical* across ratios (placement,
+        // not bandwidth, gates the effect — the Fig 3 lesson).
+        for ratio in [2.0, 4.0, 8.0] {
+            assert_eq!(
+                eth(ratio, 8).to_bits(),
+                eth(1.0, 8).to_bits(),
+                "single-ToR cells must not see the taper (ratio {ratio})"
+            );
+        }
+        // (b) 128 GPUs span two ToRs: step time is monotone non-decreasing
+        // in the taper, and 8:1 is strictly slower than full bisection.
+        let mut last = 0.0;
+        for ratio in [1.0, 2.0, 4.0, 8.0] {
+            let step = eth(ratio, 128);
+            assert!(step + 1e-12 >= last, "ratio {ratio}: step {step} < {last}");
+            last = step;
+        }
+        assert!(
+            eth(8.0, 128) > eth(1.0, 128),
+            "8:1 must strictly throttle the cross-ToR RHD levels"
+        );
+    }
+
+    #[test]
+    fn oversubscription_csv_identical_across_jobs() {
+        // The acceptance criterion: byte-identical CSV at any --jobs for
+        // a fixed seed (ECMP hashing is order-independent by design).
+        let (seq, _) = oversubscription_with(true, &Runner::sequential());
+        let (par, _) = oversubscription_with(true, &Runner::new(4));
+        assert_eq!(seq.to_csv(), par.to_csv());
     }
 
     #[test]

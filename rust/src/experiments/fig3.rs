@@ -115,7 +115,8 @@ mod tests {
         // paper also involves compute-side placement effects we do not
         // model — see EXPERIMENTS.md.)
         let scaling = StrongScaling::paper();
-        let eth_fabric = crate::config::presets::fabric(crate::config::spec::FabricKind::EthernetRoce25);
+        let eth_fabric =
+            crate::config::presets::fabric(crate::config::spec::FabricKind::EthernetRoce25);
         let eth = |c: usize| scaling.run_point(&eth_fabric, c).unwrap();
         let r_intra = eth(1280).comm_time / eth(640).comm_time; // both inside one rack
         let r_cross = eth(2560).comm_time / eth(1280).comm_time; // crosses racks

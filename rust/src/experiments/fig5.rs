@@ -22,7 +22,8 @@ use crate::trainer::TrainerSim;
 use crate::util::table::{fnum, Table};
 use crate::util::units::MIB;
 
-pub const STRATEGY_LABELS: [&str; 3] = ["COLLECTIVE0(ring)", "COLLECTIVE1(rhd)", "COLLECTIVE2(hier)"];
+pub const STRATEGY_LABELS: [&str; 3] =
+    ["COLLECTIVE0(ring)", "COLLECTIVE1(rhd)", "COLLECTIVE2(hier)"];
 
 fn strategy(i: usize) -> Box<dyn Collective> {
     match i {

@@ -460,7 +460,8 @@ mod tests {
     #[test]
     fn sweeps_identical_sequential_vs_parallel() {
         let seq = batch_sweep_with(true, &Runner::sequential());
-        let par = batch_sweep_with(true, &Runner { jobs: 4, cache_dir: None, ..Runner::sequential() });
+        let par =
+            batch_sweep_with(true, &Runner { jobs: 4, cache_dir: None, ..Runner::sequential() });
         assert_eq!(seq.to_csv(), par.to_csv(), "CSV must not depend on --jobs");
     }
 }

@@ -59,9 +59,11 @@ impl Resource {
     }
 }
 
-/// Maximum shared resources one flow can hold: src NIC tx, dst NIC rx,
-/// source-rack up-link, destination-rack down-link.
-pub const MAX_FLOW_RESOURCES: usize = 4;
+/// Maximum shared resources one flow can hold. The longest route is the
+/// dragonfly cross-group path: src NIC tx, source-ToR up-link, source
+/// group global-egress, destination group global-ingress, destination-ToR
+/// down-link, dst NIC rx (see [`crate::fabric::topology`]).
+pub const MAX_FLOW_RESOURCES: usize = 6;
 
 /// The (small) set of resource ids one flow occupies.
 #[derive(Clone, Copy, Debug, Default)]

@@ -12,11 +12,13 @@
 //! where `L(path)` includes switch hops for inter-rack traffic, `staging`
 //! models GPUDirect-vs-host-copy PCIe/UPI segments, and `bw(path)` is the
 //! minimum along NIC / PCIe / UPI segments. Messages submitted together
-//! as one round are concurrent *flows*: each holds its source NIC tx
-//! port, destination NIC rx port and (inter-rack) the rack up/down links,
-//! and the engine advances virtual time event by event, recomputing
-//! **max-min fair** rates on every flow arrival/departure (see
-//! [`contention`] and the module docs in [`sim`] / `fabric/README.md`).
+//! as one round are concurrent *flows*: each claims every link of its
+//! deterministic route through the configured [`topology`] (NIC tx/rx
+//! ports, leaf up/down-links on the ECMP-chosen spine, dragonfly global
+//! links), and the engine advances virtual time event by event,
+//! recomputing **max-min fair** rates on every flow arrival/departure
+//! (see [`contention`] and the module docs in [`sim`] /
+//! `fabric/README.md`).
 //!
 //! Batches accept **heterogeneous per-flow ready times**, which is what
 //! lets the trainer's multi-stream scheduler
@@ -30,10 +32,12 @@
 pub mod contention;
 pub mod mpi;
 pub mod sim;
+pub mod topology;
 pub mod trace;
 pub mod transport;
 
 pub use mpi::{Comm, CommOp};
 pub use sim::{FlowReq, FlowTimes, NetSim, NetStats};
+pub use topology::{Route, Topology};
 pub use trace::{MessageEvent, Trace};
 pub use transport::MessageCost;

@@ -25,7 +25,7 @@
 //! collectives genuinely contend for NIC and up-link bandwidth.
 
 use crate::cluster::Placement;
-use crate::config::{ClusterSpec, TransportOptions};
+use crate::config::TransportOptions;
 use crate::fabric::sim::{FlowReq, FlowTimes};
 use crate::fabric::NetSim;
 
@@ -222,9 +222,14 @@ impl<'a> Comm<'a> {
         self.t.iter().cloned().fold(0.0, f64::max)
     }
 
-    /// Whether ranks a and b are in different racks.
-    pub fn crosses_rack(&self, cluster: &ClusterSpec, a: usize, b: usize) -> bool {
-        self.placement.crosses_rack(cluster, a, b)
+    /// Whether a message between ranks a and b leaves the source ToR —
+    /// the engine's own classification ([`crate::fabric::topology`]),
+    /// which may differ from the cluster's rack scalar when a
+    /// `[topology]` table overrides `leaf_ports`.
+    pub fn crosses_rack(&self, a: usize, b: usize) -> bool {
+        let topo = &self.net.topology;
+        topo.tor_of_node(self.placement.endpoints[a].node)
+            != topo.tor_of_node(self.placement.endpoints[b].node)
     }
 }
 

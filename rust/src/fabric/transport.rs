@@ -89,8 +89,10 @@ pub fn network_message(
         } else {
             // Staged through host RAM: an extra store-and-forward copy on
             // each side (D2H on the sender, H2D on the receiver).
-            let src_copy_bw = if src_crosses { cluster.pcie_bw.min(cluster.upi_bw) } else { cluster.pcie_bw };
-            let dst_copy_bw = if dst_crosses { cluster.pcie_bw.min(cluster.upi_bw) } else { cluster.pcie_bw };
+            let src_copy_bw =
+                if src_crosses { cluster.pcie_bw.min(cluster.upi_bw) } else { cluster.pcie_bw };
+            let dst_copy_bw =
+                if dst_crosses { cluster.pcie_bw.min(cluster.upi_bw) } else { cluster.pcie_bw };
             send_overhead += cluster.pcie_latency + geo.bytes / src_copy_bw;
             recv_overhead += cluster.pcie_latency + geo.bytes / dst_copy_bw;
         }

@@ -121,6 +121,14 @@ trainer communication (run --config):
   --streams N          concurrent collective channels for the overlap
                        scheduler [1 = serialized coordinator]; also
                        settable as [transport] num_streams in the TOML
+
+fabric topology ([topology] in the TOML config):
+  explicit fat-tree tiers above the NICs — leaf (ToR) and spine switches
+  with a configurable leaf->spine oversubscription ratio and ECMP across
+  spines — or a dragonfly variant with per-group global links. Omitted,
+  the fabric's scalar rack_uplink_gbps reproduces the legacy two-tier
+  model bit-for-bit. The `ablations` command sweeps the oversubscription
+  ratio (ablation_oversubscription CSV).
 "#;
 
 fn cmd_sweeps(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
@@ -161,10 +169,17 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
         opts.num_streams = args.get_usize("streams", opts.num_streams)?;
         opts.validate()?;
     }
-    let fabric = FabricSpec::from_toml(
+    let mut fabric = FabricSpec::from_toml(
         doc.get("fabric")
             .ok_or_else(|| anyhow::anyhow!("config missing [fabric]"))?,
     )?;
+    // Optional [topology] table: explicit fat-tree / dragonfly tiers
+    // above the NICs. Absent, the fabric keeps its preset (the legacy
+    // scalar rack-uplink model, bit-for-bit).
+    if let Some(v) = doc.get("topology") {
+        fabric.topology = fabricbench::config::TopologySpec::from_toml(v)?;
+    }
+    fabric.topology.validate_for(&cluster)?;
     let train = doc
         .get("train")
         .ok_or_else(|| anyhow::anyhow!("config missing [train]"))?;
@@ -293,6 +308,8 @@ fn cmd_ablations(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
     rec.emit("ablation_toggles", &t2);
     let (t3, _) = ablations::streams_sweep_with(quick, runner);
     rec.emit("ablation_streams", &t3);
+    let (t4, _) = ablations::oversubscription_with(quick, runner);
+    rec.emit("ablation_oversubscription", &t4);
     Ok(())
 }
 

@@ -8,7 +8,8 @@ use super::arch::{Arch, ArchBuilder, Layer};
 /// VGG16 (configuration D, 224x224): 138,357,544 parameters.
 pub fn vgg16() -> Arch {
     let mut b = ArchBuilder::new("vgg16", 224, 224, 3);
-    let cfg: &[&[usize]] = &[&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
+    let cfg: &[&[usize]] =
+        &[&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
     for (s, stage) in cfg.iter().enumerate() {
         for (i, &c) in stage.iter().enumerate() {
             b = b.conv(&format!("conv{}_{}", s + 1, i + 1), c, 3, 1, 1, true);
@@ -120,7 +121,13 @@ pub fn resnet50_v15() -> Arch {
 }
 
 /// Basic residual block (ResNet-18/34): two 3x3 convs.
-fn basic_block(b: ArchBuilder, name: &str, width: usize, stride: usize, downsample: bool) -> ArchBuilder {
+fn basic_block(
+    b: ArchBuilder,
+    name: &str,
+    width: usize,
+    stride: usize,
+    downsample: bool,
+) -> ArchBuilder {
     let (h, w, c_in) = b.shape();
     let mut b = b
         .conv(&format!("{name}.conv1"), width, 3, stride, 1, false)

@@ -79,7 +79,7 @@ impl TrainerSim {
     pub fn run(&self, gpus: usize, run: &RunSpec) -> anyhow::Result<ThroughputResult> {
         anyhow::ensure!(gpus >= 1, "need at least one GPU");
         let placement = Placement::gpus(&self.cluster, gpus)?;
-        let mut net = NetSim::new(self.fabric.clone(), self.cluster.clone(), self.opts);
+        let mut net = NetSim::try_new(self.fabric.clone(), self.cluster.clone(), self.opts)?;
         let mut rng = Rng::new(run.seed ^ (gpus as u64) << 32 ^ self.arch.total_params());
 
         let cost = step_cost(

@@ -150,7 +150,7 @@ impl RealTrainer {
         anyhow::ensure!(workers >= 1, "need at least one worker");
         let cluster = ClusterSpec::txgaia();
         let placement = Placement::gpus(&cluster, workers)?;
-        let mut net = NetSim::new(fabric.clone(), cluster, TransportOptions::default());
+        let mut net = NetSim::try_new(fabric.clone(), cluster, TransportOptions::default())?;
         let dataset = SyntheticDataset::new(0xDA7A, 0.25);
         let n_tensors = self.params.len();
         let flat_len: usize = self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum();

@@ -35,7 +35,9 @@ pub enum Quantity {
 pub fn parse_quantity(input: &str) -> Result<Quantity, String> {
     let s = input.trim();
     let split = s
-        .find(|c: char| !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+' || c == 'e' || c == 'E'))
+        .find(|c: char| {
+            !(c.is_ascii_digit() || c == '.' || c == '-' || c == '+' || c == 'e' || c == 'E')
+        })
         .unwrap_or(s.len());
     // Guard against "1e5" being split at 'e' when no unit follows a digit.
     let (num_str, unit) = {

@@ -43,16 +43,18 @@ fn naive_sum(bufs: &RealBuffers) -> Vec<f32> {
     out
 }
 
-/// Run `algo` over a simulated OPA GPU world and demand exact equality
-/// with the naive sum on every rank.
-fn check_exact(algo: &dyn Collective, ranks: usize, elems: usize, seed: u64) -> Result<(), String> {
-    let cluster = ClusterSpec::txgaia();
+/// Run `algo` over a GPU world on `cluster` + `fab` and demand exact
+/// equality with the naive sum on every rank.
+fn check_exact_with(
+    cluster: ClusterSpec,
+    fab: fabricbench::config::FabricSpec,
+    algo: &dyn Collective,
+    ranks: usize,
+    elems: usize,
+    seed: u64,
+) -> Result<(), String> {
     let placement = Placement::gpus(&cluster, ranks).unwrap();
-    let mut net = NetSim::new(
-        fabric(FabricKind::OmniPath100),
-        cluster,
-        TransportOptions::default(),
-    );
+    let mut net = NetSim::new(fab, cluster, TransportOptions::default());
     let mut bufs = int_buffers(ranks, elems, seed);
     let expect = naive_sum(&bufs);
     let mut comm = Comm::new(&mut net, &placement);
@@ -71,6 +73,28 @@ fn check_exact(algo: &dyn Collective, ranks: usize, elems: usize, seed: u64) -> 
         }
     }
     Ok(())
+}
+
+/// The original single-rack oracle (all grid ranks fit inside one
+/// TX-GAIA rack).
+fn check_exact(algo: &dyn Collective, ranks: usize, elems: usize, seed: u64) -> Result<(), String> {
+    check_exact_with(
+        ClusterSpec::txgaia(),
+        fabric(FabricKind::OmniPath100),
+        algo,
+        ranks,
+        elems,
+        seed,
+    )
+}
+
+/// TX-GAIA shrunk to 2-node racks: 4 GPUs per ToR, so the grid's rank
+/// counts span 2..=5 ToRs and hierarchical leader election goes
+/// genuinely multi-tier (per-ToR rings + inter-ToR leader ring).
+fn small_rack_cluster() -> ClusterSpec {
+    let mut cluster = ClusterSpec::txgaia();
+    cluster.nodes_per_rack = 2;
+    cluster
 }
 
 fn grid(algo: &dyn Collective) {
@@ -112,7 +136,8 @@ fn pipelined_ring_bit_for_bit_grid() {
         let algo = PipelinedRing { segments };
         for ranks in RANKS {
             for &elems in &[1usize, 7, 1024] {
-                let seed = 0x5E6_0000 ^ ((segments as u64) << 40) ^ ((ranks as u64) << 20) ^ elems as u64;
+                let seed =
+                    0x5E6_0000 ^ ((segments as u64) << 40) ^ ((ranks as u64) << 20) ^ elems as u64;
                 if let Err(msg) = check_exact(&algo, ranks, elems, seed) {
                     panic!("{msg}");
                 }
@@ -121,6 +146,71 @@ fn pipelined_ring_bit_for_bit_grid() {
         // One large-buffer point per segment count keeps runtime sane.
         if let Err(msg) = check_exact(&algo, 17, 100_003, 0x5E6_1111 ^ segments as u64) {
             panic!("{msg}");
+        }
+    }
+}
+
+#[test]
+fn multi_tor_placements_bit_for_bit_grid() {
+    // Satellite of the topology issue: the exact to_bits oracle must also
+    // hold when ranks span 2..=5 ToRs, i.e. under topology-aware
+    // hierarchical leader election (per-ToR rings, inter-ToR leader
+    // ring, fan-out). Every algorithm runs the multi-ToR grid; the
+    // hierarchical one is the interesting case.
+    let algos: Vec<Box<dyn Collective>> = vec![
+        Box::new(RingAllreduce),
+        Box::new(BinomialTree),
+        Box::new(RecursiveHalvingDoubling),
+        Box::new(Hierarchical::default()),
+        Box::new(PipelinedRing { segments: 3 }),
+    ];
+    for algo in &algos {
+        for ranks in [5usize, 8, 9, 12, 16, 17] {
+            for &elems in &[1usize, 7, 1024] {
+                let seed = 0x707_70C5 ^ ((ranks as u64) << 24) ^ elems as u64;
+                if let Err(msg) = check_exact_with(
+                    small_rack_cluster(),
+                    fabric(FabricKind::OmniPath100),
+                    algo.as_ref(),
+                    ranks,
+                    elems,
+                    seed,
+                ) {
+                    panic!("multi-ToR: {msg}");
+                }
+            }
+        }
+    }
+    // One large-buffer point for the hierarchy (keeps runtime sane).
+    if let Err(msg) = check_exact_with(
+        small_rack_cluster(),
+        fabric(FabricKind::OmniPath100),
+        &Hierarchical::default(),
+        17,
+        100_003,
+        0x707_1111,
+    ) {
+        panic!("multi-ToR: {msg}");
+    }
+}
+
+#[test]
+fn multi_tor_oracle_independent_of_oversubscription() {
+    // The taper moves *time*, never values: the same multi-ToR oracle
+    // under an 8:1 fat-tree with 2 spines must still be exact.
+    let mut fab = fabric(FabricKind::OmniPath100);
+    fab.topology.spines = 2;
+    fab.topology.oversubscription = Some(8.0);
+    for ranks in [8usize, 13, 17] {
+        if let Err(msg) = check_exact_with(
+            small_rack_cluster(),
+            fab.clone(),
+            &Hierarchical::default(),
+            ranks,
+            513,
+            0x5EED ^ ranks as u64,
+        ) {
+            panic!("oversubscribed multi-ToR: {msg}");
         }
     }
 }

@@ -1,0 +1,367 @@
+//! Property suite for the multi-tier topology subsystem (routing +
+//! reduction timing), locking down four guarantees:
+//!
+//! (a) **Default equivalence** — the default spec (one spine fed by the
+//!     fabric's scalar `rack_uplink_gbps`) reduces *bit-for-bit* to the
+//!     pre-topology rack-uplink model, across the fig3 driver cells and
+//!     trainer runs, and the committed golden CSVs are unchanged.
+//! (b) **Route determinism and symmetry** — `route(a -> b)` is a pure
+//!     function of `(endpoints, flow_seq, seed)` and the mirror image of
+//!     `route(b -> a)`.
+//! (c) **Per-link flow conservation** — a flow occupies exactly the
+//!     links of its route, observable via per-link drain times.
+//! (d) **Oversubscription monotonicity** — worsening the leaf->spine
+//!     taper never speeds anything up, and saturating traffic strictly
+//!     slows down.
+
+use fabricbench::cfd::solver::StrongScaling;
+use fabricbench::cluster::{EndpointKind, Placement};
+use fabricbench::collectives::{Collective, NullBuffers, RecursiveHalvingDoubling};
+use fabricbench::config::presets::{fabric, paper_fabrics};
+use fabricbench::config::spec::{
+    ClusterSpec, FabricKind, RunSpec, TopologyKind, TopologySpec, TransportOptions,
+};
+use fabricbench::config::toml;
+use fabricbench::fabric::topology::Topology;
+use fabricbench::fabric::{Comm, FlowReq, NetSim};
+use fabricbench::util::prop;
+
+fn cpu_ep(node: usize) -> fabricbench::cluster::Endpoint {
+    NetSim::endpoint(node, 0, EndpointKind::Cpu)
+}
+
+/// An explicit fat-tree spec that must be indistinguishable from the
+/// default: one spine, leaf = rack, uplink pinned to the fabric scalar.
+fn explicit_legacy_spec(kind: FabricKind, cluster: &ClusterSpec) -> TopologySpec {
+    let f = fabric(kind);
+    TopologySpec {
+        kind: TopologyKind::FatTree,
+        leaf_ports: Some(cluster.nodes_per_rack),
+        spines: 1,
+        uplink_gbps: Some(f.rack_uplink_gbps),
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// (a) default equivalence
+// ---------------------------------------------------------------------
+
+#[test]
+fn explicit_one_spine_fat_tree_matches_default_on_fig3_cells() {
+    // The fig3 driver cells are RNG-free: comparing the full ScalingPoint
+    // to_bits pins the engine's resource wiring, not a tolerance.
+    let scaling = StrongScaling::paper();
+    for base in paper_fabrics() {
+        let mut explicit = base.clone();
+        explicit.topology = explicit_legacy_spec(base.kind, &scaling.cluster);
+        for cores in [40usize, 320, 1280, 2560, 5120] {
+            let a = scaling.run_point(&base, cores).unwrap();
+            let b = scaling.run_point(&explicit, cores).unwrap();
+            assert_eq!(
+                a.comm_time.to_bits(),
+                b.comm_time.to_bits(),
+                "{} @ {cores} cores: comm {} vs {}",
+                base.name,
+                a.comm_time,
+                b.comm_time
+            );
+            assert_eq!(a.comm_wire_time.to_bits(), b.comm_wire_time.to_bits());
+            assert_eq!(a.compute_time.to_bits(), b.compute_time.to_bits());
+            assert_eq!(a.inter_rack_messages, b.inter_rack_messages);
+        }
+    }
+}
+
+#[test]
+fn explicit_one_spine_fat_tree_matches_default_on_trainer_cells() {
+    // Table-1-style trainer cells (the stochastic path): same seed, same
+    // bits. 128 GPUs spans two ToRs, so the up/down links are genuinely
+    // exercised, not just allocated.
+    let cluster = ClusterSpec::txgaia();
+    for gpus in [32usize, 128] {
+        for base in paper_fabrics() {
+            let mut explicit = base.clone();
+            explicit.topology = explicit_legacy_spec(base.kind, &cluster);
+            let mk = |fab: fabricbench::config::FabricSpec| fabricbench::trainer::TrainerSim {
+                arch: fabricbench::models::zoo::resnet50(),
+                fabric: fab,
+                cluster: cluster.clone(),
+                opts: TransportOptions::default(),
+                strategy: Box::new(fabricbench::collectives::RingAllreduce),
+                per_gpu_batch: 64,
+                precision: fabricbench::models::perf::Precision::Fp32,
+                fusion_bytes: 64.0 * fabricbench::util::units::MIB,
+                overlap: true,
+                step_overhead: 0.0,
+                coordination_overhead:
+                    fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+            };
+            let spec = RunSpec { measure_steps: 3, warmup_steps: 1, ..Default::default() };
+            let a = mk(base.clone()).run(gpus, &spec).unwrap();
+            let b = mk(explicit).run(gpus, &spec).unwrap();
+            assert_eq!(
+                a.step_time_mean.to_bits(),
+                b.step_time_mean.to_bits(),
+                "{} @ {gpus} GPUs: {} vs {}",
+                base.name,
+                a.step_time_mean,
+                b.step_time_mean
+            );
+            assert_eq!(a.comm_fraction.to_bits(), b.comm_fraction.to_bits());
+        }
+    }
+}
+
+#[test]
+fn committed_goldens_unchanged_under_default_topology() {
+    // The committed fixtures predate the topology subsystem: regenerating
+    // them through the route-derived engine must be a no-op. (Mirrors
+    // tests/golden_outputs.rs but exists here so a topology regression
+    // is reported as a topology failure, with a clearer message.)
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden");
+    let require = std::env::var("FABRICBENCH_REQUIRE_GOLDEN").is_ok();
+    for (name, csv) in [
+        ("table1", fabricbench::experiments::table1::run().to_csv()),
+        ("fig3_quick", fabricbench::experiments::fig3::run(true).0.to_csv()),
+    ] {
+        let path = dir.join(format!("{name}.csv"));
+        if !path.exists() {
+            assert!(!require, "golden fixture {} missing", path.display());
+            continue; // golden_outputs.rs owns bootstrap behavior
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(
+            want, csv,
+            "default topology changed the '{name}' golden CSV — the \
+             bit-for-bit legacy-equivalence guarantee is broken"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// (b) deterministic, symmetric routes
+// ---------------------------------------------------------------------
+
+#[test]
+fn routes_are_deterministic_and_symmetric() {
+    let cluster = ClusterSpec::txgaia();
+    let spec = TopologySpec { spines: 8, oversubscription: Some(2.0), ..Default::default() };
+    let topo = Topology::build(&spec, &fabric(FabricKind::EthernetRoce25), &cluster).unwrap();
+    prop::forall(
+        0x7070_0901,
+        256,
+        |r| (r.below(448) as usize, r.below(448) as usize, r.next_u64() % 64),
+        |&(a, b, seq)| {
+            if a == b {
+                return Ok(());
+            }
+            let f1 = topo.route(a, b, seq);
+            let f2 = topo.route(a, b, seq);
+            let rev = topo.route(b, a, seq);
+            let ids1: Vec<usize> = f1.res.iter().collect();
+            if ids1 != f2.res.iter().collect::<Vec<_>>() {
+                return Err(format!("route({a},{b},{seq}) not deterministic"));
+            }
+            // Mirror image: reverse the reverse route and map each link
+            // to its forward counterpart (tx<->rx, up<->down same spine).
+            let mut mirrored: Vec<usize> = rev
+                .res
+                .iter()
+                .map(|id| mirror_link(&topo, id))
+                .collect();
+            mirrored.reverse();
+            if ids1 != mirrored {
+                return Err(format!(
+                    "route({a},{b},{seq}) != mirror of route({b},{a},{seq}): {ids1:?} vs {mirrored:?}"
+                ));
+            }
+            if f1.spine != rev.spine {
+                return Err(format!("spine differs: {:?} vs {:?}", f1.spine, rev.spine));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Map a link id to its reverse-direction counterpart: tx(n) <-> rx(n),
+/// up(t, s) <-> down(t, s); dragonfly global-out(g) <-> global-in(g).
+fn mirror_link(topo: &Topology, id: usize) -> usize {
+    let n = topo.n_nodes;
+    let ts = topo.n_tors * topo.n_spines;
+    if id < n {
+        topo.rx_id(id)
+    } else if id < 2 * n {
+        topo.tx_id(id - n)
+    } else if id < 2 * n + ts {
+        id + ts // up -> down, same (tor, spine)
+    } else if id < 2 * n + 2 * ts {
+        id - ts
+    } else if id < 2 * n + 2 * ts + topo.n_groups {
+        id + topo.n_groups // global-out -> global-in, same group
+    } else {
+        id - topo.n_groups
+    }
+}
+
+// ---------------------------------------------------------------------
+// (c) per-link flow conservation
+// ---------------------------------------------------------------------
+
+#[test]
+fn a_flow_occupies_exactly_its_route() {
+    // Submit one cross-ToR flow on a fresh engine: after the batch, the
+    // drain time is positive on precisely the four links of its route
+    // and zero everywhere else.
+    let f = fabric(FabricKind::EthernetRoce25);
+    let cluster = ClusterSpec::txgaia();
+    let mut s = NetSim::new(f, cluster, TransportOptions::default());
+    let times = s.transfer_batch(&[FlowReq {
+        src: cpu_ep(3),
+        dst: cpu_ep(70),
+        bytes: 1e6,
+        ready: 0.0,
+    }]);
+    assert!(times[0].recv_complete > 0.0);
+    let route = s.topology.route(3, 70, 0); // seq 0: the flow just sent
+    let route_ids: std::collections::BTreeSet<usize> = route.res.iter().collect();
+    assert_eq!(route_ids.len(), 4, "cross-ToR route must hold 4 links");
+    for id in 0..s.topology.num_resources() {
+        let busy = s.resource_busy_until(id);
+        if route_ids.contains(&id) {
+            assert!(busy > 0.0, "route link {} idle", s.topology.link_label(id));
+        } else {
+            assert_eq!(busy, 0.0, "off-route link {} touched", s.topology.link_label(id));
+        }
+    }
+}
+
+#[test]
+fn batch_occupancy_is_the_union_of_routes() {
+    // Several flows (intra- and inter-ToR, shared sources): the set of
+    // touched links is exactly the union of the per-flow routes.
+    let f = fabric(FabricKind::OmniPath100);
+    let cluster = ClusterSpec::txgaia();
+    let mut s = NetSim::new(f, cluster, TransportOptions::default());
+    let pairs = [(0usize, 1usize), (0, 40), (5, 100), (33, 34), (100, 5)];
+    let reqs: Vec<FlowReq> = pairs
+        .iter()
+        .map(|&(a, b)| FlowReq { src: cpu_ep(a), dst: cpu_ep(b), bytes: 1e5, ready: 0.0 })
+        .collect();
+    s.transfer_batch(&reqs);
+    let mut expect = std::collections::BTreeSet::new();
+    let mut seq = std::collections::HashMap::new();
+    for &(a, b) in &pairs {
+        let k = seq.entry((a, b)).or_insert(0u64);
+        for id in s.topology.route(a, b, *k).res.iter() {
+            expect.insert(id);
+        }
+        *k += 1;
+    }
+    for id in 0..s.topology.num_resources() {
+        assert_eq!(
+            s.resource_busy_until(id) > 0.0,
+            expect.contains(&id),
+            "link {} occupancy disagrees with the route union",
+            s.topology.link_label(id)
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// (d) oversubscription monotonicity
+// ---------------------------------------------------------------------
+
+#[test]
+fn rhd_allreduce_monotone_in_oversubscription() {
+    // 128 GPUs span two ToRs; recursive halving-doubling's long-distance
+    // level puts every pair across the bisection at once. Tightening the
+    // taper must never help, and 8:1 must strictly hurt.
+    let cluster = ClusterSpec::txgaia();
+    let placement = Placement::gpus(&cluster, 128).unwrap();
+    let mut times = Vec::new();
+    for ratio in [1.0f64, 2.0, 4.0, 8.0] {
+        let mut f = fabric(FabricKind::EthernetRoce25);
+        f.topology.oversubscription = Some(ratio);
+        let mut net = NetSim::new(f, cluster.clone(), TransportOptions::default());
+        let mut comm = Comm::new(&mut net, &placement);
+        let t = RecursiveHalvingDoubling
+            .allreduce(&mut comm, &mut NullBuffers { elems: 4_000_000 });
+        if let Some(&last) = times.last() {
+            assert!(t + 1e-12 >= last, "ratio {ratio}: allreduce sped up ({t} < {last})");
+        }
+        times.push(t);
+    }
+    assert!(
+        times[3] > times[0] * 1.02,
+        "8:1 vs 1:1 should be measurably slower: {times:?}"
+    );
+}
+
+#[test]
+fn symmetric_cross_tor_batch_monotone_in_oversubscription() {
+    // Engine-level version with no collective structure: 32 saturating
+    // rack0 <-> rack1 flows.
+    let cluster = ClusterSpec::txgaia();
+    let mut last = 0.0;
+    for ratio in [1.0f64, 2.0, 4.0, 8.0] {
+        let mut f = fabric(FabricKind::EthernetRoce25);
+        f.topology.oversubscription = Some(ratio);
+        let mut s = NetSim::new(f, cluster.clone(), TransportOptions::default());
+        let mut reqs = Vec::new();
+        for i in 0..16 {
+            let bytes = 8.0 * 1024.0 * 1024.0;
+            reqs.push(FlowReq { src: cpu_ep(i), dst: cpu_ep(32 + i), bytes, ready: 0.0 });
+            reqs.push(FlowReq { src: cpu_ep(32 + i), dst: cpu_ep(i), bytes, ready: 0.0 });
+        }
+        let t = s
+            .transfer_batch(&reqs)
+            .iter()
+            .map(|ft| ft.recv_complete)
+            .fold(0.0, f64::max);
+        assert!(t + 1e-12 >= last, "ratio {ratio}: {t} < {last}");
+        last = t;
+    }
+}
+
+// ---------------------------------------------------------------------
+// negative paths: TOML + cluster validation through the public surface
+// ---------------------------------------------------------------------
+
+#[test]
+fn topology_toml_negative_paths_are_loud() {
+    // Value errors (zero-capacity link, sub-unity ratio) and type errors,
+    // in the same loud style as the [transport] table.
+    for doc in [
+        "uplink_gbps = 0.0",
+        "oversubscription = 0.99",
+        "spines = 0",
+        "groups = 0",
+        "global_oversubscription = 0.5",
+        "kind = \"hypercube\"",
+        "spines = \"many\"",
+        "oversubscription = false",
+        "leaf_ports = 2.5",
+    ] {
+        let parsed = toml::parse(doc).unwrap();
+        assert!(
+            TopologySpec::from_toml(&parsed).is_err(),
+            "'{doc}' must be rejected loudly"
+        );
+    }
+}
+
+#[test]
+fn try_new_rejects_more_nodes_than_leaf_ports() {
+    let mut cluster = ClusterSpec::txgaia();
+    cluster.nodes = 32;
+    cluster.nodes_per_rack = 8;
+    let mut f = fabric(FabricKind::OmniPath100);
+    f.topology.tors = Some(2);
+    f.topology.leaf_ports = Some(8); // 16 downlinks for 32 nodes
+    let err = NetSim::try_new(f, cluster, TransportOptions::default())
+        .err()
+        .expect("undersized leaf tier must be rejected")
+        .to_string();
+    assert!(err.contains("leaf"), "unexpected error text: {err}");
+}
