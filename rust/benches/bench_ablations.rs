@@ -1,15 +1,29 @@
 //! Bench: design-choice ablations (fusion capacity, overlap, GPUDirect,
 //! RDMA-vs-TCP).
+use fabricbench::util::benchjson::BenchReport;
 use std::time::Instant;
 
 fn main() {
+    let (quick, mut report) = BenchReport::from_env("ablations");
     let start = Instant::now();
-    let (fusion, _) = fabricbench::experiments::ablations::fusion_sweep(false);
-    let (toggles, _) = fabricbench::experiments::ablations::toggles(false);
+    let (fusion, _) = fabricbench::experiments::ablations::fusion_sweep(quick);
+    let (toggles, _) = fabricbench::experiments::ablations::toggles(quick);
     println!("{}", fusion.to_markdown());
     println!("{}", toggles.to_markdown());
     let rec = fabricbench::metrics::Recorder::new();
     let _ = rec.save("ablation_fusion", &fusion);
     let _ = rec.save("ablation_toggles", &toggles);
-    println!("bench_ablations: done in {:.2} s", start.elapsed().as_secs_f64());
+    let dt = start.elapsed().as_secs_f64();
+    println!("bench_ablations: done in {:.2} s", dt);
+    report.entry("fusion_and_toggles", &[("wall_ms", dt * 1e3)]);
+
+    // The PR 4 acceptance cell: the streams ablation sweep in quick mode
+    // (engine-bound: merged multi-stream batches + serialized baselines).
+    let start = Instant::now();
+    let (streams, _) = fabricbench::experiments::ablations::streams_sweep(true);
+    let dt = start.elapsed().as_secs_f64();
+    println!("{}", streams.to_markdown());
+    println!("bench_ablations: quick streams sweep in {:.2} s", dt);
+    report.entry("streams_sweep_quick", &[("wall_ms", dt * 1e3)]);
+    report.finish();
 }

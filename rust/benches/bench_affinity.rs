@@ -1,14 +1,19 @@
 //! Bench: §IV.B PCIe affinity study with Welch's t-test.
+use fabricbench::util::benchjson::BenchReport;
 use std::time::Instant;
 
 fn main() {
+    let (quick, mut report) = BenchReport::from_env("affinity");
     let start = Instant::now();
-    let (table, results) = fabricbench::experiments::affinity::run(false);
+    let (table, results) = fabricbench::experiments::affinity::run(quick);
     println!("{}", table.to_markdown());
     let _ = fabricbench::metrics::Recorder::new().save("affinity_study", &table);
     for r in &results {
         let worst = r.p_values.iter().map(|&(_, p)| p).fold(f64::INFINITY, f64::min);
         println!("{}: smallest pairwise p = {:.3}", r.fabric, worst);
     }
-    println!("bench_affinity: done in {:.2} s", start.elapsed().as_secs_f64());
+    let dt = start.elapsed().as_secs_f64();
+    println!("bench_affinity: done in {:.2} s", dt);
+    report.entry("affinity_study", &[("wall_ms", dt * 1e3)]);
+    report.finish();
 }

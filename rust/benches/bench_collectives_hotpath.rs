@@ -9,6 +9,7 @@ use fabricbench::collectives::{
 use fabricbench::config::presets::fabric;
 use fabricbench::config::spec::{ClusterSpec, FabricKind, TransportOptions};
 use fabricbench::fabric::{Comm, NetSim};
+use fabricbench::util::benchjson::BenchReport;
 use fabricbench::util::rng::Rng;
 use std::time::Instant;
 
@@ -21,7 +22,14 @@ fn random_buffers(ranks: usize, elems: usize, seed: u64) -> RealBuffers {
     )
 }
 
-fn bench_algo(name: &str, algo: &dyn Collective, ranks: usize, elems: usize, iters: usize) {
+fn bench_algo(
+    report: &mut BenchReport,
+    name: &str,
+    algo: &dyn Collective,
+    ranks: usize,
+    elems: usize,
+    iters: usize,
+) {
     let cluster = ClusterSpec::txgaia();
     let placement = Placement::gpus(&cluster, ranks).unwrap();
     let mut net = NetSim::new(
@@ -53,19 +61,25 @@ fn bench_algo(name: &str, algo: &dyn Collective, ranks: usize, elems: usize, ite
         total / iters as f64 * 1e3,
         bytes / total / 1e9
     );
+    report.entry(
+        &format!("{name}_r{ranks}_e{elems}"),
+        &[("wall_ms_per_op", total / iters as f64 * 1e3), ("gb_per_s", bytes / total / 1e9)],
+    );
 }
 
 fn main() {
+    let (quick, mut report) = BenchReport::from_env("collectives_hotpath");
     println!("collective hot-path benchmark (RealBuffers, OPA fabric model)\n");
-    for &(ranks, elems, iters) in &[
-        (8usize, 1_000_000usize, 10usize),
-        (16, 1_000_000, 6),
-        (16, 4_000_000, 3),
-        (32, 1_000_000, 3),
-    ] {
-        bench_algo("ring", &RingAllreduce, ranks, elems, iters);
-        bench_algo("rhd", &RecursiveHalvingDoubling, ranks, elems, iters);
-        bench_algo("hierarchical", &Hierarchical::default(), ranks, elems, iters);
+    let grid: &[(usize, usize, usize)] = if quick {
+        &[(8, 250_000, 3), (16, 250_000, 2)]
+    } else {
+        &[(8, 1_000_000, 10), (16, 1_000_000, 6), (16, 4_000_000, 3), (32, 1_000_000, 3)]
+    };
+    for &(ranks, elems, iters) in grid {
+        bench_algo(&mut report, "ring", &RingAllreduce, ranks, elems, iters);
+        bench_algo(&mut report, "rhd", &RecursiveHalvingDoubling, ranks, elems, iters);
+        bench_algo(&mut report, "hierarchical", &Hierarchical::default(), ranks, elems, iters);
         println!();
     }
+    report.finish();
 }

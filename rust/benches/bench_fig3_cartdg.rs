@@ -1,9 +1,11 @@
 //! Bench: regenerate Fig 3 (CartDG strong scaling on both fabrics).
+use fabricbench::util::benchjson::BenchReport;
 use std::time::Instant;
 
 fn main() {
+    let (quick, mut report) = BenchReport::from_env("fig3_cartdg");
     let start = Instant::now();
-    let (table, rows) = fabricbench::experiments::fig3::run(false);
+    let (table, rows) = fabricbench::experiments::fig3::run(quick);
     let dt = start.elapsed();
     println!("{}", table.to_markdown());
     let _ = fabricbench::metrics::Recorder::new().save("fig3_cartdg_scaling", &table);
@@ -23,4 +25,6 @@ fn main() {
         parity.iter().cloned().fold(0.0, f64::max)
     );
     println!("bench_fig3_cartdg: full sweep in {:.2} s", dt.as_secs_f64());
+    report.entry("fig3_sweep", &[("wall_ms", dt.as_secs_f64() * 1e3)]);
+    report.finish();
 }

@@ -1,10 +1,12 @@
 //! Bench: regenerate Fig 4 (training throughput, both fabrics, 2-512
 //! GPUs) and report the Ethernet deficit headline.
+use fabricbench::util::benchjson::BenchReport;
 use std::time::Instant;
 
 fn main() {
+    let (quick, mut report) = BenchReport::from_env("fig4_throughput");
     let start = Instant::now();
-    let (table, rows) = fabricbench::experiments::fig4::run(false);
+    let (table, rows) = fabricbench::experiments::fig4::run(quick);
     let dt = start.elapsed();
     println!("{}", table.to_markdown());
     let _ = fabricbench::metrics::Recorder::new().save("fig4_throughput", &table);
@@ -13,4 +15,6 @@ fn main() {
         fabricbench::experiments::fig4::mean_ethernet_deficit(&rows)
     );
     println!("bench_fig4_throughput: full sweep in {:.2} s", dt.as_secs_f64());
+    report.entry("fig4_sweep", &[("wall_ms", dt.as_secs_f64() * 1e3)]);
+    report.finish();
 }

@@ -1,14 +1,17 @@
 //! Bench: regenerate Fig 5 (three all-reduce strategies x both fabrics
 //! x 2-512 GPUs for all four models).
+use fabricbench::util::benchjson::BenchReport;
 use std::time::Instant;
 
 fn main() {
+    let (quick, mut report) = BenchReport::from_env("fig5_allreduce");
     let start = Instant::now();
-    let (table, rows) = fabricbench::experiments::fig5::run(false);
+    let (table, rows) = fabricbench::experiments::fig5::run(quick);
     let dt = start.elapsed();
     println!("{}", table.to_markdown());
     let _ = fabricbench::metrics::Recorder::new().save("fig5_allreduce_strategies", &table);
-    // The paper's 512-GPU observation: ResNet50_v1.5 degrades on Ethernet.
+    // The paper's 512-GPU observation: ResNet50_v1.5 degrades on Ethernet
+    // (the quick grid stops below 512, so guard the headline).
     let v15 = |fabric: &str, gpus: usize| {
         rows.iter()
             .find(|r| {
@@ -22,9 +25,13 @@ fn main() {
     };
     let eth_eff = v15("GbE", 512) / (v15("GbE", 256) * 2.0);
     let opa_eff = v15("OPA", 512) / (v15("OPA", 256) * 2.0);
-    println!(
-        "ResNet50_v1.5 256->512 GPU scaling: eth {:.2}x-of-ideal vs opa {:.2}x-of-ideal",
-        eth_eff, opa_eff
-    );
+    if eth_eff.is_finite() && opa_eff.is_finite() {
+        println!(
+            "ResNet50_v1.5 256->512 GPU scaling: eth {:.2}x-of-ideal vs opa {:.2}x-of-ideal",
+            eth_eff, opa_eff
+        );
+    }
     println!("bench_fig5_allreduce: full sweep in {:.2} s", dt.as_secs_f64());
+    report.entry("fig5_sweep", &[("wall_ms", dt.as_secs_f64() * 1e3)]);
+    report.finish();
 }

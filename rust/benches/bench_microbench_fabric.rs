@@ -1,14 +1,19 @@
 //! Bench: OSU-style fabric microbenchmarks (latency/bandwidth sweeps).
+use fabricbench::util::benchjson::BenchReport;
 use std::time::Instant;
 
 fn main() {
+    let (quick, mut report) = BenchReport::from_env("microbench_fabric");
     let start = Instant::now();
-    let p2p = fabricbench::experiments::microbench::p2p(false);
-    let ar = fabricbench::experiments::microbench::allreduce(false);
+    let p2p = fabricbench::experiments::microbench::p2p(quick);
+    let ar = fabricbench::experiments::microbench::allreduce(quick);
     println!("{}", p2p.to_markdown());
     println!("{}", ar.to_markdown());
     let rec = fabricbench::metrics::Recorder::new();
     let _ = rec.save("microbench_p2p", &p2p);
     let _ = rec.save("microbench_allreduce", &ar);
-    println!("bench_microbench_fabric: done in {:.2} s", start.elapsed().as_secs_f64());
+    let dt = start.elapsed().as_secs_f64();
+    println!("bench_microbench_fabric: done in {:.2} s", dt);
+    report.entry("p2p_and_allreduce", &[("wall_ms", dt * 1e3)]);
+    report.finish();
 }

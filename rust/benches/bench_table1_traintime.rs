@@ -1,12 +1,16 @@
 //! Bench: regenerate Table I (historical training times) and time the
 //! cost-model evaluation itself.
+use fabricbench::util::benchjson::BenchReport;
 use std::time::Instant;
 
 fn main() {
+    let (_quick, mut report) = BenchReport::from_env("table1_traintime");
     let start = Instant::now();
     let table = fabricbench::experiments::table1::run();
     let dt = start.elapsed();
     println!("{}", table.to_markdown());
     let _ = fabricbench::metrics::Recorder::new().save("table1_training_times", &table);
     println!("bench_table1_traintime: generated in {:.3} ms", dt.as_secs_f64() * 1e3);
+    report.entry("table1", &[("wall_ms", dt.as_secs_f64() * 1e3)]);
+    report.finish();
 }

@@ -112,12 +112,26 @@ impl Buffers for NullBuffers {
 /// Bytes per f32 element on the wire.
 pub const BYTES_PER_ELEM: f64 = 4.0;
 
+use crate::util::hash::fnv1a_str;
+
 /// A sum-allreduce algorithm. After `allreduce` returns, every rank's
 /// buffer holds the elementwise sum of all ranks' original buffers, and
 /// the communicator's clocks reflect the communication schedule. Returns
 /// the completion time (max over ranks).
 pub trait Collective {
     fn name(&self) -> &'static str;
+
+    /// Discriminator for schedule memoization
+    /// ([`crate::trainer::scheduler::ScheduleCache`]): two instances with
+    /// equal signatures MUST emit identical message schedules for the
+    /// same (elems, placement, topology). The default hashes the name,
+    /// which is correct only for field-less strategies — any strategy
+    /// with parameters that shape its schedule (e.g.
+    /// [`PipelinedRing::segments`]) must fold them in.
+    fn schedule_signature(&self) -> u64 {
+        fnv1a_str(self.name())
+    }
+
     fn allreduce(&self, comm: &mut Comm, bufs: &mut dyn Buffers) -> f64;
 }
 

@@ -114,6 +114,13 @@ impl Collective for PipelinedRing {
         "ring-pipelined"
     }
 
+    /// `segments` changes the message schedule, so it must discriminate
+    /// cache entries (see [`Collective::schedule_signature`]).
+    fn schedule_signature(&self) -> u64 {
+        (super::fnv1a_str(self.name()) ^ self.segments as u64)
+            .wrapping_mul(0x0000_0100_0000_01B3)
+    }
+
     fn allreduce(&self, comm: &mut Comm, bufs: &mut dyn Buffers) -> f64 {
         let p = comm.size();
         if p <= 1 {
@@ -170,6 +177,21 @@ mod tests {
     use crate::collectives::NullBuffers;
     use crate::config::spec::FabricKind;
     use crate::util::prop;
+
+    #[test]
+    fn schedule_signature_discriminates_parameters() {
+        use crate::collectives::{Collective, RingAllreduce};
+        let a = PipelinedRing { segments: 4 };
+        let b = PipelinedRing { segments: 8 };
+        assert_eq!(a.name(), b.name(), "same name is the aliasing hazard");
+        assert_ne!(
+            a.schedule_signature(),
+            b.schedule_signature(),
+            "segments must discriminate schedule-cache entries"
+        );
+        assert_ne!(a.schedule_signature(), RingAllreduce.schedule_signature());
+        assert_eq!(a.schedule_signature(), PipelinedRing { segments: 4 }.schedule_signature());
+    }
 
     #[test]
     fn broadcast_replicates_root() {

@@ -115,6 +115,8 @@ use_rdma = true
 num_streams = 2        # concurrent collective channels (1 = serialized)
 # rendezvous_threshold_bytes = 32768.0
 # chunk_mib = 16.0     # chunk-pipeline buckets above this size
+# schedule_cache = false # disable collective schedule/timing memoization
+#                        # (exact-keyed; output bytes identical either way)
 
 [topology]
 kind = "fat-tree"      # or "dragonfly" (adds per-group global links)

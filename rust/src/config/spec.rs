@@ -538,6 +538,11 @@ pub struct TransportOptions {
     /// back-to-back sub-collectives on their stream (one logical launch:
     /// the coordination cycle is paid once per bucket). `None` disables.
     pub chunk_bytes: Option<f64>,
+    /// Memoize collective schedules and solved timings per simulator
+    /// ([`crate::trainer::scheduler::ScheduleCache`]). Exact-keyed, so
+    /// toggling it cannot change any output byte — off exists for A/B
+    /// perf measurement and debugging.
+    pub schedule_cache: bool,
 }
 
 impl Default for TransportOptions {
@@ -548,6 +553,7 @@ impl Default for TransportOptions {
             num_streams: 1,
             rendezvous_threshold: None,
             chunk_bytes: None,
+            schedule_cache: true,
         }
     }
 }
@@ -591,6 +597,9 @@ impl TransportOptions {
         }
         if let Some(x) = getf("chunk_mib")? {
             t.chunk_bytes = Some(x * crate::util::units::MIB);
+        }
+        if let Some(b) = getb("schedule_cache")? {
+            t.schedule_cache = b;
         }
         t.validate()?;
         Ok(t)
@@ -703,9 +712,10 @@ mod tests {
         assert_eq!(t.num_streams, 1);
         assert!(t.rendezvous_threshold.is_none());
         assert!(t.chunk_bytes.is_none());
+        assert!(t.schedule_cache, "memoization defaults on");
 
         let doc = toml::parse(
-            "gpudirect = false\nnum_streams = 4\nrendezvous_threshold_bytes = 32768.0\nchunk_mib = 16.0",
+            "gpudirect = false\nnum_streams = 4\nrendezvous_threshold_bytes = 32768.0\nchunk_mib = 16.0\nschedule_cache = false",
         )
         .unwrap();
         let t = TransportOptions::from_toml(&doc).unwrap();
@@ -713,6 +723,11 @@ mod tests {
         assert_eq!(t.num_streams, 4);
         assert_eq!(t.rendezvous_threshold, Some(32768.0));
         assert_eq!(t.chunk_bytes, Some(16.0 * 1024.0 * 1024.0));
+        assert!(!t.schedule_cache);
+        assert!(
+            TransportOptions::from_toml(&toml::parse("schedule_cache = 3").unwrap()).is_err(),
+            "wrong type must be loud"
+        );
     }
 
     #[test]

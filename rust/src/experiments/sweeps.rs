@@ -38,14 +38,11 @@ use std::sync::mpsc;
 /// Bump when cell semantics change so stale artifacts never resurface.
 pub const CACHE_VERSION: &str = "v1";
 
-/// FNV-1a 64-bit hash (stable across platforms and runs).
+/// FNV-1a 64-bit hash (stable across platforms and runs). Thin alias of
+/// the canonical implementation in [`crate::util::hash`], kept because
+/// committed cache artifacts are named by it.
 pub fn fnv1a(s: &str) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
-    }
-    h
+    crate::util::hash::fnv1a_str(s)
 }
 
 /// One grid cell's result: the table row plus named numeric side-values

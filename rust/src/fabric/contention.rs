@@ -7,20 +7,39 @@
 //!   uses it on the message path; it is kept because it is a useful
 //!   building block for microbenches and as the reference the engine's
 //!   aggregate-throughput behavior is checked against.
-//! * [`FlowResources`] + [`max_min_rates`] — the fluid-flow model: every
-//!   in-flight message holds a set of shared capacities (its source NIC
-//!   transmit port, destination NIC receive port, and the rack up/down
-//!   links when it crosses racks), and the instantaneous rate of every
-//!   flow is the **max-min fair** allocation subject to per-flow caps
-//!   (PCIe/UPI limits from the transport layer). Rates are recomputed by
-//!   [`crate::fabric::NetSim`] on every flow arrival and departure.
+//! * [`FlowResources`] + the max-min solvers — the fluid-flow model:
+//!   every in-flight message holds a set of shared capacities (its source
+//!   NIC transmit port, destination NIC receive port, and the rack
+//!   up/down links when it crosses racks), and the instantaneous rate of
+//!   every flow is the **max-min fair** allocation subject to per-flow
+//!   caps (PCIe/UPI limits from the transport layer). Rates are
+//!   recomputed by [`crate::fabric::NetSim`] on every flow arrival and
+//!   departure.
 //!
-//! The solver is classic progressive filling: raise all unfrozen flows'
-//! rates at the same speed until a flow hits its own cap or some resource
-//! saturates, freeze the affected flows, repeat. Termination: every
-//! iteration with a positive increment freezes at least one flow (the
-//! increment is the minimum of the freeze conditions), so the loop runs at
-//! most `flows` times.
+//! Both solvers are classic progressive filling: raise all unfrozen
+//! flows' rates at the same speed until a flow hits its own cap or some
+//! resource saturates, freeze the affected flows, repeat. Termination:
+//! every iteration with a positive increment freezes at least one flow
+//! (the increment is the minimum of the freeze conditions), so the loop
+//! runs at most `flows` times.
+//!
+//! * [`max_min_rates`] is the original allocating solver. It is retained
+//!   as the **reference oracle**: the engine no longer calls it, but the
+//!   property suites (`tests/solver_equivalence.rs` and the unit tests
+//!   below) pin the production solver against it bit for bit.
+//! * [`MaxMinScratch`] is the production solver: an allocation-free
+//!   arena that exploits the water-filling structure. All unfrozen flows
+//!   share one fill `level` (a scalar — no per-flow rate updates per
+//!   round), flows are pre-sorted by cap so cap-limited flows freeze as
+//!   a prefix of that order, and drained resources freeze their holders
+//!   through a per-resource member index (CSR) instead of a full flow
+//!   scan. Per round the work is O(touched resources + newly frozen)
+//!   instead of the reference's O(flows + resources), and a solve over a
+//!   subset of a batch (a bottleneck group, see [`crate::fabric::sim`])
+//!   touches only that subset's resources. The produced rates are
+//!   bit-identical to the reference on the same flow set: the level is
+//!   the same partial sum of the same round increments, and both freeze
+//!   conditions are evaluated with the same arithmetic.
 
 /// A serializing resource with a fixed bandwidth (legacy scalar model).
 #[derive(Clone, Debug)]
@@ -96,7 +115,11 @@ impl FlowResources {
     }
 }
 
-/// Max-min fair rate allocation by progressive filling.
+/// Max-min fair rate allocation by progressive filling — the **reference
+/// oracle**. Allocates per call and scans every flow every round; the
+/// engine's hot path uses [`MaxMinScratch`] instead, which is pinned
+/// bit-for-bit against this function by the solver-equivalence property
+/// suites.
 ///
 /// * `caps[r]` — capacity of resource `r` in bytes/s (must be positive
 ///   for every resource referenced by a flow).
@@ -166,6 +189,222 @@ pub fn max_min_rates(caps: &[f64], flow_caps: &[f64], flow_res: &[FlowResources]
         unfrozen -= newly;
     }
     rate
+}
+
+/// Allocation-free incremental max-min solver (see the module docs).
+///
+/// One arena is reused across every solve of a simulation: no per-call
+/// `Vec`s for rates / frozen flags / remaining capacity / load. The
+/// dense per-resource tables are kept clean between calls by sparse
+/// reset over the resources the previous solve touched, so a solve over
+/// a small bottleneck group costs only that group's footprint even when
+/// the compact resource table of the enclosing batch is large.
+#[derive(Debug, Default)]
+pub struct MaxMinScratch {
+    /// Member slots sorted by flow cap ascending (prefix-freeze order).
+    order: Vec<u32>,
+    frozen: Vec<bool>,
+    /// Per-resource unfrozen-holder count (dense, zero between solves).
+    load: Vec<u32>,
+    /// Per-resource remaining capacity (valid only for touched entries).
+    remaining: Vec<f64>,
+    /// Per-resource drained marker (dense, false between solves).
+    drained: Vec<bool>,
+    /// Resources referenced by the current member set.
+    touched: Vec<u32>,
+    /// CSR of resource -> member slots: `csr_start[r]..cursor[r]`.
+    csr_start: Vec<u32>,
+    cursor: Vec<u32>,
+    csr_items: Vec<u32>,
+    drain_stack: Vec<u32>,
+    all: Vec<u32>,
+    /// Perf counters: total solve calls and filling rounds (reported by
+    /// the engine bench as `solver_iterations`).
+    pub solves: u64,
+    pub rounds: u64,
+}
+
+impl MaxMinScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Solve max-min rates for the flows in `members` (indices into the
+    /// batch-wide `flow_caps` / `flow_res` / `rate` tables). Writes only
+    /// `rate[m]` for `m` in `members`. Bit-identical to
+    /// [`max_min_rates`] over the same flow set.
+    pub fn solve(
+        &mut self,
+        caps: &[f64],
+        flow_caps: &[f64],
+        flow_res: &[FlowResources],
+        members: &[u32],
+        rate: &mut [f64],
+    ) {
+        let n = members.len();
+        if n == 0 {
+            return;
+        }
+        self.solves += 1;
+        let nr = caps.len();
+        if self.load.len() < nr {
+            self.load.resize(nr, 0);
+            self.remaining.resize(nr, 0.0);
+            self.drained.resize(nr, false);
+            self.csr_start.resize(nr, 0);
+            self.cursor.resize(nr, 0);
+        }
+
+        // Touched resources + per-resource unfrozen-holder counts.
+        self.touched.clear();
+        for &m in members {
+            for r in flow_res[m as usize].iter() {
+                if self.load[r] == 0 {
+                    self.touched.push(r as u32);
+                    self.remaining[r] = caps[r];
+                }
+                self.load[r] += 1;
+            }
+        }
+        // CSR: which member slots hold each touched resource.
+        let mut total = 0u32;
+        for &r in &self.touched {
+            self.csr_start[r as usize] = total;
+            self.cursor[r as usize] = total;
+            total += self.load[r as usize];
+        }
+        self.csr_items.clear();
+        self.csr_items.resize(total as usize, 0);
+        for (k, &m) in members.iter().enumerate() {
+            for r in flow_res[m as usize].iter() {
+                let c = self.cursor[r] as usize;
+                self.csr_items[c] = k as u32;
+                self.cursor[r] += 1;
+            }
+        }
+
+        self.order.clear();
+        self.order.extend(0..n as u32);
+        let key = |k: &u32| flow_caps[members[*k as usize] as usize];
+        self.order.sort_unstable_by(|a, b| key(a).total_cmp(&key(b)));
+        self.frozen.clear();
+        self.frozen.resize(n, false);
+        self.drain_stack.clear();
+
+        let mut level = 0.0f64;
+        let mut ptr = 0usize;
+        let mut unfrozen = n;
+        while unfrozen > 0 {
+            self.rounds += 1;
+            while ptr < n && self.frozen[self.order[ptr] as usize] {
+                ptr += 1;
+            }
+            // Largest equal increment every unfrozen flow can absorb: the
+            // smallest unfrozen cap slack is at the cap-order cursor (all
+            // unfrozen flows sit at `level`), then the resource slacks.
+            let mut delta = f64::INFINITY;
+            if ptr < n {
+                delta = flow_caps[members[self.order[ptr] as usize] as usize] - level;
+            }
+            for &r in &self.touched {
+                let l = self.load[r as usize];
+                if l > 0 {
+                    delta = delta.min(self.remaining[r as usize] / l as f64);
+                }
+            }
+            if delta.is_finite() && delta > 0.0 {
+                level += delta;
+                for &r in &self.touched {
+                    let l = self.load[r as usize];
+                    if l > 0 {
+                        self.remaining[r as usize] -= delta * l as f64;
+                    }
+                }
+            }
+            // Freeze pass — the same set the reference freezes this round.
+            let mut newly = 0usize;
+            // (a) Cap-limited flows are a prefix of the cap order.
+            while ptr < n {
+                let k = self.order[ptr] as usize;
+                if self.frozen[k] {
+                    ptr += 1;
+                    continue;
+                }
+                let i = members[k] as usize;
+                if level >= flow_caps[i] * (1.0 - 1e-12) {
+                    self.frozen[k] = true;
+                    newly += 1;
+                    rate[i] = level;
+                    for r in flow_res[i].iter() {
+                        self.load[r] -= 1;
+                    }
+                    ptr += 1;
+                } else {
+                    break;
+                }
+            }
+            // (b) Flows holding a drained resource (checked against the
+            // same epsilon as the reference; a resource drains once).
+            for &r in &self.touched {
+                let ri = r as usize;
+                if !self.drained[ri] && self.remaining[ri] <= caps[ri] * 1e-12 {
+                    self.drained[ri] = true;
+                    self.drain_stack.push(r);
+                }
+            }
+            while let Some(r) = self.drain_stack.pop() {
+                let ri = r as usize;
+                for idx in self.csr_start[ri] as usize..self.cursor[ri] as usize {
+                    let k = self.csr_items[idx] as usize;
+                    if self.frozen[k] {
+                        continue;
+                    }
+                    let i = members[k] as usize;
+                    self.frozen[k] = true;
+                    newly += 1;
+                    rate[i] = level;
+                    for r2 in flow_res[i].iter() {
+                        self.load[r2] -= 1;
+                    }
+                }
+            }
+            if newly == 0 {
+                // Numerical stall: unfrozen flows keep the current level
+                // (the reference leaves their accumulated rate, which is
+                // the same partial sum).
+                for k in 0..n {
+                    if !self.frozen[k] {
+                        rate[members[k] as usize] = level;
+                    }
+                }
+                break;
+            }
+            unfrozen -= newly;
+        }
+        // Sparse cleanup: restore the dense tables' invariants.
+        for &r in &self.touched {
+            self.load[r as usize] = 0;
+            self.drained[r as usize] = false;
+        }
+    }
+
+    /// Convenience for oracles and tests: solve over every flow,
+    /// resizing `rate`.
+    pub fn solve_all(
+        &mut self,
+        caps: &[f64],
+        flow_caps: &[f64],
+        flow_res: &[FlowResources],
+        rate: &mut Vec<f64>,
+    ) {
+        rate.clear();
+        rate.resize(flow_caps.len(), 0.0);
+        self.all.clear();
+        self.all.extend(0..flow_caps.len() as u32);
+        let members = std::mem::take(&mut self.all);
+        self.solve(caps, flow_caps, flow_res, &members, rate);
+        self.all = members;
+    }
 }
 
 #[cfg(test)]
@@ -249,6 +488,104 @@ mod tests {
         );
         assert!((rates[0] - 3.0).abs() < 1e-9, "{rates:?}");
         assert!((rates[1] - 7.0).abs() < 1e-9, "{rates:?}");
+    }
+
+    type Instance = (Vec<f64>, Vec<f64>, Vec<FlowResources>);
+
+    fn random_instance(rng: &mut crate::util::rng::Rng) -> Instance {
+        let n_res = 1 + rng.below(8) as usize;
+        let caps: Vec<f64> = (0..n_res).map(|_| rng.uniform_in(0.5, 25.0)).collect();
+        let n_flows = 1 + rng.below(24) as usize;
+        let mut flow_caps = Vec::new();
+        let mut flow_res = Vec::new();
+        for _ in 0..n_flows {
+            flow_caps.push(rng.uniform_in(0.25, 40.0));
+            let k = 1 + rng.below(MAX_FLOW_RESOURCES as u64 - 1) as usize;
+            let mut f = FlowResources::new();
+            let mut used = Vec::new();
+            for _ in 0..k {
+                let r = rng.below(n_res as u64) as usize;
+                if !used.contains(&r) {
+                    f.push(r);
+                    used.push(r);
+                }
+            }
+            flow_res.push(f);
+        }
+        (caps, flow_caps, flow_res)
+    }
+
+    #[test]
+    fn scratch_solver_bit_identical_to_reference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xBEEF);
+        let mut scratch = MaxMinScratch::new();
+        let mut rates = Vec::new();
+        for _ in 0..500 {
+            let (caps, flow_caps, flow_res) = random_instance(&mut rng);
+            let want = max_min_rates(&caps, &flow_caps, &flow_res);
+            scratch.solve_all(&caps, &flow_caps, &flow_res, &mut rates);
+            for (i, (a, b)) in want.iter().zip(&rates).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "flow {i}: ref {a} vs scratch {b}");
+            }
+        }
+        assert!(scratch.solves == 500 && scratch.rounds >= 500);
+    }
+
+    #[test]
+    fn scratch_subset_solve_matches_subinstance_reference() {
+        // Solving a member subset in the batch-wide tables must equal the
+        // reference run on the extracted sub-instance (what the engine's
+        // bottleneck groups rely on).
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x5EED);
+        let mut scratch = MaxMinScratch::new();
+        for _ in 0..200 {
+            let (caps, flow_caps, flow_res) = random_instance(&mut rng);
+            let members: Vec<u32> = (0..flow_caps.len() as u32)
+                .filter(|_| rng.below(2) == 0)
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            let mut rates = vec![f64::NAN; flow_caps.len()];
+            scratch.solve(&caps, &flow_caps, &flow_res, &members, &mut rates);
+            let sub_caps: Vec<f64> =
+                members.iter().map(|&m| flow_caps[m as usize]).collect();
+            let sub_res: Vec<FlowResources> =
+                members.iter().map(|&m| flow_res[m as usize]).collect();
+            let want = max_min_rates(&caps, &sub_caps, &sub_res);
+            for (k, &m) in members.iter().enumerate() {
+                assert_eq!(want[k].to_bits(), rates[m as usize].to_bits());
+            }
+            // Non-members are untouched.
+            for i in 0..flow_caps.len() {
+                if !members.contains(&(i as u32)) {
+                    assert!(rates[i].is_nan(), "flow {i} written outside member set");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_arena_reuse_is_clean() {
+        // A large solve must leave no residue that skews a later small
+        // solve on different resources (dense tables reset sparsely).
+        let mut scratch = MaxMinScratch::new();
+        let mut rates = Vec::new();
+        let caps = vec![10.0, 3.0, 8.0, 1.0];
+        let fc = vec![100.0, 100.0, 100.0];
+        let fr_all = vec![fr(&[0, 1]), fr(&[0, 2]), fr(&[3])];
+        scratch.solve_all(&caps, &fc, &fr_all, &mut rates);
+        let first = rates.clone();
+        let mut fresh = MaxMinScratch::new();
+        scratch.solve_all(&caps, &fc, &fr_all, &mut rates);
+        let mut rates2 = Vec::new();
+        fresh.solve_all(&caps, &fc, &fr_all, &mut rates2);
+        for ((a, b), c) in first.iter().zip(&rates).zip(&rates2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+            assert_eq!(a.to_bits(), c.to_bits());
+        }
     }
 
     #[test]

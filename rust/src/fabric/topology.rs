@@ -226,6 +226,26 @@ impl Topology {
         Route { res, inter_tor, spine, inter_group }
     }
 
+    /// Stable 64-bit signature of the link graph: tier shape, ECMP seed
+    /// and every capacity bit. Two topologies with equal signatures route
+    /// and price flows identically — the schedule cache keys on this.
+    pub fn signature(&self) -> u64 {
+        let mut h = mix64(
+            (self.kind as u64)
+                ^ ((self.n_nodes as u64) << 2)
+                ^ ((self.nodes_per_tor as u64) << 18)
+                ^ ((self.n_tors as u64) << 30)
+                ^ ((self.n_spines as u64) << 42)
+                ^ ((self.n_groups as u64) << 50)
+                ^ ((self.tors_per_group as u64) << 58),
+        );
+        h = mix64(h ^ self.ecmp_seed);
+        for &c in &self.caps {
+            h = mix64(h ^ c.to_bits());
+        }
+        h
+    }
+
     /// Human-readable name of a link id (tests, trace debugging).
     pub fn link_label(&self, id: usize) -> String {
         let n = self.n_nodes;

@@ -24,6 +24,7 @@
 //!   --cache              cache per-cell JSON results under <out>/cache
 //!   --seed S             base seed for per-cell seed derivation
 //!   --streams N          run: concurrent communication streams [1]
+//!   --no-schedule-cache  run: disable schedule/timing memoization
 //!   --workers N          train-real: data-parallel workers   [4]
 //!   --steps N            train-real: training steps          [300]
 //!   --lr X               train-real: learning rate           [0.1]
@@ -121,6 +122,10 @@ trainer communication (run --config):
   --streams N          concurrent collective channels for the overlap
                        scheduler [1 = serialized coordinator]; also
                        settable as [transport] num_streams in the TOML
+  --no-schedule-cache  disable collective schedule/timing memoization
+                       (exact-keyed: outputs are byte-identical either
+                       way; off exists for A/B perf measurement). Also
+                       [transport] schedule_cache = false in the TOML
 
 fabric topology ([topology] in the TOML config):
   explicit fat-tree tiers above the NICs — leaf (ToR) and spine switches
@@ -168,6 +173,9 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
     if args.get("streams").is_some() {
         opts.num_streams = args.get_usize("streams", opts.num_streams)?;
         opts.validate()?;
+    }
+    if args.flag("no-schedule-cache") {
+        opts.schedule_cache = false;
     }
     let mut fabric = FabricSpec::from_toml(
         doc.get("fabric")

@@ -1,0 +1,115 @@
+//! Machine-readable bench reporting.
+//!
+//! Every `cargo bench` target (all `harness = false` mains) accepts
+//!
+//! ```text
+//! --quick               CI-sized workloads
+//! --bench-json <path>   append this bench's workloads to a JSON report
+//! ```
+//!
+//! and records `workload -> {field: number}` entries. Several targets
+//! can share one report file (each merges under its own top-level key),
+//! which is how CI builds the `BENCH_PR4.json` perf-trajectory artifact:
+//! run the same bench driver on two revisions and diff the numbers.
+
+use crate::util::json::{self, Json};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+pub struct BenchReport {
+    bench: String,
+    entries: Vec<(String, Vec<(String, f64)>)>,
+    path: Option<PathBuf>,
+}
+
+impl BenchReport {
+    /// Parse the bench CLI; returns `(quick, report)`.
+    pub fn from_env(bench: &str) -> (bool, BenchReport) {
+        let mut quick = false;
+        let mut path = None;
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--quick" => quick = true,
+                "--bench-json" => path = args.next().map(PathBuf::from),
+                _ => {}
+            }
+        }
+        (quick, BenchReport { bench: bench.to_string(), entries: Vec::new(), path })
+    }
+
+    /// Record one workload's measurements (e.g. `wall_ms`, `events`).
+    pub fn entry(&mut self, workload: &str, fields: &[(&str, f64)]) {
+        self.entries.push((
+            workload.to_string(),
+            fields.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        ));
+    }
+
+    /// Write the report if `--bench-json` was given; merges into an
+    /// existing file so several bench targets can share one artifact.
+    pub fn finish(self) {
+        let Some(path) = self.path else { return };
+        let mut root: BTreeMap<String, Json> = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|j| j.as_obj().cloned())
+            .unwrap_or_default();
+        root.insert("schema".to_string(), json::s("fabricbench-bench-v1"));
+        let workloads: BTreeMap<String, Json> = self
+            .entries
+            .iter()
+            .map(|(w, fields)| {
+                let obj: BTreeMap<String, Json> =
+                    fields.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+                (w.clone(), Json::Obj(obj))
+            })
+            .collect();
+        root.insert(self.bench.clone(), Json::Obj(workloads));
+        if std::fs::write(&path, Json::Obj(root).to_string()).is_ok() {
+            println!("bench report appended to {}", path.display());
+        } else {
+            eprintln!("warning: could not write bench report {}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_merges_benches_into_one_file() {
+        let path = std::env::temp_dir().join("fb_benchjson_test.json");
+        let _ = std::fs::remove_file(&path);
+        let mut a = BenchReport {
+            bench: "engine".into(),
+            entries: Vec::new(),
+            path: Some(path.clone()),
+        };
+        a.entry("contended_64", &[("wall_ms", 1.5), ("events", 64.0)]);
+        a.finish();
+        let mut b = BenchReport {
+            bench: "fig4".into(),
+            entries: Vec::new(),
+            path: Some(path.clone()),
+        };
+        b.entry("full", &[("wall_ms", 10.0)]);
+        b.finish();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str().unwrap(), "fabricbench-bench-v1");
+        let engine = j.get("engine").unwrap().get("contended_64").unwrap();
+        assert_eq!(engine.get("events").unwrap().as_f64(), Some(64.0));
+        let fig4 = j.get("fig4").unwrap().get("full").unwrap();
+        assert_eq!(fig4.get("wall_ms").unwrap().as_f64(), Some(10.0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn from_env_without_flags_is_inert() {
+        // Under `cargo test` argv carries no bench flags: no path, and
+        // finish() must be a no-op.
+        let (_, rep) = BenchReport::from_env("x");
+        rep.finish();
+    }
+}

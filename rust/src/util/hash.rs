@@ -1,0 +1,43 @@
+//! The canonical FNV-1a implementation (64-bit, platform-stable).
+//!
+//! Three subsystems key on these hashes — the sweep runner's cell
+//! artifacts (`experiments::sweeps`), the schedule cache
+//! (`trainer::scheduler`) and collective schedule signatures
+//! (`collectives`) — so there is exactly one implementation to keep
+//! their keys stable.
+
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+
+/// Fold one 64-bit word into the running hash.
+#[inline]
+pub fn fnv1a_u64(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(FNV_PRIME)
+}
+
+/// Fold a byte string into the running hash (byte-at-a-time FNV-1a).
+#[inline]
+pub fn fnv1a_bytes(h: u64, s: &[u8]) -> u64 {
+    s.iter().fold(h, |h, &b| (h ^ b as u64).wrapping_mul(FNV_PRIME))
+}
+
+/// Hash a string from the standard offset basis.
+#[inline]
+pub fn fnv1a_str(s: &str) -> u64 {
+    fnv1a_bytes(FNV_OFFSET, s.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_vectors() {
+        assert_eq!(fnv1a_str(""), FNV_OFFSET);
+        // Classic FNV-1a test vector: "a" -> 0xaf63dc4c8601ec8c.
+        assert_eq!(fnv1a_str("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a_str("fig5:a"), fnv1a_str("fig5:b"));
+        assert_eq!(fnv1a_u64(FNV_OFFSET, 7), fnv1a_u64(FNV_OFFSET, 7));
+        assert_ne!(fnv1a_u64(FNV_OFFSET, 7), fnv1a_u64(FNV_OFFSET, 8));
+    }
+}

@@ -3,6 +3,8 @@
 //! is available): deterministic PRNG, statistics, JSON, tables/CSV, unit
 //! formatting, and a miniature property-testing harness.
 
+pub mod benchjson;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -176,6 +176,32 @@ fn streams_csv_identical_for_any_jobs() {
 }
 
 #[test]
+fn schedule_cache_on_off_bit_identical_trainer_and_sweep() {
+    // The memoization tiers are exact-keyed: enabling them can change
+    // wall-clock only, never an output bit — across stream counts and
+    // across --jobs.
+    let run = spec();
+    for streams in [1usize, 4] {
+        let on = trainer(FabricKind::EthernetRoce25, streams, 64.0 * MIB).run(32, &run).unwrap();
+        let mut t = trainer(FabricKind::EthernetRoce25, streams, 64.0 * MIB);
+        t.opts.schedule_cache = false;
+        let off = t.run(32, &run).unwrap();
+        assert_eq!(
+            on.step_time_mean.to_bits(),
+            off.step_time_mean.to_bits(),
+            "streams={streams}: schedule cache changed the step time"
+        );
+        assert_eq!(on.comm_fraction.to_bits(), off.comm_fraction.to_bits());
+        assert_eq!(on.images_per_sec.to_bits(), off.images_per_sec.to_bits());
+    }
+    // Sweep CSV: cache on (default), parallel — still byte-stable (the
+    // cache is per-simulator, so worker interleaving cannot leak state).
+    let (seq, _) = ablations::streams_sweep_with(true, &Runner::sequential());
+    let (par, _) = ablations::streams_sweep_with(true, &Runner::new(3));
+    assert_eq!(seq.to_csv(), par.to_csv());
+}
+
+#[test]
 fn chunk_pipelining_runs_and_stays_sane() {
     // Chunks of a bucket are one logical launch (no extra coordination
     // cycles), so chunking costs at most the extra per-round latency

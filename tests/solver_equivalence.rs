@@ -1,0 +1,171 @@
+//! Solver equivalence property suite (PR 4).
+//!
+//! The engine's hot path runs the allocation-free incremental solver
+//! (`MaxMinScratch`); the original allocating `max_min_rates` is retained
+//! as the reference oracle. These properties pin the two **bit-for-bit**
+//! over randomized flow/resource grids — including real dragonfly routes,
+//! which exercise the maximum 6-resource flow footprint — so the solver
+//! swap can never move a golden byte.
+
+use fabricbench::config::presets::fabric;
+use fabricbench::config::spec::{ClusterSpec, FabricKind, TopologyKind, TopologySpec};
+use fabricbench::fabric::contention::{
+    max_min_rates, FlowResources, MaxMinScratch, MAX_FLOW_RESOURCES,
+};
+use fabricbench::fabric::Topology;
+use fabricbench::util::rng::Rng;
+
+fn assert_bits_equal(want: &[f64], got: &[f64], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: length mismatch");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{ctx}: flow {i} reference {a} vs incremental {b}"
+        );
+    }
+}
+
+fn random_grid(
+    rng: &mut Rng,
+    n_res_max: u64,
+    n_flows_max: u64,
+) -> (Vec<f64>, Vec<f64>, Vec<FlowResources>) {
+    let n_res = 1 + rng.below(n_res_max) as usize;
+    let caps: Vec<f64> = (0..n_res).map(|_| rng.uniform_in(0.1, 40.0)).collect();
+    let n_flows = 1 + rng.below(n_flows_max) as usize;
+    let mut flow_caps = Vec::new();
+    let mut flow_res = Vec::new();
+    for _ in 0..n_flows {
+        flow_caps.push(rng.uniform_in(0.05, 60.0));
+        let k = 1 + rng.below(MAX_FLOW_RESOURCES as u64) as usize;
+        let mut f = FlowResources::new();
+        let mut used = Vec::new();
+        for _ in 0..k.min(n_res) {
+            let r = rng.below(n_res as u64) as usize;
+            if !used.contains(&r) {
+                f.push(r);
+                used.push(r);
+            }
+        }
+        flow_res.push(f);
+    }
+    (caps, flow_caps, flow_res)
+}
+
+#[test]
+fn randomized_grids_bit_identical() {
+    let mut rng = Rng::new(0x50_1_7E9);
+    let mut scratch = MaxMinScratch::new();
+    let mut rates = Vec::new();
+    for trial in 0..2000 {
+        let (caps, flow_caps, flow_res) = random_grid(&mut rng, 12, 40);
+        let want = max_min_rates(&caps, &flow_caps, &flow_res);
+        scratch.solve_all(&caps, &flow_caps, &flow_res, &mut rates);
+        assert_bits_equal(&want, &rates, &format!("trial {trial}"));
+    }
+}
+
+#[test]
+fn degenerate_grids_bit_identical() {
+    // Zero flow caps, equal caps (mass ties), single shared resource,
+    // heavily oversubscribed bottlenecks — the epsilon/stall paths.
+    let mut scratch = MaxMinScratch::new();
+    let mut rates = Vec::new();
+    let fr = |ids: &[usize]| {
+        let mut f = FlowResources::new();
+        for &i in ids {
+            f.push(i);
+        }
+        f
+    };
+    let cases: Vec<(Vec<f64>, Vec<f64>, Vec<FlowResources>)> = vec![
+        (vec![10.0], vec![0.0, 5.0], vec![fr(&[0]), fr(&[0])]),
+        (vec![10.0], vec![5.0; 8], (0..8).map(|_| fr(&[0])).collect()),
+        (vec![1e-9, 1e9], vec![1e9, 1e9], vec![fr(&[0, 1]), fr(&[1])]),
+        (vec![7.0, 7.0, 7.0], vec![7.0; 6], (0..6).map(|i| fr(&[i % 3])).collect()),
+        (vec![5.0], vec![f64::MAX / 4.0, 1.0], vec![fr(&[0]), fr(&[0])]),
+    ];
+    for (i, (caps, flow_caps, flow_res)) in cases.iter().enumerate() {
+        let want = max_min_rates(caps, flow_caps, flow_res);
+        scratch.solve_all(caps, flow_caps, flow_res, &mut rates);
+        assert_bits_equal(&want, &rates, &format!("degenerate case {i}"));
+    }
+}
+
+#[test]
+fn dragonfly_six_resource_routes_bit_identical() {
+    // Real routes from a dragonfly topology: cross-group flows hold six
+    // links (NIC tx, ToR up, global out, global in, ToR down, NIC rx).
+    let cluster = ClusterSpec::txgaia();
+    let spec = TopologySpec {
+        kind: TopologyKind::Dragonfly,
+        groups: 7,
+        spines: 2,
+        oversubscription: Some(4.0),
+        global_oversubscription: 2.0,
+        ..Default::default()
+    };
+    let f = fabric(FabricKind::EthernetRoce25);
+    let topo = Topology::build(&spec, &f, &cluster).unwrap();
+    let nic = f.effective_bandwidth();
+    let mut rng = Rng::new(0xD4A90);
+    let mut scratch = MaxMinScratch::new();
+    let mut rates = Vec::new();
+    let mut saw_six = false;
+    for trial in 0..200 {
+        let n_flows = 2 + rng.below(48) as usize;
+        let mut ids: Vec<usize> = Vec::new();
+        let mut routes = Vec::new();
+        for _ in 0..n_flows {
+            let src = rng.below(448) as usize;
+            let mut dst = rng.below(448) as usize;
+            if dst == src {
+                dst = (dst + 37) % 448;
+            }
+            let r = topo.route(src, dst, rng.below(8));
+            ids.extend(r.res.iter());
+            routes.push(r.res);
+        }
+        ids.sort_unstable();
+        ids.dedup();
+        let caps: Vec<f64> = ids.iter().map(|&id| topo.caps()[id]).collect();
+        let flow_res: Vec<FlowResources> = routes
+            .iter()
+            .map(|route| {
+                let mut fr = FlowResources::new();
+                for id in route.iter() {
+                    fr.push(ids.binary_search(&id).unwrap());
+                }
+                fr
+            })
+            .collect();
+        let flow_caps: Vec<f64> =
+            (0..n_flows).map(|_| nic * rng.uniform_in(0.3, 1.0)).collect();
+        let want = max_min_rates(&caps, &flow_caps, &flow_res);
+        scratch.solve_all(&caps, &flow_caps, &flow_res, &mut rates);
+        assert_bits_equal(&want, &rates, &format!("dragonfly trial {trial}"));
+        saw_six |= flow_res.iter().any(|fr| fr.len() == 6);
+    }
+    assert!(saw_six, "no trial crossed a group — 6-resource routes never exercised");
+}
+
+#[test]
+fn scratch_interleaved_shapes_stay_clean() {
+    // Alternating large and tiny instances through ONE arena must match
+    // a fresh solver on every instance (sparse reset correctness).
+    let mut rng = Rng::new(0xC1EA7);
+    let mut shared = MaxMinScratch::new();
+    let mut rates_a = Vec::new();
+    let mut rates_b = Vec::new();
+    for trial in 0..300 {
+        let (caps, flow_caps, flow_res) = if trial % 2 == 0 {
+            random_grid(&mut rng, 12, 48)
+        } else {
+            random_grid(&mut rng, 2, 3)
+        };
+        shared.solve_all(&caps, &flow_caps, &flow_res, &mut rates_a);
+        MaxMinScratch::new().solve_all(&caps, &flow_caps, &flow_res, &mut rates_b);
+        assert_bits_equal(&rates_b, &rates_a, &format!("interleave trial {trial}"));
+    }
+}

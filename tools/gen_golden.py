@@ -17,6 +17,17 @@ digits, so an IEEE-754-faithful port reproduces the same bytes. After any
 intentional model change, regenerate with the cargo path and commit the
 diff; keep this mirror in sync or delete it once a toolchain is ambient.
 
+Note (PR 4): the Rust engine's contended hot path moved to an incremental
+solver (dirty bottleneck groups + completion heap + scratch-arena max-min
+filling), which also fixes a latent stall in the loop below (sub-fp-ulp
+completion steps made `t + dt == t`, spinning until the event budget ran
+out and silently froze rates — never triggered by these two drivers).
+This mirror intentionally keeps the simpler monolithic reference loop:
+the incremental engine was validated byte-identical on both fixtures by
+porting it into a copy of this mirror and diffing the CSVs (where the old
+loop stays exact the two differ only by sub-1e-9 re-association noise,
+absorbed by the 4-digit quantization), so it remains a faithful generator.
+
 Usage: python3 tools/gen_golden.py [--out-dir tests/golden]
 """
 
