@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
                 step_overhead: 0.0,
                 coordination_overhead:
                     fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+                tenancy: fabricbench::config::TenancySpec::default(),
             };
             Ok(trainer.run(gpus, &spec)?.images_per_sec)
         };

@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
             step_overhead: 0.0,
             coordination_overhead:
                 fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+            tenancy: fabricbench::config::TenancySpec::default(),
         };
         let spec = RunSpec::default();
         for gpus in [1, 8, 64, 256] {

@@ -5,8 +5,9 @@
 //! the other §Perf target.
 //!
 //! `--quick` shrinks every workload to CI size; `--bench-json PATH`
-//! appends machine-readable results (the `BENCH_PR4.json` perf
-//! trajectory: wall-ms, event counts, solver iterations, cache hits).
+//! appends machine-readable results (the perf trajectory CI uploads —
+//! currently `BENCH_PR5.json`: wall-ms, event counts, solver
+//! iterations, cache hits, background-tenant flow counts).
 
 use fabricbench::cluster::Placement;
 use fabricbench::collectives::{Collective, NullBuffers, RingAllreduce};
@@ -119,6 +120,63 @@ fn main() {
         );
     }
 
+    // 2b. Shared-tenancy contended workload: the same hostile incast
+    // batch with a 60%-load background tenant injected into every
+    // round — the engine solves training + tenant flows as one fair
+    // batch. This is the PR 5 perf-trajectory workload.
+    {
+        let flows_n = 64usize;
+        let reqs = contended_batch(flows_n);
+        let iters = if quick { 20 } else { 200 };
+        let mut net = NetSim::new(
+            fabric(FabricKind::EthernetRoce25),
+            cluster.clone(),
+            TransportOptions::default(),
+        );
+        // Tenant sources in rack 2 incast straight into the training
+        // batch's receivers (nodes 32..40): NIC rx ports and the rack-1
+        // downlink are genuinely shared, so every round solves one big
+        // mixed bottleneck group.
+        let spec = fabricbench::config::TenancySpec {
+            src_first: Some(64),
+            src_count: Some(32),
+            dst_first: Some(32),
+            dst_count: Some(8),
+            ..fabricbench::config::TenancySpec::neighbor_incast(0.6)
+        };
+        let bg = fabricbench::fabric::BackgroundTraffic::new(&spec, &net.fabric, &net.cluster, 7)
+            .unwrap();
+        net.set_background(bg);
+        let mut events = 0u64;
+        let mut bg_msgs = 0u64;
+        let start = Instant::now();
+        for _ in 0..iters {
+            let times = net.transfer_batch(&reqs);
+            std::hint::black_box(times[flows_n / 2].recv_complete);
+            events += net.stats.fluid_events;
+            bg_msgs += net.stats.background_messages;
+            net.reset();
+        }
+        let dt = start.elapsed().as_secs_f64();
+        println!(
+            "contended batch x{flows_n} + 60% background: {:.3} ms/batch ({} events, {} tenant flows/iter)",
+            dt / iters as f64 * 1e3,
+            events / iters as u64,
+            bg_msgs / iters as u64
+        );
+        report.entry(
+            "contended_batch_background",
+            &[
+                ("wall_ms", dt * 1e3),
+                ("wall_ms_per_batch", dt / iters as f64 * 1e3),
+                ("iters", iters as f64),
+                ("events", events as f64),
+                ("background_flows", bg_msgs as f64),
+                ("solver_iterations", net.solver.rounds as f64),
+            ],
+        );
+    }
+
     // 3. Full-scale allreduce simulation (512 GPUs, ResNet50-sized bucket).
     let placement = Placement::gpus(&cluster, 512).unwrap();
     let elems = 25_557_032usize / 2;
@@ -211,6 +269,7 @@ fn main() {
         step_overhead: 0.0,
         coordination_overhead:
             fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+        tenancy: fabricbench::config::TenancySpec::default(),
     };
     let spec = fabricbench::config::spec::RunSpec {
         warmup_steps: 0,

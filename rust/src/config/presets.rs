@@ -128,6 +128,24 @@ oversubscription = 4.0 # leaf->spine taper (4:1). Omit this AND
 # uplink_gbps = 200.0  # explicit per-ToR aggregate uplink (overrides ratio)
 # ecmp_seed = 1        # seed of the deterministic ECMP route hash
 
+[tenancy]
+background_load = 0.3  # other tenants' offered load, as a fraction of the
+                       # pattern's bottleneck capacity (0 = dedicated
+                       # system, bit-for-bit the pre-tenancy model)
+pattern = "incast"     # or "shuffle" (all-to-all among the tenant nodes)
+source = "poisson"     # or "on-off" (bursty: exponential burst/idle phases)
+# flow_mib = 16.0      # background flow size
+# src_first = 32       # tenant source nodes        [the second rack]
+# src_count = 32
+# dst_first = 0        # tenant destination nodes   [first 8 nodes]
+# dst_count = 8
+# burst_ms = 2.0       # on-off mean burst / idle durations
+# idle_ms = 2.0
+# seed = 1             # tenancy RNG seed (XORed with the run seed)
+# straggler_frac = 0.1   # fraction of ranks persistently slow
+# straggler_factor = 1.5 # their compute-time multiplier (>= 1)
+# straggler_jitter = 0.05# extra per-step lognormal sigma, all ranks
+
 [run]
 seed = 7
 warmup_steps = 5
@@ -185,6 +203,11 @@ mod tests {
         assert_eq!(topo.spines, 2);
         assert_eq!(topo.oversubscription, Some(4.0));
         topo.validate_for(&cluster).unwrap();
+        let tenancy =
+            crate::config::spec::TenancySpec::from_toml(doc.get("tenancy").unwrap()).unwrap();
+        assert_eq!(tenancy.background_load, 0.3);
+        assert!(tenancy.background_active());
+        tenancy.resolve_sets(&cluster).unwrap();
     }
 
     #[test]

@@ -274,6 +274,383 @@ impl TopologySpec {
     }
 }
 
+/// Spatial pattern of the background tenant's flows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrafficPattern {
+    /// Many sources funnel into a small destination set (neighbor-rack
+    /// incast — the classic shallow-buffer killer).
+    Incast,
+    /// All-to-all among the tenant's nodes (shuffle/alltoall phase of a
+    /// competing analytics or training job).
+    Shuffle,
+}
+
+impl TrafficPattern {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "incast" => TrafficPattern::Incast,
+            "shuffle" | "all-to-all" => TrafficPattern::Shuffle,
+            other => bail!("unknown tenancy pattern '{other}' (expected 'incast' or 'shuffle')"),
+        })
+    }
+}
+
+/// Temporal model of the background tenant's flow arrivals.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SourceModel {
+    /// Memoryless arrivals at the configured average rate.
+    Poisson,
+    /// Exponentially distributed on/off phases; arrivals only during on
+    /// bursts, at a rate scaled so the *average* load is preserved.
+    OnOff,
+}
+
+impl SourceModel {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "poisson" => SourceModel::Poisson,
+            "on-off" | "onoff" => SourceModel::OnOff,
+            other => bail!("unknown tenancy source '{other}' (expected 'poisson' or 'on-off')"),
+        })
+    }
+}
+
+/// Shared-tenancy model: background cross-traffic from other tenants of
+/// the fabric, plus compute-side stragglers. The default spec is a
+/// **dedicated, silent system** — `background_load = 0`, unit slowdowns —
+/// and is guaranteed bit-for-bit identical to the pre-tenancy engine
+/// (no generator is constructed, no RNG stream is consumed).
+///
+/// `background_load` is the tenant's offered load as a fraction of the
+/// pattern's aggregate *bottleneck* capacity (the destination NICs for
+/// incast, the source NICs for shuffle), so `load <= 1` keeps the
+/// background queue stable by construction. Loads are realized by
+/// *thinning* a full-rate arrival stream, so at a fixed seed the flow
+/// set at load `a` is a subset of the flow set at load `b > a` — which
+/// is what makes "more load never helps" a provable property rather
+/// than seed luck.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TenancySpec {
+    /// Offered background load in `[0, 1]`; 0 disables cross-traffic.
+    pub background_load: f64,
+    pub pattern: TrafficPattern,
+    pub source: SourceModel,
+    /// Size of each background flow, bytes.
+    pub flow_bytes: f64,
+    /// Tenant source node range; `None` derives the second rack
+    /// (`nodes_per_rack..2*nodes_per_rack`, clipped to the cluster).
+    pub src_first: Option<usize>,
+    pub src_count: Option<usize>,
+    /// Destination node range; `None` derives the first 8 nodes for
+    /// incast (the training job's rack) and the source set for shuffle.
+    pub dst_first: Option<usize>,
+    pub dst_count: Option<usize>,
+    /// On-off source: mean burst / idle durations, seconds.
+    pub burst_secs: f64,
+    pub idle_secs: f64,
+    /// Tenancy RNG seed, XOR-folded with the run seed, so seed-paired
+    /// sweep cells see the same background realization.
+    pub seed: u64,
+    /// Fraction of ranks that are persistently slow (0 disables).
+    pub straggler_frac: f64,
+    /// Compute-time multiplier of the slow ranks (>= 1; 1 disables).
+    pub straggler_factor: f64,
+    /// Extra per-step lognormal jitter sigma applied to *every* rank's
+    /// compute time, drawn from a tenancy-private RNG stream (0 disables
+    /// and consumes no randomness).
+    pub straggler_jitter: f64,
+}
+
+impl Default for TenancySpec {
+    fn default() -> Self {
+        TenancySpec {
+            background_load: 0.0,
+            pattern: TrafficPattern::Incast,
+            source: SourceModel::Poisson,
+            // 16 MiB per flow: large enough that a sweep's background is
+            // thousands, not tens of thousands, of flows per step at the
+            // same offered bytes.
+            flow_bytes: 16.0 * 1024.0 * 1024.0,
+            src_first: None,
+            src_count: None,
+            dst_first: None,
+            dst_count: None,
+            burst_secs: 2.0e-3,
+            idle_secs: 2.0e-3,
+            seed: 0x7E7A_0001,
+            straggler_frac: 0.0,
+            straggler_factor: 1.0,
+            straggler_jitter: 0.0,
+        }
+    }
+}
+
+impl TenancySpec {
+    /// Preset: the dedicated, silent system (the pre-tenancy model).
+    pub fn dedicated() -> TenancySpec {
+        TenancySpec::default()
+    }
+
+    /// Preset: neighbor-rack incast at the given load — the second
+    /// rack's nodes funnel poisson traffic into the first rack.
+    pub fn neighbor_incast(load: f64) -> TenancySpec {
+        TenancySpec { background_load: load, pattern: TrafficPattern::Incast, ..Default::default() }
+    }
+
+    /// Preset: all-to-all shuffle among the tenant's nodes at the given
+    /// load.
+    pub fn shuffle(load: f64) -> TenancySpec {
+        let pattern = TrafficPattern::Shuffle;
+        TenancySpec { background_load: load, pattern, ..Default::default() }
+    }
+
+    /// Is the cross-traffic generator active?
+    pub fn background_active(&self) -> bool {
+        self.background_load > 0.0
+    }
+
+    /// Is any compute-side heterogeneity active?
+    pub fn stragglers_active(&self) -> bool {
+        (self.straggler_frac > 0.0 && self.straggler_factor != 1.0) || self.straggler_jitter > 0.0
+    }
+
+    /// Parse a CLI straggler spec `FRAC:FACTOR[:JITTER]` (e.g.
+    /// `0.1:1.5:0.05` — 10% of ranks run 1.5x slower, everyone jitters
+    /// with lognormal sigma 0.05) onto this spec.
+    pub fn apply_stragglers(&mut self, s: &str) -> Result<()> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() < 2 || parts.len() > 3 {
+            bail!("--stragglers expects FRAC:FACTOR[:JITTER], got '{s}'");
+        }
+        let num = |p: &str, what: &str| -> Result<f64> {
+            p.parse().map_err(|_| anyhow!("--stragglers {what} must be a number, got '{p}'"))
+        };
+        self.straggler_frac = num(parts[0], "FRAC")?;
+        self.straggler_factor = num(parts[1], "FACTOR")?;
+        if let Some(j) = parts.get(2) {
+            self.straggler_jitter = num(j, "JITTER")?;
+        }
+        self.validate()
+    }
+
+    /// Per-rank persistent compute slowdown factors. All-ones (with no
+    /// RNG consumption) when the persistent straggler model is off, so
+    /// the disabled path is bit-identical to the pre-tenancy trainer.
+    pub fn rank_slowdowns(&self, ranks: usize, run_seed: u64) -> Vec<f64> {
+        if self.straggler_frac <= 0.0 || self.straggler_factor == 1.0 {
+            return vec![1.0; ranks];
+        }
+        let mut rng = crate::util::rng::Rng::new(self.seed ^ run_seed ^ 0x51A6_61E5_0000_0001);
+        (0..ranks)
+            .map(|_| if rng.uniform() < self.straggler_frac { self.straggler_factor } else { 1.0 })
+            .collect()
+    }
+
+    /// Stable hash of the tenancy configuration (folded into schedule
+    /// cache world signatures so tenancy variants can never alias).
+    pub fn signature(&self) -> u64 {
+        use crate::util::hash::{fnv1a_u64, FNV_OFFSET};
+        let mut h = fnv1a_u64(FNV_OFFSET, self.background_load.to_bits());
+        h = fnv1a_u64(h, self.pattern as u64 ^ ((self.source as u64) << 8));
+        h = fnv1a_u64(h, self.flow_bytes.to_bits());
+        for x in [self.src_first, self.src_count, self.dst_first, self.dst_count] {
+            h = fnv1a_u64(h, x.map_or(u64::MAX, |v| v as u64));
+        }
+        // One fold per field: XOR-combining pairs would make swapped
+        // values (e.g. burst/idle) collide, breaking the no-aliasing
+        // contract this hash exists for.
+        h = fnv1a_u64(h, self.burst_secs.to_bits());
+        h = fnv1a_u64(h, self.idle_secs.to_bits());
+        h = fnv1a_u64(h, self.seed);
+        h = fnv1a_u64(h, self.straggler_frac.to_bits());
+        h = fnv1a_u64(h, self.straggler_factor.to_bits());
+        h = fnv1a_u64(h, self.straggler_jitter.to_bits());
+        h
+    }
+
+    /// Build from a parsed TOML `[tenancy]` table, filling defaults. A
+    /// key that is present with the wrong type is an error, not a
+    /// silently kept default (same contract as `[transport]`).
+    pub fn from_toml(v: &Json) -> Result<TenancySpec> {
+        let getf = |key: &str| -> Result<Option<f64>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => match x.as_f64() {
+                    Some(f) => Ok(Some(f)),
+                    None => bail!("tenancy.{key} must be a number"),
+                },
+            }
+        };
+        let getu = |key: &str| -> Result<Option<usize>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => match x.as_f64() {
+                    Some(f) if f.fract() == 0.0 && f >= 0.0 => Ok(Some(f as usize)),
+                    Some(f) => bail!("tenancy.{key} must be a non-negative integer, got {f}"),
+                    None => bail!("tenancy.{key} must be a non-negative integer"),
+                },
+            }
+        };
+        let mut t = TenancySpec::default();
+        if let Some(x) = getf("background_load")? {
+            t.background_load = x;
+        }
+        if let Some(k) = v.get("pattern") {
+            match k.as_str() {
+                Some(s) => t.pattern = TrafficPattern::parse(s)?,
+                None => bail!("tenancy.pattern must be a string"),
+            }
+        }
+        if let Some(k) = v.get("source") {
+            match k.as_str() {
+                Some(s) => t.source = SourceModel::parse(s)?,
+                None => bail!("tenancy.source must be a string"),
+            }
+        }
+        if let Some(x) = getf("flow_mib")? {
+            t.flow_bytes = x * 1024.0 * 1024.0;
+        }
+        if let Some(x) = getu("src_first")? {
+            t.src_first = Some(x);
+        }
+        if let Some(x) = getu("src_count")? {
+            t.src_count = Some(x);
+        }
+        if let Some(x) = getu("dst_first")? {
+            t.dst_first = Some(x);
+        }
+        if let Some(x) = getu("dst_count")? {
+            t.dst_count = Some(x);
+        }
+        if let Some(x) = getf("burst_ms")? {
+            t.burst_secs = x * 1e-3;
+        }
+        if let Some(x) = getf("idle_ms")? {
+            t.idle_secs = x * 1e-3;
+        }
+        if let Some(x) = getu("seed")? {
+            // Same 2^53 guard as topology.ecmp_seed: the TOML layer
+            // carries numbers as f64, so larger integers may already have
+            // been rounded before we see them.
+            if x as u64 >= (1u64 << 53) {
+                bail!("tenancy.seed {x} is not exactly representable (must be < 2^53)");
+            }
+            t.seed = x as u64;
+        }
+        if let Some(x) = getf("straggler_frac")? {
+            t.straggler_frac = x;
+        }
+        if let Some(x) = getf("straggler_factor")? {
+            t.straggler_factor = x;
+        }
+        if let Some(x) = getf("straggler_jitter")? {
+            t.straggler_jitter = x;
+        }
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Cluster-independent validation.
+    pub fn validate(&self) -> Result<()> {
+        if !self.background_load.is_finite() || !(0.0..=1.0).contains(&self.background_load) {
+            bail!(
+                "tenancy: background_load {} must be in [0, 1] (a load above the bottleneck \
+                 capacity makes the background queue unstable)",
+                self.background_load
+            );
+        }
+        // Floor at 64 KiB: the full-rate arrival stream scales as
+        // bottleneck_bw / flow_bytes, so tiny flows explode the per-batch
+        // flow count (and the RNG draw rate) by orders of magnitude.
+        if !self.flow_bytes.is_finite() || self.flow_bytes < 64.0 * 1024.0 {
+            bail!(
+                "tenancy: flow size {} bytes below the 64 KiB floor (tiny flows make the \
+                 background arrival rate implausibly high)",
+                self.flow_bytes
+            );
+        }
+        if !self.burst_secs.is_finite() || self.burst_secs <= 0.0 {
+            bail!("tenancy: burst_ms must be positive");
+        }
+        if !self.idle_secs.is_finite() || self.idle_secs <= 0.0 {
+            bail!("tenancy: idle_ms must be positive");
+        }
+        if let Some(c) = self.src_count {
+            if c == 0 {
+                bail!("tenancy: src_count must be >= 1");
+            }
+        }
+        if let Some(c) = self.dst_count {
+            if c == 0 {
+                bail!("tenancy: dst_count must be >= 1");
+            }
+        }
+        if !self.straggler_frac.is_finite() || !(0.0..=1.0).contains(&self.straggler_frac) {
+            bail!("tenancy: straggler_frac {} must be in [0, 1]", self.straggler_frac);
+        }
+        if !self.straggler_factor.is_finite() || self.straggler_factor < 1.0 {
+            bail!(
+                "tenancy: straggler_factor {} must be >= 1 (a factor below 1 is a speedup, \
+                 not a straggler)",
+                self.straggler_factor
+            );
+        }
+        if !self.straggler_jitter.is_finite() || !(0.0..=2.0).contains(&self.straggler_jitter) {
+            bail!(
+                "tenancy: straggler_jitter {} outside the plausible [0, 2]",
+                self.straggler_jitter
+            );
+        }
+        Ok(())
+    }
+
+    /// Resolve the tenant's `(src, dst)` node ranges against a concrete
+    /// cluster, as `(first, count)` pairs, validating that every node
+    /// exists and the pattern is realizable.
+    pub fn resolve_sets(&self, cluster: &ClusterSpec) -> Result<((usize, usize), (usize, usize))> {
+        self.validate()?;
+        let npr = cluster.nodes_per_rack;
+        let (src_first, src_count) = match (self.src_first, self.src_count) {
+            (f, c) if f.is_some() || c.is_some() => {
+                (f.unwrap_or(npr.min(cluster.nodes / 2)), c.unwrap_or(npr))
+            }
+            // Default tenant: the second rack (clipped to the cluster);
+            // single-rack clusters fall back to the upper half.
+            _ if cluster.nodes > npr => (npr, npr.min(cluster.nodes - npr)),
+            _ => (cluster.nodes / 2, cluster.nodes - cluster.nodes / 2),
+        };
+        let (dst_first, dst_count) = match (self.dst_first, self.dst_count, self.pattern) {
+            (f, c, _) if f.is_some() || c.is_some() => (f.unwrap_or(0), c.unwrap_or(8)),
+            // Incast default: the head of the first rack — deliberately
+            // the rack the training job lands in, so the tenant and the
+            // job genuinely share NIC and downlink capacity.
+            (_, _, TrafficPattern::Incast) => (0, 8.min(cluster.nodes)),
+            (_, _, TrafficPattern::Shuffle) => (src_first, src_count),
+        };
+        for (what, first, count) in [("src", src_first, src_count), ("dst", dst_first, dst_count)] {
+            if count == 0 {
+                bail!("tenancy: empty {what} node set");
+            }
+            if first.saturating_add(count) > cluster.nodes {
+                bail!(
+                    "tenancy: {what} nodes {first}..{} exceed the cluster's {} nodes",
+                    first + count,
+                    cluster.nodes
+                );
+            }
+        }
+        // Every source must have a reachable destination: a 1-node dst
+        // set that coincides with a source would force self-flows.
+        if dst_count == 1 && dst_first >= src_first && dst_first < src_first + src_count {
+            bail!(
+                "tenancy: the single destination node {dst_first} is also a source; \
+                 widen dst_count or move the sets apart"
+            );
+        }
+        Ok(((src_first, src_count), (dst_first, dst_count)))
+    }
+}
+
 /// Network fabric model parameters (see DESIGN.md §6 for sources).
 #[derive(Clone, Debug)]
 pub struct FabricSpec {
@@ -813,6 +1190,109 @@ mod tests {
                 "'{doc}' should be a type error"
             );
         }
+    }
+
+    #[test]
+    fn tenancy_from_toml_defaults_and_overrides() {
+        let t = TenancySpec::from_toml(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(t, TenancySpec::default());
+        assert!(!t.background_active() && !t.stragglers_active());
+
+        let doc = toml::parse(
+            "background_load = 0.3\npattern = \"shuffle\"\nsource = \"on-off\"\nflow_mib = 2.0\n\
+             src_first = 64\nsrc_count = 16\nburst_ms = 1.5\nseed = 9\n\
+             straggler_frac = 0.1\nstraggler_factor = 1.5\nstraggler_jitter = 0.05",
+        )
+        .unwrap();
+        let t = TenancySpec::from_toml(&doc).unwrap();
+        assert_eq!(t.background_load, 0.3);
+        assert_eq!(t.pattern, TrafficPattern::Shuffle);
+        assert_eq!(t.source, SourceModel::OnOff);
+        assert_eq!(t.flow_bytes, 2.0 * 1024.0 * 1024.0);
+        assert_eq!((t.src_first, t.src_count), (Some(64), Some(16)));
+        assert!((t.burst_secs - 1.5e-3).abs() < 1e-12);
+        assert_eq!(t.seed, 9);
+        assert!(t.background_active() && t.stragglers_active());
+    }
+
+    #[test]
+    fn tenancy_validation_rejects_nonsense() {
+        for doc in [
+            "background_load = 1.5",
+            "background_load = -0.1",
+            "flow_mib = 0.0",
+            "flow_mib = 0.001",
+            "burst_ms = 0.0",
+            "idle_ms = -1.0",
+            "src_count = 0",
+            "dst_count = 0",
+            "straggler_frac = 2.0",
+            "straggler_factor = 0.5",
+            "straggler_jitter = 9.0",
+            "pattern = \"broadcast-storm\"",
+            "source = \"tidal\"",
+        ] {
+            assert!(
+                TenancySpec::from_toml(&toml::parse(doc).unwrap()).is_err(),
+                "'{doc}' should be rejected"
+            );
+        }
+        // Type errors are loud, not silently kept defaults.
+        for doc in ["background_load = \"high\"", "pattern = 3", "src_first = 1.5"] {
+            assert!(
+                TenancySpec::from_toml(&toml::parse(doc).unwrap()).is_err(),
+                "'{doc}' should be a type error"
+            );
+        }
+    }
+
+    #[test]
+    fn tenancy_resolve_sets_defaults_and_bounds() {
+        let cluster = ClusterSpec::txgaia(); // 448 nodes, 32/rack
+        let t = TenancySpec::neighbor_incast(0.3);
+        let ((sf, sc), (df, dc)) = t.resolve_sets(&cluster).unwrap();
+        assert_eq!((sf, sc), (32, 32), "default tenant is the second rack");
+        assert_eq!((df, dc), (0, 8), "default incast targets the first rack's head");
+        let s = TenancySpec::shuffle(0.3);
+        let ((sf2, sc2), (df2, dc2)) = s.resolve_sets(&cluster).unwrap();
+        assert_eq!((df2, dc2), (sf2, sc2), "shuffle is all-to-all among the tenant nodes");
+        // Out-of-cluster sets are loud.
+        let bad =
+            TenancySpec { src_first: Some(440), src_count: Some(16), ..TenancySpec::default() };
+        assert!(bad.resolve_sets(&cluster).is_err());
+        // A single destination inside the source set would force
+        // self-flows.
+        let self_flow = TenancySpec {
+            src_first: Some(0),
+            src_count: Some(4),
+            dst_first: Some(2),
+            dst_count: Some(1),
+            ..TenancySpec::default()
+        };
+        assert!(self_flow.resolve_sets(&cluster).is_err());
+    }
+
+    #[test]
+    fn tenancy_stragglers_parse_and_slowdowns() {
+        let mut t = TenancySpec::default();
+        t.apply_stragglers("0.25:1.5:0.05").unwrap();
+        assert_eq!(t.straggler_frac, 0.25);
+        assert_eq!(t.straggler_factor, 1.5);
+        assert_eq!(t.straggler_jitter, 0.05);
+        assert!(t.apply_stragglers("0.25").is_err());
+        assert!(t.apply_stragglers("a:b").is_err());
+        assert!(t.apply_stragglers("0.5:0.5").is_err(), "factor below 1 rejected");
+
+        // Disabled -> all ones, no RNG consumed (bit-exactness contract).
+        assert_eq!(TenancySpec::default().rank_slowdowns(8, 7), vec![1.0; 8]);
+        // Enabled -> deterministic per (seed, ranks), a mix of 1.0 and
+        // the factor, reproducible.
+        let spec = TenancySpec { straggler_frac: 0.5, straggler_factor: 2.0, ..Default::default() };
+        let a = spec.rank_slowdowns(64, 7);
+        let b = spec.rank_slowdowns(64, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&x| x == 2.0) && a.iter().any(|&x| x == 1.0));
+        assert_ne!(a, spec.rank_slowdowns(64, 8), "run seed folds in");
     }
 
     #[test]

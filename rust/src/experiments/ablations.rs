@@ -6,11 +6,15 @@
 //! * RDMA (RoCE) vs plain TCP on the same 25 GbE hardware
 //! * communication-stream count (the multi-stream overlap scheduler)
 //! * leaf->spine oversubscription of the fabric topology
+//! * shared-tenancy background load (the paper's shared-vs-dedicated
+//!   question, now an explicit axis)
 
 use super::sweeps::{CellOut, Runner};
 use crate::collectives::{RecursiveHalvingDoubling, RingAllreduce};
 use crate::config::presets::fabric;
-use crate::config::spec::{ClusterSpec, FabricKind, FabricSpec, RunSpec, TransportOptions};
+use crate::config::spec::{
+    ClusterSpec, FabricKind, FabricSpec, RunSpec, TenancySpec, TransportOptions,
+};
 use crate::models::perf::Precision;
 use crate::models::zoo::resnet50;
 use crate::trainer::TrainerSim;
@@ -36,6 +40,7 @@ fn trainer(
         step_overhead: 0.0,
         coordination_overhead:
             crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+        tenancy: TenancySpec::default(),
     }
 }
 
@@ -272,6 +277,93 @@ pub fn oversubscription_with(quick: bool, runner: &Runner) -> (Table, Vec<Oversu
             images_per_sec: cell.get("img_s"),
             step_time_mean: cell.get("step_s"),
             comm_fraction: cell.get("comm_frac"),
+        });
+        t.row(cell.row);
+    }
+    (t, pts)
+}
+
+/// One cell of the shared-tenancy ablation.
+pub struct TenancyPoint {
+    pub fabric: String,
+    pub load: f64,
+    pub gpus: usize,
+    pub images_per_sec: f64,
+    pub step_time_mean: f64,
+    pub comm_fraction: f64,
+    /// Mean exposed (non-overlapped) communication time per step,
+    /// seconds — the quantity the paper's shared-vs-dedicated question
+    /// is actually about.
+    pub exposed_secs: f64,
+}
+
+/// Shared-tenancy sweep: fabric x background load {0, 10, 30, 60}% x
+/// GPU counts spanning the single-rack -> multi-rack boundary. The
+/// tenant is the default neighbor-rack incast (second rack's nodes
+/// funneling into the first rack's head), so its flows genuinely share
+/// NIC and uplink capacity with the training job.
+///
+/// Cells are deliberately **seed-paired**: every cell runs at the
+/// runner's base seed, so all loads see identical compute jitter AND the
+/// identical full-rate background arrival stream (loads are realized by
+/// thinning — see [`crate::fabric::tenancy`]); the accepted flow set at
+/// a lower load is a subset of a higher one, making "more background
+/// never helps" a coupled property of the engine, not seed luck.
+pub fn tenancy_sweep(quick: bool) -> (Table, Vec<TenancyPoint>) {
+    tenancy_sweep_with(quick, &Runner::sequential())
+}
+
+pub fn tenancy_sweep_with(quick: bool, runner: &Runner) -> (Table, Vec<TenancyPoint>) {
+    let loads = [0.0f64, 0.1, 0.3, 0.6];
+    let gpu_counts = [8usize, 32, 128];
+    let mut items: Vec<(crate::config::FabricSpec, f64, usize)> = Vec::new();
+    for fab in crate::config::presets::paper_fabrics() {
+        for &load in &loads {
+            for &g in &gpu_counts {
+                items.push((fab.clone(), load, g));
+            }
+        }
+    }
+    let cells = runner.map_cells(
+        "ablation_tenancy",
+        &items,
+        |(fab, load, g)| format!("{}:load={load}:gpus={g}:quick={quick}", fab.name),
+        |_, (fab, load, g), _seed| {
+            let mut tr = trainer(fab.clone(), TransportOptions::default(), 64.0 * MIB, true);
+            if *load > 0.0 {
+                tr.tenancy = TenancySpec::neighbor_incast(*load);
+            }
+            let r = tr.run(*g, &spec(quick, runner.seed)).unwrap();
+            let exposed = r.comm_fraction * r.step_time_mean;
+            CellOut::new(vec![
+                tr.fabric.name.clone(),
+                format!("{:.0}%", load * 100.0),
+                g.to_string(),
+                fnum(r.images_per_sec),
+                fnum(r.step_time_mean * 1e3),
+                fnum(exposed * 1e3),
+                format!("{:.3}", r.comm_fraction),
+            ])
+            .val("img_s", r.images_per_sec)
+            .val("step_s", r.step_time_mean)
+            .val("comm_frac", r.comm_fraction)
+            .val("exposed_s", exposed)
+        },
+    );
+    let mut t = Table::new(
+        "Ablation: shared-tenancy background load (ResNet50, neighbor-rack incast, overlap on)",
+        &["fabric", "bg load", "gpus", "img/s", "step ms", "exposed comm ms", "exposed frac"],
+    );
+    let mut pts = Vec::new();
+    for ((fab, load, g), cell) in items.iter().zip(cells) {
+        pts.push(TenancyPoint {
+            fabric: fab.name.clone(),
+            load: *load,
+            gpus: *g,
+            images_per_sec: cell.get("img_s"),
+            step_time_mean: cell.get("step_s"),
+            comm_fraction: cell.get("comm_frac"),
+            exposed_secs: cell.get("exposed_s"),
         });
         t.row(cell.row);
     }

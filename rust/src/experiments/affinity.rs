@@ -42,6 +42,7 @@ fn sample(
         step_overhead: 0.0,
         coordination_overhead:
             crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+        tenancy: crate::config::TenancySpec::default(),
     };
     (0..reps)
         .map(|i| {

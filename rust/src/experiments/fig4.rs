@@ -58,6 +58,7 @@ pub fn run_with(quick: bool, runner: &Runner) -> (Table, Vec<Fig4Row>) {
                 step_overhead: 0.0,
                 coordination_overhead:
                     crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+                tenancy: crate::config::TenancySpec::default(),
             };
             let run_spec = RunSpec { seed, measure_steps, warmup_steps: 2, ..Default::default() };
             let r = trainer.run(*g, &run_spec).unwrap();

@@ -32,6 +32,7 @@ fn trainer(profile: &FrameworkProfile, fabric: crate::config::FabricSpec) -> Tra
         overlap: true,
         step_overhead: profile.step_overhead,
         coordination_overhead: profile.coordination_overhead,
+        tenancy: crate::config::TenancySpec::default(),
     }
 }
 

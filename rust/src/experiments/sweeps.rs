@@ -250,6 +250,7 @@ fn trainer(fabric: crate::config::FabricSpec, batch: usize, precision: Precision
         overlap: true,
         step_overhead: 0.0,
         coordination_overhead: crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+        tenancy: crate::config::TenancySpec::default(),
     }
 }
 

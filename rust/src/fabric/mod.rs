@@ -28,16 +28,24 @@
 //! instant. Point-to-point transfers follow MPI's eager/rendezvous split
 //! (see [`mpi`]): rendezvous-sized messages wait for the receiver's
 //! recv-post before the payload moves.
+//!
+//! On a **shared** system (the paper's actual setting), the engine also
+//! injects deterministic background cross-traffic from other tenants
+//! (see [`tenancy`]): seeded poisson/on-off sources over configurable
+//! node sets whose flows join the same batches and share every link
+//! max-min fairly with the training job.
 
 pub mod contention;
 pub mod mpi;
 pub mod sim;
+pub mod tenancy;
 pub mod topology;
 pub mod trace;
 pub mod transport;
 
 pub use mpi::{Comm, CommOp};
 pub use sim::{FlowReq, FlowTimes, NetSim, NetStats};
+pub use tenancy::{BackgroundTraffic, BgFlow};
 pub use topology::{Route, Topology};
 pub use trace::{MessageEvent, Trace};
 pub use transport::MessageCost;

@@ -75,6 +75,12 @@ pub struct NetStats {
     /// rate-frozen for those batches — the engine also warns on stderr
     /// the first time so sweeps cannot degrade silently.
     pub budget_exceeded: u64,
+    /// Background-tenant flows injected by the shared-tenancy model
+    /// ([`crate::fabric::tenancy`]). Kept separate from the training
+    /// counters above (`messages`/`bytes` stay training-only), so
+    /// training-vs-background attribution is always available.
+    pub background_messages: u64,
+    pub background_bytes: f64,
 }
 
 /// One message submitted to the engine.
@@ -97,8 +103,13 @@ pub struct FlowTimes {
     pub recv_complete: f64,
 }
 
+/// Marks a [`NetFlow`] as background-tenant traffic (no caller slot to
+/// report a completion into).
+const BACKGROUND_FLOW: usize = usize::MAX;
+
 /// An inter-node flow in flight (engine-internal).
 struct NetFlow {
+    /// Index into the caller's request slice, or [`BACKGROUND_FLOW`].
     req_idx: usize,
     src_node: usize,
     dst_node: usize,
@@ -347,6 +358,10 @@ pub struct NetSim {
     scratch_flows: Vec<NetFlow>,
     scratch_srcs: Vec<usize>,
     scratch_finish: Vec<f64>,
+    /// Shared-tenancy cross-traffic generator; `None` (the default) is
+    /// the dedicated, silent fabric — bit-for-bit the pre-tenancy engine.
+    background: Option<crate::fabric::tenancy::BackgroundTraffic>,
+    scratch_bg: Vec<crate::fabric::tenancy::BgFlow>,
     /// Collective schedule/timing memoization, owned per simulator so
     /// reuse across steps needs no cross-thread sharing (CSV output stays
     /// byte-identical for any `--jobs`). Survives [`NetSim::reset`]: keys
@@ -399,6 +414,8 @@ impl NetSim {
             scratch_flows: Vec::new(),
             scratch_srcs: Vec::new(),
             scratch_finish: Vec::new(),
+            background: None,
+            scratch_bg: Vec::new(),
             schedule_cache: ScheduleCache::new(),
             stats: NetStats::default(),
             trace: None,
@@ -410,15 +427,43 @@ impl NetSim {
         self.trace = Some(crate::fabric::trace::Trace::default());
     }
 
+    /// Attach a background cross-traffic generator: its flows are
+    /// injected into every subsequent [`NetSim::transfer_batch`] and
+    /// share the batch's resources max-min fairly with training flows.
+    pub fn set_background(&mut self, bg: crate::fabric::tenancy::BackgroundTraffic) {
+        self.background = Some(bg);
+    }
+
+    /// Back to a dedicated fabric.
+    pub fn clear_background(&mut self) {
+        self.background = None;
+    }
+
+    /// Is shared-tenancy cross-traffic active?
+    pub fn background_active(&self) -> bool {
+        self.background.is_some()
+    }
+
+    /// Tenancy configuration hash for schedule-cache world signatures
+    /// (0 on a dedicated fabric).
+    pub fn background_signature(&self) -> u64 {
+        self.background.as_ref().map_or(0, |b| b.signature())
+    }
+
     /// Reset occupancy, stats and ECMP flow sequencing between
     /// experiments (keeps specs and the schedule cache — cache keys
     /// capture the clock/occupancy state, so stale hits are impossible).
+    /// A background generator advances to its next epoch: virtual time
+    /// restarts at zero with a fresh, reproducible realization per step.
     pub fn reset(&mut self) {
         for b in self.busy_until.iter_mut() {
             *b = 0.0;
         }
         self.flow_seq.clear();
         self.stats = NetStats::default();
+        if let Some(bg) = self.background.as_mut() {
+            bg.advance_epoch();
+        }
     }
 
     /// Drain time of one link (observability: lets tests assert a flow
@@ -429,10 +474,15 @@ impl NetSim {
 
     /// Is the solved-timing tier of the schedule cache applicable?
     /// Requires the knob on, no message tracing (a replay records no
-    /// events), and trivial ECMP (with several spines the per-pair
-    /// `flow_seq` counters are engine state a replay would skip).
+    /// events), trivial ECMP (with several spines the per-pair
+    /// `flow_seq` counters are engine state a replay would skip), and a
+    /// dedicated fabric (the background generator's cursor is engine
+    /// state a replay would skip too).
     pub(crate) fn timing_cache_usable(&self) -> bool {
-        self.opts.schedule_cache && self.trace.is_none() && self.topology.n_spines <= 1
+        self.opts.schedule_cache
+            && self.trace.is_none()
+            && self.topology.n_spines <= 1
+            && self.background.is_none()
     }
 
     /// Snapshot the engine state a captured execution starts from.
@@ -524,59 +574,44 @@ impl NetSim {
                 continue;
             }
 
-            self.stats.inter_node_messages += 1;
-            // Route the flow through the topology: the returned link set
-            // replaces the old hard-coded NIC/rack wiring. The per-pair
-            // sequence number feeds the (deterministic) ECMP hash — with a
-            // single spine the hash is trivial, so skip the counter upkeep
-            // and keep the default-topology hot path map-free.
-            let seq = if self.topology.n_spines > 1 {
-                let e = self.flow_seq.entry((req.src.node, req.dst.node)).or_insert(0);
-                let s = *e;
-                *e += 1;
-                s
-            } else {
-                0
-            };
-            let route = self.topology.route(req.src.node, req.dst.node, seq);
-            let inter_rack = route.inter_tor;
-            if inter_rack {
-                self.stats.inter_rack_messages += 1;
-            }
-            let geo = MessageGeometry {
-                bytes: req.bytes,
-                inter_rack,
-                endpoint: req.src.kind,
-                src_slot: req.src.slot,
-                dst_slot: req.dst.slot,
-            };
-            let cost = transport::network_message(&self.fabric, &self.cluster, &self.opts, &geo);
-
-            let res = route.res;
-            let mut arrival = req.ready + cost.send_overhead;
-            for id in res.iter() {
-                arrival = arrival.max(self.busy_until[id]);
-            }
-            flows.push(NetFlow {
-                req_idx: i,
-                src_node: req.src.node,
-                dst_node: req.dst.node,
-                inter_rack,
-                arrival,
-                bytes: req.bytes,
-                cap: cost.bandwidth,
-                latency: cost.latency,
-                recv_overhead: cost.recv_overhead,
-                res,
-            });
+            self.admit_inter_node_flow(&mut flows, i, req.src, req.dst, req.bytes, req.ready);
         }
         if flows.is_empty() {
             self.scratch_flows = flows;
             return out;
         }
 
+        // Shared tenancy: inject every background flow whose arrival
+        // falls inside this batch's window. The window closes at the
+        // latest *uncontended* finish estimate — deterministic and
+        // computable before solving; arrivals in the contention-stretched
+        // tail simply join the next batch (their ready times are kept, so
+        // nothing is lost). Background flows are first-class: they claim
+        // their full route and share every link max-min fairly.
+        if self.background.is_some() {
+            let t_hi =
+                flows.iter().map(|f| f.arrival + f.bytes / f.cap).fold(f64::NEG_INFINITY, f64::max);
+            let mut bg_reqs = std::mem::take(&mut self.scratch_bg);
+            bg_reqs.clear();
+            self.background.as_mut().unwrap().flows_until(t_hi, &mut bg_reqs);
+            for bf in &bg_reqs {
+                let src = Endpoint { rank: 0, node: bf.src, slot: 0, kind: EndpointKind::Cpu };
+                let dst = Endpoint { rank: 0, node: bf.dst, slot: 0, kind: EndpointKind::Cpu };
+                self.admit_inter_node_flow(
+                    &mut flows,
+                    BACKGROUND_FLOW,
+                    src,
+                    dst,
+                    bf.bytes,
+                    bf.ready,
+                );
+            }
+            self.scratch_bg = bg_reqs;
+        }
+
         // Switch-level congestion: concurrent NIC-level flows through the
-        // core ~= distinct transmitting nodes in this round.
+        // core ~= distinct transmitting nodes in this round (background
+        // senders transit the core too and count toward the knee).
         let mut srcs = std::mem::take(&mut self.scratch_srcs);
         srcs.clear();
         srcs.extend(flows.iter().map(|f| f.src_node));
@@ -613,7 +648,9 @@ impl NetSim {
 
         for (f, &fin) in flows.iter().zip(&finishes) {
             let recv_complete = fin + f.latency + f.recv_overhead;
-            out[f.req_idx] = FlowTimes { send_release: fin, recv_complete };
+            if f.req_idx != BACKGROUND_FLOW {
+                out[f.req_idx] = FlowTimes { send_release: fin, recv_complete };
+            }
             for id in f.res.iter() {
                 self.busy_until[id] = self.busy_until[id].max(fin);
             }
@@ -625,12 +662,77 @@ impl NetSim {
                     start: f.arrival,
                     end: recv_complete,
                     inter_rack: f.inter_rack,
+                    background: f.req_idx == BACKGROUND_FLOW,
                 });
             }
         }
         self.scratch_finish = finishes;
         self.scratch_flows = flows;
         out
+    }
+
+    /// Admit one inter-node flow — training or background — into a
+    /// batch: draw its ECMP sequence, route it through the topology (the
+    /// returned link set replaces the old hard-coded NIC/rack wiring;
+    /// with a single spine the hash is trivial, so the counter upkeep is
+    /// skipped and the default-topology hot path stays map-free), price
+    /// it at the transport layer, floor its arrival by prior occupancy,
+    /// and push the [`NetFlow`]. The single admission path is what keeps
+    /// tenant and training flows physically identical to the engine;
+    /// only stats attribution follows `req_idx`.
+    fn admit_inter_node_flow(
+        &mut self,
+        flows: &mut Vec<NetFlow>,
+        req_idx: usize,
+        src: Endpoint,
+        dst: Endpoint,
+        bytes: f64,
+        ready: f64,
+    ) {
+        let background = req_idx == BACKGROUND_FLOW;
+        if background {
+            self.stats.background_messages += 1;
+            self.stats.background_bytes += bytes;
+        } else {
+            self.stats.inter_node_messages += 1;
+        }
+        let seq = if self.topology.n_spines > 1 {
+            let e = self.flow_seq.entry((src.node, dst.node)).or_insert(0);
+            let s = *e;
+            *e += 1;
+            s
+        } else {
+            0
+        };
+        let route = self.topology.route(src.node, dst.node, seq);
+        let inter_rack = route.inter_tor;
+        if inter_rack && !background {
+            self.stats.inter_rack_messages += 1;
+        }
+        let geo = MessageGeometry {
+            bytes,
+            inter_rack,
+            endpoint: src.kind,
+            src_slot: src.slot,
+            dst_slot: dst.slot,
+        };
+        let cost = transport::network_message(&self.fabric, &self.cluster, &self.opts, &geo);
+        let mut arrival = ready + cost.send_overhead;
+        for id in route.res.iter() {
+            arrival = arrival.max(self.busy_until[id]);
+        }
+        flows.push(NetFlow {
+            req_idx,
+            src_node: src.node,
+            dst_node: dst.node,
+            inter_rack,
+            arrival,
+            bytes,
+            cap: cost.bandwidth,
+            latency: cost.latency,
+            recv_overhead: cost.recv_overhead,
+            res: route.res,
+        });
     }
 
     /// Event loop over a contended batch: advance virtual time from event
@@ -1439,6 +1541,113 @@ mod tests {
         let merged: Vec<u64> =
             s.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
         assert_eq!(&merged[..2], &alone[..], "disjoint group timing changed in a merged batch");
+    }
+
+    // -----------------------------------------------------------------
+    // Shared-tenancy cross-traffic (fabric::tenancy) at the engine level.
+    // -----------------------------------------------------------------
+
+    fn background(
+        load: f64,
+        sim: &NetSim,
+        run_seed: u64,
+    ) -> crate::fabric::tenancy::BackgroundTraffic {
+        crate::fabric::tenancy::BackgroundTraffic::new(
+            &crate::config::TenancySpec::neighbor_incast(load),
+            &sim.fabric,
+            &sim.cluster,
+            run_seed,
+        )
+        .unwrap()
+    }
+
+    /// Training-side traffic that receives on the default incast's
+    /// destination nodes (0..8), so the tenant genuinely shares NIC rx
+    /// ports with it. Large payloads keep the injection window tens of
+    /// milliseconds wide — dozens of tenant arrivals at any tested load.
+    fn incast_victim_batch() -> Vec<FlowReq> {
+        let bytes = 64.0 * 1024.0 * 1024.0;
+        (0..8).map(|i| FlowReq { src: cpu_ep(8 + i), dst: cpu_ep(i), bytes, ready: 0.0 }).collect()
+    }
+
+    #[test]
+    fn background_traffic_slows_contended_training_flows() {
+        let reqs = incast_victim_batch();
+        let mut quiet = sim(FabricKind::EthernetRoce25);
+        let t_quiet =
+            quiet.transfer_batch(&reqs).iter().map(|t| t.recv_complete).fold(0.0, f64::max);
+        let mut shared = sim(FabricKind::EthernetRoce25);
+        let bg = background(0.6, &shared, 7);
+        shared.set_background(bg);
+        let t_shared =
+            shared.transfer_batch(&reqs).iter().map(|t| t.recv_complete).fold(0.0, f64::max);
+        assert!(shared.stats.background_messages > 0, "tenant must have injected flows");
+        assert!(shared.stats.background_bytes > 0.0);
+        assert!(
+            t_shared > t_quiet,
+            "shared NIC rx ports must slow the batch: {t_shared} !> {t_quiet}"
+        );
+        // Attribution split: training counters are identical either way.
+        assert_eq!(shared.stats.messages, quiet.stats.messages);
+        assert_eq!(shared.stats.bytes.to_bits(), quiet.stats.bytes.to_bits());
+        assert_eq!(shared.stats.inter_node_messages, quiet.stats.inter_node_messages);
+    }
+
+    #[test]
+    fn background_is_deterministic_per_seed_and_epoch() {
+        let reqs = incast_victim_batch();
+        let run = |seed: u64| -> Vec<u64> {
+            let mut s = sim(FabricKind::EthernetRoce25);
+            let bg = background(0.5, &s, seed);
+            s.set_background(bg);
+            let first: Vec<u64> =
+                s.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
+            s.reset(); // epoch advance: a fresh realization
+            let second: Vec<u64> =
+                s.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
+            first.into_iter().chain(second).collect()
+        };
+        assert_eq!(run(3), run(3), "same seed must replay both epochs bit-identically");
+        assert_ne!(run(3), run(4), "the tenancy seed must matter");
+    }
+
+    #[test]
+    fn zero_pressure_batches_see_no_background_resources() {
+        // A dedicated sim and a shared sim whose tenant never touches the
+        // batch's links (disjoint racks, far-away sets) time identically:
+        // background flows are just flows, they steal nothing they don't
+        // share. (The congestion knee needs >160 senders to bite.)
+        let reqs: Vec<FlowReq> = (0..4)
+            .map(|i| FlowReq {
+                src: cpu_ep(128 + i),
+                dst: cpu_ep(160 + i),
+                bytes: 64.0 * 1024.0 * 1024.0,
+                ready: 0.0,
+            })
+            .collect();
+        let mut quiet = sim(FabricKind::EthernetRoce25);
+        let want: Vec<u64> =
+            quiet.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
+        let mut shared = sim(FabricKind::EthernetRoce25);
+        let bg = background(0.4, &shared, 1);
+        shared.set_background(bg);
+        let got: Vec<u64> =
+            shared.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
+        assert!(shared.stats.background_messages > 0);
+        assert_eq!(want, got, "a tenant on disjoint links must not move training times");
+    }
+
+    #[test]
+    fn background_gates_timing_cache() {
+        let mut s = sim(FabricKind::EthernetRoce25);
+        assert!(s.timing_cache_usable());
+        let bg = background(0.2, &s, 1);
+        s.set_background(bg);
+        assert!(!s.timing_cache_usable(), "generator cursor is uncaptured engine state");
+        assert_ne!(s.background_signature(), 0);
+        s.clear_background();
+        assert!(s.timing_cache_usable());
+        assert_eq!(s.background_signature(), 0);
     }
 
     #[test]

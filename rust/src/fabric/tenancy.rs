@@ -1,0 +1,329 @@
+//! Background cross-traffic from the fabric's other tenants.
+//!
+//! The paper's headline claim is about **shared** HPC systems, so the
+//! simulator must be able to populate the fabric with competing flows.
+//! [`BackgroundTraffic`] is a deterministic, seeded flow generator: a
+//! poisson or on-off arrival process over configurable source/destination
+//! node sets (neighbor-rack incast, all-to-all shuffle — see
+//! [`TenancySpec`]), whose flows are injected into
+//! [`crate::fabric::NetSim::transfer_batch`] as first-class flows that
+//! share NIC ports, rack up/down-links and spine links **max-min fairly**
+//! with the training job's traffic.
+//!
+//! # Determinism and load coupling
+//!
+//! The generator owns a private [`Rng`] seeded from
+//! `spec.seed XOR run_seed`, advanced in a fixed draw order
+//! (gap, source, destination, thinning coin) regardless of configuration,
+//! and restarted with an epoch-advanced seed on every
+//! [`crate::fabric::NetSim::reset`] — each training step sees a fresh but
+//! reproducible background realization, independent of `--jobs` (every
+//! sweep cell owns its simulator and generator).
+//!
+//! Loads are realized by **thinning**: arrivals are always drawn at the
+//! full (load = 1) rate and each is accepted with probability
+//! `background_load`. At a fixed seed the accepted flow set at load `a`
+//! is therefore a strict subset of the set at load `b > a`, which turns
+//! "more background load never speeds training up" into a coupled
+//! property instead of a statistical hope.
+//!
+//! The full rate is calibrated to the pattern's aggregate *bottleneck*
+//! capacity (destination NICs for incast, source NICs for shuffle), so
+//! `background_load <= 1` keeps the background queue stable by
+//! construction.
+
+use crate::config::{ClusterSpec, FabricSpec, SourceModel, TenancySpec, TrafficPattern};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// One background flow to inject: node-level endpoints, payload and the
+/// virtual time its payload exists at the source.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BgFlow {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: f64,
+    pub ready: f64,
+}
+
+/// Deterministic background flow generator (see the module docs).
+#[derive(Clone, Debug)]
+pub struct BackgroundTraffic {
+    spec: TenancySpec,
+    /// `(first, count)` tenant source / destination node ranges.
+    srcs: (usize, usize),
+    dsts: (usize, usize),
+    /// Aggregate arrival rate at load = 1, flows/second.
+    full_rate: f64,
+    base_seed: u64,
+    epoch: u64,
+    rng: Rng,
+    /// Time of the last drawn arrival (the generation cursor).
+    t: f64,
+    /// On-off phase state (poisson stays permanently "on").
+    in_on: bool,
+    phase_end: f64,
+    /// The next drawn arrival (with its thinning verdict), held back when
+    /// it lies past the requested window so no draw is ever lost.
+    pending: Option<(BgFlow, bool)>,
+}
+
+impl BackgroundTraffic {
+    /// Build a generator for one simulator. Fails loudly when the spec's
+    /// node sets do not fit the cluster.
+    pub fn new(
+        spec: &TenancySpec,
+        fabric: &FabricSpec,
+        cluster: &ClusterSpec,
+        run_seed: u64,
+    ) -> Result<Self> {
+        let (srcs, dsts) = spec.resolve_sets(cluster)?;
+        let bottleneck = match spec.pattern {
+            TrafficPattern::Incast => dsts.1,
+            TrafficPattern::Shuffle => srcs.1,
+        };
+        let full_rate = bottleneck as f64 * fabric.effective_bandwidth() / spec.flow_bytes;
+        let mut bg = BackgroundTraffic {
+            spec: *spec,
+            srcs,
+            dsts,
+            full_rate,
+            base_seed: spec.seed ^ run_seed,
+            epoch: 0,
+            rng: Rng::new(0),
+            t: 0.0,
+            in_on: false,
+            phase_end: 0.0,
+            pending: None,
+        };
+        bg.restart();
+        Ok(bg)
+    }
+
+    /// The spec this generator realizes.
+    pub fn spec(&self) -> &TenancySpec {
+        &self.spec
+    }
+
+    /// Stable hash of the tenancy configuration (for cache-key folding).
+    pub fn signature(&self) -> u64 {
+        crate::util::hash::fnv1a_u64(self.spec.signature(), 0xB6_7E7A)
+    }
+
+    fn restart(&mut self) {
+        // Epoch-salted seed: each step (simulator reset) replays a fresh
+        // but reproducible realization of the same process.
+        self.rng = Rng::new(self.base_seed ^ self.epoch.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        self.t = 0.0;
+        self.in_on = false;
+        self.phase_end = 0.0;
+        self.pending = None;
+    }
+
+    /// Restart the stream for a new step/experiment (called by
+    /// [`crate::fabric::NetSim::reset`]); virtual time restarts at zero
+    /// with the next epoch's realization.
+    pub fn advance_epoch(&mut self) {
+        self.epoch += 1;
+        self.restart();
+    }
+
+    /// Arrival rate while the source is emitting: poisson sources emit
+    /// continuously; on-off sources compress the same average into
+    /// bursts (rate / duty-cycle during on phases).
+    fn on_rate(&self) -> f64 {
+        match self.spec.source {
+            SourceModel::Poisson => self.full_rate,
+            SourceModel::OnOff => {
+                let duty = self.spec.burst_secs / (self.spec.burst_secs + self.spec.idle_secs);
+                self.full_rate / duty
+            }
+        }
+    }
+
+    /// Advance the cursor by `gap` seconds of *emitting* time, skipping
+    /// over off phases for on-off sources.
+    fn advance_time(&mut self, gap: f64) {
+        match self.spec.source {
+            SourceModel::Poisson => self.t += gap,
+            SourceModel::OnOff => {
+                let mut g = gap;
+                loop {
+                    if !self.in_on {
+                        // Jump over the idle phase, then open a burst.
+                        self.t = self.t.max(self.phase_end);
+                        let burst = self.rng.exponential(self.spec.burst_secs);
+                        self.phase_end = self.t + burst;
+                        self.in_on = true;
+                    }
+                    let room = self.phase_end - self.t;
+                    if g <= room {
+                        self.t += g;
+                        return;
+                    }
+                    g -= room;
+                    self.t = self.phase_end;
+                    let idle = self.rng.exponential(self.spec.idle_secs);
+                    self.phase_end = self.t + idle;
+                    self.in_on = false;
+                }
+            }
+        }
+    }
+
+    fn draw_endpoints(&mut self) -> (usize, usize) {
+        let src = self.srcs.0 + self.rng.below(self.srcs.1 as u64) as usize;
+        let mut dst = self.dsts.0 + self.rng.below(self.dsts.1 as u64) as usize;
+        if dst == src {
+            // Deterministic remap instead of a redraw, so the draw count
+            // (and thus the coupling across loads) never depends on the
+            // collision pattern. `resolve_sets` guarantees dst_count >= 2
+            // whenever a collision is possible.
+            dst = self.dsts.0 + (dst - self.dsts.0 + 1) % self.dsts.1;
+        }
+        (src, dst)
+    }
+
+    /// Append every accepted flow with `ready <= t_hi` to `out`,
+    /// advancing the cursor. Monotone: each drawn arrival is emitted (or
+    /// thinned away) exactly once across successive calls.
+    pub fn flows_until(&mut self, t_hi: f64, out: &mut Vec<BgFlow>) {
+        loop {
+            if let Some((flow, accepted)) = self.pending {
+                if flow.ready > t_hi {
+                    return;
+                }
+                if accepted {
+                    out.push(flow);
+                }
+                self.pending = None;
+            }
+            let gap = self.rng.exponential(1.0 / self.on_rate());
+            self.advance_time(gap);
+            let (src, dst) = self.draw_endpoints();
+            // Thinning coin drawn unconditionally: the stream consumed is
+            // identical for every load, so higher loads accept supersets.
+            let accepted = self.rng.uniform() < self.spec.background_load;
+            self.pending = Some((
+                BgFlow { src, dst, bytes: self.spec.flow_bytes, ready: self.t },
+                accepted,
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fabric;
+    use crate::config::spec::FabricKind;
+
+    fn generator(spec: TenancySpec, run_seed: u64) -> BackgroundTraffic {
+        BackgroundTraffic::new(
+            &spec,
+            &fabric(FabricKind::EthernetRoce25),
+            &ClusterSpec::txgaia(),
+            run_seed,
+        )
+        .unwrap()
+    }
+
+    fn drain(bg: &mut BackgroundTraffic, t_hi: f64) -> Vec<BgFlow> {
+        let mut out = Vec::new();
+        bg.flows_until(t_hi, &mut out);
+        out
+    }
+
+    #[test]
+    fn stream_is_deterministic_and_seed_sensitive() {
+        let spec = TenancySpec::neighbor_incast(0.5);
+        let a = drain(&mut generator(spec, 7), 0.05);
+        let b = drain(&mut generator(spec, 7), 0.05);
+        assert!(!a.is_empty(), "50% load over 50 ms must emit flows");
+        assert_eq!(a, b, "same seed must replay bit-identically");
+        let c = drain(&mut generator(spec, 8), 0.05);
+        assert_ne!(a, c, "the run seed folds into the stream");
+    }
+
+    #[test]
+    fn flows_land_in_configured_sets_and_never_self_send() {
+        let spec = TenancySpec::neighbor_incast(0.8);
+        let flows = drain(&mut generator(spec, 1), 0.02);
+        for f in &flows {
+            assert!((32..64).contains(&f.src), "src {} outside the second rack", f.src);
+            assert!(f.dst < 8, "incast dst {} outside the first rack head", f.dst);
+            assert_ne!(f.src, f.dst);
+            assert!(f.bytes > 0.0 && f.ready >= 0.0);
+        }
+        let spec = TenancySpec {
+            pattern: TrafficPattern::Shuffle,
+            background_load: 0.8,
+            src_first: Some(0),
+            src_count: Some(4),
+            ..Default::default()
+        };
+        let flows = drain(&mut generator(spec, 1), 0.02);
+        assert!(!flows.is_empty());
+        for f in &flows {
+            assert!(f.src < 4 && f.dst < 4);
+            assert_ne!(f.src, f.dst, "shuffle must remap self-sends");
+        }
+    }
+
+    #[test]
+    fn thinning_couples_loads_into_supersets() {
+        // The load-0.2 flow set must be a subset of the load-0.7 set at
+        // the same seed — the property the sweep's monotonicity rests on.
+        let lo = drain(&mut generator(TenancySpec::neighbor_incast(0.2), 3), 0.05);
+        let hi = drain(&mut generator(TenancySpec::neighbor_incast(0.7), 3), 0.05);
+        assert!(lo.len() < hi.len());
+        for f in &lo {
+            assert!(hi.contains(f), "low-load flow {f:?} missing from the high-load set");
+        }
+    }
+
+    #[test]
+    fn windows_partition_the_stream() {
+        // Draining in two windows must equal draining in one: no flow is
+        // lost or duplicated at a window boundary.
+        let spec = TenancySpec::neighbor_incast(0.6);
+        let whole = drain(&mut generator(spec, 11), 0.04);
+        let mut split = generator(spec, 11);
+        let mut parts = drain(&mut split, 0.013);
+        parts.extend(drain(&mut split, 0.04));
+        assert_eq!(whole, parts);
+        assert!(whole.windows(2).all(|w| w[0].ready <= w[1].ready), "arrivals must be ordered");
+    }
+
+    #[test]
+    fn epoch_advance_gives_fresh_but_reproducible_realizations() {
+        let spec = TenancySpec::neighbor_incast(0.5);
+        let mut a = generator(spec, 5);
+        let first = drain(&mut a, 0.03);
+        a.advance_epoch();
+        let second = drain(&mut a, 0.03);
+        assert_ne!(first, second, "each epoch is a fresh realization");
+        let mut b = generator(spec, 5);
+        drain(&mut b, 0.03);
+        b.advance_epoch();
+        assert_eq!(second, drain(&mut b, 0.03), "epochs replay bit-identically");
+    }
+
+    #[test]
+    fn on_off_bursts_and_matches_average_rate() {
+        let mut p = TenancySpec::neighbor_incast(1.0);
+        p.source = SourceModel::OnOff;
+        let flows = drain(&mut generator(p, 2), 0.5);
+        // Average rate over a long window ~= the poisson full rate.
+        let poisson = drain(&mut generator(TenancySpec::neighbor_incast(1.0), 2), 0.5);
+        let ratio = flows.len() as f64 / poisson.len() as f64;
+        assert!((0.6..1.4).contains(&ratio), "on-off average rate off: {ratio}");
+        // Bursty: the largest inter-arrival gap dwarfs the median one.
+        let gaps: Vec<f64> = flows.windows(2).map(|w| w[1].ready - w[0].ready).collect();
+        let mut sorted = gaps.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let median = sorted[sorted.len() / 2];
+        let max = *sorted.last().unwrap();
+        assert!(max > 20.0 * median.max(1e-9), "no idle gaps: max {max} vs median {median}");
+    }
+}

@@ -17,6 +17,9 @@ pub struct MessageEvent {
     pub start: f64,
     pub end: f64,
     pub inter_rack: bool,
+    /// Background-tenant traffic (the shared-tenancy model in
+    /// [`crate::fabric::tenancy`]) as opposed to the training job's own.
+    pub background: bool,
 }
 
 /// A recorded simulation trace.
@@ -45,10 +48,13 @@ impl Trace {
         (lo.min(hi), hi)
     }
 
-    /// Total bytes transmitted per node (tx side), sorted descending.
+    /// Training-job bytes transmitted per node (tx side), sorted
+    /// descending. Background-tenant traffic is excluded, mirroring the
+    /// engine-stats contract (training counters stay training-only) —
+    /// the tenant's share is in [`Trace::tenant_bytes`].
     pub fn bytes_by_node(&self) -> Vec<(usize, f64)> {
         let mut map: std::collections::BTreeMap<usize, f64> = Default::default();
-        for e in &self.events {
+        for e in self.events.iter().filter(|e| !e.background) {
             *map.entry(e.src_node).or_insert(0.0) += e.bytes;
         }
         let mut v: Vec<(usize, f64)> = map.into_iter().collect();
@@ -56,14 +62,44 @@ impl Trace {
         v
     }
 
-    /// Fraction of bytes that crossed a rack boundary.
+    /// Fraction of the *training job's* bytes that crossed a rack
+    /// boundary. Background flows are excluded: a neighbor-rack incast
+    /// tenant is ~all inter-rack and would otherwise swamp the metric's
+    /// meaning (the job's own traffic locality).
     pub fn inter_rack_byte_fraction(&self) -> f64 {
-        let total: f64 = self.events.iter().map(|e| e.bytes).sum();
+        let total: f64 = self.events.iter().filter(|e| !e.background).map(|e| e.bytes).sum();
         if total == 0.0 {
             return 0.0;
         }
-        let cross: f64 = self.events.iter().filter(|e| e.inter_rack).map(|e| e.bytes).sum();
+        let cross: f64 = self
+            .events
+            .iter()
+            .filter(|e| e.inter_rack && !e.background)
+            .map(|e| e.bytes)
+            .sum();
         cross / total
+    }
+
+    /// Per-tenant byte attribution: `(training, background)`.
+    pub fn tenant_bytes(&self) -> (f64, f64) {
+        let mut training = 0.0;
+        let mut background = 0.0;
+        for e in &self.events {
+            if e.background {
+                background += e.bytes;
+            } else {
+                training += e.bytes;
+            }
+        }
+        (training, background)
+    }
+
+    /// Fraction of traced bytes that belonged to background tenants
+    /// (0 on an empty trace or a dedicated fabric).
+    pub fn background_byte_fraction(&self) -> f64 {
+        let (training, background) = self.tenant_bytes();
+        let total = training + background;
+        if total == 0.0 { 0.0 } else { background / total }
     }
 
     /// Bytes in flight per timeline bucket (for a quick utilization
@@ -97,6 +133,10 @@ impl Trace {
             "inter-rack byte fraction".into(),
             format!("{:.3}", self.inter_rack_byte_fraction()),
         ]);
+        t.row(vec![
+            "background byte fraction".into(),
+            format!("{:.3}", self.background_byte_fraction()),
+        ]);
         if let Some((node, bytes)) = self.bytes_by_node().first() {
             t.row(vec![
                 "hottest tx node".into(),
@@ -118,7 +158,15 @@ mod tests {
     use super::*;
 
     fn ev(src: usize, dst: usize, bytes: f64, start: f64, end: f64, xr: bool) -> MessageEvent {
-        MessageEvent { src_node: src, dst_node: dst, bytes, start, end, inter_rack: xr }
+        MessageEvent {
+            src_node: src,
+            dst_node: dst,
+            bytes,
+            start,
+            end,
+            inter_rack: xr,
+            background: false,
+        }
     }
 
     fn sample() -> Trace {

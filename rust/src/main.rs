@@ -24,6 +24,8 @@
 //!   --cache              cache per-cell JSON results under <out>/cache
 //!   --seed S             base seed for per-cell seed derivation
 //!   --streams N          run: concurrent communication streams [1]
+//!   --background-load F  run: shared-tenancy background load in [0,1]
+//!   --stragglers SPEC    run: straggler model FRAC:FACTOR[:JITTER]
 //!   --no-schedule-cache  run: disable schedule/timing memoization
 //!   --workers N          train-real: data-parallel workers   [4]
 //!   --steps N            train-real: training steps          [300]
@@ -89,6 +91,7 @@ fn run(args: &Args) -> Result<()> {
         "run" => cmd_run_config(args, &rec),
         "frameworks" => cmd_frameworks(&rec, quick),
         "sweeps" => cmd_sweeps(&rec, quick, &runner),
+        "tenancy" => cmd_tenancy(&rec, quick, &runner),
         "train-real" => cmd_train_real(args, &rec),
         "calibrate" => cmd_calibrate(args, &rec),
         "cfd-kernel" => cmd_cfd_kernel(),
@@ -107,6 +110,7 @@ usage: fabricbench <command> [--quick] [--jobs N] [--cache] [options]
 
 paper artifacts : table1 fig3 fig4 fig5 affinity microbench ablations all
 extensions      : frameworks (TF-Horovod vs PyTorch-DDP)  sweeps (batch, precision)
+                  tenancy (shared-tenancy background-load sweep alone)
                   run --config configs/<file>.toml (custom scenario)
 real stack      : train-real [--workers N --steps N --lr X --fabric F]
                   calibrate [--steps N]   cfd-kernel
@@ -134,7 +138,28 @@ fabric topology ([topology] in the TOML config):
   the fabric's scalar rack_uplink_gbps reproduces the legacy two-tier
   model bit-for-bit. The `ablations` command sweeps the oversubscription
   ratio (ablation_oversubscription CSV).
+
+shared tenancy ([tenancy] in the TOML config):
+  deterministic, seeded background cross-traffic from other tenants
+  (poisson or bursty on-off sources; neighbor-rack incast or all-to-all
+  shuffle over configurable node sets) injected into the event engine as
+  first-class flows sharing NIC/uplink/spine capacity max-min fairly,
+  plus a compute straggler model (persistent per-rank slowdowns + seeded
+  per-step jitter). Omitted (or at background_load = 0 with unit
+  slowdowns) the system is dedicated and bit-for-bit the pre-tenancy
+  model. CLI overrides for `run`:
+  --background-load F  offered load as a fraction of the pattern's
+                       bottleneck capacity, in [0, 1]
+  --stragglers SPEC    FRAC:FACTOR[:JITTER], e.g. 0.1:1.5:0.05
+  The `ablations` (and standalone `tenancy`) command sweeps fabric x
+  background load x GPU count (ablation_tenancy CSV).
 "#;
+
+fn cmd_tenancy(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
+    let (t, _) = ablations::tenancy_sweep_with(quick, runner);
+    rec.emit("ablation_tenancy", &t);
+    Ok(())
+}
 
 fn cmd_sweeps(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
     rec.emit(
@@ -156,7 +181,9 @@ fn cmd_frameworks(rec: &Recorder, quick: bool) -> Result<()> {
 
 /// Run a custom scenario described by a TOML config file.
 fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
-    use fabricbench::config::spec::{ClusterSpec, FabricSpec, RunSpec, TransportOptions};
+    use fabricbench::config::spec::{
+        ClusterSpec, FabricSpec, RunSpec, TenancySpec, TransportOptions,
+    };
     let path = args
         .get("config")
         .ok_or_else(|| anyhow::anyhow!("run requires --config <file.toml>"))?;
@@ -188,6 +215,24 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
         fabric.topology = fabricbench::config::TopologySpec::from_toml(v)?;
     }
     fabric.topology.validate_for(&cluster)?;
+    // Optional [tenancy] table: shared-tenancy background traffic +
+    // stragglers. Absent (and without CLI overrides), the system is
+    // dedicated — bit-for-bit the pre-tenancy model.
+    let mut tenancy = match doc.get("tenancy") {
+        Some(v) => TenancySpec::from_toml(v)?,
+        None => TenancySpec::default(),
+    };
+    if args.get("background-load").is_some() {
+        tenancy.background_load = args.get_f64("background-load", tenancy.background_load)?;
+        tenancy.validate()?;
+    }
+    if let Some(spec) = args.get("stragglers") {
+        tenancy.apply_stragglers(spec)?;
+    }
+    if tenancy.background_active() {
+        // Surface node-set misconfiguration before the run starts.
+        tenancy.resolve_sets(&cluster)?;
+    }
     let train = doc
         .get("train")
         .ok_or_else(|| anyhow::anyhow!("config missing [train]"))?;
@@ -236,6 +281,7 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
         step_overhead: 0.0,
         coordination_overhead:
             fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+        tenancy,
     };
     let r = trainer.run(gpus, &run_spec)?;
     let mut t = fabricbench::util::table::Table::new(
@@ -248,6 +294,10 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
     t.row(vec!["scaling efficiency".into(), format!("{:.3}", r.scaling_efficiency())]);
     t.row(vec!["exposed comm fraction".into(), format!("{:.3}", r.comm_fraction)]);
     t.row(vec!["comm streams".into(), opts.num_streams.to_string()]);
+    t.row(vec![
+        "background load".into(),
+        format!("{:.0}%", trainer.tenancy.background_load * 100.0),
+    ]);
     rec.emit("custom_run", &t);
     Ok(())
 }
@@ -318,6 +368,8 @@ fn cmd_ablations(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
     rec.emit("ablation_streams", &t3);
     let (t4, _) = ablations::oversubscription_with(quick, runner);
     rec.emit("ablation_oversubscription", &t4);
+    let (t5, _) = ablations::tenancy_sweep_with(quick, runner);
+    rec.emit("ablation_tenancy", &t5);
     Ok(())
 }
 

@@ -21,7 +21,8 @@
 
 use crate::cluster::Placement;
 use crate::collectives::{fuse, Collective, BYTES_PER_ELEM};
-use crate::config::{ClusterSpec, FabricSpec, RunSpec, TransportOptions};
+use crate::config::{ClusterSpec, FabricSpec, RunSpec, TenancySpec, TransportOptions};
+use crate::fabric::tenancy::BackgroundTraffic;
 use crate::fabric::NetSim;
 use crate::models::perf::{step_cost, Precision};
 use crate::models::Arch;
@@ -50,6 +51,10 @@ pub struct TrainerSim {
     /// default cycle time is ~1 ms). This is what makes pathologically
     /// small fusion buffers lose, exactly as Horovod's tuning guide warns.
     pub coordination_overhead: f64,
+    /// Shared-tenancy model: background cross-traffic on the fabric and
+    /// compute-side stragglers. [`TenancySpec::default`] is a dedicated,
+    /// homogeneous system and is bit-for-bit the pre-tenancy trainer.
+    pub tenancy: TenancySpec,
 }
 
 /// Default per-collective coordination overhead, seconds (Horovod cycle).
@@ -80,7 +85,17 @@ impl TrainerSim {
         anyhow::ensure!(gpus >= 1, "need at least one GPU");
         let placement = Placement::gpus(&self.cluster, gpus)?;
         let mut net = NetSim::try_new(self.fabric.clone(), self.cluster.clone(), self.opts)?;
+        if self.tenancy.background_active() {
+            let bg = BackgroundTraffic::new(&self.tenancy, &net.fabric, &net.cluster, run.seed)?;
+            net.set_background(bg);
+        }
         let mut rng = Rng::new(run.seed ^ (gpus as u64) << 32 ^ self.arch.total_params());
+        // Straggler model: persistent per-rank slowdowns plus (optional)
+        // extra per-step jitter from a tenancy-private RNG stream — the
+        // main stream's draw sequence is untouched, so a unit-slowdown
+        // config is bit-identical to the pre-tenancy trainer.
+        let slowdowns = self.tenancy.rank_slowdowns(gpus, run.seed);
+        let mut straggler_rng = Rng::new(self.tenancy.seed ^ run.seed ^ 0x57A6_61E5);
 
         let cost = step_cost(
             &self.arch,
@@ -95,8 +110,16 @@ impl TrainerSim {
         let mut comm_fracs = Vec::with_capacity(run.measure_steps);
         for step in 0..run.warmup_steps + run.measure_steps {
             net.reset();
-            let (step_time, comm_frac) =
-                self.simulate_step(&mut net, &placement, &cost, &buckets, &mut rng, gpus);
+            let (step_time, comm_frac) = self.simulate_step(
+                &mut net,
+                &placement,
+                &cost,
+                &buckets,
+                &mut rng,
+                &slowdowns,
+                &mut straggler_rng,
+                gpus,
+            );
             if step >= run.warmup_steps {
                 step_times.push(step_time);
                 comm_fracs.push(comm_frac);
@@ -119,6 +142,7 @@ impl TrainerSim {
     }
 
     /// One synchronous step; returns (step_time, comm_fraction).
+    #[allow(clippy::too_many_arguments)]
     fn simulate_step(
         &self,
         net: &mut NetSim,
@@ -126,11 +150,22 @@ impl TrainerSim {
         cost: &crate::models::perf::StepCost,
         buckets: &[crate::collectives::Bucket],
         rng: &mut Rng,
+        slowdowns: &[f64],
+        straggler_rng: &mut Rng,
         gpus: usize,
     ) -> (f64, f64) {
-        // Per-rank compute times with jitter.
+        // Per-rank compute times: baseline jitter, scaled by the tenancy
+        // model's persistent slowdown and (when configured) extra
+        // per-step straggler jitter. Both multipliers are exactly 1.0 on
+        // a homogeneous system (and the extra draw is skipped entirely),
+        // so the dedicated path stays bit-identical.
+        let sigma = self.tenancy.straggler_jitter;
         let jitter: Vec<f64> = (0..gpus)
-            .map(|_| rng.lognormal_median(1.0, 0.02))
+            .map(|r| {
+                let extra =
+                    if sigma > 0.0 { straggler_rng.lognormal_median(1.0, sigma) } else { 1.0 };
+                rng.lognormal_median(1.0, 0.02) * slowdowns[r] * extra
+            })
             .collect();
         let fwd: Vec<f64> = jitter.iter().map(|j| cost.fwd * j).collect();
         let bwd: Vec<f64> = jitter.iter().map(|j| cost.bwd * j).collect();
@@ -204,6 +239,7 @@ mod tests {
             overlap,
             step_overhead: 0.0,
             coordination_overhead: DEFAULT_COORDINATION_OVERHEAD,
+            tenancy: TenancySpec::default(),
         }
     }
 
@@ -286,5 +322,39 @@ mod tests {
         let eth = trainer(FabricKind::EthernetRoce25, false).run(64, &spec).unwrap();
         let opa = trainer(FabricKind::OmniPath100, false).run(64, &spec).unwrap();
         assert!(eth.comm_fraction > opa.comm_fraction);
+    }
+
+    #[test]
+    fn persistent_stragglers_slow_the_step() {
+        let spec = RunSpec { measure_steps: 6, ..Default::default() };
+        let base = trainer(FabricKind::OmniPath100, true).run(16, &spec).unwrap();
+        let mut t = trainer(FabricKind::OmniPath100, true);
+        t.tenancy.straggler_frac = 0.25;
+        t.tenancy.straggler_factor = 1.5;
+        let slow = t.run(16, &spec).unwrap();
+        // A synchronous step ends with its slowest rank: one persistent
+        // 1.5x rank stretches every step's compute floor.
+        assert!(
+            slow.step_time_mean > 1.2 * base.step_time_mean,
+            "stragglers must stretch the step: {} vs {}",
+            slow.step_time_mean,
+            base.step_time_mean
+        );
+    }
+
+    #[test]
+    fn straggler_jitter_widens_the_tail() {
+        let spec = RunSpec { measure_steps: 12, ..Default::default() };
+        let base = trainer(FabricKind::OmniPath100, true).run(16, &spec).unwrap();
+        let mut t = trainer(FabricKind::OmniPath100, true);
+        t.tenancy.straggler_jitter = 0.15;
+        let noisy = t.run(16, &spec).unwrap();
+        let tail = |r: &ThroughputResult| r.step_time_p95 / r.step_time_mean;
+        assert!(
+            tail(&noisy) > tail(&base),
+            "extra jitter must widen p95/mean: {} vs {}",
+            tail(&noisy),
+            tail(&base)
+        );
     }
 }

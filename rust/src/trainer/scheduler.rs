@@ -78,11 +78,15 @@ fn fnv_str(h: u64, s: &str) -> u64 {
 
 /// Signature of everything static a collective's engine execution can
 /// observe besides the start clocks: the topology (link graph +
-/// capacities + ECMP seed), the fabric identity and the participant set.
-/// The fabric/cluster/transport specs of a [`NetSim`] are immutable
+/// capacities + ECMP seed), the fabric identity, the tenancy
+/// configuration (a shared fabric must never alias a dedicated one —
+/// the timing tier additionally refuses to run at all under background
+/// traffic, see `NetSim::timing_cache_usable`) and the participant
+/// set. The fabric/cluster/transport specs of a [`NetSim`] are immutable
 /// after construction, so the topology hash + fabric name pin them.
 pub(crate) fn world_sig(net: &NetSim, placement: &Placement) -> u64 {
     let mut h = fnv_str(net.topology.signature(), &net.fabric.name);
+    h = fnv_step(h, net.background_signature());
     h = fnv_step(h, placement.endpoints.len() as u64);
     for e in &placement.endpoints {
         h = fnv_step(h, ((e.node as u64) << 24) ^ ((e.slot as u64) << 4) ^ e.kind as u64);

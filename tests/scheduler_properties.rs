@@ -36,6 +36,7 @@ fn trainer(kind: FabricKind, num_streams: usize, fusion_bytes: f64) -> TrainerSi
         overlap: true,
         step_overhead: 0.0,
         coordination_overhead: fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+        tenancy: fabricbench::config::TenancySpec::default(),
     }
 }
 

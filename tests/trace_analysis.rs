@@ -1,0 +1,144 @@
+//! Dedicated coverage for `fabric::trace` analysis: span / per-node byte
+//! accounting / inter-rack split (including empty-trace edge cases), the
+//! per-tenant breakdown added by the shared-tenancy model, and an
+//! integration pass that checks what the engine actually records.
+
+use fabricbench::config::presets::fabric;
+use fabricbench::config::spec::{ClusterSpec, FabricKind, TenancySpec, TransportOptions};
+use fabricbench::fabric::tenancy::BackgroundTraffic;
+use fabricbench::fabric::{FlowReq, MessageEvent, NetSim, Trace};
+
+fn ev(
+    src: usize,
+    dst: usize,
+    bytes: f64,
+    start: f64,
+    end: f64,
+    xr: bool,
+    bg: bool,
+) -> MessageEvent {
+    MessageEvent {
+        src_node: src,
+        dst_node: dst,
+        bytes,
+        start,
+        end,
+        inter_rack: xr,
+        background: bg,
+    }
+}
+
+fn sample() -> Trace {
+    let mut t = Trace::default();
+    t.record(ev(0, 1, 100.0, 0.0, 1.0, false, false));
+    t.record(ev(1, 2, 300.0, 0.5, 2.0, true, false));
+    t.record(ev(0, 2, 100.0, 1.0, 3.0, true, false));
+    t.record(ev(40, 3, 500.0, 0.2, 2.5, true, true)); // a tenant's flow
+    t
+}
+
+#[test]
+fn empty_trace_edge_cases() {
+    let t = Trace::default();
+    assert!(t.is_empty());
+    assert_eq!(t.len(), 0);
+    assert_eq!(t.span(), (0.0, 0.0), "empty span collapses to zero, not infinities");
+    assert!(t.bytes_by_node().is_empty());
+    assert_eq!(t.inter_rack_byte_fraction(), 0.0);
+    assert_eq!(t.tenant_bytes(), (0.0, 0.0));
+    assert_eq!(t.background_byte_fraction(), 0.0);
+    let tl = t.utilization_timeline(4);
+    assert_eq!(tl, vec![0.0; 4], "no events -> an all-zero timeline");
+    // The summary must render without panicking on the degenerate trace.
+    let md = t.summary("empty").to_markdown();
+    assert!(md.contains("messages"));
+}
+
+#[test]
+fn span_counts_and_ordering() {
+    let t = sample();
+    assert_eq!(t.len(), 4);
+    assert!(!t.is_empty());
+    assert_eq!(t.span(), (0.0, 3.0));
+    // A single event's span is its own window.
+    let mut one = Trace::default();
+    one.record(ev(5, 6, 10.0, 2.0, 2.5, false, false));
+    assert_eq!(one.span(), (2.0, 2.5));
+}
+
+#[test]
+fn bytes_by_node_sorts_descending_and_is_training_only() {
+    let by = sample().bytes_by_node();
+    // The tenant's sender (node 40, 500 B) is excluded: per-node tx
+    // accounting describes the training job, like the engine stats.
+    assert_eq!(by.len(), 2);
+    assert_eq!(by[0], (1, 300.0));
+    assert_eq!(by[1], (0, 200.0), "two sends from node 0 accumulate");
+    assert!(by.windows(2).all(|w| w[0].1 >= w[1].1));
+}
+
+#[test]
+fn inter_rack_split_is_training_only() {
+    let t = sample();
+    // 300 + 100 of the job's 500 bytes crossed racks; the tenant's
+    // (all-inter-rack) 500 bytes must not swamp the job's locality.
+    assert!((t.inter_rack_byte_fraction() - 0.8).abs() < 1e-12);
+}
+
+#[test]
+fn per_tenant_breakdown() {
+    let t = sample();
+    let (training, background) = t.tenant_bytes();
+    assert_eq!(training, 500.0);
+    assert_eq!(background, 500.0);
+    assert!((t.background_byte_fraction() - 0.5).abs() < 1e-12);
+    let md = t.summary("shared").to_markdown();
+    assert!(md.contains("background byte fraction"), "summary must attribute tenants");
+}
+
+#[test]
+fn utilization_timeline_conserves_bytes() {
+    let t = sample();
+    for buckets in [1, 3, 10] {
+        let tl = t.utilization_timeline(buckets);
+        assert_eq!(tl.len(), buckets);
+        let total: f64 = tl.iter().sum();
+        assert!((total - 1000.0).abs() < 1e-9, "buckets={buckets}: {total}");
+    }
+}
+
+#[test]
+fn engine_trace_attributes_tenants() {
+    // End to end: a traced simulator under background load records both
+    // tenants, flags them correctly, and the analysis splits them.
+    let mut sim = NetSim::new(
+        fabric(FabricKind::EthernetRoce25),
+        ClusterSpec::txgaia(),
+        TransportOptions::default(),
+    );
+    let bg = BackgroundTraffic::new(
+        &TenancySpec::neighbor_incast(0.7),
+        &sim.fabric,
+        &sim.cluster,
+        3,
+    )
+    .unwrap();
+    sim.set_background(bg);
+    sim.enable_trace();
+    let ep = |node: usize| NetSim::endpoint(node, 0, fabricbench::cluster::EndpointKind::Cpu);
+    let bytes = 64.0 * 1024.0 * 1024.0;
+    let reqs: Vec<FlowReq> =
+        (0..8).map(|i| FlowReq { src: ep(8 + i), dst: ep(i), bytes, ready: 0.0 }).collect();
+    sim.transfer_batch(&reqs);
+    let trace = sim.trace.as_ref().unwrap();
+    let training = trace.events.iter().filter(|e| !e.background).count();
+    let background = trace.events.iter().filter(|e| e.background).count();
+    assert_eq!(training, 8, "every training flow is recorded exactly once");
+    assert!(background > 0, "the tenant's flows are traced too");
+    assert_eq!(background as u64, sim.stats.background_messages, "trace and stats agree");
+    let (tb, bb) = trace.tenant_bytes();
+    assert_eq!(tb, 8.0 * bytes);
+    assert!((bb - sim.stats.background_bytes).abs() < 1e-6);
+    assert!(trace.background_byte_fraction() > 0.0);
+    assert!(trace.events.iter().all(|e| e.end > e.start));
+}
