@@ -82,6 +82,19 @@ impl Args {
                 .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
         }
     }
+
+    /// A string option restricted to a fixed value set (e.g.
+    /// `--placement pack|spread|topology`); anything else errors with
+    /// the full list instead of flowing downstream as a bad string.
+    pub fn get_choice(&self, name: &str, allowed: &[&str]) -> Result<Option<&str>> {
+        match self.options.get(name) {
+            None => Ok(None),
+            Some(v) if allowed.contains(&v.as_str()) => Ok(Some(v.as_str())),
+            Some(v) => {
+                bail!("--{name} must be one of {}, got '{v}'", allowed.join("|"))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -120,6 +133,17 @@ mod tests {
     fn bad_numbers_error() {
         let a = parse(&["x", "--gpus", "lots"]);
         assert!(a.get_usize("gpus", 1).is_err());
+    }
+
+    #[test]
+    fn choice_options_validate_their_set() {
+        let a = parse(&["fleet", "--placement", "spread"]);
+        let allowed = ["pack", "spread", "topology"];
+        assert_eq!(a.get_choice("placement", &allowed).unwrap(), Some("spread"));
+        assert_eq!(a.get_choice("missing", &allowed).unwrap(), None);
+        let bad = parse(&["fleet", "--placement", "random"]);
+        let err = bad.get_choice("placement", &allowed).unwrap_err().to_string();
+        assert!(err.contains("pack|spread|topology"), "unexpected: {err}");
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Fleet job model: seeded arrival traces, node-failure traces, and
+//! per-job lifecycle state for the fleet scheduler
+//! (`cluster::scheduler`).
+//!
+//! Trace generation is a pure function of `(FleetSpec, run_seed)` with a
+//! *fixed draw order* per job (gap, gang, steps, priority) so that
+//! changing one knob — e.g. `priority_levels` — cannot silently reshuffle
+//! every other draw. Failure draws come from an independently salted RNG
+//! for the same reason.
+
+use crate::config::FleetSpec;
+use crate::util::rng::Rng;
+
+/// Immutable description of one job in the arrival trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct JobSpec {
+    /// 1-based fleet id. Id 0 is the observing job in trace attribution
+    /// and id 1 the anonymous generator, so a job's *tenant id* is
+    /// `id + 1` (see `cluster::scheduler`).
+    pub id: usize,
+    /// Submission time, seconds.
+    pub arrival: f64,
+    /// Gang size in nodes (the job wants every GPU on those nodes).
+    pub nodes_wanted: usize,
+    /// Smallest acceptable gang under elastic scheduling; equals
+    /// `nodes_wanted` when the fleet is rigid.
+    pub min_nodes: usize,
+    /// Training length in optimizer steps.
+    pub steps: usize,
+    /// Priority level in `[0, priority_levels)`; higher wins.
+    pub priority: usize,
+}
+
+/// A node going down (and coming back `repair_secs` later).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureEvent {
+    pub time: f64,
+    pub node: usize,
+}
+
+/// Where a job currently is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobPhase {
+    /// Submitted, waiting for nodes.
+    Queued,
+    /// Placed on `nodes`, making progress (once past `resume_at`).
+    Running,
+    /// All steps done.
+    Finished,
+}
+
+/// Mutable scheduler-side state of one job.
+#[derive(Clone, Debug)]
+pub struct JobState {
+    pub spec: JobSpec,
+    pub phase: JobPhase,
+    /// Current node set (ascending); empty unless Running.
+    pub nodes: Vec<usize>,
+    /// Fractional steps completed so far (survives preemption — that is
+    /// what checkpoint/restart buys).
+    pub steps_done: f64,
+    /// Progress is frozen until this instant (checkpoint-restart cost
+    /// after every placement that wasn't the first).
+    pub resume_at: f64,
+    /// Seconds per step on the *current* placement (0 until placed).
+    pub step_time: f64,
+    pub preemptions: usize,
+    pub first_start: Option<f64>,
+    pub completion: Option<f64>,
+}
+
+impl JobState {
+    pub fn new(spec: JobSpec) -> JobState {
+        JobState {
+            spec,
+            phase: JobPhase::Queued,
+            nodes: Vec::new(),
+            steps_done: 0.0,
+            resume_at: spec.arrival,
+            step_time: 0.0,
+            preemptions: 0,
+            first_start: None,
+            completion: None,
+        }
+    }
+
+    /// Steps still owed.
+    pub fn steps_left(&self) -> f64 {
+        (self.spec.steps as f64 - self.steps_done).max(0.0)
+    }
+
+    /// When this placement will finish, seen from `now`: progress is
+    /// frozen until `resume_at`, then each remaining step takes
+    /// `step_time`. Only meaningful while Running.
+    pub fn projected_completion(&self, now: f64) -> f64 {
+        debug_assert!(self.phase == JobPhase::Running && self.step_time > 0.0);
+        now.max(self.resume_at) + self.steps_left() * self.step_time
+    }
+
+    /// Advance linear progress over `[t0, t1]`.
+    pub fn advance(&mut self, t0: f64, t1: f64) {
+        if self.phase != JobPhase::Running || self.step_time <= 0.0 {
+            return;
+        }
+        let from = t0.max(self.resume_at);
+        if t1 > from {
+            self.steps_done =
+                (self.steps_done + (t1 - from) / self.step_time).min(self.spec.steps as f64);
+        }
+    }
+}
+
+/// Deterministic arrival trace. Jobs come out sorted by arrival (gaps are
+/// non-negative, so generation order *is* arrival order) with 1-based
+/// ids.
+pub fn job_trace(fleet: &FleetSpec, run_seed: u64) -> Vec<JobSpec> {
+    let mut rng = Rng::new(fleet.seed ^ run_seed ^ 0xF1EE_7_0B5);
+    let mut t = 0.0;
+    let mut jobs = Vec::with_capacity(fleet.jobs);
+    for id in 1..=fleet.jobs {
+        // Fixed draw order: gap, gang, steps, priority.
+        let gap = if id == 1 { 0.0 } else { rng.exponential(fleet.interarrival_secs) };
+        t += gap;
+        let gang_span = (fleet.gang_max - fleet.gang_min + 1) as u64;
+        let nodes_wanted = fleet.gang_min + rng.below(gang_span) as usize;
+        let step_span = (fleet.steps_max - fleet.steps_min + 1) as u64;
+        let steps = fleet.steps_min + rng.below(step_span) as usize;
+        let priority = rng.below(fleet.priority_levels as u64) as usize;
+        let min_nodes = if fleet.elastic { fleet.gang_min.min(nodes_wanted) } else { nodes_wanted };
+        jobs.push(JobSpec { id, arrival: t, nodes_wanted, min_nodes, steps, priority });
+    }
+    jobs
+}
+
+/// Deterministic node-failure trace over the arrival window, sorted by
+/// time. Independent RNG stream from [`job_trace`].
+pub fn failure_trace(fleet: &FleetSpec, cluster_nodes: usize, run_seed: u64) -> Vec<FailureEvent> {
+    let mut rng = Rng::new(fleet.seed ^ run_seed ^ 0xF1EE_FA11);
+    let horizon = fleet.interarrival_secs * fleet.jobs as f64;
+    let mut events: Vec<FailureEvent> = (0..fleet.node_failures)
+        .map(|_| {
+            // Fixed draw order: time, node.
+            let time = rng.uniform_in(0.0, horizon);
+            let node = rng.below(cluster_nodes as u64) as usize;
+            FailureEvent { time, node }
+        })
+        .collect();
+    events.sort_by(|a, b| a.time.total_cmp(&b.time));
+    events
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_trace_is_seeded_ordered_and_in_bounds() {
+        let fleet = FleetSpec { jobs: 24, gang_min: 2, gang_max: 6, ..Default::default() };
+        let a = job_trace(&fleet, 7);
+        let b = job_trace(&fleet, 7);
+        assert_eq!(a, b, "same (spec, run_seed) replays bit-for-bit");
+        assert_ne!(a, job_trace(&fleet, 8), "run seed folds in");
+        assert_ne!(a, job_trace(&FleetSpec { seed: 1, ..fleet }, 7), "fleet seed folds in");
+        assert_eq!(a.len(), 24);
+        assert_eq!(a[0].arrival, 0.0, "the first job arrives at t=0");
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival && w[0].id + 1 == w[1].id));
+        for j in &a {
+            assert!((2..=6).contains(&j.nodes_wanted));
+            assert!((fleet.steps_min..=fleet.steps_max).contains(&j.steps));
+            assert!(j.priority < fleet.priority_levels);
+            assert_eq!(j.min_nodes, j.nodes_wanted, "rigid fleet: min == wanted");
+        }
+        // Elastic jobs may shrink down to gang_min.
+        let elastic = job_trace(&FleetSpec { elastic: true, ..fleet }, 7);
+        assert!(elastic.iter().all(|j| j.min_nodes == 2.min(j.nodes_wanted)));
+    }
+
+    #[test]
+    fn single_job_preset_has_no_randomness_in_shape() {
+        let fleet = FleetSpec::single_job(4, 50);
+        let jobs = job_trace(&fleet, 123);
+        assert_eq!(jobs.len(), 1);
+        let j = jobs[0];
+        assert_eq!((j.arrival, j.nodes_wanted, j.steps, j.priority), (0.0, 4, 50, 0));
+        assert!(failure_trace(&fleet, 64, 123).is_empty());
+    }
+
+    #[test]
+    fn failure_trace_is_sorted_and_seeded() {
+        let fleet = FleetSpec { node_failures: 8, ..Default::default() };
+        let a = failure_trace(&fleet, 32, 5);
+        assert_eq!(a.len(), 8);
+        assert!(a.windows(2).all(|w| w[0].time <= w[1].time));
+        assert!(a.iter().all(|e| e.node < 32 && e.time >= 0.0));
+        assert_eq!(a, failure_trace(&fleet, 32, 5));
+        assert_ne!(a, failure_trace(&fleet, 32, 6));
+    }
+
+    #[test]
+    fn job_state_progress_accounting() {
+        let spec = JobSpec {
+            id: 1,
+            arrival: 10.0,
+            nodes_wanted: 2,
+            min_nodes: 2,
+            steps: 100,
+            priority: 0,
+        };
+        let mut js = JobState::new(spec);
+        assert_eq!(js.phase, JobPhase::Queued);
+        assert_eq!(js.steps_left(), 100.0);
+        js.phase = JobPhase::Running;
+        js.step_time = 0.5;
+        js.resume_at = 20.0;
+        // Nothing happens before resume_at; the projection is frozen too.
+        js.advance(10.0, 20.0);
+        assert_eq!(js.steps_done, 0.0);
+        assert!((js.projected_completion(15.0) - 70.0).abs() < 1e-9, "frozen until resume_at");
+        // Linear progress after, and the projection stays consistent.
+        js.advance(20.0, 30.0);
+        assert!((js.steps_done - 20.0).abs() < 1e-12);
+        assert!((js.projected_completion(30.0) - 70.0).abs() < 1e-9);
+        // Progress saturates at the step budget.
+        js.advance(30.0, 1e6);
+        assert_eq!(js.steps_done, 100.0);
+        assert_eq!(js.steps_left(), 0.0);
+    }
+}

@@ -4,7 +4,11 @@
 //! nodes/racks and describes intra-node data paths.
 
 pub mod gpu;
+pub mod jobs;
 pub mod placement;
+pub mod scheduler;
 
 pub use gpu::{GpuModel, V100};
+pub use jobs::{FailureEvent, JobPhase, JobSpec, JobState};
 pub use placement::{Endpoint, EndpointKind, Placement};
+pub use scheduler::{FleetReport, FleetSim, JobOutcome};

@@ -44,6 +44,47 @@ impl Placement {
         Self::block(cores, cluster.cores_per_node, cluster.nodes, EndpointKind::Cpu)
     }
 
+    /// GPUs block-placed over an *explicit* node set (the fleet
+    /// scheduler's path): rank `r` lands on `nodes[r / gpus_per_node]`,
+    /// slot `r % gpus_per_node`. On the contiguous prefix
+    /// `[0, 1, 2, ...]` this is bit-identical to [`Placement::gpus`].
+    /// `nodes` must be strictly ascending (policies emit sorted sets —
+    /// rank order then matches node order, like block placement).
+    pub fn gpus_on_nodes(
+        cluster: &ClusterSpec,
+        nodes: &[usize],
+        gpus: usize,
+    ) -> anyhow::Result<Placement> {
+        let per_node = cluster.gpus_per_node;
+        anyhow::ensure!(gpus > 0, "placement of zero ranks");
+        anyhow::ensure!(!nodes.is_empty(), "placement over an empty node set");
+        anyhow::ensure!(
+            nodes.windows(2).all(|w| w[0] < w[1]),
+            "node set must be strictly ascending: {nodes:?}"
+        );
+        anyhow::ensure!(
+            *nodes.last().unwrap() < cluster.nodes,
+            "node {} outside the {}-node cluster",
+            nodes.last().unwrap(),
+            cluster.nodes
+        );
+        let nodes_needed = gpus.div_ceil(per_node);
+        anyhow::ensure!(
+            nodes_needed <= nodes.len(),
+            "{gpus} ranks need {nodes_needed} nodes but the set has {}",
+            nodes.len()
+        );
+        let endpoints = (0..gpus)
+            .map(|r| Endpoint {
+                rank: r,
+                node: nodes[r / per_node],
+                slot: r % per_node,
+                kind: EndpointKind::Gpu,
+            })
+            .collect();
+        Ok(Placement { endpoints, slots_per_node: per_node })
+    }
+
     fn block(
         ranks: usize,
         per_node: usize,
@@ -89,12 +130,15 @@ impl Placement {
             != cluster.rack_of_node(self.endpoints[b].node)
     }
 
-    /// Ranks grouped by node (for hierarchical collectives).
+    /// Ranks grouped by node (for hierarchical collectives). Only
+    /// occupied nodes appear — an explicit (sparse) node set must not
+    /// hand empty groups to a collective's leader election.
     pub fn by_node(&self) -> Vec<Vec<usize>> {
         let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.nodes_used()];
         for e in &self.endpoints {
             groups[e.node].push(e.rank);
         }
+        groups.retain(|g| !g.is_empty());
         groups
     }
 
@@ -154,6 +198,33 @@ mod tests {
         assert!(!p.crosses_rack(&c, 0, 1279));
         let p2 = Placement::cores(&c, 2560).unwrap();
         assert!(p2.crosses_rack(&c, 0, 2559));
+    }
+
+    #[test]
+    fn explicit_node_set_placement() {
+        let c = ClusterSpec::txgaia();
+        // A contiguous prefix replays block placement bit-identically.
+        let block = Placement::gpus(&c, 8).unwrap();
+        let explicit = Placement::gpus_on_nodes(&c, &[0, 1, 2, 3], 8).unwrap();
+        assert_eq!(block.endpoints, explicit.endpoints);
+        // A sparse set keeps physical node ids and only occupied groups.
+        let p = Placement::gpus_on_nodes(&c, &[5, 40, 100], 6).unwrap();
+        assert_eq!(p.endpoints[0].node, 5);
+        assert_eq!(p.endpoints[3].node, 40);
+        assert_eq!(p.endpoints[5], Endpoint {
+            rank: 5,
+            node: 100,
+            slot: 1,
+            kind: EndpointKind::Gpu
+        });
+        assert_eq!(p.by_node(), vec![vec![0, 1], vec![2, 3], vec![4, 5]]);
+        assert!(p.crosses_rack(&c, 0, 2));
+        // Loud failures: unsorted, out of range, too small.
+        assert!(Placement::gpus_on_nodes(&c, &[3, 2], 2).is_err());
+        assert!(Placement::gpus_on_nodes(&c, &[3, 3], 2).is_err());
+        assert!(Placement::gpus_on_nodes(&c, &[448], 1).is_err());
+        assert!(Placement::gpus_on_nodes(&c, &[0, 1], 6).is_err());
+        assert!(Placement::gpus_on_nodes(&c, &[], 1).is_err());
     }
 
     #[test]

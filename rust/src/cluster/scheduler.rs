@@ -1,0 +1,684 @@
+//! Multi-job fleet scheduler: a desired-state/actual-state reconcile loop
+//! (the Kubernetes-operator idiom) over a seeded arrival trace of
+//! gang-scheduled training jobs.
+//!
+//! Desired state is the job trace ([`crate::cluster::jobs::job_trace`]):
+//! which jobs exist, how many nodes each wants, at what priority. Actual
+//! state is the node ledger: which nodes are up, and who owns them. The
+//! loop wakes at discrete events — arrivals, projected completions, node
+//! failures, repairs — advances every running job's progress linearly,
+//! then reconciles: finished jobs release nodes, queued jobs are placed
+//! by the configured [`PlacementPolicy`], higher-priority arrivals may
+//! preempt strictly-lower-priority jobs (paying a checkpoint-restart
+//! cost), and elastic jobs shrink into the space available or grow back
+//! to their wanted size.
+//!
+//! Each placed job's step time comes from the *real* trainer:
+//! [`TrainerSim::run_placed`] over the job's node set, with every
+//! co-located job's traffic entering the fabric simulation as an
+//! attributed per-job tenant flow (`NetSim::add_tenant`) — the
+//! shared-tenancy background generators of PR 5 promoted to first-class
+//! jobs. Step times are memoized on the (job, node set, neighbor set)
+//! key, so a fleet run costs one trainer simulation per distinct
+//! co-location pattern, not per event.
+//!
+//! Determinism contract: the whole simulation is a pure function of
+//! `(TrainerSim, FleetSpec, RunSpec)`. A single-job, no-churn fleet
+//! ([`FleetSpec::single_job`]) reproduces the standalone trainer
+//! bit-for-bit — pinned in `tests/fleet_properties.rs`.
+
+use std::collections::HashMap;
+
+use crate::cluster::jobs::{failure_trace, job_trace, FailureEvent, JobPhase, JobState};
+use crate::cluster::Placement;
+use crate::config::{FleetSpec, PlacementPolicy, RunSpec, TenancySpec};
+use crate::fabric::tenancy::BackgroundTraffic;
+use crate::fabric::topology::Topology;
+use crate::trainer::TrainerSim;
+use crate::util::hash::{fnv1a_u64, FNV_OFFSET};
+use crate::util::stats;
+
+/// Odd salt for deriving per-job seeds (same constant the tenancy model
+/// uses for epoch salting).
+const JOB_SEED_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Hard cap on reconcile events — a loud backstop against a scheduling
+/// livelock, far above anything a valid trace produces.
+const MAX_EVENTS: usize = 200_000;
+
+/// Completion slack: a job within this many steps of its budget is done
+/// (absorbs float drift from piecewise-linear progress accounting).
+const STEP_EPS: f64 = 1e-6;
+
+/// Final record of one job's trip through the fleet.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub id: usize,
+    pub arrival: f64,
+    pub completion: f64,
+    /// Job completion time: `completion - arrival` (queueing included).
+    pub jct: f64,
+    /// Gang size (nodes) of the final placement.
+    pub nodes: usize,
+    pub gpus: usize,
+    pub steps: usize,
+    pub priority: usize,
+    /// Involuntary deschedules (priority preemptions + node failures).
+    pub preemptions: usize,
+    /// Seconds/step on the final placement.
+    pub step_time: f64,
+}
+
+/// Fleet-wide results.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub jobs: Vec<JobOutcome>,
+    /// Last completion (the first arrival is at t = 0).
+    pub makespan: f64,
+    pub mean_jct: f64,
+    pub p99_jct: f64,
+    /// Fleet goodput: total images trained / makespan.
+    pub images_per_sec: f64,
+    /// Total involuntary deschedules across jobs.
+    pub preemptions: usize,
+    /// Node-failure events applied.
+    pub failures: usize,
+}
+
+/// The fleet simulator. Borrows a [`TrainerSim`] as the template every
+/// placed job runs under (architecture, fabric, transport, tenancy
+/// stragglers — everything but placement and co-tenant traffic).
+pub struct FleetSim<'a> {
+    pub trainer: &'a TrainerSim,
+    pub fleet: FleetSpec,
+    topo: Topology,
+}
+
+/// Mutable simulation state, separated from the borrow of the trainer.
+struct Ledger {
+    jobs: Vec<JobState>,
+    /// Per node: is it up, and which job id owns it (0 = free).
+    up: Vec<bool>,
+    owner: Vec<usize>,
+    failures: Vec<FailureEvent>,
+    next_failure: usize,
+    /// Pending (time, node) repairs, unordered (scanned, not popped).
+    repairs: Vec<(f64, usize)>,
+    preemptions: usize,
+    failures_applied: usize,
+}
+
+impl Ledger {
+    fn free_nodes(&self) -> Vec<usize> {
+        (0..self.up.len()).filter(|&n| self.up[n] && self.owner[n] == 0).collect()
+    }
+
+    fn release(&mut self, job_id: usize) {
+        for o in self.owner.iter_mut() {
+            if *o == job_id {
+                *o = 0;
+            }
+        }
+    }
+
+    fn requeue(&mut self, ji: usize, involuntary: bool) {
+        let id = self.jobs[ji].spec.id;
+        self.release(id);
+        let j = &mut self.jobs[ji];
+        j.phase = JobPhase::Queued;
+        j.nodes.clear();
+        j.step_time = 0.0;
+        if involuntary {
+            j.preemptions += 1;
+            self.preemptions += 1;
+        }
+    }
+}
+
+impl<'a> FleetSim<'a> {
+    pub fn new(trainer: &'a TrainerSim, fleet: FleetSpec) -> anyhow::Result<FleetSim<'a>> {
+        fleet.validate_for(&trainer.cluster)?;
+        let topo = Topology::build(&trainer.fabric.topology, &trainer.fabric, &trainer.cluster)?;
+        Ok(FleetSim { trainer, fleet, topo })
+    }
+
+    /// Per-job run seed. Job 1 runs at exactly `run.seed` — that is what
+    /// makes the single-job fleet reproduce the standalone trainer
+    /// bit-for-bit; later jobs derive deterministically.
+    fn job_run_seed(&self, run: &RunSpec, id: usize) -> u64 {
+        run.seed ^ (id as u64 - 1).wrapping_mul(JOB_SEED_SALT)
+    }
+
+    /// Simulate the whole trace; returns per-job outcomes and fleet-wide
+    /// throughput/JCT statistics.
+    pub fn run(&self, run: &RunSpec) -> anyhow::Result<FleetReport> {
+        let specs = job_trace(&self.fleet, run.seed);
+        let n_nodes = self.trainer.cluster.nodes;
+        let mut st = Ledger {
+            jobs: specs.iter().map(|s| JobState::new(*s)).collect(),
+            up: vec![true; n_nodes],
+            owner: vec![0; n_nodes],
+            failures: failure_trace(&self.fleet, n_nodes, run.seed),
+            next_failure: 0,
+            repairs: Vec::new(),
+            preemptions: 0,
+            failures_applied: 0,
+        };
+        let mut memo: HashMap<u64, f64> = HashMap::new();
+        let mut t = 0.0;
+
+        for _event in 0..MAX_EVENTS {
+            // --- Fire everything due at the current instant. ---
+            // 1. Completions release their nodes.
+            for ji in 0..st.jobs.len() {
+                if st.jobs[ji].phase == JobPhase::Running
+                    && st.jobs[ji].steps_left() <= STEP_EPS
+                {
+                    let id = st.jobs[ji].spec.id;
+                    st.release(id);
+                    let j = &mut st.jobs[ji];
+                    j.phase = JobPhase::Finished;
+                    j.completion = Some(t);
+                }
+            }
+            // 2. Node failures take nodes down and evict their owners.
+            while st.next_failure < st.failures.len()
+                && st.failures[st.next_failure].time <= t + 1e-12
+            {
+                let ev = st.failures[st.next_failure];
+                st.next_failure += 1;
+                if !st.up[ev.node] {
+                    continue; // already down; the repair in flight covers it
+                }
+                st.up[ev.node] = false;
+                st.repairs.push((t + self.fleet.repair_secs, ev.node));
+                st.failures_applied += 1;
+                let victim = st.owner[ev.node];
+                if victim != 0 {
+                    st.requeue(victim - 1, true);
+                }
+            }
+            // 3. Repairs bring nodes back.
+            let mut repairs = std::mem::take(&mut st.repairs);
+            repairs.retain(|&(rt, node)| {
+                if rt <= t + 1e-12 {
+                    st.up[node] = true;
+                    false
+                } else {
+                    true
+                }
+            });
+            st.repairs = repairs;
+
+            // 4. Reconcile desired state (the queue) against the ledger.
+            self.reconcile(&mut st, t, run, &mut memo)?;
+
+            // --- Pick the next wake-up: the earliest strictly-future
+            // arrival, failure, repair, or projected completion. ---
+            let mut next = f64::INFINITY;
+            for j in &st.jobs {
+                match j.phase {
+                    JobPhase::Queued if j.spec.arrival > t => next = next.min(j.spec.arrival),
+                    JobPhase::Running => next = next.min(j.projected_completion(t)),
+                    _ => {}
+                }
+            }
+            if st.next_failure < st.failures.len() {
+                next = next.min(st.failures[st.next_failure].time.max(t));
+            }
+            for &(rt, _) in &st.repairs {
+                next = next.min(rt);
+            }
+            if !next.is_finite() {
+                break; // every job finished, nothing pending
+            }
+            // Advance progress to the wake-up instant.
+            for j in st.jobs.iter_mut() {
+                j.advance(t, next);
+            }
+            t = next;
+        }
+
+        let unfinished = st.jobs.iter().filter(|j| j.completion.is_none()).count();
+        anyhow::ensure!(
+            unfinished == 0,
+            "fleet livelock: {unfinished} jobs unfinished after {MAX_EVENTS} events"
+        );
+        self.report(&st)
+    }
+
+    /// Place queued jobs (priority first, arrival-order within a level),
+    /// preempting strictly-lower-priority work when allowed, then grow
+    /// elastic jobs back toward their wanted size. Any membership change
+    /// re-prices every running job's step time (memoized).
+    fn reconcile(
+        &self,
+        st: &mut Ledger,
+        t: f64,
+        run: &RunSpec,
+        memo: &mut HashMap<u64, f64>,
+    ) -> anyhow::Result<()> {
+        let mut changed = false;
+        loop {
+            let mut queue: Vec<usize> = (0..st.jobs.len())
+                .filter(|&ji| {
+                    st.jobs[ji].phase == JobPhase::Queued && st.jobs[ji].spec.arrival <= t + 1e-12
+                })
+                .collect();
+            queue.sort_by(|&a, &b| {
+                let (ja, jb) = (&st.jobs[a].spec, &st.jobs[b].spec);
+                jb.priority
+                    .cmp(&ja.priority)
+                    .then(ja.arrival.total_cmp(&jb.arrival))
+                    .then(ja.id.cmp(&jb.id))
+            });
+            let mut progressed = false;
+            for &ji in &queue {
+                if st.jobs[ji].phase != JobPhase::Queued {
+                    continue;
+                }
+                if self.try_place(st, ji, t) {
+                    progressed = true;
+                    changed = true;
+                }
+            }
+            if !progressed {
+                break;
+            }
+            // Preemption may have requeued jobs: run another pass so they
+            // get a shot at the remaining free nodes. Priority strictly
+            // decreases along any preemption chain, so this terminates.
+        }
+
+        // Elastic growth: a shrunk job takes its full wanted size when
+        // the whole gang now fits (its own nodes count as available to
+        // itself), paying one checkpoint restart.
+        if self.fleet.elastic {
+            for ji in 0..st.jobs.len() {
+                let (want, have) = (st.jobs[ji].spec.nodes_wanted, st.jobs[ji].nodes.len());
+                if st.jobs[ji].phase != JobPhase::Running || have >= want {
+                    continue;
+                }
+                if st.free_nodes().len() + have >= want {
+                    let id = st.jobs[ji].spec.id;
+                    st.release(id);
+                    let picked = pick_nodes(self.fleet.placement, &self.topo, &st.free_nodes(), want)
+                        .expect("count checked above");
+                    self.assign(st, ji, picked, t);
+                    changed = true;
+                }
+            }
+        }
+
+        if changed {
+            self.reprice_running(st, t, run, memo)?;
+        }
+        Ok(())
+    }
+
+    /// Try to place queued job `ji` at time `t`. Tries the wanted gang
+    /// size on free nodes first, then (if elastic) progressively smaller
+    /// sizes down to `min_nodes`, then (if preemption is on) evicts
+    /// strictly-lower-priority jobs — cheapest victims first — to make
+    /// room for the wanted size.
+    fn try_place(&self, st: &mut Ledger, ji: usize, t: f64) -> bool {
+        let spec = st.jobs[ji].spec;
+        let free = st.free_nodes();
+        let mut sizes: Vec<usize> = vec![spec.nodes_wanted];
+        if self.fleet.elastic {
+            sizes.extend((spec.min_nodes..spec.nodes_wanted).rev());
+        }
+        for &size in &sizes {
+            if let Some(nodes) = pick_nodes(self.fleet.placement, &self.topo, &free, size) {
+                self.assign(st, ji, nodes, t);
+                return true;
+            }
+        }
+        if !self.fleet.preemption {
+            return false;
+        }
+        // Victims: strictly lower priority, cheapest eviction first
+        // (lowest priority, then latest arrival — the least-sunk work).
+        let mut victims: Vec<usize> = (0..st.jobs.len())
+            .filter(|&vi| {
+                st.jobs[vi].phase == JobPhase::Running && st.jobs[vi].spec.priority < spec.priority
+            })
+            .collect();
+        victims.sort_by(|&a, &b| {
+            let (ja, jb) = (&st.jobs[a].spec, &st.jobs[b].spec);
+            ja.priority.cmp(&jb.priority).then(jb.arrival.total_cmp(&ja.arrival))
+        });
+        let reclaimable: usize = victims.iter().map(|&vi| st.jobs[vi].nodes.len()).sum();
+        if free.len() + reclaimable < spec.nodes_wanted {
+            return false;
+        }
+        let mut have = free.len();
+        for &vi in &victims {
+            if have >= spec.nodes_wanted {
+                break;
+            }
+            have += st.jobs[vi].nodes.len();
+            st.requeue(vi, true);
+        }
+        let nodes = pick_nodes(self.fleet.placement, &self.topo, &st.free_nodes(), spec.nodes_wanted)
+            .expect("freed enough nodes for the wanted gang");
+        self.assign(st, ji, nodes, t);
+        true
+    }
+
+    /// Commit a placement: claim nodes, set the phase, charge the
+    /// checkpoint-restart cost on anything but a job's first start.
+    fn assign(&self, st: &mut Ledger, ji: usize, nodes: Vec<usize>, t: f64) {
+        let id = st.jobs[ji].spec.id;
+        for &n in &nodes {
+            debug_assert!(st.up[n] && st.owner[n] == 0);
+            st.owner[n] = id;
+        }
+        let j = &mut st.jobs[ji];
+        let first = j.first_start.is_none();
+        if first {
+            j.first_start = Some(t);
+        }
+        j.phase = JobPhase::Running;
+        j.nodes = nodes;
+        j.resume_at = if first { t } else { t + self.fleet.checkpoint_restart_secs };
+    }
+
+    /// Recompute every running job's step time for the current
+    /// co-location pattern, memoized on (job, node set, neighbor sets).
+    fn reprice_running(
+        &self,
+        st: &mut Ledger,
+        t: f64,
+        run: &RunSpec,
+        memo: &mut HashMap<u64, f64>,
+    ) -> anyhow::Result<()> {
+        let running: Vec<usize> = (0..st.jobs.len())
+            .filter(|&ji| st.jobs[ji].phase == JobPhase::Running)
+            .collect();
+        for &ji in &running {
+            let mut key = FNV_OFFSET;
+            key = fnv1a_u64(key, st.jobs[ji].spec.id as u64);
+            for &n in &st.jobs[ji].nodes {
+                key = fnv1a_u64(key, n as u64);
+            }
+            key = fnv1a_u64(key, u64::MAX);
+            for &ki in &running {
+                if ki == ji {
+                    continue;
+                }
+                key = fnv1a_u64(key, st.jobs[ki].spec.id as u64);
+                for &n in &st.jobs[ki].nodes {
+                    key = fnv1a_u64(key, n as u64);
+                }
+                key = fnv1a_u64(key, u64::MAX);
+            }
+            let step_time = match memo.get(&key) {
+                Some(&v) => v,
+                None => {
+                    let v = self.measure_step_time(st, ji, &running, run)?;
+                    memo.insert(key, v);
+                    v
+                }
+            };
+            let j = &mut st.jobs[ji];
+            if (j.step_time - step_time).abs() > 0.0 {
+                j.step_time = step_time;
+                // Progress already earned stays; only the rate changes.
+                j.resume_at = j.resume_at.max(t);
+            }
+        }
+        Ok(())
+    }
+
+    /// One trainer simulation for job `ji` on its node set, with every
+    /// other running job attached as an attributed tenant generator
+    /// (shuffle traffic over the neighbor's own nodes at the configured
+    /// `neighbor_load`). Single-node neighbors emit nothing — their
+    /// training traffic never leaves the node.
+    fn measure_step_time(
+        &self,
+        st: &Ledger,
+        ji: usize,
+        running: &[usize],
+        run: &RunSpec,
+    ) -> anyhow::Result<f64> {
+        let j = &st.jobs[ji];
+        let gpus = j.nodes.len() * self.trainer.cluster.gpus_per_node;
+        let placement = Placement::gpus_on_nodes(&self.trainer.cluster, &j.nodes, gpus)?;
+        let mut tenants: Vec<(usize, BackgroundTraffic)> = Vec::new();
+        if self.fleet.neighbor_load > 0.0 {
+            for &ki in running {
+                let k = &st.jobs[ki];
+                if ki == ji || k.nodes.len() < 2 {
+                    continue;
+                }
+                let spec = TenancySpec {
+                    seed: self.fleet.seed ^ (k.spec.id as u64).wrapping_mul(JOB_SEED_SALT),
+                    ..TenancySpec::shuffle(self.fleet.neighbor_load)
+                };
+                let bg = BackgroundTraffic::with_node_sets(
+                    &spec,
+                    &self.trainer.fabric,
+                    self.job_run_seed(run, k.spec.id),
+                    k.nodes.clone(),
+                    k.nodes.clone(),
+                )?;
+                // Tenant id = job id + 1: never 0 (the observing job) and
+                // never 1 (the anonymous generator).
+                tenants.push((k.spec.id + 1, bg));
+            }
+        }
+        let inner = RunSpec { seed: self.job_run_seed(run, j.spec.id), ..run.clone() };
+        let result = self.trainer.run_placed(&placement, &inner, &tenants)?;
+        Ok(result.step_time_mean)
+    }
+
+    fn report(&self, st: &Ledger) -> anyhow::Result<FleetReport> {
+        let per_gpu_batch = self.trainer.per_gpu_batch as f64;
+        let mut jobs: Vec<JobOutcome> = st
+            .jobs
+            .iter()
+            .map(|j| {
+                let completion = j.completion.expect("checked unfinished == 0");
+                JobOutcome {
+                    id: j.spec.id,
+                    arrival: j.spec.arrival,
+                    completion,
+                    jct: completion - j.spec.arrival,
+                    nodes: j.nodes.len(),
+                    gpus: j.nodes.len() * self.trainer.cluster.gpus_per_node,
+                    steps: j.spec.steps,
+                    priority: j.spec.priority,
+                    preemptions: j.preemptions,
+                    step_time: j.step_time,
+                }
+            })
+            .collect();
+        jobs.sort_by_key(|j| j.id);
+        let makespan = jobs.iter().map(|j| j.completion).fold(0.0, f64::max);
+        let jcts: Vec<f64> = jobs.iter().map(|j| j.jct).collect();
+        let images: f64 =
+            jobs.iter().map(|j| j.steps as f64 * j.gpus as f64 * per_gpu_batch).sum();
+        Ok(FleetReport {
+            makespan,
+            mean_jct: stats::mean(&jcts),
+            p99_jct: stats::percentile(&jcts, 99.0),
+            images_per_sec: images / makespan,
+            preemptions: st.preemptions,
+            failures: st.failures_applied,
+            jobs,
+        })
+    }
+}
+
+/// Choose `want` nodes from the free pool (ascending ids) under a
+/// placement policy. Returns an ascending node list, or `None` when the
+/// pool is too small. Policies differ only in *which* nodes — never in
+/// how many — so admission decisions are policy-independent.
+pub fn pick_nodes(
+    policy: PlacementPolicy,
+    topo: &Topology,
+    free: &[usize],
+    want: usize,
+) -> Option<Vec<usize>> {
+    if want == 0 || free.len() < want {
+        return None;
+    }
+    let mut out = match policy {
+        PlacementPolicy::Pack => free[..want].to_vec(),
+        PlacementPolicy::Spread => {
+            // Round-robin one node per ToR (ascending ToR order) until
+            // the gang is full: maximal ToR span.
+            let mut by_tor: Vec<(usize, std::collections::VecDeque<usize>)> = Vec::new();
+            for &n in free {
+                let tor = topo.tor_of_node(n);
+                match by_tor.last_mut() {
+                    Some((t, q)) if *t == tor => q.push_back(n),
+                    _ => by_tor.push((tor, std::collections::VecDeque::from([n]))),
+                }
+            }
+            let mut out = Vec::with_capacity(want);
+            'rr: loop {
+                let mut any = false;
+                for (_, q) in by_tor.iter_mut() {
+                    if let Some(n) = q.pop_front() {
+                        out.push(n);
+                        any = true;
+                        if out.len() == want {
+                            break 'rr;
+                        }
+                    }
+                }
+                debug_assert!(any, "pool exhausted before want — size was pre-checked");
+            }
+            out
+        }
+        PlacementPolicy::TopologyAware => {
+            // ToR-packing: if some ToR can hold the whole remainder, take
+            // the *tightest* such ToR (best fit — preserves big holes);
+            // otherwise drain the fullest ToR and repeat. Minimizes the
+            // gang's ToR span, then fragmentation.
+            let mut by_tor: Vec<(usize, Vec<usize>)> = Vec::new();
+            for &n in free {
+                let tor = topo.tor_of_node(n);
+                match by_tor.last_mut() {
+                    Some((t, v)) if *t == tor => v.push(n),
+                    _ => by_tor.push((tor, vec![n])),
+                }
+            }
+            let mut out = Vec::with_capacity(want);
+            while out.len() < want {
+                let remaining = want - out.len();
+                let fits = by_tor
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, (_, v))| v.len() >= remaining)
+                    .min_by_key(|(_, (tor, v))| (v.len(), *tor));
+                let idx = match fits {
+                    Some((i, _)) => i,
+                    None => {
+                        // No single ToR fits: drain the fullest (tie →
+                        // lowest ToR id) and keep going.
+                        by_tor
+                            .iter()
+                            .enumerate()
+                            .max_by(|(_, (ta, va)), (_, (tb, vb))| {
+                                va.len().cmp(&vb.len()).then(tb.cmp(ta))
+                            })
+                            .map(|(i, _)| i)
+                            .expect("free pool non-empty")
+                    }
+                };
+                let (_, v) = &mut by_tor[idx];
+                let take = remaining.min(v.len());
+                out.extend(v.drain(..take));
+                by_tor.retain(|(_, v)| !v.is_empty());
+            }
+            out
+        }
+    };
+    out.sort_unstable();
+    debug_assert_eq!(out.len(), want);
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fabric;
+    use crate::config::spec::{ClusterSpec, FabricKind, TopologySpec};
+
+    fn topo(nodes: usize, per_tor: usize) -> Topology {
+        let mut cluster = ClusterSpec::txgaia();
+        cluster.nodes = nodes;
+        cluster.nodes_per_rack = per_tor;
+        let fabric = fabric(FabricKind::EthernetRoce25);
+        let spec = TopologySpec { leaf_ports: Some(per_tor), ..Default::default() };
+        Topology::build(&spec, &fabric, &cluster).unwrap()
+    }
+
+    #[test]
+    fn pack_takes_lowest_ids() {
+        let topo = topo(16, 4);
+        let free: Vec<usize> = (0..16).collect();
+        assert_eq!(pick_nodes(PlacementPolicy::Pack, &topo, &free, 3), Some(vec![0, 1, 2]));
+        assert_eq!(pick_nodes(PlacementPolicy::Pack, &topo, &free, 17), None);
+        assert_eq!(pick_nodes(PlacementPolicy::Pack, &topo, &free, 0), None);
+    }
+
+    #[test]
+    fn spread_round_robins_tors() {
+        let topo = topo(16, 4);
+        let free: Vec<usize> = (0..16).collect();
+        // One per ToR first: nodes 0, 4, 8, 12 — then wrap.
+        assert_eq!(
+            pick_nodes(PlacementPolicy::Spread, &topo, &free, 4),
+            Some(vec![0, 4, 8, 12])
+        );
+        assert_eq!(
+            pick_nodes(PlacementPolicy::Spread, &topo, &free, 6),
+            Some(vec![0, 1, 4, 5, 8, 12])
+        );
+    }
+
+    #[test]
+    fn topology_aware_minimizes_tor_span_with_best_fit() {
+        let topo = topo(16, 4);
+        // ToR 0 has 2 free, ToR 1 has 4, ToR 2 has 3.
+        let free = vec![0, 1, 4, 5, 6, 7, 8, 9, 10];
+        // want 3 → the tightest ToR that fits is ToR 2 (3 free).
+        assert_eq!(
+            pick_nodes(PlacementPolicy::TopologyAware, &topo, &free, 3),
+            Some(vec![8, 9, 10])
+        );
+        // want 4 → exactly ToR 1.
+        assert_eq!(
+            pick_nodes(PlacementPolicy::TopologyAware, &topo, &free, 4),
+            Some(vec![4, 5, 6, 7])
+        );
+        // want 6 → no single ToR fits: drain the fullest (ToR 1), then
+        // best-fit the remaining 2 into ToR 0 (2 free beats ToR 2's 3).
+        assert_eq!(
+            pick_nodes(PlacementPolicy::TopologyAware, &topo, &free, 6),
+            Some(vec![0, 1, 4, 5, 6, 7])
+        );
+    }
+
+    #[test]
+    fn policies_always_emit_sorted_exact_sets() {
+        let topo = topo(32, 8);
+        let free: Vec<usize> = (0..32).filter(|n| n % 3 != 0).collect();
+        for policy in
+            [PlacementPolicy::Pack, PlacementPolicy::Spread, PlacementPolicy::TopologyAware]
+        {
+            for want in [1, 2, 5, free.len()] {
+                let got = pick_nodes(policy, &topo, &free, want).unwrap();
+                assert_eq!(got.len(), want, "{policy:?} want={want}");
+                assert!(got.windows(2).all(|w| w[0] < w[1]), "{policy:?} unsorted: {got:?}");
+                assert!(got.iter().all(|n| free.contains(n)), "{policy:?} invented a node");
+            }
+            assert!(pick_nodes(policy, &topo, &free, free.len() + 1).is_none());
+        }
+    }
+}

@@ -7,6 +7,6 @@ pub mod spec;
 pub mod toml;
 
 pub use spec::{
-    AffinityConfig, ClusterSpec, FabricKind, FabricSpec, RunSpec, SourceModel, TenancySpec,
-    TopologyKind, TopologySpec, TrafficPattern, TransportOptions,
+    AffinityConfig, ClusterSpec, FabricKind, FabricSpec, FleetSpec, PlacementPolicy, RunSpec,
+    SourceModel, TenancySpec, TopologyKind, TopologySpec, TrafficPattern, TransportOptions,
 };

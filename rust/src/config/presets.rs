@@ -146,6 +146,26 @@ source = "poisson"     # or "on-off" (bursty: exponential burst/idle phases)
 # straggler_factor = 1.5 # their compute-time multiplier (>= 1)
 # straggler_jitter = 0.05# extra per-step lognormal sigma, all ranks
 
+# Uncomment to run a multi-job fleet through the cluster scheduler
+# instead of a single training job (`run --config` then reports per-job
+# JCTs and fleet goodput; see `fabricbench help`, "multi-job fleet").
+# [fleet]
+# jobs = 12              # arrival-trace length
+# interarrival_secs = 20.0 # mean exponential gap between submissions
+# gang_min = 1           # gang size bounds, in nodes (uniform draw)
+# gang_max = 4
+# steps_min = 30         # training length bounds, in steps
+# steps_max = 120
+# priority_levels = 3    # uniform priority draw; 1 disables priorities
+# preemption = true      # high priority may evict strictly lower
+# elastic = false        # shrink into [gang_min, wanted] when tight
+# checkpoint_restart_secs = 15.0 # lost time per re-placement
+# node_failures = 0      # seeded failures over the arrival window
+# repair_secs = 240.0    # node down-time per failure
+# neighbor_load = 0.6    # each job's offered cross-traffic load [0,1]
+# placement = "pack"     # or "spread" | "topology" (ToR-packing)
+# seed = 1               # fleet trace RNG seed (XORed with run seed)
+
 [run]
 seed = 7
 warmup_steps = 5
@@ -208,6 +228,23 @@ mod tests {
         assert_eq!(tenancy.background_load, 0.3);
         assert!(tenancy.background_active());
         tenancy.resolve_sets(&cluster).unwrap();
+        // The [fleet] block ships commented out (an active table would
+        // switch `run --config` into fleet mode); de-comment it here so
+        // every documented key is kept parseable and valid.
+        let fleet_text: String = EXAMPLE_TOML
+            .lines()
+            .skip_while(|l| *l != "# [fleet]")
+            .take_while(|l| l.starts_with('#'))
+            .map(|l| l.trim_start_matches("# "))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let fleet_doc = toml::parse(&fleet_text).unwrap();
+        let fleet = crate::config::spec::FleetSpec::from_toml(fleet_doc.get("fleet").unwrap())
+            .unwrap();
+        fleet.validate_for(&cluster).unwrap();
+        assert_eq!(fleet.jobs, 12);
+        assert_eq!(fleet.placement, crate::config::PlacementPolicy::Pack);
+        assert_eq!(fleet.seed, 1);
     }
 
     #[test]

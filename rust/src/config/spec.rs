@@ -651,6 +651,286 @@ impl TenancySpec {
     }
 }
 
+/// How the fleet scheduler picks nodes for a gang (see
+/// `cluster::scheduler`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Lowest free node ids first (the classic packing default —
+    /// fragmentation can straddle a job across ToRs).
+    Pack,
+    /// Round-robin across ToRs (maximizes the job's ToR span; load
+    /// balance at the price of cross-ToR collective traffic).
+    Spread,
+    /// ToR-packing via the fabric topology: fill the fullest-free ToRs
+    /// first so each gang spans as few ToRs as possible.
+    TopologyAware,
+}
+
+impl PlacementPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "pack" => PlacementPolicy::Pack,
+            "spread" => PlacementPolicy::Spread,
+            "topology" | "topology-aware" | "tor-pack" => PlacementPolicy::TopologyAware,
+            other => bail!(
+                "unknown placement policy '{other}' (expected 'pack', 'spread' or 'topology')"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Pack => "pack",
+            PlacementPolicy::Spread => "spread",
+            PlacementPolicy::TopologyAware => "topology",
+        }
+    }
+}
+
+/// Multi-job fleet scenario: a seeded arrival trace of gang-scheduled
+/// training jobs under a cluster scheduler (see `cluster::scheduler`).
+/// Each running job's traffic enters its neighbors' fabric simulation as
+/// attributed per-job tenant flows — the tenants of [`TenancySpec`]
+/// promoted to real jobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FleetSpec {
+    /// Number of jobs in the arrival trace.
+    pub jobs: usize,
+    /// Mean interarrival gap, seconds (exponential draws).
+    pub interarrival_secs: f64,
+    /// Gang size bounds in *nodes* (each job draws uniformly, inclusive;
+    /// a job uses every GPU on its nodes).
+    pub gang_min: usize,
+    pub gang_max: usize,
+    /// Training length bounds in steps (uniform draw, inclusive).
+    pub steps_min: usize,
+    pub steps_max: usize,
+    /// Priority levels; each job draws uniformly in `[0, levels)`,
+    /// higher wins. 1 level disables priorities.
+    pub priority_levels: usize,
+    /// May a higher-priority arrival preempt lower-priority jobs?
+    pub preemption: bool,
+    /// May a job shrink to `gang_min` nodes when the cluster is tight,
+    /// growing back at later reconciles?
+    pub elastic: bool,
+    /// Lost time per preemption/resize/failure re-placement, seconds
+    /// (checkpoint write + restore + warmup).
+    pub checkpoint_restart_secs: f64,
+    /// Seeded node-failure events over the arrival window.
+    pub node_failures: usize,
+    /// Time from a node failure to its repair (rejoining the free pool).
+    pub repair_secs: f64,
+    /// Offered load of each running job's attributed cross-traffic, as a
+    /// fraction of its shuffle bottleneck (see [`TenancySpec`]); what a
+    /// neighbor's NetSim sees of this job.
+    pub neighbor_load: f64,
+    pub placement: PlacementPolicy,
+    /// Fleet RNG seed (arrival gaps, gang sizes, steps, priorities,
+    /// failure draws), XOR-folded with the run seed.
+    pub seed: u64,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            jobs: 12,
+            interarrival_secs: 20.0,
+            gang_min: 1,
+            gang_max: 4,
+            steps_min: 30,
+            steps_max: 120,
+            priority_levels: 3,
+            preemption: true,
+            elastic: false,
+            checkpoint_restart_secs: 15.0,
+            node_failures: 0,
+            repair_secs: 240.0,
+            neighbor_load: 0.6,
+            placement: PlacementPolicy::Pack,
+            seed: 0xF1EE_7001,
+        }
+    }
+}
+
+impl FleetSpec {
+    /// Preset: one job, fixed gang, no churn of any kind — the
+    /// configuration that must reproduce a standalone [`TenancySpec`]
+    /// dedicated `TrainerSim` run bit-for-bit (pinned in tests).
+    pub fn single_job(nodes: usize, steps: usize) -> FleetSpec {
+        FleetSpec {
+            jobs: 1,
+            gang_min: nodes,
+            gang_max: nodes,
+            steps_min: steps,
+            steps_max: steps,
+            priority_levels: 1,
+            preemption: false,
+            elastic: false,
+            node_failures: 0,
+            neighbor_load: 0.0,
+            ..Default::default()
+        }
+    }
+
+    /// Build from a parsed TOML `[fleet]` table, filling defaults. A key
+    /// present with the wrong type is an error, not a silently kept
+    /// default (same contract as `[tenancy]`).
+    pub fn from_toml(v: &Json) -> Result<FleetSpec> {
+        let getf = |key: &str| -> Result<Option<f64>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => match x.as_f64() {
+                    Some(f) => Ok(Some(f)),
+                    None => bail!("fleet.{key} must be a number"),
+                },
+            }
+        };
+        let getu = |key: &str| -> Result<Option<usize>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => match x.as_f64() {
+                    Some(f) if f.fract() == 0.0 && f >= 0.0 => Ok(Some(f as usize)),
+                    Some(f) => bail!("fleet.{key} must be a non-negative integer, got {f}"),
+                    None => bail!("fleet.{key} must be a non-negative integer"),
+                },
+            }
+        };
+        let getb = |key: &str| -> Result<Option<bool>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(Json::Bool(b)) => Ok(Some(*b)),
+                Some(_) => bail!("fleet.{key} must be a boolean"),
+            }
+        };
+        let mut f = FleetSpec::default();
+        if let Some(x) = getu("jobs")? {
+            f.jobs = x;
+        }
+        if let Some(x) = getf("interarrival_secs")? {
+            f.interarrival_secs = x;
+        }
+        if let Some(x) = getu("gang_min")? {
+            f.gang_min = x;
+        }
+        if let Some(x) = getu("gang_max")? {
+            f.gang_max = x;
+        }
+        if let Some(x) = getu("steps_min")? {
+            f.steps_min = x;
+        }
+        if let Some(x) = getu("steps_max")? {
+            f.steps_max = x;
+        }
+        if let Some(x) = getu("priority_levels")? {
+            f.priority_levels = x;
+        }
+        if let Some(x) = getb("preemption")? {
+            f.preemption = x;
+        }
+        if let Some(x) = getb("elastic")? {
+            f.elastic = x;
+        }
+        if let Some(x) = getf("checkpoint_restart_secs")? {
+            f.checkpoint_restart_secs = x;
+        }
+        if let Some(x) = getu("node_failures")? {
+            f.node_failures = x;
+        }
+        if let Some(x) = getf("repair_secs")? {
+            f.repair_secs = x;
+        }
+        if let Some(x) = getf("neighbor_load")? {
+            f.neighbor_load = x;
+        }
+        if let Some(k) = v.get("placement") {
+            match k.as_str() {
+                Some(s) => f.placement = PlacementPolicy::parse(s)?,
+                None => bail!("fleet.placement must be a string"),
+            }
+        }
+        if let Some(x) = getu("seed")? {
+            // Same 2^53 guard as tenancy.seed: the TOML layer carries
+            // numbers as f64.
+            if x as u64 >= (1u64 << 53) {
+                bail!("fleet.seed {x} is not exactly representable (must be < 2^53)");
+            }
+            f.seed = x as u64;
+        }
+        f.validate()?;
+        Ok(f)
+    }
+
+    /// Cluster-independent validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.jobs == 0 {
+            bail!("fleet: jobs must be >= 1");
+        }
+        if !self.interarrival_secs.is_finite() || self.interarrival_secs <= 0.0 {
+            bail!("fleet: interarrival_secs must be positive, got {}", self.interarrival_secs);
+        }
+        if self.gang_min == 0 {
+            bail!("fleet: gang_min must be >= 1 node");
+        }
+        if self.gang_min > self.gang_max {
+            bail!("fleet: gang_min {} > gang_max {}", self.gang_min, self.gang_max);
+        }
+        if self.steps_min == 0 {
+            bail!("fleet: steps_min must be >= 1");
+        }
+        if self.steps_min > self.steps_max {
+            bail!("fleet: steps_min {} > steps_max {}", self.steps_min, self.steps_max);
+        }
+        if self.priority_levels == 0 {
+            bail!("fleet: priority_levels must be >= 1");
+        }
+        if !self.checkpoint_restart_secs.is_finite() || self.checkpoint_restart_secs < 0.0 {
+            bail!(
+                "fleet: checkpoint_restart_secs must be non-negative, got {}",
+                self.checkpoint_restart_secs
+            );
+        }
+        if !self.repair_secs.is_finite() || self.repair_secs <= 0.0 {
+            bail!("fleet: repair_secs must be positive, got {}", self.repair_secs);
+        }
+        if !self.neighbor_load.is_finite() || !(0.0..=1.0).contains(&self.neighbor_load) {
+            bail!(
+                "fleet: neighbor_load {} must be in [0, 1] (it is an offered load \
+                 fraction, like tenancy.background_load)",
+                self.neighbor_load
+            );
+        }
+        Ok(())
+    }
+
+    /// Validation against a concrete cluster: the largest gang must fit,
+    /// and failures must leave room for the smallest one.
+    pub fn validate_for(&self, cluster: &ClusterSpec) -> Result<()> {
+        self.validate()?;
+        if self.gang_max > cluster.nodes {
+            bail!(
+                "fleet: gang_max {} nodes exceeds the {}-node cluster",
+                self.gang_max,
+                cluster.nodes
+            );
+        }
+        if self.node_failures >= cluster.nodes {
+            bail!(
+                "fleet: {} node failures would exhaust the {}-node cluster",
+                self.node_failures,
+                cluster.nodes
+            );
+        }
+        if self.node_failures + self.gang_min > cluster.nodes {
+            bail!(
+                "fleet: {} concurrent failures could leave no room for a {}-node gang",
+                self.node_failures,
+                self.gang_min
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Network fabric model parameters (see DESIGN.md §6 for sources).
 #[derive(Clone, Debug)]
 pub struct FabricSpec {
@@ -1293,6 +1573,77 @@ mod tests {
         assert_eq!(a, b);
         assert!(a.iter().any(|&x| x == 2.0) && a.iter().any(|&x| x == 1.0));
         assert_ne!(a, spec.rank_slowdowns(64, 8), "run seed folds in");
+    }
+
+    #[test]
+    fn fleet_from_toml_defaults_overrides_and_rejections() {
+        let f = FleetSpec::from_toml(&toml::parse("").unwrap()).unwrap();
+        assert_eq!(f, FleetSpec::default());
+
+        let doc = toml::parse(
+            "jobs = 6\ninterarrival_secs = 45.0\ngang_min = 2\ngang_max = 8\n\
+             steps_min = 10\nsteps_max = 40\npriority_levels = 2\npreemption = false\n\
+             elastic = true\ncheckpoint_restart_secs = 5.0\nnode_failures = 2\n\
+             repair_secs = 60.0\nneighbor_load = 0.25\nplacement = \"topology\"\nseed = 99",
+        )
+        .unwrap();
+        let f = FleetSpec::from_toml(&doc).unwrap();
+        assert_eq!(f.jobs, 6);
+        assert_eq!(f.interarrival_secs, 45.0);
+        assert_eq!((f.gang_min, f.gang_max), (2, 8));
+        assert_eq!((f.steps_min, f.steps_max), (10, 40));
+        assert_eq!(f.priority_levels, 2);
+        assert!(!f.preemption && f.elastic);
+        assert_eq!(f.checkpoint_restart_secs, 5.0);
+        assert_eq!((f.node_failures, f.repair_secs), (2, 60.0));
+        assert_eq!(f.neighbor_load, 0.25);
+        assert_eq!(f.placement, PlacementPolicy::TopologyAware);
+        assert_eq!(f.seed, 99);
+
+        for doc in [
+            "jobs = 0",
+            "interarrival_secs = 0.0",
+            "gang_min = 0",
+            "gang_min = 5\ngang_max = 3",
+            "steps_min = 0",
+            "steps_min = 9\nsteps_max = 4",
+            "priority_levels = 0",
+            "checkpoint_restart_secs = -1.0",
+            "repair_secs = 0.0",
+            "neighbor_load = 1.5",
+            "placement = \"random\"",
+            // Type errors are loud, not silently kept defaults.
+            "jobs = 1.5",
+            "preemption = \"yes\"",
+            "placement = 3",
+            "seed = 9007199254740993",
+        ] {
+            assert!(
+                FleetSpec::from_toml(&toml::parse(doc).unwrap()).is_err(),
+                "'{doc}' should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_validate_for_checks_cluster_fit() {
+        let mut cluster = ClusterSpec::txgaia();
+        cluster.nodes = 8;
+        let f = FleetSpec { gang_max: 9, ..Default::default() };
+        assert!(f.validate_for(&cluster).is_err(), "gang larger than the cluster");
+        let f = FleetSpec { node_failures: 8, ..Default::default() };
+        assert!(f.validate_for(&cluster).is_err(), "failures exhaust the cluster");
+        let f = FleetSpec { gang_min: 4, gang_max: 4, node_failures: 5, ..Default::default() };
+        assert!(f.validate_for(&cluster).is_err(), "failures crowd out the smallest gang");
+        FleetSpec { gang_max: 8, ..Default::default() }.validate_for(&cluster).unwrap();
+
+        // The single-job preset is churn-free by construction.
+        let s = FleetSpec::single_job(4, 20);
+        assert_eq!((s.jobs, s.gang_min, s.gang_max), (1, 4, 4));
+        assert_eq!((s.steps_min, s.steps_max), (20, 20));
+        assert!(!s.preemption && !s.elastic && s.node_failures == 0);
+        assert_eq!(s.neighbor_load, 0.0);
+        s.validate_for(&cluster).unwrap();
     }
 
     #[test]

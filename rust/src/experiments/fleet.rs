@@ -1,0 +1,174 @@
+//! Fleet experiment: placement-policy sweep on an oversubscribed
+//! fat-tree cell.
+//!
+//! A fixed seeded job trace (same arrivals, gang sizes, and step budgets
+//! in every cell — the fleet seed does not vary with the policy) is
+//! replayed under each [`PlacementPolicy`] at several offered
+//! occupancies. The cluster is a 32-node, 4:1-oversubscribed fat-tree
+//! cell: small enough that quick cells are cheap, oversubscribed enough
+//! that ToR span is the mechanism under test. Single-ToR gangs ride
+//! isolated NIC links; gangs straddling ToRs contend with every
+//! co-located job's attributed traffic on the thin uplinks — which is
+//! exactly what separates topology-aware packing from spread placement
+//! in fleet-wide throughput and tail JCT.
+//!
+//! Cells are seed-paired (every cell runs at the runner's base seed) and
+//! independent, so the sweep CSV is byte-identical at any `--jobs` level
+//! — locked by `tests/fleet_properties.rs`.
+
+use crate::cluster::scheduler::FleetSim;
+use crate::collectives::RingAllreduce;
+use crate::config::presets::fabric;
+use crate::config::spec::FabricKind;
+use crate::config::{
+    ClusterSpec, FabricSpec, FleetSpec, PlacementPolicy, RunSpec, TenancySpec, TransportOptions,
+};
+use crate::experiments::sweeps::{CellOut, Runner};
+use crate::models::perf::Precision;
+use crate::models::zoo::resnet50;
+use crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD;
+use crate::trainer::TrainerSim;
+use crate::util::table::{fnum, Table};
+use crate::util::units::MIB;
+
+/// Nominal seconds/step used only to convert a target occupancy into a
+/// mean interarrival gap (ResNet50 at batch 64 on contended 25 GbE).
+const NOMINAL_STEP_SECS: f64 = 0.5;
+
+/// The sweep's cluster cell: 32 nodes, 8 per ToR.
+pub fn fleet_cluster() -> ClusterSpec {
+    let mut c = ClusterSpec::txgaia();
+    c.nodes = 32;
+    c.nodes_per_rack = 8;
+    c
+}
+
+/// 25 GbE RoCE with 4:1 oversubscribed ToR uplinks.
+pub fn fleet_fabric() -> FabricSpec {
+    let mut f = fabric(FabricKind::EthernetRoce25);
+    f.topology.oversubscription = Some(4.0);
+    f
+}
+
+/// The trainer template every fleet job runs under.
+pub fn fleet_trainer() -> TrainerSim {
+    TrainerSim {
+        arch: resnet50(),
+        fabric: fleet_fabric(),
+        cluster: fleet_cluster(),
+        opts: TransportOptions::default(),
+        strategy: Box::new(RingAllreduce),
+        per_gpu_batch: 64,
+        precision: Precision::Fp32,
+        fusion_bytes: 64.0 * MIB,
+        overlap: true,
+        step_overhead: 0.0,
+        coordination_overhead: DEFAULT_COORDINATION_OVERHEAD,
+        tenancy: TenancySpec::default(),
+    }
+}
+
+/// Fleet scenario for one sweep cell: the policy varies, the trace does
+/// not. `occupancy` is the offered utilization — mean outstanding node
+/// demand over cluster capacity — realized through the interarrival gap.
+pub fn fleet_spec(policy: PlacementPolicy, occupancy: f64, quick: bool) -> FleetSpec {
+    let nodes = fleet_cluster().nodes as f64;
+    let (gang_min, gang_max) = (2usize, 4usize);
+    let (steps_min, steps_max) = (20usize, 60usize);
+    let mean_gang = (gang_min + gang_max) as f64 / 2.0;
+    let mean_steps = (steps_min + steps_max) as f64 / 2.0;
+    FleetSpec {
+        jobs: if quick { 8 } else { 16 },
+        interarrival_secs: mean_gang * mean_steps * NOMINAL_STEP_SECS / (nodes * occupancy),
+        gang_min,
+        gang_max,
+        steps_min,
+        steps_max,
+        // The sweep isolates placement: no priorities, preemption,
+        // elasticity, or failures (those are locked by the property
+        // tests, not swept here).
+        priority_levels: 1,
+        preemption: false,
+        elastic: false,
+        node_failures: 0,
+        neighbor_load: 0.6,
+        placement: policy,
+        ..Default::default()
+    }
+}
+
+fn spec(quick: bool, seed: u64) -> RunSpec {
+    RunSpec {
+        seed,
+        warmup_steps: 1,
+        measure_steps: if quick { 4 } else { 8 },
+        ..Default::default()
+    }
+}
+
+pub struct FleetPoint {
+    pub policy: &'static str,
+    pub occupancy: f64,
+    pub images_per_sec: f64,
+    pub mean_jct: f64,
+    pub p99_jct: f64,
+    pub makespan: f64,
+}
+
+/// Placement-policy × occupancy sweep (sequential, uncached).
+pub fn fleet_sweep(quick: bool) -> (Table, Vec<FleetPoint>) {
+    fleet_sweep_with(quick, &Runner::sequential())
+}
+
+pub fn fleet_sweep_with(quick: bool, runner: &Runner) -> (Table, Vec<FleetPoint>) {
+    let policies =
+        [PlacementPolicy::Pack, PlacementPolicy::Spread, PlacementPolicy::TopologyAware];
+    let occupancies = [0.3f64, 0.6, 0.9];
+    let mut items: Vec<(PlacementPolicy, f64)> = Vec::new();
+    for &p in &policies {
+        for &occ in &occupancies {
+            items.push((p, occ));
+        }
+    }
+    let cells = runner.map_cells(
+        "fleet_placement",
+        &items,
+        |(p, occ)| format!("{}:occ={occ}:quick={quick}", p.name()),
+        |_, (p, occ), _seed| {
+            let trainer = fleet_trainer();
+            let fleet = fleet_spec(*p, *occ, quick);
+            let sim = FleetSim::new(&trainer, fleet).unwrap();
+            let r = sim.run(&spec(quick, runner.seed)).unwrap();
+            CellOut::new(vec![
+                p.name().to_string(),
+                format!("{:.0}%", occ * 100.0),
+                r.jobs.len().to_string(),
+                fnum(r.images_per_sec),
+                fnum(r.mean_jct),
+                fnum(r.p99_jct),
+                fnum(r.makespan),
+            ])
+            .val("img_s", r.images_per_sec)
+            .val("mean_jct", r.mean_jct)
+            .val("p99_jct", r.p99_jct)
+            .val("makespan", r.makespan)
+        },
+    );
+    let mut t = Table::new(
+        "Fleet: placement policy vs occupancy (ResNet50 gangs, 32-node 4:1 fat-tree cell)",
+        &["placement", "occupancy", "jobs", "fleet img/s", "mean JCT s", "p99 JCT s", "makespan s"],
+    );
+    let mut pts = Vec::new();
+    for ((p, occ), cell) in items.iter().zip(cells) {
+        pts.push(FleetPoint {
+            policy: p.name(),
+            occupancy: *occ,
+            images_per_sec: cell.get("img_s"),
+            mean_jct: cell.get("mean_jct"),
+            p99_jct: cell.get("p99_jct"),
+            makespan: cell.get("makespan"),
+        });
+        t.row(cell.row);
+    }
+    (t, pts)
+}

@@ -14,6 +14,7 @@ pub mod affinity;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod fleet;
 pub mod frameworks;
 pub mod microbench;
 pub mod sweeps;

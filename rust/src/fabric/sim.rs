@@ -111,6 +111,9 @@ const BACKGROUND_FLOW: usize = usize::MAX;
 struct NetFlow {
     /// Index into the caller's request slice, or [`BACKGROUND_FLOW`].
     req_idx: usize,
+    /// Owning tenant: 0 is the simulator's own job; any other id is a
+    /// co-located tenant (anonymous generator or attributed fleet job).
+    tenant: usize,
     src_node: usize,
     dst_node: usize,
     inter_rack: bool,
@@ -358,9 +361,19 @@ pub struct NetSim {
     scratch_flows: Vec<NetFlow>,
     scratch_srcs: Vec<usize>,
     scratch_finish: Vec<f64>,
-    /// Shared-tenancy cross-traffic generator; `None` (the default) is
-    /// the dedicated, silent fabric — bit-for-bit the pre-tenancy engine.
-    background: Option<crate::fabric::tenancy::BackgroundTraffic>,
+    /// Shared-tenancy cross-traffic generators, one per attributed
+    /// tenant id (sorted-by-insertion, ids unique, never 0). Empty (the
+    /// default) is the dedicated, silent fabric — bit-for-bit the
+    /// pre-tenancy engine. The anonymous single-generator API
+    /// ([`NetSim::set_background`]) is tenant id 1.
+    tenants: Vec<(usize, crate::fabric::tenancy::BackgroundTraffic)>,
+    /// Per-tenant injected traffic: `(tenant id, messages, bytes)` in
+    /// first-seen order. The aggregate lives in
+    /// [`NetStats::background_messages`]/`background_bytes`; this
+    /// breakdown is engine state (not `NetStats`) so the timing-cache
+    /// delta plumbing stays untouched — tenant traffic disables that
+    /// cache anyway ([`NetSim::timing_cache_usable`]).
+    tenant_traffic: Vec<(usize, u64, f64)>,
     scratch_bg: Vec<crate::fabric::tenancy::BgFlow>,
     /// Collective schedule/timing memoization, owned per simulator so
     /// reuse across steps needs no cross-thread sharing (CSV output stays
@@ -414,7 +427,8 @@ impl NetSim {
             scratch_flows: Vec::new(),
             scratch_srcs: Vec::new(),
             scratch_finish: Vec::new(),
-            background: None,
+            tenants: Vec::new(),
+            tenant_traffic: Vec::new(),
             scratch_bg: Vec::new(),
             schedule_cache: ScheduleCache::new(),
             stats: NetStats::default(),
@@ -427,33 +441,62 @@ impl NetSim {
         self.trace = Some(crate::fabric::trace::Trace::default());
     }
 
-    /// Attach a background cross-traffic generator: its flows are
-    /// injected into every subsequent [`NetSim::transfer_batch`] and
-    /// share the batch's resources max-min fairly with training flows.
+    /// Attach the anonymous background cross-traffic generator (tenant
+    /// id 1), replacing any existing tenant set: its flows are injected
+    /// into every subsequent [`NetSim::transfer_batch`] and share the
+    /// batch's resources max-min fairly with training flows.
     pub fn set_background(&mut self, bg: crate::fabric::tenancy::BackgroundTraffic) {
-        self.background = Some(bg);
+        self.tenants.clear();
+        self.tenants.push((1, bg));
     }
 
-    /// Back to a dedicated fabric.
+    /// Attach one *attributed* tenant (a fleet job's traffic). Ids must
+    /// be unique, non-zero (0 is the observing job itself), and are
+    /// carried through to trace events and the per-tenant counters.
+    pub fn add_tenant(&mut self, id: usize, bg: crate::fabric::tenancy::BackgroundTraffic) {
+        assert!(id != 0, "tenant id 0 is the observing job");
+        assert!(
+            self.tenants.iter().all(|(t, _)| *t != id),
+            "tenant id {id} already attached"
+        );
+        self.tenants.push((id, bg));
+    }
+
+    /// Back to a dedicated fabric (drops every tenant).
     pub fn clear_background(&mut self) {
-        self.background = None;
+        self.tenants.clear();
     }
 
     /// Is shared-tenancy cross-traffic active?
     pub fn background_active(&self) -> bool {
-        self.background.is_some()
+        !self.tenants.is_empty()
     }
 
     /// Tenancy configuration hash for schedule-cache world signatures
-    /// (0 on a dedicated fabric).
+    /// (0 on a dedicated fabric). Folds every attached tenant's id and
+    /// generator signature, so distinct tenant sets hash apart.
     pub fn background_signature(&self) -> u64 {
-        self.background.as_ref().map_or(0, |b| b.signature())
+        if self.tenants.is_empty() {
+            return 0;
+        }
+        let mut h = crate::util::hash::FNV_OFFSET;
+        for (id, bg) in &self.tenants {
+            h = crate::util::hash::fnv1a_u64(h, *id as u64);
+            h = crate::util::hash::fnv1a_u64(h, bg.signature());
+        }
+        h
+    }
+
+    /// Per-tenant injected traffic so far: `(tenant id, messages,
+    /// bytes)` in first-seen order. Cleared by [`NetSim::reset`].
+    pub fn tenant_traffic(&self) -> &[(usize, u64, f64)] {
+        &self.tenant_traffic
     }
 
     /// Reset occupancy, stats and ECMP flow sequencing between
     /// experiments (keeps specs and the schedule cache — cache keys
     /// capture the clock/occupancy state, so stale hits are impossible).
-    /// A background generator advances to its next epoch: virtual time
+    /// Background generators advance to their next epoch: virtual time
     /// restarts at zero with a fresh, reproducible realization per step.
     pub fn reset(&mut self) {
         for b in self.busy_until.iter_mut() {
@@ -461,7 +504,8 @@ impl NetSim {
         }
         self.flow_seq.clear();
         self.stats = NetStats::default();
-        if let Some(bg) = self.background.as_mut() {
+        self.tenant_traffic.clear();
+        for (_, bg) in self.tenants.iter_mut() {
             bg.advance_epoch();
         }
     }
@@ -476,13 +520,13 @@ impl NetSim {
     /// Requires the knob on, no message tracing (a replay records no
     /// events), trivial ECMP (with several spines the per-pair
     /// `flow_seq` counters are engine state a replay would skip), and a
-    /// dedicated fabric (the background generator's cursor is engine
+    /// dedicated fabric (the background generators' cursors are engine
     /// state a replay would skip too).
     pub(crate) fn timing_cache_usable(&self) -> bool {
         self.opts.schedule_cache
             && self.trace.is_none()
             && self.topology.n_spines <= 1
-            && self.background.is_none()
+            && self.tenants.is_empty()
     }
 
     /// Snapshot the engine state a captured execution starts from.
@@ -574,39 +618,46 @@ impl NetSim {
                 continue;
             }
 
-            self.admit_inter_node_flow(&mut flows, i, req.src, req.dst, req.bytes, req.ready);
+            self.admit_inter_node_flow(&mut flows, i, 0, req.src, req.dst, req.bytes, req.ready);
         }
         if flows.is_empty() {
             self.scratch_flows = flows;
             return out;
         }
 
-        // Shared tenancy: inject every background flow whose arrival
-        // falls inside this batch's window. The window closes at the
-        // latest *uncontended* finish estimate — deterministic and
-        // computable before solving; arrivals in the contention-stretched
-        // tail simply join the next batch (their ready times are kept, so
-        // nothing is lost). Background flows are first-class: they claim
-        // their full route and share every link max-min fairly.
-        if self.background.is_some() {
+        // Shared tenancy: inject every tenant flow whose arrival falls
+        // inside this batch's window. The window closes at the latest
+        // *uncontended* finish estimate — deterministic and computable
+        // before solving; arrivals in the contention-stretched tail
+        // simply join the next batch (their ready times are kept, so
+        // nothing is lost). Tenant flows are first-class: they claim
+        // their full route and share every link max-min fairly. Tenants
+        // draw in attachment order, each from its own generator stream,
+        // so multi-tenant realizations stay deterministic.
+        if !self.tenants.is_empty() {
             let t_hi =
                 flows.iter().map(|f| f.arrival + f.bytes / f.cap).fold(f64::NEG_INFINITY, f64::max);
+            let mut tenants = std::mem::take(&mut self.tenants);
             let mut bg_reqs = std::mem::take(&mut self.scratch_bg);
-            bg_reqs.clear();
-            self.background.as_mut().unwrap().flows_until(t_hi, &mut bg_reqs);
-            for bf in &bg_reqs {
-                let src = Endpoint { rank: 0, node: bf.src, slot: 0, kind: EndpointKind::Cpu };
-                let dst = Endpoint { rank: 0, node: bf.dst, slot: 0, kind: EndpointKind::Cpu };
-                self.admit_inter_node_flow(
-                    &mut flows,
-                    BACKGROUND_FLOW,
-                    src,
-                    dst,
-                    bf.bytes,
-                    bf.ready,
-                );
+            for (tid, bg) in tenants.iter_mut() {
+                bg_reqs.clear();
+                bg.flows_until(t_hi, &mut bg_reqs);
+                for bf in &bg_reqs {
+                    let src = Endpoint { rank: 0, node: bf.src, slot: 0, kind: EndpointKind::Cpu };
+                    let dst = Endpoint { rank: 0, node: bf.dst, slot: 0, kind: EndpointKind::Cpu };
+                    self.admit_inter_node_flow(
+                        &mut flows,
+                        BACKGROUND_FLOW,
+                        *tid,
+                        src,
+                        dst,
+                        bf.bytes,
+                        bf.ready,
+                    );
+                }
             }
             self.scratch_bg = bg_reqs;
+            self.tenants = tenants;
         }
 
         // Switch-level congestion: concurrent NIC-level flows through the
@@ -662,7 +713,7 @@ impl NetSim {
                     start: f.arrival,
                     end: recv_complete,
                     inter_rack: f.inter_rack,
-                    background: f.req_idx == BACKGROUND_FLOW,
+                    tenant: f.tenant,
                 });
             }
         }
@@ -679,20 +730,30 @@ impl NetSim {
     /// it at the transport layer, floor its arrival by prior occupancy,
     /// and push the [`NetFlow`]. The single admission path is what keeps
     /// tenant and training flows physically identical to the engine;
-    /// only stats attribution follows `req_idx`.
+    /// only stats attribution follows `tenant` (0 = the observing job,
+    /// whose flows carry a real `req_idx` completion slot).
+    #[allow(clippy::too_many_arguments)]
     fn admit_inter_node_flow(
         &mut self,
         flows: &mut Vec<NetFlow>,
         req_idx: usize,
+        tenant: usize,
         src: Endpoint,
         dst: Endpoint,
         bytes: f64,
         ready: f64,
     ) {
-        let background = req_idx == BACKGROUND_FLOW;
+        let background = tenant != 0;
         if background {
             self.stats.background_messages += 1;
             self.stats.background_bytes += bytes;
+            match self.tenant_traffic.iter_mut().find(|e| e.0 == tenant) {
+                Some(e) => {
+                    e.1 += 1;
+                    e.2 += bytes;
+                }
+                None => self.tenant_traffic.push((tenant, 1, bytes)),
+            }
         } else {
             self.stats.inter_node_messages += 1;
         }
@@ -723,6 +784,7 @@ impl NetSim {
         }
         flows.push(NetFlow {
             req_idx,
+            tenant,
             src_node: src.node,
             dst_node: dst.node,
             inter_rack,
@@ -1648,6 +1710,52 @@ mod tests {
         s.clear_background();
         assert!(s.timing_cache_usable());
         assert_eq!(s.background_signature(), 0);
+    }
+
+    #[test]
+    fn attributed_tenants_split_counters_and_trace() {
+        // Two attributed tenants (ids 7 and 9) with different seeds: the
+        // aggregate background counters must equal the per-tenant sums,
+        // and trace events must carry the owning tenant id.
+        let reqs = incast_victim_batch();
+        let mut s = sim(FabricKind::EthernetRoce25);
+        s.enable_trace();
+        s.add_tenant(7, background(0.5, &s, 3));
+        s.add_tenant(9, background(0.3, &s, 4));
+        assert!(s.background_active());
+        assert!(!s.timing_cache_usable());
+        s.transfer_batch(&reqs);
+        let per: Vec<(usize, u64, f64)> = s.tenant_traffic().to_vec();
+        assert_eq!(per.len(), 2, "both tenants must inject in a 60ms window");
+        assert!(per.iter().any(|e| e.0 == 7) && per.iter().any(|e| e.0 == 9));
+        let (msgs, bytes) = per.iter().fold((0u64, 0.0), |a, e| (a.0 + e.1, a.1 + e.2));
+        assert_eq!(msgs, s.stats.background_messages);
+        assert_eq!(bytes.to_bits(), s.stats.background_bytes.to_bits());
+        let trace = s.trace.as_ref().unwrap();
+        let by_tenant = trace.bytes_by_tenant();
+        assert_eq!(by_tenant.len(), 3, "tenants 0, 7, 9: {by_tenant:?}");
+        assert_eq!(by_tenant[0].0, 0);
+        assert_eq!(by_tenant[1], (7, per.iter().find(|e| e.0 == 7).unwrap().2));
+        assert_eq!(by_tenant[2], (9, per.iter().find(|e| e.0 == 9).unwrap().2));
+        // reset() clears the per-tenant counters with the aggregates.
+        s.reset();
+        assert!(s.tenant_traffic().is_empty());
+    }
+
+    #[test]
+    fn attributed_tenant_set_hashes_apart_from_anonymous() {
+        let mut a = sim(FabricKind::EthernetRoce25);
+        let mut b = sim(FabricKind::EthernetRoce25);
+        let bg = background(0.4, &a, 1);
+        a.set_background(bg.clone());
+        b.add_tenant(2, bg);
+        assert_ne!(a.background_signature(), 0);
+        assert_ne!(b.background_signature(), 0);
+        assert_ne!(
+            a.background_signature(),
+            b.background_signature(),
+            "tenant ids are part of the world signature"
+        );
     }
 
     #[test]

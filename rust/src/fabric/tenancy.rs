@@ -50,9 +50,13 @@ pub struct BgFlow {
 #[derive(Clone, Debug)]
 pub struct BackgroundTraffic {
     spec: TenancySpec,
-    /// `(first, count)` tenant source / destination node ranges.
-    srcs: (usize, usize),
-    dsts: (usize, usize),
+    /// Tenant source / destination node sets. Endpoint draws are
+    /// *index*-based (`set[rng.below(len)]`), so a contiguous set built
+    /// from the spec's `(first, count)` range replays bit-identically to
+    /// the original range arithmetic, while fleet jobs can hand in
+    /// arbitrary (non-contiguous) node sets.
+    srcs: Vec<usize>,
+    dsts: Vec<usize>,
     /// Aggregate arrival rate at load = 1, flows/second.
     full_rate: f64,
     base_seed: u64,
@@ -78,9 +82,38 @@ impl BackgroundTraffic {
         run_seed: u64,
     ) -> Result<Self> {
         let (srcs, dsts) = spec.resolve_sets(cluster)?;
+        Self::with_node_sets(
+            spec,
+            fabric,
+            run_seed,
+            (srcs.0..srcs.0 + srcs.1).collect(),
+            (dsts.0..dsts.0 + dsts.1).collect(),
+        )
+    }
+
+    /// Build a generator over *explicit* node sets — the fleet
+    /// scheduler's path, where a tenant is a placed job whose nodes are
+    /// whatever the placement policy chose (possibly non-contiguous).
+    /// The spec's own `src_first`/`src_count` range is ignored; pattern,
+    /// load, flow size, source model and seed still apply. Fails loudly
+    /// on empty sets or a singleton destination overlapping the sources
+    /// (the self-send remap needs an alternative destination).
+    pub fn with_node_sets(
+        spec: &TenancySpec,
+        fabric: &FabricSpec,
+        run_seed: u64,
+        srcs: Vec<usize>,
+        dsts: Vec<usize>,
+    ) -> Result<Self> {
+        anyhow::ensure!(!srcs.is_empty(), "tenant source set is empty");
+        anyhow::ensure!(!dsts.is_empty(), "tenant destination set is empty");
+        anyhow::ensure!(
+            dsts.len() >= 2 || !srcs.contains(&dsts[0]),
+            "a single-destination set overlapping the sources cannot remap self-sends"
+        );
         let bottleneck = match spec.pattern {
-            TrafficPattern::Incast => dsts.1,
-            TrafficPattern::Shuffle => srcs.1,
+            TrafficPattern::Incast => dsts.len(),
+            TrafficPattern::Shuffle => srcs.len(),
         };
         let full_rate = bottleneck as f64 * fabric.effective_bandwidth() / spec.flow_bytes;
         let mut bg = BackgroundTraffic {
@@ -106,8 +139,19 @@ impl BackgroundTraffic {
     }
 
     /// Stable hash of the tenancy configuration (for cache-key folding).
+    /// Folds the *realized* node sets, so two fleet tenants with the
+    /// same spec on different placements hash apart.
     pub fn signature(&self) -> u64 {
-        crate::util::hash::fnv1a_u64(self.spec.signature(), 0xB6_7E7A)
+        use crate::util::hash::fnv1a_u64;
+        let mut h = fnv1a_u64(self.spec.signature(), 0xB6_7E7A);
+        for &n in &self.srcs {
+            h = fnv1a_u64(h, n as u64);
+        }
+        h = fnv1a_u64(h, u64::MAX);
+        for &n in &self.dsts {
+            h = fnv1a_u64(h, n as u64);
+        }
+        h
     }
 
     fn restart(&mut self) {
@@ -172,14 +216,17 @@ impl BackgroundTraffic {
     }
 
     fn draw_endpoints(&mut self) -> (usize, usize) {
-        let src = self.srcs.0 + self.rng.below(self.srcs.1 as u64) as usize;
-        let mut dst = self.dsts.0 + self.rng.below(self.dsts.1 as u64) as usize;
+        let src = self.srcs[self.rng.below(self.srcs.len() as u64) as usize];
+        let j = self.rng.below(self.dsts.len() as u64) as usize;
+        let mut dst = self.dsts[j];
         if dst == src {
             // Deterministic remap instead of a redraw, so the draw count
             // (and thus the coupling across loads) never depends on the
-            // collision pattern. `resolve_sets` guarantees dst_count >= 2
-            // whenever a collision is possible.
-            dst = self.dsts.0 + (dst - self.dsts.0 + 1) % self.dsts.1;
+            // collision pattern. Construction guarantees an alternative
+            // destination exists whenever a collision is possible. For a
+            // contiguous set the index step equals the old value step, so
+            // range-spec streams replay bit-identically.
+            dst = self.dsts[(j + 1) % self.dsts.len()];
         }
         (src, dst)
     }
@@ -268,6 +315,60 @@ mod tests {
             assert!(f.src < 4 && f.dst < 4);
             assert_ne!(f.src, f.dst, "shuffle must remap self-sends");
         }
+    }
+
+    #[test]
+    fn explicit_node_sets_replay_ranges_and_honor_membership() {
+        // A contiguous explicit set must replay the range-spec stream
+        // bit-identically (the index-based draw refactor is invisible)...
+        let spec = TenancySpec::neighbor_incast(0.7);
+        let from_range = drain(&mut generator(spec, 9), 0.03);
+        let mut explicit = BackgroundTraffic::with_node_sets(
+            &spec,
+            &fabric(FabricKind::EthernetRoce25),
+            9,
+            (32..64).collect(),
+            (0..8).collect(),
+        )
+        .unwrap();
+        assert_eq!(from_range, drain(&mut explicit, 0.03));
+
+        // ...and a non-contiguous set (a spread-placed fleet job) keeps
+        // every flow inside its membership, never self-sending.
+        let srcs = vec![3, 17, 42, 99];
+        let dsts = vec![5, 17, 61];
+        let mut bg = BackgroundTraffic::with_node_sets(
+            &spec,
+            &fabric(FabricKind::EthernetRoce25),
+            2,
+            srcs.clone(),
+            dsts.clone(),
+        )
+        .unwrap();
+        let flows = drain(&mut bg, 0.05);
+        assert!(!flows.is_empty());
+        for f in &flows {
+            assert!(srcs.contains(&f.src), "src {} outside the job's nodes", f.src);
+            assert!(dsts.contains(&f.dst), "dst {} outside the target set", f.dst);
+            assert_ne!(f.src, f.dst);
+        }
+        // Loud failures: empty sets and un-remappable singletons.
+        assert!(BackgroundTraffic::with_node_sets(
+            &spec,
+            &fabric(FabricKind::EthernetRoce25),
+            0,
+            vec![],
+            vec![1],
+        )
+        .is_err());
+        assert!(BackgroundTraffic::with_node_sets(
+            &spec,
+            &fabric(FabricKind::EthernetRoce25),
+            0,
+            vec![4],
+            vec![4],
+        )
+        .is_err());
     }
 
     #[test]

@@ -17,9 +17,18 @@ pub struct MessageEvent {
     pub start: f64,
     pub end: f64,
     pub inter_rack: bool,
-    /// Background-tenant traffic (the shared-tenancy model in
-    /// [`crate::fabric::tenancy`]) as opposed to the training job's own.
-    pub background: bool,
+    /// Which tenant this message belongs to. `0` is the *observing* job's
+    /// own traffic; any other id is a co-located tenant — either the
+    /// anonymous generator from [`crate::fabric::tenancy`] (id 1) or an
+    /// attributed fleet job (its job id, see `cluster::scheduler`).
+    pub tenant: usize,
+}
+
+impl MessageEvent {
+    /// True for any traffic that is not the observing job's own.
+    pub fn is_background(&self) -> bool {
+        self.tenant != 0
+    }
 }
 
 /// A recorded simulation trace.
@@ -54,11 +63,11 @@ impl Trace {
     /// the tenant's share is in [`Trace::tenant_bytes`].
     pub fn bytes_by_node(&self) -> Vec<(usize, f64)> {
         let mut map: std::collections::BTreeMap<usize, f64> = Default::default();
-        for e in self.events.iter().filter(|e| !e.background) {
+        for e in self.events.iter().filter(|e| !e.is_background()) {
             *map.entry(e.src_node).or_insert(0.0) += e.bytes;
         }
         let mut v: Vec<(usize, f64)> = map.into_iter().collect();
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
         v
     }
 
@@ -67,31 +76,44 @@ impl Trace {
     /// tenant is ~all inter-rack and would otherwise swamp the metric's
     /// meaning (the job's own traffic locality).
     pub fn inter_rack_byte_fraction(&self) -> f64 {
-        let total: f64 = self.events.iter().filter(|e| !e.background).map(|e| e.bytes).sum();
+        let total: f64 =
+            self.events.iter().filter(|e| !e.is_background()).map(|e| e.bytes).sum();
         if total == 0.0 {
             return 0.0;
         }
         let cross: f64 = self
             .events
             .iter()
-            .filter(|e| e.inter_rack && !e.background)
+            .filter(|e| e.inter_rack && !e.is_background())
             .map(|e| e.bytes)
             .sum();
         cross / total
     }
 
-    /// Per-tenant byte attribution: `(training, background)`.
+    /// Aggregate byte attribution: `(training, background)` where
+    /// "background" is every tenant other than the observing job (id 0).
     pub fn tenant_bytes(&self) -> (f64, f64) {
         let mut training = 0.0;
         let mut background = 0.0;
         for e in &self.events {
-            if e.background {
+            if e.is_background() {
                 background += e.bytes;
             } else {
                 training += e.bytes;
             }
         }
         (training, background)
+    }
+
+    /// Per-tenant byte breakdown, ascending by tenant id (id 0 = the
+    /// observing job itself). Lets a fleet post-mortem answer "which
+    /// neighbor hurt me" instead of just "how much background was there".
+    pub fn bytes_by_tenant(&self) -> Vec<(usize, f64)> {
+        let mut map: std::collections::BTreeMap<usize, f64> = Default::default();
+        for e in &self.events {
+            *map.entry(e.tenant).or_insert(0.0) += e.bytes;
+        }
+        map.into_iter().collect()
     }
 
     /// Fraction of traced bytes that belonged to background tenants
@@ -165,7 +187,7 @@ mod tests {
             start,
             end,
             inter_rack: xr,
-            background: false,
+            tenant: 0,
         }
     }
 
@@ -197,6 +219,21 @@ mod tests {
         let t = sample();
         assert!((t.inter_rack_byte_fraction() - 0.8).abs() < 1e-12);
         assert_eq!(Trace::default().inter_rack_byte_fraction(), 0.0);
+    }
+
+    #[test]
+    fn tenant_attribution_splits_and_breaks_down() {
+        let mut t = sample();
+        t.record(MessageEvent { tenant: 3, ..ev(5, 6, 250.0, 0.0, 1.0, true) });
+        t.record(MessageEvent { tenant: 1, ..ev(6, 5, 50.0, 0.5, 1.5, true) });
+        let (training, background) = t.tenant_bytes();
+        assert_eq!(training, 500.0);
+        assert_eq!(background, 300.0);
+        assert!((t.background_byte_fraction() - 300.0 / 800.0).abs() < 1e-12);
+        assert_eq!(t.bytes_by_tenant(), vec![(0, 500.0), (1, 50.0), (3, 250.0)]);
+        // Training-only views ignore every non-zero tenant.
+        assert!((t.inter_rack_byte_fraction() - 0.8).abs() < 1e-12);
+        assert!(t.bytes_by_node().iter().all(|&(n, _)| n < 3));
     }
 
     #[test]

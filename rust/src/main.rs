@@ -11,6 +11,7 @@
 //!   affinity             §IV.B:    PCIe affinity study (Welch t-test)
 //!   microbench           OSU-style fabric micro-benchmarks
 //!   ablations            design-choice ablations (fusion, overlap, ...)
+//!   fleet                multi-job fleet scheduler placement-policy sweep
 //!   all                  run every experiment above
 //!
 //! Commands (real three-layer stack):
@@ -26,6 +27,7 @@
 //!   --streams N          run: concurrent communication streams [1]
 //!   --background-load F  run: shared-tenancy background load in [0,1]
 //!   --stragglers SPEC    run: straggler model FRAC:FACTOR[:JITTER]
+//!   --placement P        run: [fleet] placement pack | spread | topology
 //!   --no-schedule-cache  run: disable schedule/timing memoization
 //!   --workers N          train-real: data-parallel workers   [4]
 //!   --steps N            train-real: training steps          [300]
@@ -92,6 +94,7 @@ fn run(args: &Args) -> Result<()> {
         "frameworks" => cmd_frameworks(&rec, quick),
         "sweeps" => cmd_sweeps(&rec, quick, &runner),
         "tenancy" => cmd_tenancy(&rec, quick, &runner),
+        "fleet" => cmd_fleet(&rec, quick, &runner),
         "train-real" => cmd_train_real(args, &rec),
         "calibrate" => cmd_calibrate(args, &rec),
         "cfd-kernel" => cmd_cfd_kernel(),
@@ -111,6 +114,7 @@ usage: fabricbench <command> [--quick] [--jobs N] [--cache] [options]
 paper artifacts : table1 fig3 fig4 fig5 affinity microbench ablations all
 extensions      : frameworks (TF-Horovod vs PyTorch-DDP)  sweeps (batch, precision)
                   tenancy (shared-tenancy background-load sweep alone)
+                  fleet (multi-job scheduler: placement policy x occupancy)
                   run --config configs/<file>.toml (custom scenario)
 real stack      : train-real [--workers N --steps N --lr X --fabric F]
                   calibrate [--steps N]   cfd-kernel
@@ -153,11 +157,29 @@ shared tenancy ([tenancy] in the TOML config):
   --stragglers SPEC    FRAC:FACTOR[:JITTER], e.g. 0.1:1.5:0.05
   The `ablations` (and standalone `tenancy`) command sweeps fabric x
   background load x GPU count (ablation_tenancy CSV).
+
+multi-job fleet ([fleet] in the TOML config, and the `fleet` command):
+  a desired-state/actual-state reconcile loop schedules a seeded arrival
+  trace of gang-sized training jobs onto the cluster: placement policy
+  (pack | spread | topology), priority preemption with checkpoint-restart
+  cost, optional elastic resize, and seeded node failures/repairs. Every
+  placed job runs the real trainer over its node set while co-located
+  jobs' traffic enters the fabric simulation as attributed per-job tenant
+  flows. `run --config` with a [fleet] table reports per-job JCTs and
+  fleet goodput instead of a single-job run; --placement overrides the
+  policy. The `fleet` command sweeps policy x occupancy on a 32-node
+  4:1-oversubscribed fat-tree cell (fleet_placement CSV).
 "#;
 
 fn cmd_tenancy(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
     let (t, _) = ablations::tenancy_sweep_with(quick, runner);
     rec.emit("ablation_tenancy", &t);
+    Ok(())
+}
+
+fn cmd_fleet(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
+    let (t, _) = fabricbench::experiments::fleet::fleet_sweep_with(quick, runner);
+    rec.emit("fleet_placement", &t);
     Ok(())
 }
 
@@ -283,6 +305,50 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
             fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy,
     };
+    // Optional [fleet] table: hand the trainer to the multi-job fleet
+    // scheduler instead of running one job. --placement overrides the
+    // configured policy.
+    if let Some(v) = doc.get("fleet") {
+        let mut fleet = fabricbench::config::FleetSpec::from_toml(v)?;
+        if let Some(p) = args.get_choice("placement", &["pack", "spread", "topology"])? {
+            fleet.placement = fabricbench::config::PlacementPolicy::parse(p)?;
+        }
+        let sim = fabricbench::cluster::FleetSim::new(&trainer, fleet)?;
+        let r = sim.run(&run_spec)?;
+        let mut t = fabricbench::util::table::Table::new(
+            &format!(
+                "fleet run: {name} gangs on {} ({} policy, {} jobs)",
+                fabric.name,
+                fleet.placement.name(),
+                r.jobs.len()
+            ),
+            &["job", "prio", "nodes", "gpus", "steps", "preempt", "step ms", "JCT s"],
+        );
+        for j in &r.jobs {
+            t.row(vec![
+                j.id.to_string(),
+                j.priority.to_string(),
+                j.nodes.to_string(),
+                j.gpus.to_string(),
+                j.steps.to_string(),
+                j.preemptions.to_string(),
+                fnum(j.step_time * 1e3),
+                fnum(j.jct),
+            ]);
+        }
+        rec.emit("fleet_run", &t);
+        println!(
+            "fleet goodput: {} images/s | mean JCT {} s | p99 JCT {} s | makespan {} s | \
+             {} preemptions, {} failures",
+            fnum(r.images_per_sec),
+            fnum(r.mean_jct),
+            fnum(r.p99_jct),
+            fnum(r.makespan),
+            r.preemptions,
+            r.failures
+        );
+        return Ok(());
+    }
     let r = trainer.run(gpus, &run_spec)?;
     let mut t = fabricbench::util::table::Table::new(
         &format!("custom run: {name} on {} ({gpus} GPUs)", fabric.name),

@@ -80,14 +80,35 @@ impl ThroughputResult {
 }
 
 impl TrainerSim {
-    /// Simulate training on `gpus` GPUs and return throughput statistics.
+    /// Simulate training on `gpus` GPUs (block placement) and return
+    /// throughput statistics.
     pub fn run(&self, gpus: usize, run: &RunSpec) -> anyhow::Result<ThroughputResult> {
         anyhow::ensure!(gpus >= 1, "need at least one GPU");
         let placement = Placement::gpus(&self.cluster, gpus)?;
+        self.run_placed(&placement, run, &[])
+    }
+
+    /// Simulate training on an explicit placement, with zero or more
+    /// *attributed* co-tenant traffic generators (the fleet scheduler's
+    /// path: each generator is a neighbor job's traffic, keyed by a
+    /// non-zero tenant id unique within the call). With a block
+    /// placement and no tenants this is bit-for-bit [`TrainerSim::run`]
+    /// — every RNG seed is keyed on the rank count, not the node ids.
+    pub fn run_placed(
+        &self,
+        placement: &Placement,
+        run: &RunSpec,
+        tenants: &[(usize, BackgroundTraffic)],
+    ) -> anyhow::Result<ThroughputResult> {
+        let gpus = placement.len();
+        anyhow::ensure!(gpus >= 1, "need at least one GPU");
         let mut net = NetSim::try_new(self.fabric.clone(), self.cluster.clone(), self.opts)?;
         if self.tenancy.background_active() {
             let bg = BackgroundTraffic::new(&self.tenancy, &net.fabric, &net.cluster, run.seed)?;
             net.set_background(bg);
+        }
+        for (id, bg) in tenants {
+            net.add_tenant(*id, bg.clone());
         }
         let mut rng = Rng::new(run.seed ^ (gpus as u64) << 32 ^ self.arch.total_params());
         // Straggler model: persistent per-rank slowdowns plus (optional)
@@ -112,7 +133,7 @@ impl TrainerSim {
             net.reset();
             let (step_time, comm_frac) = self.simulate_step(
                 &mut net,
-                &placement,
+                placement,
                 &cost,
                 &buckets,
                 &mut rng,

@@ -177,7 +177,7 @@ mod tests {
         let mut r = Rng::new(5);
         let n = 100_001;
         let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal_median(3.0, 0.5)).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(|a, b| a.total_cmp(b));
         let med = xs[n / 2];
         assert!((med - 3.0).abs() < 0.1, "median={med}");
         assert!(xs.iter().all(|&x| x > 0.0));

@@ -45,10 +45,14 @@ pub fn summarize(xs: &[f64]) -> Summary {
 }
 
 /// Percentile with linear interpolation (p in [0, 100]).
+///
+/// NaN inputs sort to the high end (`total_cmp` order) instead of
+/// panicking — a poisoned sample degrades to a NaN percentile rather
+/// than aborting a whole sweep.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty sample");
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -256,6 +260,32 @@ mod tests {
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
         assert!((median(&[3.0, 1.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "percentile of empty sample")]
+    fn percentile_empty_panics_loudly() {
+        percentile(&[], 50.0);
+    }
+
+    #[test]
+    fn percentile_single_element_is_that_element() {
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[7.25], p).to_bits(), 7.25f64.to_bits(), "p={p}");
+        }
+        assert_eq!(median(&[7.25]).to_bits(), 7.25f64.to_bits());
+    }
+
+    #[test]
+    fn percentile_nan_input_does_not_panic() {
+        // total_cmp sorts NaN above +inf: low percentiles still see the
+        // finite values, high percentiles report the poison instead of
+        // aborting the process.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // All-NaN stays deterministic and non-panicking too.
+        assert!(percentile(&[f64::NAN, f64::NAN], 50.0).is_nan());
     }
 
     #[test]

@@ -15,7 +15,7 @@ fn ev(
     start: f64,
     end: f64,
     xr: bool,
-    bg: bool,
+    tenant: usize,
 ) -> MessageEvent {
     MessageEvent {
         src_node: src,
@@ -24,16 +24,16 @@ fn ev(
         start,
         end,
         inter_rack: xr,
-        background: bg,
+        tenant,
     }
 }
 
 fn sample() -> Trace {
     let mut t = Trace::default();
-    t.record(ev(0, 1, 100.0, 0.0, 1.0, false, false));
-    t.record(ev(1, 2, 300.0, 0.5, 2.0, true, false));
-    t.record(ev(0, 2, 100.0, 1.0, 3.0, true, false));
-    t.record(ev(40, 3, 500.0, 0.2, 2.5, true, true)); // a tenant's flow
+    t.record(ev(0, 1, 100.0, 0.0, 1.0, false, 0));
+    t.record(ev(1, 2, 300.0, 0.5, 2.0, true, 0));
+    t.record(ev(0, 2, 100.0, 1.0, 3.0, true, 0));
+    t.record(ev(40, 3, 500.0, 0.2, 2.5, true, 1)); // a tenant's flow
     t
 }
 
@@ -62,7 +62,7 @@ fn span_counts_and_ordering() {
     assert_eq!(t.span(), (0.0, 3.0));
     // A single event's span is its own window.
     let mut one = Trace::default();
-    one.record(ev(5, 6, 10.0, 2.0, 2.5, false, false));
+    one.record(ev(5, 6, 10.0, 2.0, 2.5, false, 0));
     assert_eq!(one.span(), (2.0, 2.5));
 }
 
@@ -87,13 +87,18 @@ fn inter_rack_split_is_training_only() {
 
 #[test]
 fn per_tenant_breakdown() {
-    let t = sample();
+    let mut t = sample();
     let (training, background) = t.tenant_bytes();
     assert_eq!(training, 500.0);
     assert_eq!(background, 500.0);
     assert!((t.background_byte_fraction() - 0.5).abs() < 1e-12);
     let md = t.summary("shared").to_markdown();
     assert!(md.contains("background byte fraction"), "summary must attribute tenants");
+    // Attributed fleet tenants break down per id; the anonymous
+    // generator's flows (id 1) and a job's (id 9) stay separate.
+    t.record(ev(41, 4, 200.0, 0.3, 1.5, true, 9));
+    assert_eq!(t.bytes_by_tenant(), vec![(0, 500.0), (1, 500.0), (9, 200.0)]);
+    assert_eq!(t.tenant_bytes(), (500.0, 700.0));
 }
 
 #[test]
@@ -131,8 +136,8 @@ fn engine_trace_attributes_tenants() {
         (0..8).map(|i| FlowReq { src: ep(8 + i), dst: ep(i), bytes, ready: 0.0 }).collect();
     sim.transfer_batch(&reqs);
     let trace = sim.trace.as_ref().unwrap();
-    let training = trace.events.iter().filter(|e| !e.background).count();
-    let background = trace.events.iter().filter(|e| e.background).count();
+    let training = trace.events.iter().filter(|e| !e.is_background()).count();
+    let background = trace.events.iter().filter(|e| e.is_background()).count();
     assert_eq!(training, 8, "every training flow is recorded exactly once");
     assert!(background > 0, "the tenant's flows are traced too");
     assert_eq!(background as u64, sim.stats.background_messages, "trace and stats agree");

@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Diff two ``fabricbench-bench-v1`` JSON reports and fail on regression.
+
+CI's perf-smoke job uploads a machine-readable bench artifact per
+revision (see ``rust/src/util/benchjson.rs``: top-level ``schema`` key
+plus ``bench -> workload -> {field: number}``). This tool compares the
+current artifact against a committed baseline and exits non-zero when a
+workload regresses past its threshold, turning the perf trajectory from
+an "eyeball the artifact" convention into a gate.
+
+Field policy (matched by suffix, most specific first):
+
+* wall-clock fields (``wall_ms``, ``*_ms``, ``*_secs``) are noisy on
+  shared CI runners: allowed to regress up to ``--time-tolerance-pct``
+  (default 35%).
+* everything else (event counts, solver iterations, flow counts, cache
+  hits, ...) is deterministic for a fixed seed: allowed drift is
+  ``--count-tolerance-pct`` (default 0% — an unexplained change in a
+  deterministic counter IS the regression signal).
+
+Fields where bigger is better (``cache_hits``, ``hit_rate``, ``img_s``,
+``images_per_sec``) are compared in the improving direction. Workloads or
+fields present on only one side are reported as warnings, not failures —
+adding a bench must not require a lockstep baseline update, and a renamed
+workload shows up loudly as one warning per side.
+
+Usage:
+    python3 tools/bench_compare.py BASELINE.json CURRENT.json \
+        [--time-tolerance-pct 35] [--count-tolerance-pct 0]
+
+Exit codes: 0 = within thresholds, 1 = regression, 2 = bad input.
+"""
+
+import argparse
+import json
+import sys
+
+SCHEMA = "fabricbench-bench-v1"
+
+# Fields where a larger value is an improvement, not a regression.
+HIGHER_IS_BETTER = {"cache_hits", "hit_rate", "img_s", "images_per_sec"}
+
+TIME_SUFFIXES = ("_ms", "_secs", "_us", "_ns")
+
+
+def load_report(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if doc.get("schema") != SCHEMA:
+        print(f"error: {path}: schema {doc.get('schema')!r} != {SCHEMA!r}", file=sys.stderr)
+        sys.exit(2)
+    benches = {}
+    for bench, workloads in doc.items():
+        if bench == "schema" or not isinstance(workloads, dict):
+            continue
+        for workload, fields in workloads.items():
+            if not isinstance(fields, dict):
+                continue
+            benches[(bench, workload)] = {
+                k: float(v) for k, v in fields.items() if isinstance(v, (int, float))
+            }
+    return benches
+
+
+def tolerance_pct(field, args):
+    if field.endswith(TIME_SUFFIXES):
+        return args.time_tolerance_pct
+    return args.count_tolerance_pct
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--time-tolerance-pct", type=float, default=35.0)
+    ap.add_argument("--count-tolerance-pct", type=float, default=0.0)
+    args = ap.parse_args()
+
+    base = load_report(args.baseline)
+    cur = load_report(args.current)
+
+    regressions, warnings, compared = [], [], 0
+    for key in sorted(set(base) | set(cur)):
+        bench, workload = key
+        if key not in cur:
+            warnings.append(f"workload {bench}/{workload} only in baseline")
+            continue
+        if key not in base:
+            warnings.append(f"workload {bench}/{workload} only in current")
+            continue
+        for field in sorted(set(base[key]) | set(cur[key])):
+            if field not in cur[key] or field not in base[key]:
+                side = "baseline" if field in base[key] else "current"
+                warnings.append(f"field {bench}/{workload}.{field} only in {side}")
+                continue
+            b, c = base[key][field], cur[key][field]
+            compared += 1
+            # Regressing direction: a drop in a higher-is-better field is
+            # judged like a rise elsewhere, but the printed delta keeps
+            # the raw sign.
+            nb, nc = (-b, -c) if field in HIGHER_IS_BETTER else (b, c)
+            if b == 0.0:
+                worse = nc > nb
+                delta = float("inf") if c != 0.0 else 0.0
+            else:
+                delta = (c - b) / abs(b) * 100.0
+                worse = (nc - nb) / abs(nb if nb else 1.0) * 100.0 > tolerance_pct(field, args)
+            line = f"{bench}/{workload}.{field}: {b:g} -> {c:g} ({delta:+.1f}%)"
+            if worse:
+                regressions.append(f"{line}  exceeds {tolerance_pct(field, args):g}%")
+            else:
+                print(f"ok   {line}")
+
+    for w in warnings:
+        print(f"warn {w}")
+    if regressions:
+        print(f"\n{len(regressions)} regression(s) vs {args.baseline}:")
+        for r in regressions:
+            print(f"FAIL {r}")
+        return 1
+    if compared == 0:
+        print("warn nothing compared (disjoint reports?)")
+    print(f"\n{compared} field(s) within thresholds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
