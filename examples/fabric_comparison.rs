@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
                 coordination_overhead:
                     fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
                 tenancy: fabricbench::config::TenancySpec::default(),
+                workload: fabricbench::config::WorkloadSpec::default(),
             };
             Ok(trainer.run(gpus, &spec)?.images_per_sec)
         };

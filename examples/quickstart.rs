@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
             coordination_overhead:
                 fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
             tenancy: fabricbench::config::TenancySpec::default(),
+            workload: fabricbench::config::WorkloadSpec::default(),
         };
         let spec = RunSpec::default();
         for gpus in [1, 8, 64, 256] {

@@ -270,6 +270,7 @@ fn main() {
         coordination_overhead:
             fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy: fabricbench::config::TenancySpec::default(),
+        workload: fabricbench::config::WorkloadSpec::default(),
     };
     let spec = fabricbench::config::spec::RunSpec {
         warmup_steps: 0,

@@ -122,6 +122,57 @@ mod tests {
     }
 
     #[test]
+    fn zero_byte_tensors_fuse_without_dividing_by_zero() {
+        // All-zero tensor list: one bucket holding every index, and the
+        // ready_frac annotation must not produce NaN (total == 0 skips
+        // the cumulative-fraction pass).
+        let buckets = fuse(&[0.0, 0.0, 0.0], 10.0);
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].tensors, vec![2, 1, 0]);
+        assert_eq!(buckets[0].bytes, 0.0);
+        assert_eq!(buckets[0].ready_frac, 0.0, "zero total must not yield NaN");
+
+        // Zero-byte tensors ride along with real ones for free.
+        let mixed = fuse(&[0.0, 50.0, 0.0], 50.0);
+        assert_eq!(mixed.len(), 1);
+        assert_eq!(mixed[0].tensors, vec![2, 1, 0]);
+        assert!((mixed[0].ready_frac - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_oversize_tensor_is_one_bucket() {
+        // One tensor bigger than the cap: never split, never dropped.
+        let buckets = fuse(&[1e9], 64.0);
+        assert_eq!(buckets.len(), 1);
+        assert_eq!(buckets[0].tensors, vec![0]);
+        assert_eq!(buckets[0].bytes, 1e9);
+        assert!((buckets[0].ready_frac - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_boundary_fills_the_bucket() {
+        // A tensor that lands exactly on the capacity boundary still
+        // joins the open bucket: the check is `> max_bytes`, not `>=`.
+        let buckets = fuse(&[30.0, 30.0, 40.0], 60.0);
+        assert_eq!(buckets.len(), 2);
+        assert_eq!(buckets[0].tensors, vec![2]);
+        assert_eq!(buckets[1].tensors, vec![1, 0], "30 + 30 == 60 must fuse");
+        assert_eq!(buckets[1].bytes, 60.0);
+    }
+
+    #[test]
+    fn order_preserved_within_and_across_buckets() {
+        // Backward (descending-index) order both inside each bucket and
+        // across the bucket sequence — the trainer's overlap model
+        // depends on it.
+        let sizes: Vec<f64> = (0..17).map(|i| (i % 5 + 1) as f64).collect();
+        let buckets = fuse(&sizes, 7.0);
+        let flat: Vec<usize> = buckets.iter().flat_map(|b| b.tensors.clone()).collect();
+        let want: Vec<usize> = (0..sizes.len()).rev().collect();
+        assert_eq!(flat, want, "concatenated buckets must be exactly reverse order");
+    }
+
+    #[test]
     fn fewer_buckets_with_bigger_capacity() {
         let sizes: Vec<f64> = (0..64).map(|i| (i % 7 + 1) as f64 * 1e6).collect();
         let small = fuse(&sizes, 4e6).len();

@@ -23,7 +23,7 @@ use std::ops::Range;
 
 pub use fusion::{fuse, Bucket};
 pub use hierarchical::Hierarchical;
-pub use primitives::{allgather, broadcast, reduce_scatter, PipelinedRing};
+pub use primitives::{allgather, alltoall, broadcast, reduce_scatter, PipelinedRing};
 pub use recursive::RecursiveHalvingDoubling;
 pub use ring::RingAllreduce;
 pub use tree::BinomialTree;

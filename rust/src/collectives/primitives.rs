@@ -94,6 +94,35 @@ pub fn reduce_scatter(comm: &mut Comm, bufs: &mut dyn Buffers) -> f64 {
     comm.max_time()
 }
 
+/// Pairwise-exchange all-to-all: rank i's chunk j ends up on rank j (as
+/// chunk i). `p-1` rounds; in round `k` every rank `i` sends its chunk
+/// for `(i + k) % p` directly to that rank — the classic MPI pairwise
+/// schedule, and what NCCL does for MoE expert dispatch.
+///
+/// Timing-only: the [`Buffers`] trait moves *positional* slices (chunk
+/// `c` of the source lands in chunk `c` of the destination), but
+/// all-to-all transposes chunk indices, so the data movement is not
+/// expressible through it. Only the wire schedule matters for the fabric
+/// benchmark; callers pass [`super::NullBuffers`].
+pub fn alltoall(comm: &mut Comm, bufs: &mut dyn Buffers) -> f64 {
+    let p = comm.size();
+    if p <= 1 {
+        return comm.max_time();
+    }
+    let n = bufs.elems();
+    let chunks = chunk_ranges(n, p);
+    for k in 1..p {
+        let msgs: Vec<(usize, usize, f64)> = (0..p)
+            .map(|i| {
+                let dst = (i + k) % p;
+                (i, dst, chunks[dst].len() as f64 * BYTES_PER_ELEM)
+            })
+            .collect();
+        comm.round(&msgs);
+    }
+    comm.max_time()
+}
+
 /// Segmented (pipelined) ring allreduce: the buffer is cut into
 /// `segments` independent ring allreduces executed back-to-back on the
 /// communication stream, letting chunk `s+1`'s reduce-scatter overlap
@@ -254,6 +283,57 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn alltoall_pairwise_schedule_covers_every_pair_once() {
+        // Record the wire schedule: p-1 rounds, and across them every
+        // ordered rank pair (i, j != i) appears exactly once, carrying
+        // rank i's chunk-j bytes.
+        let p = 6;
+        let n = 25;
+        let (mut net, placement) = gpu_world(p, FabricKind::EthernetRoce25);
+        let mut rec = Comm::recorder(&mut net, &placement);
+        alltoall(&mut rec, &mut NullBuffers { elems: n });
+        let ops = rec.take_record().unwrap();
+        let rounds: Vec<_> = ops
+            .iter()
+            .filter_map(|op| match op {
+                crate::fabric::mpi::CommOp::Round(msgs) => Some(msgs.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(rounds.len(), p - 1, "pairwise exchange is p-1 rounds");
+        let chunks = chunk_ranges(n, p);
+        let mut seen = vec![vec![0u32; p]; p];
+        for msgs in &rounds {
+            assert_eq!(msgs.len(), p, "every rank sends each round");
+            for &(src, dst, bytes) in msgs {
+                assert_ne!(src, dst);
+                seen[src][dst] += 1;
+                let want = chunks[dst].len() as f64 * BYTES_PER_ELEM;
+                assert_eq!(bytes.to_bits(), want.to_bits(), "{src}->{dst} bytes");
+            }
+        }
+        for i in 0..p {
+            for j in 0..p {
+                let want = u32::from(i != j);
+                assert_eq!(seen[i][j], want, "pair ({i}, {j}) count");
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_advances_clocks_and_degenerates_solo() {
+        let (mut net, placement) = gpu_world(4, FabricKind::EthernetRoce25);
+        let mut comm = Comm::new(&mut net, &placement);
+        let t = alltoall(&mut comm, &mut NullBuffers { elems: 4096 });
+        assert!(t > 0.0, "all-to-all moved no time");
+
+        let (mut net1, placement1) = gpu_world(1, FabricKind::EthernetRoce25);
+        let mut solo = Comm::new(&mut net1, &placement1);
+        let t1 = alltoall(&mut solo, &mut NullBuffers { elems: 4096 });
+        assert_eq!(t1, 0.0, "single rank has nothing to exchange");
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod spec;
 pub mod toml;
 
 pub use spec::{
-    AffinityConfig, ClusterSpec, FabricKind, FabricSpec, FleetSpec, PlacementPolicy, RunSpec,
-    SourceModel, TenancySpec, TopologyKind, TopologySpec, TrafficPattern, TransportOptions,
+    AffinityConfig, ClusterSpec, FabricKind, FabricSpec, FleetSpec, ParallelismKind,
+    PlacementPolicy, RunSpec, SourceModel, TenancySpec, TopologyKind, TopologySpec,
+    TrafficPattern, TransportOptions, WorkloadSpec,
 };

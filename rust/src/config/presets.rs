@@ -118,6 +118,16 @@ num_streams = 2        # concurrent collective channels (1 = serialized)
 # schedule_cache = false # disable collective schedule/timing memoization
 #                        # (exact-keyed; output bytes identical either way)
 
+[workload]
+parallelism = "dp"     # dp | zero | pipeline | moe: how each step
+                       # compiles to the workload IR ("dp" is the
+                       # classic bucketed allreduce, bit-for-bit)
+# pipeline_stages = 4  # pipeline: stage depth (gpus must be a multiple)
+# microbatches = 8     # pipeline: 1F1B microbatches per step
+# activation_mib = 2.0 # pipeline: per-microbatch inter-stage payload
+# moe_layers = 2       # moe: expert layers (one a2a pair per boundary)
+# moe_expert_mib = 4.0 # moe: per-rank all-to-all payload
+
 [topology]
 kind = "fat-tree"      # or "dragonfly" (adds per-group global links)
 spines = 2             # ECMP width of the leaf->spine tier
@@ -219,6 +229,24 @@ mod tests {
                 .unwrap();
         assert_eq!(transport.num_streams, 2);
         assert!(transport.gpudirect && transport.use_rdma);
+        let workload =
+            crate::config::spec::WorkloadSpec::from_toml(doc.get("workload").unwrap()).unwrap();
+        assert_eq!(workload.parallelism, crate::config::ParallelismKind::Dp);
+        workload.validate_for_gpus(8).unwrap();
+        // The commented pipeline/moe keys must stay parseable and valid.
+        let workload_text: String = EXAMPLE_TOML
+            .lines()
+            .skip_while(|l| *l != "[workload]")
+            .skip(1)
+            .take_while(|l| !l.is_empty())
+            .map(|l| l.trim_start_matches("# "))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let wdoc = toml::parse(&workload_text).unwrap();
+        let full = crate::config::spec::WorkloadSpec::from_toml(&wdoc).unwrap();
+        assert_eq!(full.pipeline_stages, 4);
+        assert_eq!(full.microbatches, 8);
+        assert_eq!(full.moe_layers, 2);
         let topo = TopologySpec::from_toml(doc.get("topology").unwrap()).unwrap();
         assert_eq!(topo.spines, 2);
         assert_eq!(topo.oversubscription, Some(4.0));

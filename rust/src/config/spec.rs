@@ -1299,6 +1299,181 @@ impl Default for RunSpec {
     }
 }
 
+/// Which parallelism strategy the trainer lowers a step to — each maps
+/// onto one of the [`crate::workload`] IR builders.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParallelismKind {
+    /// Bucketed data-parallel allreduce (the paper's workload).
+    Dp,
+    /// ZeRO-style sharded optimizer: per bucket, reduce-scatter →
+    /// sharded update → all-gather.
+    Zero,
+    /// Pipeline parallelism: 1F1B microbatch schedule over p2p stage
+    /// edges, plus per-stage gradient allreduce across replicas.
+    Pipeline,
+    /// Mixture-of-experts: all-to-all expert dispatch/combine at each
+    /// layer boundary (forward and backward), then the DP allreduce.
+    Moe,
+}
+
+impl ParallelismKind {
+    pub fn parse(s: &str) -> Result<ParallelismKind> {
+        Ok(match s {
+            "dp" => ParallelismKind::Dp,
+            "zero" => ParallelismKind::Zero,
+            "pipeline" => ParallelismKind::Pipeline,
+            "moe" => ParallelismKind::Moe,
+            other => bail!("unknown parallelism {other:?} (expected dp|zero|pipeline|moe)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ParallelismKind::Dp => "dp",
+            ParallelismKind::Zero => "zero",
+            ParallelismKind::Pipeline => "pipeline",
+            ParallelismKind::Moe => "moe",
+        }
+    }
+
+    pub fn all() -> [ParallelismKind; 4] {
+        [
+            ParallelismKind::Dp,
+            ParallelismKind::Zero,
+            ParallelismKind::Pipeline,
+            ParallelismKind::Moe,
+        ]
+    }
+}
+
+/// `[workload]` table: how the trainer compiles a training step into a
+/// [`crate::workload::WorkloadGraph`]. Only the knobs of the selected
+/// `parallelism` are read; the rest are inert.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub parallelism: ParallelismKind,
+    /// Pipeline depth; the GPU count must be a multiple of it.
+    pub pipeline_stages: usize,
+    /// Microbatches per step in the 1F1B schedule.
+    pub microbatches: usize,
+    /// Per-microbatch inter-stage activation payload (MiB).
+    pub activation_mib: f64,
+    /// MoE layers: each adds a dispatch + combine all-to-all pair per
+    /// pass (forward and backward).
+    pub moe_layers: usize,
+    /// Per-rank all-to-all payload of one dispatch/combine (MiB).
+    pub moe_expert_mib: f64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec {
+            parallelism: ParallelismKind::Dp,
+            pipeline_stages: 4,
+            microbatches: 8,
+            activation_mib: 2.0,
+            moe_layers: 2,
+            moe_expert_mib: 4.0,
+        }
+    }
+}
+
+impl WorkloadSpec {
+    /// Build from a parsed TOML `[workload]` table, filling defaults.
+    /// A key present with the wrong type is an error, not a silently
+    /// kept default (same contract as [`TransportOptions::from_toml`]).
+    pub fn from_toml(v: &Json) -> Result<WorkloadSpec> {
+        let getf = |key: &str| -> Result<Option<f64>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => match x.as_f64() {
+                    Some(f) => Ok(Some(f)),
+                    None => bail!("workload.{key} must be a number"),
+                },
+            }
+        };
+        let getu = |key: &str| -> Result<Option<usize>> {
+            match getf(key)? {
+                None => Ok(None),
+                Some(x) => {
+                    if x.fract() != 0.0 || x < 0.0 {
+                        bail!("workload.{key} must be a non-negative integer, got {x}");
+                    }
+                    Ok(Some(x as usize))
+                }
+            }
+        };
+        let mut w = WorkloadSpec::default();
+        match v.get("parallelism") {
+            None => {}
+            Some(x) => match x.as_str() {
+                Some(s) => w.parallelism = ParallelismKind::parse(s)?,
+                None => bail!("workload.parallelism must be a string"),
+            },
+        }
+        if let Some(n) = getu("pipeline_stages")? {
+            w.pipeline_stages = n;
+        }
+        if let Some(n) = getu("microbatches")? {
+            w.microbatches = n;
+        }
+        if let Some(x) = getf("activation_mib")? {
+            w.activation_mib = x;
+        }
+        if let Some(n) = getu("moe_layers")? {
+            w.moe_layers = n;
+        }
+        if let Some(x) = getf("moe_expert_mib")? {
+            w.moe_expert_mib = x;
+        }
+        w.validate()?;
+        Ok(w)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.pipeline_stages < 2 {
+            bail!("workload: pipeline_stages must be >= 2 (got {})", self.pipeline_stages);
+        }
+        if self.pipeline_stages > 64 {
+            bail!("workload: pipeline_stages {} is implausible (max 64)", self.pipeline_stages);
+        }
+        if self.microbatches < 1 || self.microbatches > 1024 {
+            bail!("workload: microbatches must be in 1..=1024 (got {})", self.microbatches);
+        }
+        if !(self.activation_mib > 0.0) || self.activation_mib > 4096.0 {
+            bail!("workload: implausible activation_mib {}", self.activation_mib);
+        }
+        if self.moe_layers < 1 || self.moe_layers > 256 {
+            bail!("workload: moe_layers must be in 1..=256 (got {})", self.moe_layers);
+        }
+        if !(self.moe_expert_mib > 0.0) || self.moe_expert_mib > 4096.0 {
+            bail!("workload: implausible moe_expert_mib {}", self.moe_expert_mib);
+        }
+        Ok(())
+    }
+
+    /// Shape checks that depend on the run's GPU count (known only at
+    /// trainer construction, not at parse time).
+    pub fn validate_for_gpus(&self, gpus: usize) -> Result<()> {
+        self.validate()?;
+        if self.parallelism == ParallelismKind::Pipeline {
+            if gpus < self.pipeline_stages {
+                bail!(
+                    "workload: pipeline needs >= {} GPUs, got {gpus}",
+                    self.pipeline_stages
+                );
+            }
+            if gpus % self.pipeline_stages != 0 {
+                bail!(
+                    "workload: {gpus} GPUs is not a multiple of pipeline_stages {}",
+                    self.pipeline_stages
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1334,6 +1509,47 @@ mod tests {
         assert!(FabricSpec::from_toml(&doc).is_err());
         let doc = toml::parse("kind = \"warp-drive\"").unwrap();
         assert!(FabricSpec::from_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn workload_from_toml_overrides_and_rejects() {
+        let doc = toml::parse(
+            "parallelism = \"pipeline\"\npipeline_stages = 8\nmicrobatches = 16\nactivation_mib = 1.5",
+        )
+        .unwrap();
+        let w = WorkloadSpec::from_toml(&doc).unwrap();
+        assert_eq!(w.parallelism, ParallelismKind::Pipeline);
+        assert_eq!(w.pipeline_stages, 8);
+        assert_eq!(w.microbatches, 16);
+        assert!((w.activation_mib - 1.5).abs() < 1e-12);
+        // Untouched knobs keep defaults.
+        assert_eq!(w.moe_layers, WorkloadSpec::default().moe_layers);
+
+        // Wrong types and unknown kinds are loud errors.
+        assert!(WorkloadSpec::from_toml(&toml::parse("parallelism = 3").unwrap()).is_err());
+        assert!(
+            WorkloadSpec::from_toml(&toml::parse("parallelism = \"tensor\"").unwrap()).is_err()
+        );
+        assert!(
+            WorkloadSpec::from_toml(&toml::parse("pipeline_stages = 1.5").unwrap()).is_err()
+        );
+        assert!(WorkloadSpec::from_toml(&toml::parse("pipeline_stages = 1").unwrap()).is_err());
+        assert!(WorkloadSpec::from_toml(&toml::parse("moe_expert_mib = 0.0").unwrap()).is_err());
+    }
+
+    #[test]
+    fn workload_gpu_shape_checks() {
+        let w = WorkloadSpec {
+            parallelism: ParallelismKind::Pipeline,
+            pipeline_stages: 4,
+            ..Default::default()
+        };
+        assert!(w.validate_for_gpus(8).is_ok());
+        assert!(w.validate_for_gpus(2).is_err(), "fewer GPUs than stages");
+        assert!(w.validate_for_gpus(10).is_err(), "not a multiple of stages");
+        // Non-pipeline strategies place no shape demands.
+        let dp = WorkloadSpec::default();
+        assert!(dp.validate_for_gpus(10).is_ok());
     }
 
     #[test]

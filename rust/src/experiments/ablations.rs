@@ -13,7 +13,7 @@ use super::sweeps::{CellOut, Runner};
 use crate::collectives::{RecursiveHalvingDoubling, RingAllreduce};
 use crate::config::presets::fabric;
 use crate::config::spec::{
-    ClusterSpec, FabricKind, FabricSpec, RunSpec, TenancySpec, TransportOptions,
+    ClusterSpec, FabricKind, FabricSpec, ParallelismKind, RunSpec, TenancySpec, TransportOptions,
 };
 use crate::models::perf::Precision;
 use crate::models::zoo::resnet50;
@@ -41,6 +41,7 @@ fn trainer(
         coordination_overhead:
             crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy: TenancySpec::default(),
+        workload: crate::config::WorkloadSpec::default(),
     }
 }
 
@@ -370,6 +371,87 @@ pub fn tenancy_sweep_with(quick: bool, runner: &Runner) -> (Table, Vec<TenancyPo
     (t, pts)
 }
 
+/// One cell of the parallelism-strategy ablation.
+pub struct ParallelismPoint {
+    pub fabric: String,
+    pub parallelism: ParallelismKind,
+    pub gpus: usize,
+    pub images_per_sec: f64,
+    pub step_time_mean: f64,
+    pub comm_fraction: f64,
+    /// Mean exposed (non-overlapped) communication time per step, secs.
+    pub exposed_secs: f64,
+}
+
+/// Parallelism-strategy sweep: fabric x {dp, zero, pipeline, moe} x
+/// GPU counts spanning the single-rack -> multi-rack boundary. Each
+/// strategy compiles the same ResNet-50 step onto a different
+/// [`crate::workload::WorkloadGraph`] — bucketed allreduce, ZeRO's
+/// reduce-scatter/all-gather pair, a 1F1B pipeline of p2p stage edges,
+/// or MoE all-to-alls — so the sweep shows which fabric each
+/// *communication pattern* actually needs, not just allreduce.
+///
+/// Cells are deliberately **seed-paired**: every cell runs at the
+/// runner's base seed, so all strategies see identical compute jitter
+/// and differ only in the graphs they put on the wire.
+pub fn parallelism_sweep(quick: bool) -> (Table, Vec<ParallelismPoint>) {
+    parallelism_sweep_with(quick, &Runner::sequential())
+}
+
+pub fn parallelism_sweep_with(quick: bool, runner: &Runner) -> (Table, Vec<ParallelismPoint>) {
+    let gpu_counts = [8usize, 32, 128];
+    let mut items: Vec<(crate::config::FabricSpec, ParallelismKind, usize)> = Vec::new();
+    for fab in crate::config::presets::paper_fabrics() {
+        for kind in ParallelismKind::all() {
+            for &g in &gpu_counts {
+                items.push((fab.clone(), kind, g));
+            }
+        }
+    }
+    let cells = runner.map_cells(
+        "ablation_parallelism",
+        &items,
+        |(fab, kind, g)| format!("{}:par={}:gpus={g}:quick={quick}", fab.name, kind.name()),
+        |_, (fab, kind, g), _seed| {
+            let mut tr = trainer(fab.clone(), TransportOptions::default(), 64.0 * MIB, true);
+            tr.workload.parallelism = *kind;
+            let r = tr.run(*g, &spec(quick, runner.seed)).unwrap();
+            let exposed = r.comm_fraction * r.step_time_mean;
+            CellOut::new(vec![
+                tr.fabric.name.clone(),
+                kind.name().to_string(),
+                g.to_string(),
+                fnum(r.images_per_sec),
+                fnum(r.step_time_mean * 1e3),
+                fnum(exposed * 1e3),
+                format!("{:.3}", r.comm_fraction),
+            ])
+            .val("img_s", r.images_per_sec)
+            .val("step_s", r.step_time_mean)
+            .val("comm_frac", r.comm_fraction)
+            .val("exposed_s", exposed)
+        },
+    );
+    let mut t = Table::new(
+        "Ablation: parallelism strategy (ResNet50, workload IR, overlap on)",
+        &["fabric", "parallelism", "gpus", "img/s", "step ms", "exposed comm ms", "exposed frac"],
+    );
+    let mut pts = Vec::new();
+    for ((fab, kind, g), cell) in items.iter().zip(cells) {
+        pts.push(ParallelismPoint {
+            fabric: fab.name.clone(),
+            parallelism: *kind,
+            gpus: *g,
+            images_per_sec: cell.get("img_s"),
+            step_time_mean: cell.get("step_s"),
+            comm_fraction: cell.get("comm_frac"),
+            exposed_secs: cell.get("exposed_s"),
+        });
+        t.row(cell.row);
+    }
+    (t, pts)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -440,6 +522,40 @@ mod tests {
         // a fixed seed (ECMP hashing is order-independent by design).
         let (seq, _) = oversubscription_with(true, &Runner::sequential());
         let (par, _) = oversubscription_with(true, &Runner::new(4));
+        assert_eq!(seq.to_csv(), par.to_csv());
+    }
+
+    #[test]
+    fn parallelism_grid_and_zero_differs_from_dp() {
+        // One sweep, two properties. (a) Full grid shape: 2 fabrics x
+        // 4 strategies x 3 GPU counts. (b) The acceptance criterion: at
+        // 25GbE@32 GPUs, ZeRO's exposed communication differs measurably
+        // from DP's — the new schedules genuinely exercise different
+        // fabric patterns, they are not a relabeled allreduce.
+        let (t, pts) = parallelism_sweep(true);
+        assert_eq!(pts.len(), 24);
+        assert_eq!(t.rows.len(), 24);
+        assert!(pts.iter().all(|p| p.images_per_sec > 0.0));
+        let eth = |kind: ParallelismKind, gpus: usize| {
+            pts.iter()
+                .find(|p| p.fabric.contains("GbE") && p.parallelism == kind && p.gpus == gpus)
+                .unwrap()
+                .exposed_secs
+        };
+        let dp = eth(ParallelismKind::Dp, 32);
+        let zero = eth(ParallelismKind::Zero, 32);
+        assert!(
+            (zero - dp).abs() > 5e-4,
+            "ZeRO exposed comm {zero}s indistinguishable from DP {dp}s at 25GbE@32"
+        );
+    }
+
+    #[test]
+    fn parallelism_csv_identical_across_jobs() {
+        // The standing acceptance pattern: byte-identical CSV at any
+        // --jobs for a fixed seed.
+        let (seq, _) = parallelism_sweep_with(true, &Runner::sequential());
+        let (par, _) = parallelism_sweep_with(true, &Runner::new(4));
         assert_eq!(seq.to_csv(), par.to_csv());
     }
 

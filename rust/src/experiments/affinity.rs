@@ -43,6 +43,7 @@ fn sample(
         coordination_overhead:
             crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy: crate::config::TenancySpec::default(),
+        workload: crate::config::WorkloadSpec::default(),
     };
     (0..reps)
         .map(|i| {

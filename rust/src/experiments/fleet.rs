@@ -65,6 +65,7 @@ pub fn fleet_trainer() -> TrainerSim {
         step_overhead: 0.0,
         coordination_overhead: DEFAULT_COORDINATION_OVERHEAD,
         tenancy: TenancySpec::default(),
+        workload: crate::config::WorkloadSpec::default(),
     }
 }
 

@@ -33,6 +33,7 @@ fn trainer(profile: &FrameworkProfile, fabric: crate::config::FabricSpec) -> Tra
         step_overhead: profile.step_overhead,
         coordination_overhead: profile.coordination_overhead,
         tenancy: crate::config::TenancySpec::default(),
+        workload: crate::config::WorkloadSpec::default(),
     }
 }
 

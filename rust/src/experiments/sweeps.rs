@@ -251,6 +251,7 @@ fn trainer(fabric: crate::config::FabricSpec, batch: usize, precision: Precision
         step_overhead: 0.0,
         coordination_overhead: crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy: crate::config::TenancySpec::default(),
+        workload: crate::config::WorkloadSpec::default(),
     }
 }
 

@@ -41,3 +41,4 @@ pub mod models;
 pub mod runtime;
 pub mod trainer;
 pub mod util;
+pub mod workload;

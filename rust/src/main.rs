@@ -25,6 +25,7 @@
 //!   --cache              cache per-cell JSON results under <out>/cache
 //!   --seed S             base seed for per-cell seed derivation
 //!   --streams N          run: concurrent communication streams [1]
+//!   --parallelism P      run: dp | zero | pipeline | moe      [dp]
 //!   --background-load F  run: shared-tenancy background load in [0,1]
 //!   --stragglers SPEC    run: straggler model FRAC:FACTOR[:JITTER]
 //!   --placement P        run: [fleet] placement pack | spread | topology
@@ -94,6 +95,7 @@ fn run(args: &Args) -> Result<()> {
         "frameworks" => cmd_frameworks(&rec, quick),
         "sweeps" => cmd_sweeps(&rec, quick, &runner),
         "tenancy" => cmd_tenancy(&rec, quick, &runner),
+        "parallelism" => cmd_parallelism(&rec, quick, &runner),
         "fleet" => cmd_fleet(&rec, quick, &runner),
         "train-real" => cmd_train_real(args, &rec),
         "calibrate" => cmd_calibrate(args, &rec),
@@ -114,6 +116,7 @@ usage: fabricbench <command> [--quick] [--jobs N] [--cache] [options]
 paper artifacts : table1 fig3 fig4 fig5 affinity microbench ablations all
 extensions      : frameworks (TF-Horovod vs PyTorch-DDP)  sweeps (batch, precision)
                   tenancy (shared-tenancy background-load sweep alone)
+                  parallelism (fabric x dp|zero|pipeline|moe strategy sweep)
                   fleet (multi-job scheduler: placement policy x occupancy)
                   run --config configs/<file>.toml (custom scenario)
 real stack      : train-real [--workers N --steps N --lr X --fabric F]
@@ -134,6 +137,19 @@ trainer communication (run --config):
                        (exact-keyed: outputs are byte-identical either
                        way; off exists for A/B perf measurement). Also
                        [transport] schedule_cache = false in the TOML
+
+workload IR ([workload] in the TOML config):
+  every training step compiles to a DAG of compute spans and collective /
+  p2p ops (the workload IR, see fabric/README.md) executed by the
+  multi-stream scheduler. parallelism = "dp" (default, bit-for-bit the
+  classic bucketed-allreduce trainer) | "zero" (reduce-scatter + sharded
+  update + all-gather per bucket) | "pipeline" (1F1B microbatches over
+  p2p stage edges; pipeline_stages, microbatches, activation_mib) |
+  "moe" (expert all-to-alls per layer boundary; moe_layers,
+  moe_expert_mib). CLI override for `run`:
+  --parallelism P      dp | zero | pipeline | moe
+  The `parallelism` command (and the `ablations` pack) sweeps fabric x
+  strategy x GPU count (ablation_parallelism CSV).
 
 fabric topology ([topology] in the TOML config):
   explicit fat-tree tiers above the NICs — leaf (ToR) and spine switches
@@ -177,6 +193,12 @@ fn cmd_tenancy(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
     Ok(())
 }
 
+fn cmd_parallelism(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
+    let (t, _) = ablations::parallelism_sweep_with(quick, runner);
+    rec.emit("ablation_parallelism", &t);
+    Ok(())
+}
+
 fn cmd_fleet(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
     let (t, _) = fabricbench::experiments::fleet::fleet_sweep_with(quick, runner);
     rec.emit("fleet_placement", &t);
@@ -204,7 +226,8 @@ fn cmd_frameworks(rec: &Recorder, quick: bool) -> Result<()> {
 /// Run a custom scenario described by a TOML config file.
 fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
     use fabricbench::config::spec::{
-        ClusterSpec, FabricSpec, RunSpec, TenancySpec, TransportOptions,
+        ClusterSpec, FabricSpec, ParallelismKind, RunSpec, TenancySpec, TransportOptions,
+        WorkloadSpec,
     };
     let path = args
         .get("config")
@@ -255,6 +278,16 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
         // Surface node-set misconfiguration before the run starts.
         tenancy.resolve_sets(&cluster)?;
     }
+    // Optional [workload] table: which parallelism strategy the step
+    // lowers to (workload IR). Absent (and without --parallelism), the
+    // trainer is the classic bucketed-DP path, bit-for-bit.
+    let mut workload = match doc.get("workload") {
+        Some(v) => WorkloadSpec::from_toml(v)?,
+        None => WorkloadSpec::default(),
+    };
+    if let Some(p) = args.get_choice("parallelism", &["dp", "zero", "pipeline", "moe"])? {
+        workload.parallelism = ParallelismKind::parse(p)?;
+    }
     let train = doc
         .get("train")
         .ok_or_else(|| anyhow::anyhow!("config missing [train]"))?;
@@ -304,6 +337,7 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
         coordination_overhead:
             fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy,
+        workload,
     };
     // Optional [fleet] table: hand the trainer to the multi-job fleet
     // scheduler instead of running one job. --placement overrides the
@@ -360,6 +394,7 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
     t.row(vec!["scaling efficiency".into(), format!("{:.3}", r.scaling_efficiency())]);
     t.row(vec!["exposed comm fraction".into(), format!("{:.3}", r.comm_fraction)]);
     t.row(vec!["comm streams".into(), opts.num_streams.to_string()]);
+    t.row(vec!["parallelism".into(), trainer.workload.parallelism.name().into()]);
     t.row(vec![
         "background load".into(),
         format!("{:.0}%", trainer.tenancy.background_load * 100.0),
@@ -436,6 +471,8 @@ fn cmd_ablations(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
     rec.emit("ablation_oversubscription", &t4);
     let (t5, _) = ablations::tenancy_sweep_with(quick, runner);
     rec.emit("ablation_tenancy", &t5);
+    let (t6, _) = ablations::parallelism_sweep_with(quick, runner);
+    rec.emit("ablation_parallelism", &t6);
     Ok(())
 }
 

@@ -21,7 +21,10 @@
 
 use crate::cluster::Placement;
 use crate::collectives::{fuse, Collective, BYTES_PER_ELEM};
-use crate::config::{ClusterSpec, FabricSpec, RunSpec, TenancySpec, TransportOptions};
+use crate::config::{
+    ClusterSpec, FabricSpec, ParallelismKind, RunSpec, TenancySpec, TransportOptions,
+    WorkloadSpec,
+};
 use crate::fabric::tenancy::BackgroundTraffic;
 use crate::fabric::NetSim;
 use crate::models::perf::{step_cost, Precision};
@@ -29,6 +32,8 @@ use crate::models::Arch;
 use crate::trainer::scheduler::{self, BucketWork, SchedulerConfig};
 use crate::util::rng::Rng;
 use crate::util::stats;
+use crate::util::units::MIB;
+use crate::workload;
 
 /// Simulated trainer configuration.
 pub struct TrainerSim {
@@ -55,6 +60,10 @@ pub struct TrainerSim {
     /// compute-side stragglers. [`TenancySpec::default`] is a dedicated,
     /// homogeneous system and is bit-for-bit the pre-tenancy trainer.
     pub tenancy: TenancySpec,
+    /// Parallelism strategy: how each step compiles to a
+    /// [`crate::workload::WorkloadGraph`]. [`WorkloadSpec::default`]
+    /// (bucketed DP) is bit-for-bit the pre-IR trainer.
+    pub workload: WorkloadSpec,
 }
 
 /// Default per-collective coordination overhead, seconds (Horovod cycle).
@@ -102,6 +111,7 @@ impl TrainerSim {
     ) -> anyhow::Result<ThroughputResult> {
         let gpus = placement.len();
         anyhow::ensure!(gpus >= 1, "need at least one GPU");
+        self.workload.validate_for_gpus(gpus)?;
         let mut net = NetSim::try_new(self.fabric.clone(), self.cluster.clone(), self.opts)?;
         if self.tenancy.background_active() {
             let bg = BackgroundTraffic::new(&self.tenancy, &net.fabric, &net.cluster, run.seed)?;
@@ -197,6 +207,11 @@ impl TrainerSim {
             return (compute_done[0] + cost.optimizer + self.step_overhead, 0.0);
         }
 
+        let cfg = SchedulerConfig {
+            num_streams: self.opts.num_streams,
+            coordination_overhead: self.coordination_overhead,
+            chunk_bytes: self.opts.chunk_bytes,
+        };
         // Bucket b's gradients are ready on rank r at
         // fwd[r] + bwd[r] * ready_frac(b) (backward produces gradients
         // progressively). Without overlap, everything waits for compute.
@@ -216,25 +231,93 @@ impl TrainerSim {
                     .collect(),
             })
             .collect();
-        let cfg = SchedulerConfig {
-            num_streams: self.opts.num_streams,
-            coordination_overhead: self.coordination_overhead,
-            chunk_bytes: self.opts.chunk_bytes,
-        };
-        let timeline =
-            scheduler::run_step(net, placement, self.strategy.as_ref(), &works, &cfg);
-
-        let end = (0..gpus)
-            .map(|r| timeline.comm_done[r].max(compute_done[r]) + cost.optimizer)
-            .fold(0.0, f64::max)
-            + self.step_overhead;
         let compute_max = compute_done.iter().cloned().fold(0.0, f64::max);
-        // Exposed communication: the merged busy-interval union of the
-        // collectives, clipped to the region after compute ends. (The old
-        // per-bucket span sum over-counted once buckets overlapped across
-        // streams, and silently folded coordination gaps into "comm".)
-        let exposed = scheduler::exposed_after(&timeline.intervals, compute_max);
-        (end, exposed / end)
+
+        match self.workload.parallelism {
+            ParallelismKind::Dp => {
+                let timeline =
+                    scheduler::run_step(net, placement, self.strategy.as_ref(), &works, &cfg);
+                let end = (0..gpus)
+                    .map(|r| timeline.comm_done[r].max(compute_done[r]) + cost.optimizer)
+                    .fold(0.0, f64::max)
+                    + self.step_overhead;
+                // Exposed communication: the merged busy-interval union of
+                // the collectives, clipped to the region after compute
+                // ends. (The old per-bucket span sum over-counted once
+                // buckets overlapped across streams, and silently folded
+                // coordination gaps into "comm".)
+                let exposed = scheduler::exposed_after(&timeline.intervals, compute_max);
+                (end, exposed / end)
+            }
+            ParallelismKind::Zero => {
+                // ZeRO: each bucket reduce-scatters, every rank updates
+                // its 1/world shard (compute node inside the graph), then
+                // all-gathers the fresh parameters — the optimizer cost
+                // is in-graph and must not be re-added here.
+                let graph =
+                    workload::lower_zero(&works, gpus, cost.optimizer, self.opts.num_streams);
+                let out =
+                    scheduler::execute(net, placement, self.strategy.as_ref(), &graph, &cfg);
+                let end = (0..gpus)
+                    .map(|r| out.done[r].max(compute_done[r]))
+                    .fold(0.0, f64::max)
+                    + self.step_overhead;
+                let threshold =
+                    compute_max.max(out.compute_done.iter().cloned().fold(0.0, f64::max));
+                let exposed = scheduler::exposed_after(&out.comm_intervals, threshold);
+                (end, exposed / end)
+            }
+            ParallelismKind::Pipeline => {
+                // 1F1B: per-rank fwd/bwd costs are spread over the
+                // stage × microbatch grid inside the lowering; the step's
+                // compute and p2p activation traffic all live in-graph.
+                let grad_elems: usize = works.iter().map(|w| w.elems).sum();
+                let graph = workload::lower_pipeline(
+                    gpus,
+                    self.workload.pipeline_stages,
+                    self.workload.microbatches,
+                    &fwd,
+                    &bwd,
+                    self.workload.activation_mib * MIB,
+                    grad_elems,
+                )
+                .expect("workload shape validated at run start");
+                let out =
+                    scheduler::execute(net, placement, self.strategy.as_ref(), &graph, &cfg);
+                let end = out.done.iter().cloned().fold(0.0, f64::max)
+                    + cost.optimizer
+                    + self.step_overhead;
+                let threshold = out.compute_done.iter().cloned().fold(0.0, f64::max);
+                let exposed = scheduler::exposed_after(&out.comm_intervals, threshold);
+                (end, exposed / end)
+            }
+            ParallelismKind::Moe => {
+                // MoE: expert dispatch/combine all-to-alls interleave the
+                // forward and backward compute segments; the gradient
+                // allreduce of every bucket waits on the backward chain.
+                let bucket_elems: Vec<usize> = works.iter().map(|w| w.elems).collect();
+                let a2a_elems =
+                    (self.workload.moe_expert_mib * MIB / BYTES_PER_ELEM).ceil() as usize;
+                let graph = workload::lower_moe(
+                    gpus,
+                    &fwd,
+                    &bwd,
+                    &bucket_elems,
+                    self.workload.moe_layers,
+                    a2a_elems,
+                    self.opts.num_streams,
+                )
+                .expect("workload shape validated at run start");
+                let out =
+                    scheduler::execute(net, placement, self.strategy.as_ref(), &graph, &cfg);
+                let end = out.done.iter().cloned().fold(0.0, f64::max)
+                    + cost.optimizer
+                    + self.step_overhead;
+                let threshold = out.compute_done.iter().cloned().fold(0.0, f64::max);
+                let exposed = scheduler::exposed_after(&out.comm_intervals, threshold);
+                (end, exposed / end)
+            }
+        }
     }
 }
 
@@ -261,6 +344,7 @@ mod tests {
             step_overhead: 0.0,
             coordination_overhead: DEFAULT_COORDINATION_OVERHEAD,
             tenancy: TenancySpec::default(),
+            workload: WorkloadSpec::default(),
         }
     }
 
@@ -343,6 +427,60 @@ mod tests {
         let eth = trainer(FabricKind::EthernetRoce25, false).run(64, &spec).unwrap();
         let opa = trainer(FabricKind::OmniPath100, false).run(64, &spec).unwrap();
         assert!(eth.comm_fraction > opa.comm_fraction);
+    }
+
+    #[test]
+    fn every_parallelism_strategy_runs_and_differs() {
+        // All four lowerings execute end-to-end, and each non-DP
+        // strategy's fabric pattern actually changes the step time —
+        // the graphs are not decorative.
+        let spec = RunSpec { measure_steps: 5, ..Default::default() };
+        let mut results = Vec::new();
+        for kind in ParallelismKind::all() {
+            let mut t = trainer(FabricKind::EthernetRoce25, true);
+            t.workload.parallelism = kind;
+            let r = t.run(16, &spec).unwrap();
+            assert!(r.images_per_sec > 0.0, "{} produced no throughput", kind.name());
+            assert!(r.step_time_mean > 0.0);
+            assert!(r.comm_fraction >= 0.0 && r.comm_fraction <= 1.0);
+            results.push((kind, r.step_time_mean));
+        }
+        let dp = results[0].1;
+        for (kind, t) in &results[1..] {
+            assert_ne!(
+                t.to_bits(),
+                dp.to_bits(),
+                "{} step time identical to DP — lowering not exercised",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn pipeline_shape_mismatch_is_a_loud_error() {
+        let mut t = trainer(FabricKind::EthernetRoce25, true);
+        t.workload.parallelism = ParallelismKind::Pipeline;
+        t.workload.pipeline_stages = 4;
+        let spec = RunSpec { measure_steps: 2, ..Default::default() };
+        assert!(t.run(6, &spec).is_err(), "6 GPUs over 4 stages must be rejected");
+        assert!(t.run(8, &spec).is_ok());
+    }
+
+    #[test]
+    fn zero_matches_dp_compute_but_changes_comm() {
+        // Same model, same compute draws: ZeRO replaces each bucket's
+        // allreduce with reduce-scatter + sharded update + all-gather,
+        // so exposed communication must differ from DP's.
+        let spec = RunSpec { measure_steps: 6, ..Default::default() };
+        let dp = trainer(FabricKind::EthernetRoce25, true).run(32, &spec).unwrap();
+        let mut t = trainer(FabricKind::EthernetRoce25, true);
+        t.workload.parallelism = ParallelismKind::Zero;
+        let zero = t.run(32, &spec).unwrap();
+        assert_ne!(
+            zero.comm_fraction.to_bits(),
+            dp.comm_fraction.to_bits(),
+            "ZeRO comm profile must differ from DP"
+        );
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Multi-stream overlap scheduler: the trainer's communication subsystem.
+//! Workload-IR executor: the trainer's communication subsystem.
 //!
 //! Horovod's coordinator serializes every fused bucket on one
 //! communication stream; NCCL splits an all-reduce across several
@@ -7,8 +7,17 @@
 //! backprop depends directly on that concurrency (Awan et al. 2018, Shi
 //! et al. 2018) — so the simulator must be able to express it.
 //!
-//! [`run_step`] schedules the step's fusion buckets over
-//! `num_streams` concurrent collective channels:
+//! Since the workload-IR refactor, this module is the *executor* of
+//! [`crate::workload::WorkloadGraph`]s: [`execute`] walks the graph's
+//! topological frontier, running compute spans engine-free and
+//! submitting communication ops to [`NetSim`] in multi-stream merged
+//! batches. [`run_step`] is now a thin wrapper — it lowers the step's
+//! fusion buckets through [`crate::workload::lower_dp`] and executes
+//! the graph, bit-for-bit what the pre-IR scheduler produced (pinned by
+//! the `dp_through_ir_*` tests below against verbatim copies of the
+//! legacy paths).
+//!
+//! The executor schedules the graph over per-stream command queues:
 //!
 //! * buckets are assigned to streams **round-robin** in backward
 //!   (readiness) order, exactly like NCCL channel assignment;
@@ -62,15 +71,17 @@
 //!   identical collectives. Cross-cell reuse is covered by the
 //!   `sweeps::Runner` JSON artifact cache, which memoizes whole cells.
 
+use crate::cluster::placement::Endpoint;
 use crate::cluster::Placement;
 use crate::collectives::{chunk_ranges, Collective, NullBuffers, BYTES_PER_ELEM};
 use crate::fabric::mpi::{apply_round, is_rendezvous, CommOp};
 use crate::fabric::sim::{FlowReq, NetStats};
 use crate::fabric::{Comm, NetSim};
+use crate::workload::{CollKind, IrOp, WorkloadGraph};
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use crate::util::hash::{fnv1a_bytes, fnv1a_u64 as fnv_step};
+use crate::util::hash::{fnv1a_bytes, fnv1a_str, fnv1a_u64 as fnv_step};
 
 fn fnv_str(h: u64, s: &str) -> u64 {
     fnv1a_bytes(h, s.as_bytes())
@@ -348,7 +359,10 @@ pub fn exposed_after(intervals: &[(f64, f64)], threshold: f64) -> f64 {
 /// the first pays the coordination cycle — segmentation costs extra
 /// per-round latency terms, never extra negotiation. `None` returns the
 /// input unchanged (every bucket its own launch).
-fn split_chunks(buckets: &[BucketWork], chunk_bytes: Option<f64>) -> Vec<(BucketWork, bool)> {
+pub(crate) fn split_chunks(
+    buckets: &[BucketWork],
+    chunk_bytes: Option<f64>,
+) -> Vec<(BucketWork, bool)> {
     let Some(limit) = chunk_bytes else {
         return buckets.iter().map(|b| (b.clone(), true)).collect();
     };
@@ -374,6 +388,9 @@ fn split_chunks(buckets: &[BucketWork], chunk_bytes: Option<f64>) -> Vec<(Bucket
 }
 
 /// Schedule one step's buckets over the fabric; returns the timeline.
+/// Since the IR refactor this is a *lowering*: the buckets compile to a
+/// [`WorkloadGraph`] via [`crate::workload::lower_dp`] and run through
+/// [`execute`] — bit-for-bit the pre-IR scheduler at any stream count.
 pub fn run_step(
     net: &mut NetSim,
     placement: &Placement,
@@ -381,12 +398,53 @@ pub fn run_step(
     buckets: &[BucketWork],
     cfg: &SchedulerConfig,
 ) -> StepTimeline {
+    let graph =
+        crate::workload::lower_dp(buckets, placement.len(), cfg.num_streams, cfg.chunk_bytes);
+    let out = execute(net, placement, strategy, &graph, cfg);
+    StepTimeline { comm_done: out.done, intervals: out.comm_intervals }
+}
+
+/// Result of executing a [`WorkloadGraph`].
+#[derive(Clone, Debug)]
+pub struct ExecOut {
+    /// Per-rank time at which the rank's last node finished.
+    pub done: Vec<f64>,
+    /// Busy interval `[max begin, max end]` of every *communication*
+    /// node (collectives and sends), in node order — the input to
+    /// [`exposed_after`].
+    pub comm_intervals: Vec<(f64, f64)>,
+    /// Per-rank finish time of the latest compute span (zeros when the
+    /// graph carries no compute nodes).
+    pub compute_done: Vec<f64>,
+}
+
+/// Execute a workload graph over the fabric.
+///
+/// A graph that is a pure serialized-DP step (only full-world allreduce
+/// nodes, no edges) at `num_streams <= 1` takes the serialized
+/// coordinator path — the literal `Comm::with_start` + `allreduce` loop
+/// with its timing-cache tier. Everything else runs on the topological
+/// frontier executor.
+pub fn execute(
+    net: &mut NetSim,
+    placement: &Placement,
+    strategy: &dyn Collective,
+    graph: &WorkloadGraph,
+    cfg: &SchedulerConfig,
+) -> ExecOut {
+    debug_assert!(graph.validate().is_ok(), "invalid workload graph: {:?}", graph.validate());
+    assert_eq!(graph.world, placement.len(), "graph world != placement ranks");
     if cfg.num_streams <= 1 {
-        let works = split_chunks(buckets, cfg.chunk_bytes);
-        run_serialized(net, placement, strategy, &works, cfg)
-    } else {
-        run_multi_stream(net, placement, strategy, buckets, cfg)
+        if let Some(works) = graph.serial_dp_works() {
+            let tl = run_serialized(net, placement, strategy, &works, cfg);
+            return ExecOut {
+                done: tl.comm_done,
+                comm_intervals: tl.intervals,
+                compute_done: vec![0.0; placement.len()],
+            };
+        }
     }
+    exec_frontier(net, placement, strategy, graph, cfg)
 }
 
 /// The serialized (single-stream) coordinator: each collective starts
@@ -448,121 +506,279 @@ fn run_serialized(
 /// One queued scheduling action on a stream.
 #[derive(Clone, Copy, Debug)]
 enum Item {
-    /// Start work item `w`: fold its ready times into the stream clocks;
-    /// `launch` marks a fresh collective launch (pays the coordination
-    /// cycle) as opposed to a follow-on chunk of the same launch.
-    Begin { w: usize, launch: bool },
-    /// Execute op `op` of work item `w`'s recorded schedule.
-    Op { w: usize, op: usize },
-    /// Work item `w` finished: record its busy interval.
+    /// Start node `n`: wait for its dependencies, fold their finish
+    /// clocks and the node's ready floors into the stream clocks, pay
+    /// the coordination cycle if the node is a fresh launch.
+    Begin(usize),
+    /// Advance the stream clocks by node `n`'s compute spans.
+    Compute(usize),
+    /// Execute op `i` of node `n`'s recorded schedule.
+    Op { n: usize, i: usize },
+    /// Node `n` finished: record its busy interval and publish its
+    /// finish clocks to dependents.
     End(usize),
 }
 
-fn run_multi_stream(
+/// Pattern-tier key discriminator of a collective node: the session
+/// strategy's signature for allreduce (so DP cache entries are shared
+/// with the serialized path, unchanged from the pre-IR scheduler), a
+/// fixed tag per ring primitive otherwise, with the participant group
+/// folded in when the collective is not world-wide.
+fn coll_sig(kind: CollKind, group: Option<&[usize]>, strategy: &dyn Collective) -> u64 {
+    let mut h = match kind {
+        CollKind::Allreduce => strategy.schedule_signature(),
+        CollKind::ReduceScatter => fnv1a_str("ir/reduce-scatter"),
+        CollKind::AllGather => fnv1a_str("ir/all-gather"),
+        CollKind::AllToAll => fnv1a_str("ir/all-to-all"),
+    };
+    if let Some(g) = group {
+        h = fnv_step(fnv_step(h, 0x6709), g.len() as u64);
+        for &r in g {
+            h = fnv_step(h, r as u64);
+        }
+    }
+    h
+}
+
+/// Record a collective's [`CommOp`] schedule. Group collectives record
+/// over a sub-placement (local rank indices `0..group.len()`) and the
+/// ops are remapped back to global rank indices, so the executor's
+/// world-sized clocks apply directly.
+fn record_collective(
     net: &mut NetSim,
     placement: &Placement,
     strategy: &dyn Collective,
-    buckets: &[BucketWork],
-    cfg: &SchedulerConfig,
-) -> StepTimeline {
-    let p = placement.len();
-    // Streams are assigned per *bucket* (round-robin, like NCCL
-    // channels); chunking then expands a bucket into consecutive work
-    // items that stay back-to-back on the bucket's stream.
-    let s_count = cfg.num_streams.min(buckets.len().max(1));
-    let mut works: Vec<BucketWork> = Vec::new();
-    let mut launch_of: Vec<bool> = Vec::new();
-    let mut stream_of: Vec<usize> = Vec::new();
-    for (b, bucket) in buckets.iter().enumerate() {
-        for (chunk, launch) in split_chunks(std::slice::from_ref(bucket), cfg.chunk_bytes) {
-            works.push(chunk);
-            launch_of.push(launch);
-            stream_of.push(b % s_count);
+    kind: CollKind,
+    elems: usize,
+    group: Option<&[usize]>,
+) -> Vec<CommOp> {
+    fn run(
+        net: &mut NetSim,
+        pl: &Placement,
+        strategy: &dyn Collective,
+        kind: CollKind,
+        elems: usize,
+    ) -> Vec<CommOp> {
+        let mut rec = Comm::recorder(net, pl);
+        let mut bufs = NullBuffers { elems };
+        match kind {
+            CollKind::Allreduce => strategy.allreduce(&mut rec, &mut bufs),
+            CollKind::ReduceScatter => crate::collectives::reduce_scatter(&mut rec, &mut bufs),
+            CollKind::AllGather => crate::collectives::allgather(&mut rec, &mut bufs),
+            CollKind::AllToAll => crate::collectives::alltoall(&mut rec, &mut bufs),
+        };
+        rec.take_record().expect("recording comm")
+    }
+    match group {
+        None => run(net, placement, strategy, kind, elems),
+        Some(g) => {
+            let sub = Placement {
+                endpoints: g
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &r)| Endpoint { rank: i, ..placement.endpoints[r] })
+                    .collect(),
+                slots_per_node: placement.slots_per_node,
+            };
+            run(net, &sub, strategy, kind, elems)
+                .into_iter()
+                .map(|op| match op {
+                    CommOp::Round(msgs) => CommOp::Round(
+                        msgs.into_iter().map(|(s, d, b)| (g[s], g[d], b)).collect(),
+                    ),
+                    CommOp::P2p(s, d, b) => CommOp::P2p(g[s], g[d], b),
+                    CommOp::Sendrecv(a, b, x) => CommOp::Sendrecv(g[a], g[b], x),
+                    CommOp::SyncAll => CommOp::SyncAll,
+                })
+                .collect()
         }
     }
+}
 
-    // Capture each distinct bucket size's schedule once per step — and
-    // once per (strategy, size, world) per *simulator* via the pattern
-    // tier: steady-state steps replay the cached ops instead of
-    // re-recording the collective every step.
-    let mut patterns: Vec<(usize, Arc<Vec<CommOp>>)> = Vec::new();
-    let mut pattern_of: Vec<usize> = Vec::with_capacity(works.len());
+/// The participant group a node's `SyncAll` applies to (`None` = all).
+fn node_group(op: &IrOp) -> Option<&[usize]> {
+    match op {
+        IrOp::Collective { group: Some(g), .. } => Some(g),
+        _ => None,
+    }
+}
+
+/// The topological-frontier executor: per-stream command queues drained
+/// engine-free to a fixpoint (an `End` on one stream may unblock a
+/// `Begin` on another), then the head engine ops of all streams ready
+/// within [`STREAM_MERGE_WINDOW`] are submitted to the event engine as
+/// one heterogeneous-ready-time batch — on a dependency-free DP graph
+/// this is operation-for-operation the pre-IR multi-stream scheduler.
+fn exec_frontier(
+    net: &mut NetSim,
+    placement: &Placement,
+    strategy: &dyn Collective,
+    graph: &WorkloadGraph,
+    cfg: &SchedulerConfig,
+) -> ExecOut {
+    let p = placement.len();
+    let n_nodes = graph.nodes.len();
+    let s_count = graph.nodes.iter().map(|n| n.stream).max().map_or(1, |s| s + 1);
+
+    // Acquire each communication node's op schedule: dedup within the
+    // step (identical collectives record once, exactly the old per-step
+    // pattern list), with cross-step reuse via the pattern tier. Sends
+    // are their own one-op schedule and skip the cache.
     let world = if net.opts.schedule_cache { world_sig(net, placement) } else { 0 };
-    for work in &works {
-        let idx = match patterns.iter().position(|(e, _)| *e == work.elems) {
-            Some(i) => i,
-            None => {
-                let key = PatternKey {
-                    strategy: strategy.schedule_signature(),
-                    elems: work.elems,
-                    world,
-                };
-                let cached = if net.opts.schedule_cache {
-                    net.schedule_cache.lookup_pattern(&key)
-                } else {
-                    None
-                };
-                let ops = match cached {
-                    Some(ops) => ops,
+    let mut local: Vec<((u64, usize), Arc<Vec<CommOp>>)> = Vec::new();
+    let mut ops_of: Vec<Option<Arc<Vec<CommOp>>>> = Vec::with_capacity(n_nodes);
+    for node in &graph.nodes {
+        let ops = match &node.op {
+            IrOp::Compute { .. } => None,
+            IrOp::Send { src, dst, bytes } => {
+                Some(Arc::new(vec![CommOp::P2p(*src, *dst, *bytes)]))
+            }
+            IrOp::Collective { kind, elems, group } => {
+                let sig = coll_sig(*kind, group.as_deref(), strategy);
+                let found =
+                    local.iter().find(|((s, e), _)| *s == sig && *e == *elems).map(|(_, o)| o);
+                let ops = match found {
+                    Some(ops) => Arc::clone(ops),
                     None => {
-                        let mut rec = Comm::recorder(net, placement);
-                        let mut bufs = NullBuffers { elems: work.elems };
-                        strategy.allreduce(&mut rec, &mut bufs);
-                        let ops = Arc::new(rec.take_record().expect("recording comm"));
-                        if net.opts.schedule_cache {
-                            net.schedule_cache.insert_pattern(key, Arc::clone(&ops));
-                        }
+                        let key = PatternKey { strategy: sig, elems: *elems, world };
+                        let cached = if net.opts.schedule_cache {
+                            net.schedule_cache.lookup_pattern(&key)
+                        } else {
+                            None
+                        };
+                        let ops = match cached {
+                            Some(ops) => ops,
+                            None => {
+                                let ops = Arc::new(record_collective(
+                                    net,
+                                    placement,
+                                    strategy,
+                                    *kind,
+                                    *elems,
+                                    group.as_deref(),
+                                ));
+                                if net.opts.schedule_cache {
+                                    net.schedule_cache.insert_pattern(key, Arc::clone(&ops));
+                                }
+                                ops
+                            }
+                        };
+                        local.push(((sig, *elems), Arc::clone(&ops)));
                         ops
                     }
                 };
-                patterns.push((work.elems, ops));
-                patterns.len() - 1
+                Some(ops)
             }
         };
-        pattern_of.push(idx);
+        ops_of.push(ops);
     }
 
     let mut queues: Vec<VecDeque<Item>> = vec![VecDeque::new(); s_count];
-    for (w, _) in works.iter().enumerate() {
-        let q = &mut queues[stream_of[w]];
-        q.push_back(Item::Begin { w, launch: launch_of[w] });
-        for op in 0..patterns[pattern_of[w]].1.len() {
-            q.push_back(Item::Op { w, op });
+    for (n, node) in graph.nodes.iter().enumerate() {
+        let q = &mut queues[node.stream];
+        q.push_back(Item::Begin(n));
+        match &ops_of[n] {
+            None => q.push_back(Item::Compute(n)),
+            Some(ops) => {
+                for i in 0..ops.len() {
+                    q.push_back(Item::Op { n, i });
+                }
+            }
         }
-        q.push_back(Item::End(w));
+        q.push_back(Item::End(n));
+    }
+
+    let mut has_dependents = vec![false; n_nodes];
+    for node in &graph.nodes {
+        for &d in &node.deps {
+            has_dependents[d] = true;
+        }
     }
 
     let mut clocks: Vec<Vec<f64>> = vec![vec![0.0; p]; s_count];
-    let mut intervals: Vec<(f64, f64)> = vec![(0.0, 0.0); works.len()];
+    let mut intervals: Vec<(f64, f64)> = vec![(0.0, 0.0); n_nodes];
+    let mut finished = vec![false; n_nodes];
+    let mut done_clocks: Vec<Option<Vec<f64>>> = vec![None; n_nodes];
+    let mut compute_done = vec![0.0; p];
 
     loop {
-        // Drain the engine-free items (launches, barrier syncs, bucket
-        // completion bookkeeping) on every stream.
-        for s in 0..s_count {
-            while let Some(&item) = queues[s].front() {
-                match item {
-                    Item::Begin { w, launch } => {
-                        let coord = if launch { cfg.coordination_overhead } else { 0.0 };
-                        for r in 0..p {
-                            clocks[s][r] = works[w].ready[r].max(clocks[s][r]) + coord;
+        // Drain the engine-free items (launches, compute spans, barrier
+        // syncs, node completion bookkeeping) on every stream, repeating
+        // until no stream makes progress: a fixpoint, because an `End`
+        // on one stream can unblock a dependent `Begin` on a stream that
+        // already drained this round.
+        loop {
+            let mut progress = false;
+            for s in 0..s_count {
+                while let Some(&item) = queues[s].front() {
+                    match item {
+                        Item::Begin(n) => {
+                            let node = &graph.nodes[n];
+                            if node.deps.iter().any(|&d| !finished[d]) {
+                                break;
+                            }
+                            for &d in &node.deps {
+                                let dc = done_clocks[d].as_ref().expect("dep clocks published");
+                                for r in 0..p {
+                                    clocks[s][r] = clocks[s][r].max(dc[r]);
+                                }
+                            }
+                            let coord =
+                                if node.launch { cfg.coordination_overhead } else { 0.0 };
+                            for r in 0..p {
+                                let ready = node.ready.get(r).copied().unwrap_or(0.0);
+                                clocks[s][r] = ready.max(clocks[s][r]) + coord;
+                            }
+                            intervals[n].0 = clocks[s].iter().cloned().fold(0.0, f64::max);
                         }
-                        intervals[w].0 = clocks[s].iter().cloned().fold(0.0, f64::max);
-                    }
-                    Item::End(w) => {
-                        intervals[w].1 = clocks[s].iter().cloned().fold(0.0, f64::max);
-                    }
-                    Item::Op { w, op } => match &patterns[pattern_of[w]].1[op] {
-                        CommOp::SyncAll => {
-                            let tmax = clocks[s].iter().cloned().fold(0.0, f64::max);
-                            for t in clocks[s].iter_mut() {
-                                *t = tmax;
+                        Item::Compute(n) => {
+                            let IrOp::Compute { secs } = &graph.nodes[n].op else {
+                                unreachable!("compute item on a communication node")
+                            };
+                            for &(r, dur) in secs {
+                                clocks[s][r] += dur;
+                                compute_done[r] = compute_done[r].max(clocks[s][r]);
                             }
                         }
-                        CommOp::Round(msgs) if msgs.is_empty() => {}
-                        _ => break,
-                    },
+                        Item::End(n) => {
+                            intervals[n].1 = clocks[s].iter().cloned().fold(0.0, f64::max);
+                            finished[n] = true;
+                            if has_dependents[n] {
+                                done_clocks[n] = Some(clocks[s].clone());
+                            }
+                        }
+                        Item::Op { n, i } => {
+                            match &ops_of[n].as_ref().expect("comm node has ops")[i] {
+                                CommOp::SyncAll => match node_group(&graph.nodes[n].op) {
+                                    // A barrier inside a *group* collective
+                                    // synchronizes only the group's ranks —
+                                    // outsiders' clocks must not move.
+                                    Some(g) => {
+                                        let tmax =
+                                            g.iter().map(|&r| clocks[s][r]).fold(0.0, f64::max);
+                                        for &r in g {
+                                            clocks[s][r] = tmax;
+                                        }
+                                    }
+                                    None => {
+                                        let tmax =
+                                            clocks[s].iter().cloned().fold(0.0, f64::max);
+                                        for t in clocks[s].iter_mut() {
+                                            *t = tmax;
+                                        }
+                                    }
+                                },
+                                CommOp::Round(msgs) if msgs.is_empty() => {}
+                                _ => break,
+                            }
+                        }
+                    }
+                    queues[s].pop_front();
+                    progress = true;
                 }
-                queues[s].pop_front();
+            }
+            if !progress {
+                break;
             }
         }
 
@@ -570,8 +786,8 @@ fn run_multi_stream(
         // its earliest flow could start.
         let mut cands: Vec<(usize, f64)> = Vec::new();
         for s in 0..s_count {
-            if let Some(&Item::Op { w, op }) = queues[s].front() {
-                let ready = op_ready(&patterns[pattern_of[w]].1[op], &clocks[s], net);
+            if let Some(&Item::Op { n, i }) = queues[s].front() {
+                let ready = op_ready(&ops_of[n].as_ref().expect("comm node has ops")[i], &clocks[s], net);
                 cands.push((s, ready));
             }
         }
@@ -580,6 +796,10 @@ fn run_multi_stream(
             .map(|&(_, r)| r)
             .min_by(|a, b| a.total_cmp(b))
         else {
+            assert!(
+                queues.iter().all(|q| q.is_empty()),
+                "workload graph deadlocked: streams blocked on unfinished dependencies"
+            );
             break;
         };
 
@@ -594,10 +814,10 @@ fn run_multi_stream(
         // (stream, op, snapshot, first flow index, flow count)
         let mut parts: Vec<(usize, CommOp, Vec<f64>, usize, usize)> = Vec::new();
         for &s in &chosen {
-            let Some(&Item::Op { w, op }) = queues[s].front() else {
+            let Some(&Item::Op { n, i }) = queues[s].front() else {
                 unreachable!("candidate stream lost its op");
             };
-            let op = patterns[pattern_of[w]].1[op].clone();
+            let op = ops_of[n].as_ref().expect("comm node has ops")[i].clone();
             let snapshot = clocks[s].clone();
             let first = reqs.len();
             push_op_flows(&mut reqs, &op, &snapshot, placement, net);
@@ -624,13 +844,20 @@ fn run_multi_stream(
         }
     }
 
-    let mut comm_done = vec![0.0; p];
+    let mut done = vec![0.0; p];
     for s in 0..s_count {
         for r in 0..p {
-            comm_done[r] = comm_done[r].max(clocks[s][r]);
+            done[r] = done[r].max(clocks[s][r]);
         }
     }
-    StepTimeline { comm_done, intervals }
+    let comm_intervals = graph
+        .nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, node)| !matches!(node.op, IrOp::Compute { .. }))
+        .map(|(n, _)| intervals[n])
+        .collect();
+    ExecOut { done, comm_intervals, compute_done }
 }
 
 /// Earliest virtual time at which any flow of `op` can start on a stream
@@ -946,5 +1173,321 @@ mod tests {
         assert!(t.comm_done.iter().all(|&d| d > 0.0));
         // All bytes still move: the engine saw 4 sub-allreduces' messages.
         assert!(net.stats.messages > 0);
+    }
+
+    // ------------------------------------------------------------------
+    // Verbatim copies of the PRE-IR scheduler paths, kept only as test
+    // oracles: the workload-IR lowering of bucketed DP must reproduce
+    // them bit for bit (the PR's non-negotiable refactor contract).
+    // ------------------------------------------------------------------
+
+    fn legacy_serialized(
+        net: &mut NetSim,
+        placement: &Placement,
+        strategy: &dyn Collective,
+        buckets: &[BucketWork],
+        cfg: &SchedulerConfig,
+    ) -> StepTimeline {
+        let p = placement.len();
+        let works = split_chunks(buckets, cfg.chunk_bytes);
+        let mut prev_done = vec![0.0f64; p];
+        let mut comm_done = vec![0.0f64; p];
+        let mut intervals = Vec::with_capacity(works.len());
+        for (work, launch) in &works {
+            let coord = if *launch { cfg.coordination_overhead } else { 0.0 };
+            let start: Vec<f64> =
+                (0..p).map(|r| work.ready[r].max(prev_done[r]) + coord).collect();
+            let mut comm = Comm::with_start(net, placement, &start);
+            strategy.allreduce(&mut comm, &mut NullBuffers { elems: work.elems });
+            comm_done.copy_from_slice(&comm.t);
+            prev_done.copy_from_slice(&comm.t);
+            let max_start = start.iter().cloned().fold(0.0, f64::max);
+            let max_done = comm_done.iter().cloned().fold(0.0, f64::max);
+            intervals.push((max_start, max_done));
+        }
+        StepTimeline { comm_done, intervals }
+    }
+
+    fn legacy_multi_stream(
+        net: &mut NetSim,
+        placement: &Placement,
+        strategy: &dyn Collective,
+        buckets: &[BucketWork],
+        cfg: &SchedulerConfig,
+    ) -> StepTimeline {
+        #[derive(Clone, Copy)]
+        enum LItem {
+            Begin { w: usize, launch: bool },
+            Op { w: usize, op: usize },
+            End(usize),
+        }
+        let p = placement.len();
+        let s_count = cfg.num_streams.min(buckets.len().max(1));
+        let mut works: Vec<BucketWork> = Vec::new();
+        let mut launch_of: Vec<bool> = Vec::new();
+        let mut stream_of: Vec<usize> = Vec::new();
+        for (b, bucket) in buckets.iter().enumerate() {
+            for (chunk, launch) in split_chunks(std::slice::from_ref(bucket), cfg.chunk_bytes) {
+                works.push(chunk);
+                launch_of.push(launch);
+                stream_of.push(b % s_count);
+            }
+        }
+        let mut patterns: Vec<(usize, Arc<Vec<CommOp>>)> = Vec::new();
+        let mut pattern_of: Vec<usize> = Vec::with_capacity(works.len());
+        for work in &works {
+            let idx = match patterns.iter().position(|(e, _)| *e == work.elems) {
+                Some(i) => i,
+                None => {
+                    let mut rec = Comm::recorder(net, placement);
+                    let mut bufs = NullBuffers { elems: work.elems };
+                    strategy.allreduce(&mut rec, &mut bufs);
+                    let ops = Arc::new(rec.take_record().expect("recording comm"));
+                    patterns.push((work.elems, ops));
+                    patterns.len() - 1
+                }
+            };
+            pattern_of.push(idx);
+        }
+        let mut queues: Vec<VecDeque<LItem>> = vec![VecDeque::new(); s_count];
+        for (w, _) in works.iter().enumerate() {
+            let q = &mut queues[stream_of[w]];
+            q.push_back(LItem::Begin { w, launch: launch_of[w] });
+            for op in 0..patterns[pattern_of[w]].1.len() {
+                q.push_back(LItem::Op { w, op });
+            }
+            q.push_back(LItem::End(w));
+        }
+        let mut clocks: Vec<Vec<f64>> = vec![vec![0.0; p]; s_count];
+        let mut intervals: Vec<(f64, f64)> = vec![(0.0, 0.0); works.len()];
+        loop {
+            for s in 0..s_count {
+                while let Some(&item) = queues[s].front() {
+                    match item {
+                        LItem::Begin { w, launch } => {
+                            let coord = if launch { cfg.coordination_overhead } else { 0.0 };
+                            for r in 0..p {
+                                clocks[s][r] = works[w].ready[r].max(clocks[s][r]) + coord;
+                            }
+                            intervals[w].0 = clocks[s].iter().cloned().fold(0.0, f64::max);
+                        }
+                        LItem::End(w) => {
+                            intervals[w].1 = clocks[s].iter().cloned().fold(0.0, f64::max);
+                        }
+                        LItem::Op { w, op } => match &patterns[pattern_of[w]].1[op] {
+                            CommOp::SyncAll => {
+                                let tmax = clocks[s].iter().cloned().fold(0.0, f64::max);
+                                for t in clocks[s].iter_mut() {
+                                    *t = tmax;
+                                }
+                            }
+                            CommOp::Round(msgs) if msgs.is_empty() => {}
+                            _ => break,
+                        },
+                    }
+                    queues[s].pop_front();
+                }
+            }
+            let mut cands: Vec<(usize, f64)> = Vec::new();
+            for s in 0..s_count {
+                if let Some(&LItem::Op { w, op }) = queues[s].front() {
+                    let ready = op_ready(&patterns[pattern_of[w]].1[op], &clocks[s], net);
+                    cands.push((s, ready));
+                }
+            }
+            let Some(t0) = cands.iter().map(|&(_, r)| r).min_by(|a, b| a.total_cmp(b))
+            else {
+                break;
+            };
+            let chosen: Vec<usize> = cands
+                .iter()
+                .filter(|&&(_, r)| r <= t0 + STREAM_MERGE_WINDOW)
+                .map(|&(s, _)| s)
+                .collect();
+            let mut reqs: Vec<FlowReq> = Vec::new();
+            let mut parts: Vec<(usize, CommOp, Vec<f64>, usize, usize)> = Vec::new();
+            for &s in &chosen {
+                let Some(&LItem::Op { w, op }) = queues[s].front() else {
+                    unreachable!("candidate stream lost its op");
+                };
+                let op = patterns[pattern_of[w]].1[op].clone();
+                let snapshot = clocks[s].clone();
+                let first = reqs.len();
+                push_op_flows(&mut reqs, &op, &snapshot, placement, net);
+                let n_flows = reqs.len() - first;
+                parts.push((s, op, snapshot, first, n_flows));
+            }
+            let times = net.transfer_batch(&reqs);
+            for (s, op, snapshot, first, n_flows) in parts {
+                let slice = &times[first..first + n_flows];
+                match &op {
+                    CommOp::Round(msgs) => apply_round(&mut clocks[s], &snapshot, msgs, slice),
+                    CommOp::P2p(src, dst, _) => {
+                        clocks[s][*src] = clocks[s][*src].max(slice[0].send_release);
+                        clocks[s][*dst] = clocks[s][*dst].max(slice[0].recv_complete);
+                    }
+                    CommOp::Sendrecv(a, b, _) => {
+                        let done = slice[0].recv_complete.max(slice[1].recv_complete);
+                        clocks[s][*a] = done;
+                        clocks[s][*b] = done;
+                    }
+                    CommOp::SyncAll => unreachable!("SyncAll is engine-free"),
+                }
+                queues[s].pop_front();
+            }
+        }
+        let mut comm_done = vec![0.0; p];
+        for s in 0..s_count {
+            for r in 0..p {
+                comm_done[r] = comm_done[r].max(clocks[s][r]);
+            }
+        }
+        StepTimeline { comm_done, intervals }
+    }
+
+    #[test]
+    fn dp_through_ir_matches_legacy_scheduler_bit_for_bit() {
+        // The refactor contract: lowering bucketed DP to the IR and
+        // executing the graph reproduces the pre-IR scheduler exactly —
+        // every comm_done clock and every interval endpoint, to the bit,
+        // on both fabrics, serialized and multi-stream, chunked or not.
+        let gpus = 8;
+        for kind in [FabricKind::EthernetRoce25, FabricKind::OmniPath100] {
+            for streams in [1usize, 4] {
+                for chunk in [None, Some(60_000.0)] {
+                    let buckets: Vec<BucketWork> = (0..5)
+                        .map(|i| bucket(30_000 + 17_000 * i, 0.003 * i as f64, gpus))
+                        .collect();
+                    let mut c = cfg(streams);
+                    c.chunk_bytes = chunk;
+                    // Cache off on both sides: the oracle copies predate
+                    // the cache tiers, and cache on/off bit-equality is
+                    // already pinned by the cache tests above.
+                    let cluster = ClusterSpec::txgaia();
+                    let placement = Placement::gpus(&cluster, gpus).unwrap();
+                    let opts = TransportOptions { schedule_cache: false, ..Default::default() };
+                    let mut net = NetSim::new(fabric(kind), cluster.clone(), opts.clone());
+                    let got = run_step(&mut net, &placement, &RingAllreduce, &buckets, &c);
+                    let mut net2 = NetSim::new(fabric(kind), cluster, opts);
+                    let want = if streams <= 1 {
+                        legacy_serialized(&mut net2, &placement, &RingAllreduce, &buckets, &c)
+                    } else {
+                        legacy_multi_stream(&mut net2, &placement, &RingAllreduce, &buckets, &c)
+                    };
+                    let tag = format!("{kind:?} streams={streams} chunk={chunk:?}");
+                    assert_eq!(got.comm_done.len(), want.comm_done.len(), "{tag}");
+                    for (a, b) in got.comm_done.iter().zip(&want.comm_done) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "comm_done diverged: {tag}");
+                    }
+                    assert_eq!(got.intervals.len(), want.intervals.len(), "{tag}");
+                    for ((a0, a1), (b0, b1)) in got.intervals.iter().zip(&want.intervals) {
+                        assert_eq!(a0.to_bits(), b0.to_bits(), "interval start: {tag}");
+                        assert_eq!(a1.to_bits(), b1.to_bits(), "interval end: {tag}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn group_collective_leaves_outsiders_untouched() {
+        // A collective over a rank subgroup (pipeline replicas, MoE
+        // expert groups) must not advance — or barrier-sync — the clocks
+        // of ranks outside the group.
+        use crate::workload::IrNode;
+        let gpus = 8;
+        let (mut net, placement) = world(gpus, FabricKind::EthernetRoce25);
+        let graph = WorkloadGraph {
+            world: gpus,
+            nodes: vec![IrNode {
+                op: IrOp::Collective {
+                    kind: CollKind::Allreduce,
+                    elems: 100_000,
+                    group: Some(vec![0, 1, 2, 3]),
+                },
+                deps: vec![],
+                ready: vec![],
+                stream: 0,
+                launch: true,
+            }],
+        };
+        graph.validate().unwrap();
+        let out = execute(&mut net, &placement, &Hierarchical::default(), &graph, &cfg(1));
+        for r in 0..4 {
+            assert!(out.done[r] > 0.0, "member rank {r} never communicated");
+        }
+        for r in 4..8 {
+            assert_eq!(out.done[r], 0.0, "outsider rank {r} was dragged into the group");
+        }
+    }
+
+    #[test]
+    fn cross_stream_dependency_orders_execution() {
+        // A dependency edge between nodes on different streams is a
+        // happens-before: the dependent node begins at or after the
+        // dependency's end, even though the streams are otherwise free
+        // to overlap.
+        use crate::workload::IrNode;
+        let gpus = 8;
+        let (mut net, placement) = world(gpus, FabricKind::EthernetRoce25);
+        let mk = |deps: Vec<usize>, stream: usize| IrNode {
+            op: IrOp::Collective { kind: CollKind::Allreduce, elems: 200_000, group: None },
+            deps,
+            ready: vec![],
+            stream,
+            launch: true,
+        };
+        let graph = WorkloadGraph { world: gpus, nodes: vec![mk(vec![], 0), mk(vec![0], 1)] };
+        graph.validate().unwrap();
+        let out = execute(&mut net, &placement, &RingAllreduce, &graph, &cfg(2));
+        assert!(
+            out.comm_intervals[1].0 >= out.comm_intervals[0].1,
+            "dependent began {:?} before dependency ended {:?}",
+            out.comm_intervals[1],
+            out.comm_intervals[0]
+        );
+    }
+
+    #[test]
+    fn compute_spans_gate_dependents_and_report_done() {
+        // A compute node advances only its own ranks' clocks; a
+        // dependent collective cannot begin before the span finishes,
+        // and `compute_done` reports the per-rank finish times.
+        use crate::workload::IrNode;
+        let gpus = 4;
+        let (mut net, placement) = world(gpus, FabricKind::EthernetRoce25);
+        let graph = WorkloadGraph {
+            world: gpus,
+            nodes: vec![
+                IrNode {
+                    op: IrOp::Compute { secs: vec![(0, 0.005), (1, 0.002)] },
+                    deps: vec![],
+                    ready: vec![],
+                    stream: 0,
+                    launch: false,
+                },
+                IrNode {
+                    op: IrOp::Collective {
+                        kind: CollKind::Allreduce,
+                        elems: 50_000,
+                        group: None,
+                    },
+                    deps: vec![0],
+                    ready: vec![],
+                    stream: 0,
+                    launch: true,
+                },
+            ],
+        };
+        graph.validate().unwrap();
+        let out = execute(&mut net, &placement, &RingAllreduce, &graph, &cfg(1));
+        assert_eq!(out.compute_done[0], 0.005);
+        assert_eq!(out.compute_done[1], 0.002);
+        assert_eq!(out.compute_done[2], 0.0);
+        // One comm node → one interval, beginning after the span plus
+        // the launch's coordination cycle.
+        assert_eq!(out.comm_intervals.len(), 1);
+        assert!(out.comm_intervals[0].0 >= 0.005 + 1.0e-3 - 1e-12);
+        assert!(out.done.iter().all(|&d| d >= 0.005));
     }
 }

@@ -1,0 +1,769 @@
+//! Workload IR: a DAG of compute and communication ops.
+//!
+//! The paper benchmarks fabrics for bucketed data-parallel allreduce,
+//! but "which fabric do I need" is a property of the workload's
+//! compute/communication dependency graph (Shi et al.'s DAG model of
+//! synchronous SGD). This module promotes the scheduler's `CommOp`
+//! record/replay layer to that graph: a [`WorkloadGraph`] is a list of
+//! [`IrNode`]s — compute spans, collectives, or point-to-point sends —
+//! with explicit dependency edges, executed by
+//! [`crate::trainer::scheduler::execute`] over the unchanged fluid
+//! event engine.
+//!
+//! # Node/edge model
+//!
+//! * Every node carries a `stream` id. Nodes sharing a stream execute
+//!   **in node-index order** (the stream is a virtual command queue with
+//!   per-rank clocks, exactly the multi-stream scheduler's channels);
+//!   nodes on different streams run concurrently and their engine
+//!   batches merge within
+//!   [`crate::trainer::scheduler::STREAM_MERGE_WINDOW`].
+//! * `deps` are cross-node happens-before edges: a node begins only
+//!   after every dependency has finished, and its stream's clocks are
+//!   raised to the dependency's per-rank finish clocks. Same-stream
+//!   ordering needs no edges (the queue serializes); an edge pointing
+//!   *forward* on the same stream is rejected by [`WorkloadGraph::validate`]
+//!   because it can never be satisfied.
+//! * `ready` is an optional per-rank external readiness floor (gradient
+//!   availability during backprop); empty means zero for every rank.
+//! * `launch` marks a fresh collective launch that pays the
+//!   coordination cycle (Horovod negotiation + NCCL launch); follow-on
+//!   chunks of one logical launch leave it false.
+//!
+//! # Lowering contract
+//!
+//! [`lower_dp`] compiles the trainer's fusion buckets into the IR such
+//! that executing the graph is **bit-for-bit identical** to the
+//! pre-refactor coordinator at any stream count: one `Allreduce` node
+//! per chunk, no edges, round-robin stream assignment, the same
+//! split/launch flags ([`crate::trainer::scheduler`] pins this with
+//! verbatim copies of the legacy paths). [`lower_zero`],
+//! [`lower_pipeline`] and [`lower_moe`] emit ZeRO-style sharded steps,
+//! a 1F1B pipeline schedule and MoE all-to-all on top of the same
+//! executor.
+
+use crate::collectives::chunk_ranges;
+use crate::trainer::scheduler::{split_chunks, BucketWork};
+use crate::util::hash::{fnv1a_str, fnv1a_u64 as fnv_step};
+
+/// Collective kinds a [`IrOp::Collective`] node can request. `Allreduce`
+/// runs the session's configured [`crate::collectives::Collective`]
+/// strategy; the others run the library's ring primitives
+/// ([`crate::collectives::primitives`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollKind {
+    Allreduce,
+    ReduceScatter,
+    AllGather,
+    AllToAll,
+}
+
+impl CollKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollKind::Allreduce => "allreduce",
+            CollKind::ReduceScatter => "reduce-scatter",
+            CollKind::AllGather => "all-gather",
+            CollKind::AllToAll => "all-to-all",
+        }
+    }
+}
+
+/// One IR operation.
+#[derive(Clone, Debug)]
+pub enum IrOp {
+    /// A compute span: rank `r` is busy for `secs` seconds (sparse —
+    /// ranks not listed are untouched). Engine-free.
+    Compute { secs: Vec<(usize, f64)> },
+    /// A collective over `group` (`None` = all ranks) moving `elems`
+    /// f32 elements per rank.
+    Collective { kind: CollKind, elems: usize, group: Option<Vec<usize>> },
+    /// A point-to-point transfer (pipeline stage edge), in bytes.
+    Send { src: usize, dst: usize, bytes: f64 },
+}
+
+/// One node of the workload graph (see the module docs for the field
+/// semantics).
+#[derive(Clone, Debug)]
+pub struct IrNode {
+    pub op: IrOp,
+    /// Indices of nodes that must finish before this node begins.
+    pub deps: Vec<usize>,
+    /// Per-rank readiness floor; empty = 0.0 everywhere.
+    pub ready: Vec<f64>,
+    /// Virtual command queue this node executes on.
+    pub stream: usize,
+    /// Fresh collective launch: pays the coordination cycle.
+    pub launch: bool,
+}
+
+/// A DAG workload over `world` ranks.
+#[derive(Clone, Debug)]
+pub struct WorkloadGraph {
+    pub world: usize,
+    pub nodes: Vec<IrNode>,
+}
+
+impl WorkloadGraph {
+    /// Structural sanity: indices in range, readiness vectors sized,
+    /// groups within the world, acyclic, and no same-stream forward
+    /// edge (which the in-order stream queues could never satisfy).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let n = self.nodes.len();
+        anyhow::ensure!(self.world >= 1, "workload graph over an empty world");
+        for (i, node) in self.nodes.iter().enumerate() {
+            anyhow::ensure!(
+                node.ready.is_empty() || node.ready.len() == self.world,
+                "node {i}: ready has {} entries for a {}-rank world",
+                node.ready.len(),
+                self.world
+            );
+            for &d in &node.deps {
+                anyhow::ensure!(d < n, "node {i}: dep {d} out of range ({n} nodes)");
+                anyhow::ensure!(d != i, "node {i}: depends on itself");
+                anyhow::ensure!(
+                    self.nodes[d].stream != node.stream || d < i,
+                    "node {i}: same-stream dep {d} comes later in queue order"
+                );
+            }
+            match &node.op {
+                IrOp::Compute { secs } => {
+                    for &(r, dur) in secs {
+                        anyhow::ensure!(r < self.world, "node {i}: compute rank {r} out of range");
+                        anyhow::ensure!(dur >= 0.0, "node {i}: negative compute span");
+                    }
+                }
+                IrOp::Collective { group, .. } => {
+                    if let Some(g) = group {
+                        anyhow::ensure!(!g.is_empty(), "node {i}: empty collective group");
+                        for &r in g {
+                            anyhow::ensure!(r < self.world, "node {i}: group rank {r} out of range");
+                        }
+                        let mut seen = vec![false; self.world];
+                        for &r in g {
+                            anyhow::ensure!(!seen[r], "node {i}: duplicate group rank {r}");
+                            seen[r] = true;
+                        }
+                    }
+                }
+                IrOp::Send { src, dst, bytes } => {
+                    anyhow::ensure!(src != dst, "node {i}: send to self");
+                    anyhow::ensure!(
+                        *src < self.world && *dst < self.world,
+                        "node {i}: send endpoint out of range"
+                    );
+                    anyhow::ensure!(*bytes >= 0.0, "node {i}: negative send size");
+                }
+            }
+        }
+        // Kahn's algorithm: every node must be reachable once its deps
+        // resolve — leftovers mean a dependency cycle.
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|x| x.deps.len()).collect();
+        let mut dependents: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &d in &node.deps {
+                dependents[d].push(i);
+            }
+        }
+        let mut frontier: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut done = 0;
+        while let Some(i) = frontier.pop() {
+            done += 1;
+            for &j in &dependents[i] {
+                indeg[j] -= 1;
+                if indeg[j] == 0 {
+                    frontier.push(j);
+                }
+            }
+        }
+        anyhow::ensure!(done == n, "workload graph has a dependency cycle ({done}/{n} sorted)");
+        Ok(())
+    }
+
+    /// Structural signature of the graph (FNV-1a over every node's op,
+    /// edges, streams and launch flags — `ready` floors excluded, they
+    /// vary per step). This identifies the *shape* a schedule was built
+    /// for; the executor's pattern tier keys remain per-collective
+    /// (algorithm, elems, group, world), so two graphs sharing nodes
+    /// share cache entries.
+    pub fn signature(&self) -> u64 {
+        let mut h = fnv_step(fnv1a_str("workload-graph"), self.world as u64);
+        for node in &self.nodes {
+            h = match &node.op {
+                IrOp::Compute { secs } => {
+                    let mut x = fnv_step(h, 1);
+                    for &(r, dur) in secs {
+                        x = fnv_step(fnv_step(x, r as u64), dur.to_bits());
+                    }
+                    x
+                }
+                IrOp::Collective { kind, elems, group } => {
+                    let mut x = fnv_step(fnv_step(h, 2), fnv1a_str(kind.name()));
+                    x = fnv_step(x, *elems as u64);
+                    if let Some(g) = group {
+                        x = fnv_step(x, g.len() as u64);
+                        for &r in g {
+                            x = fnv_step(x, r as u64);
+                        }
+                    }
+                    x
+                }
+                IrOp::Send { src, dst, bytes } => {
+                    let x = fnv_step(fnv_step(h, 3), ((*src as u64) << 24) ^ *dst as u64);
+                    fnv_step(x, bytes.to_bits())
+                }
+            };
+            for &d in &node.deps {
+                h = fnv_step(h, 0xD00 ^ d as u64);
+            }
+            h = fnv_step(h, ((node.stream as u64) << 1) | node.launch as u64);
+        }
+        h
+    }
+
+    /// If this graph is a pure serialized-DP step — only full-world
+    /// `Allreduce` nodes, no edges, explicit ready floors — return the
+    /// equivalent `(BucketWork, launch)` list so the executor can take
+    /// the serialized coordinator path (and its timing-cache tier)
+    /// unchanged. Anything else returns `None`.
+    pub(crate) fn serial_dp_works(&self) -> Option<Vec<(BucketWork, bool)>> {
+        let mut works = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let IrOp::Collective { kind: CollKind::Allreduce, elems, group: None } = &node.op
+            else {
+                return None;
+            };
+            if !node.deps.is_empty() || node.ready.len() != self.world {
+                return None;
+            }
+            works.push((
+                BucketWork {
+                    elems: *elems,
+                    bytes: *elems as f64 * crate::collectives::BYTES_PER_ELEM,
+                    ready: node.ready.clone(),
+                },
+                node.launch,
+            ));
+        }
+        Some(works)
+    }
+}
+
+/// Round-robin stream count for `n` work items over `num_streams`
+/// channels (the multi-stream scheduler's rule, kept verbatim).
+fn stream_count(num_streams: usize, items: usize) -> usize {
+    num_streams.min(items.max(1))
+}
+
+/// Lower bucketed data-parallel allreduce to the IR: one `Allreduce`
+/// node per chunk, buckets assigned round-robin to streams, chunking and
+/// launch flags exactly as [`crate::trainer::scheduler::split_chunks`]
+/// produces them. Executing this graph is bit-for-bit the pre-refactor
+/// coordinator path at any stream count.
+pub fn lower_dp(
+    buckets: &[BucketWork],
+    world: usize,
+    num_streams: usize,
+    chunk_bytes: Option<f64>,
+) -> WorkloadGraph {
+    let s_count = stream_count(num_streams, buckets.len());
+    let mut nodes = Vec::with_capacity(buckets.len());
+    for (b, bucket) in buckets.iter().enumerate() {
+        for (chunk, launch) in split_chunks(std::slice::from_ref(bucket), chunk_bytes) {
+            nodes.push(IrNode {
+                op: IrOp::Collective { kind: CollKind::Allreduce, elems: chunk.elems, group: None },
+                deps: Vec::new(),
+                ready: chunk.ready,
+                stream: b % s_count,
+                launch,
+            });
+        }
+    }
+    WorkloadGraph { world, nodes }
+}
+
+/// Lower a ZeRO-style sharded step: per bucket, reduce-scatter the
+/// gradients, run the bucket's optimizer shard (1/world of the work) on
+/// every rank, then all-gather the updated parameters. Chunk-pipelining
+/// does not apply (the RS/AG pair is already segmented by rank);
+/// `optimizer_secs` is the *full* (unsharded) optimizer time, divided
+/// across buckets by element share and across ranks by the world size.
+pub fn lower_zero(
+    buckets: &[BucketWork],
+    world: usize,
+    optimizer_secs: f64,
+    num_streams: usize,
+) -> WorkloadGraph {
+    let s_count = stream_count(num_streams, buckets.len());
+    let total_elems: usize = buckets.iter().map(|b| b.elems).sum();
+    let mut nodes = Vec::with_capacity(3 * buckets.len());
+    for (b, bucket) in buckets.iter().enumerate() {
+        let stream = b % s_count;
+        let frac = if total_elems > 0 { bucket.elems as f64 / total_elems as f64 } else { 0.0 };
+        let shard_secs = optimizer_secs * frac / world as f64;
+        let rs = nodes.len();
+        nodes.push(IrNode {
+            op: IrOp::Collective {
+                kind: CollKind::ReduceScatter,
+                elems: bucket.elems,
+                group: None,
+            },
+            deps: Vec::new(),
+            ready: bucket.ready.clone(),
+            stream,
+            launch: true,
+        });
+        let opt = nodes.len();
+        nodes.push(IrNode {
+            op: IrOp::Compute { secs: (0..world).map(|r| (r, shard_secs)).collect() },
+            deps: vec![rs],
+            ready: Vec::new(),
+            stream,
+            launch: false,
+        });
+        nodes.push(IrNode {
+            op: IrOp::Collective { kind: CollKind::AllGather, elems: bucket.elems, group: None },
+            deps: vec![opt],
+            ready: Vec::new(),
+            stream,
+            launch: true,
+        });
+    }
+    WorkloadGraph { world, nodes }
+}
+
+/// Lower a 1F1B pipeline-parallel step. The world is split into
+/// `world / stages` data-parallel replicas of a `stages`-deep pipeline
+/// (rank `w * stages + s` holds replica `w`'s stage `s`); each replica
+/// runs `microbatches` microbatches through the classic 1F1B schedule
+/// (warmup of `min(M, stages - s)` forwards, then alternating
+/// backward/forward, then the backward drain), with `activation_bytes`
+/// moving over a point-to-point stage edge per microbatch boundary.
+/// Stage edges ride the compute stream without a negotiation cycle
+/// (`launch = false`); when there is more than one replica, each stage's
+/// gradient shard (`grad_elems / stages` elements) is allreduced across
+/// replicas on its own stream after that stage's last backward.
+///
+/// `fwd`/`bwd` are the per-rank *full-model* compute times; each
+/// microbatch stage span costs `1 / (stages * microbatches)` of them.
+pub fn lower_pipeline(
+    world: usize,
+    stages: usize,
+    microbatches: usize,
+    fwd: &[f64],
+    bwd: &[f64],
+    activation_bytes: f64,
+    grad_elems: usize,
+) -> anyhow::Result<WorkloadGraph> {
+    anyhow::ensure!(stages >= 2, "pipeline needs at least 2 stages, got {stages}");
+    anyhow::ensure!(microbatches >= 1, "pipeline needs at least 1 microbatch");
+    anyhow::ensure!(
+        world % stages == 0 && world >= stages,
+        "world {world} not divisible into {stages} pipeline stages"
+    );
+    anyhow::ensure!(fwd.len() == world && bwd.len() == world, "per-rank cost vectors sized wrong");
+    let replicas = world / stages;
+    let rank = |w: usize, s: usize| w * stages + s;
+    let m_count = microbatches;
+
+    // Pass 1: emit node protos per stream (in 1F1B queue order) with
+    // symbolic dep keys; pass 2 resolves keys to indices. Cross-stream
+    // edges may point forward (the executor blocks the stream), but keys
+    // must exist by the time we resolve — emitting all streams first
+    // guarantees that.
+    #[derive(Clone, Copy, PartialEq, Eq, Hash)]
+    enum Key {
+        F(usize, usize, usize),
+        B(usize, usize, usize),
+        SendF(usize, usize, usize),
+        SendB(usize, usize, usize),
+    }
+    let mut index: std::collections::HashMap<Key, usize> = std::collections::HashMap::new();
+    let mut protos: Vec<(IrOp, Vec<Key>, usize, bool)> = Vec::new();
+    for w in 0..replicas {
+        for s in 0..stages {
+            let r = rank(w, s);
+            let f_cost = fwd[r] / (stages * m_count) as f64;
+            let b_cost = bwd[r] / (stages * m_count) as f64;
+            let mut emit_f = |protos: &mut Vec<_>, index: &mut std::collections::HashMap<_, _>,
+                              m: usize| {
+                let deps = if s > 0 { vec![Key::SendF(w, s - 1, m)] } else { Vec::new() };
+                index.insert(Key::F(w, s, m), protos.len());
+                protos.push((IrOp::Compute { secs: vec![(r, f_cost)] }, deps, r, false));
+                if s + 1 < stages {
+                    index.insert(Key::SendF(w, s, m), protos.len());
+                    protos.push((
+                        IrOp::Send { src: r, dst: rank(w, s + 1), bytes: activation_bytes },
+                        vec![Key::F(w, s, m)],
+                        r,
+                        false,
+                    ));
+                }
+            };
+            let mut emit_b = |protos: &mut Vec<_>, index: &mut std::collections::HashMap<_, _>,
+                              m: usize| {
+                let deps = if s + 1 < stages {
+                    vec![Key::SendB(w, s + 1, m)]
+                } else {
+                    vec![Key::F(w, s, m)]
+                };
+                index.insert(Key::B(w, s, m), protos.len());
+                protos.push((IrOp::Compute { secs: vec![(r, b_cost)] }, deps, r, false));
+                if s > 0 {
+                    index.insert(Key::SendB(w, s, m), protos.len());
+                    protos.push((
+                        IrOp::Send { src: r, dst: rank(w, s - 1), bytes: activation_bytes },
+                        vec![Key::B(w, s, m)],
+                        r,
+                        false,
+                    ));
+                }
+            };
+            // 1F1B: warmup forwards, steady-state one-backward-one-forward,
+            // backward drain.
+            let warmup = m_count.min(stages - s);
+            let mut nf = 0;
+            let mut nb = 0;
+            while nf < warmup {
+                emit_f(&mut protos, &mut index, nf);
+                nf += 1;
+            }
+            while nb < m_count {
+                emit_b(&mut protos, &mut index, nb);
+                nb += 1;
+                if nf < m_count {
+                    emit_f(&mut protos, &mut index, nf);
+                    nf += 1;
+                }
+            }
+        }
+    }
+    let mut nodes: Vec<IrNode> = protos
+        .into_iter()
+        .map(|(op, deps, stream, launch)| IrNode {
+            op,
+            deps: deps.iter().map(|k| index[k]).collect(),
+            ready: Vec::new(),
+            stream,
+            launch,
+        })
+        .collect();
+    if replicas > 1 {
+        let shard = chunk_ranges(grad_elems, stages);
+        for s in 0..stages {
+            let group: Vec<usize> = (0..replicas).map(|w| rank(w, s)).collect();
+            let deps: Vec<usize> =
+                (0..replicas).map(|w| index[&Key::B(w, s, m_count - 1)]).collect();
+            nodes.push(IrNode {
+                op: IrOp::Collective {
+                    kind: CollKind::Allreduce,
+                    elems: shard[s].len(),
+                    group: Some(group),
+                },
+                deps,
+                ready: Vec::new(),
+                stream: world + s,
+                launch: true,
+            });
+        }
+    }
+    Ok(WorkloadGraph { world, nodes })
+}
+
+/// Lower an MoE step: the forward and backward passes are each split
+/// into `layers + 1` compute segments with a dispatch + combine
+/// all-to-all pair (`a2a_elems` elements per rank each) at every MoE
+/// layer boundary, all serialized on stream 0 (expert compute is folded
+/// into the following segment); the dense gradients then allreduce as
+/// usual, one bucket per stream round-robin, gated on the last backward
+/// segment (no intra-backward overlap — the A2A chain owns the wire
+/// during backprop).
+pub fn lower_moe(
+    world: usize,
+    fwd: &[f64],
+    bwd: &[f64],
+    bucket_elems: &[usize],
+    layers: usize,
+    a2a_elems: usize,
+    num_streams: usize,
+) -> anyhow::Result<WorkloadGraph> {
+    anyhow::ensure!(layers >= 1, "moe needs at least one expert layer");
+    anyhow::ensure!(fwd.len() == world && bwd.len() == world, "per-rank cost vectors sized wrong");
+    let segs = layers + 1;
+    let mut nodes: Vec<IrNode> = Vec::new();
+    let mut chain = |cost: &[f64], nodes: &mut Vec<IrNode>| {
+        for seg in 0..segs {
+            nodes.push(IrNode {
+                op: IrOp::Compute {
+                    secs: (0..world).map(|r| (r, cost[r] / segs as f64)).collect(),
+                },
+                deps: Vec::new(),
+                ready: Vec::new(),
+                stream: 0,
+                launch: false,
+            });
+            if seg + 1 < segs {
+                for _ in 0..2 {
+                    // Dispatch to experts, then combine back.
+                    nodes.push(IrNode {
+                        op: IrOp::Collective {
+                            kind: CollKind::AllToAll,
+                            elems: a2a_elems,
+                            group: None,
+                        },
+                        deps: Vec::new(),
+                        ready: Vec::new(),
+                        stream: 0,
+                        launch: true,
+                    });
+                }
+            }
+        }
+    };
+    chain(fwd, &mut nodes);
+    chain(bwd, &mut nodes);
+    let last_bwd = nodes.len() - 1;
+    let s_count = stream_count(num_streams, bucket_elems.len());
+    for (b, &elems) in bucket_elems.iter().enumerate() {
+        nodes.push(IrNode {
+            op: IrOp::Collective { kind: CollKind::Allreduce, elems, group: None },
+            deps: vec![last_bwd],
+            ready: Vec::new(),
+            stream: b % s_count,
+            launch: true,
+        });
+    }
+    Ok(WorkloadGraph { world, nodes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bucket(elems: usize, ready: f64, world: usize) -> BucketWork {
+        BucketWork {
+            elems,
+            bytes: elems as f64 * crate::collectives::BYTES_PER_ELEM,
+            ready: vec![ready; world],
+        }
+    }
+
+    #[test]
+    fn validate_rejects_structural_nonsense() {
+        let ar = |deps: Vec<usize>, stream: usize| IrNode {
+            op: IrOp::Collective { kind: CollKind::Allreduce, elems: 10, group: None },
+            deps,
+            ready: Vec::new(),
+            stream,
+            launch: true,
+        };
+        // Dep out of range.
+        let g = WorkloadGraph { world: 4, nodes: vec![ar(vec![7], 0)] };
+        assert!(g.validate().is_err());
+        // Self-dependency.
+        let g = WorkloadGraph { world: 4, nodes: vec![ar(vec![0], 0)] };
+        assert!(g.validate().is_err());
+        // Same-stream forward edge: queue order can never satisfy it.
+        let g = WorkloadGraph { world: 4, nodes: vec![ar(vec![1], 0), ar(vec![], 0)] };
+        assert!(g.validate().is_err());
+        // Cross-stream forward edge is fine (the stream blocks).
+        let g = WorkloadGraph { world: 4, nodes: vec![ar(vec![1], 0), ar(vec![], 1)] };
+        g.validate().unwrap();
+        // Cycle over two streams.
+        let g = WorkloadGraph { world: 4, nodes: vec![ar(vec![1], 0), ar(vec![0], 1)] };
+        assert!(g.validate().is_err());
+        // Group rank out of range / duplicated.
+        let grp = |group: Vec<usize>| WorkloadGraph {
+            world: 4,
+            nodes: vec![IrNode {
+                op: IrOp::Collective { kind: CollKind::Allreduce, elems: 10, group: Some(group) },
+                deps: Vec::new(),
+                ready: Vec::new(),
+                stream: 0,
+                launch: true,
+            }],
+        };
+        assert!(grp(vec![0, 4]).validate().is_err());
+        assert!(grp(vec![1, 1]).validate().is_err());
+        grp(vec![1, 3]).validate().unwrap();
+        // Send to self / out of range; ready vector sized wrong.
+        let send = IrNode {
+            op: IrOp::Send { src: 2, dst: 2, bytes: 1.0 },
+            deps: Vec::new(),
+            ready: Vec::new(),
+            stream: 0,
+            launch: false,
+        };
+        assert!(WorkloadGraph { world: 4, nodes: vec![send] }.validate().is_err());
+        let mut short = ar(vec![], 0);
+        short.ready = vec![0.0; 3];
+        assert!(WorkloadGraph { world: 4, nodes: vec![short] }.validate().is_err());
+    }
+
+    #[test]
+    fn lower_dp_mirrors_the_scheduler_rules() {
+        let world = 8;
+        let buckets = vec![bucket(1000, 0.0, world), bucket(500, 0.001, world)];
+        let g = lower_dp(&buckets, world, 2, None);
+        g.validate().unwrap();
+        assert_eq!(g.nodes.len(), 2);
+        assert_eq!(g.nodes[0].stream, 0);
+        assert_eq!(g.nodes[1].stream, 1);
+        assert!(g.nodes.iter().all(|n| n.launch && n.deps.is_empty()));
+        // Chunking expands a bucket in place, first chunk owns the launch.
+        let g = lower_dp(&buckets[..1], world, 2, Some(1000.0));
+        assert_eq!(g.nodes.len(), 4);
+        let launches: Vec<bool> = g.nodes.iter().map(|n| n.launch).collect();
+        assert_eq!(launches, vec![true, false, false, false]);
+        assert!(g.nodes.iter().all(|n| n.stream == 0), "chunks stay on the bucket's stream");
+        let total: usize = g
+            .nodes
+            .iter()
+            .map(|n| match &n.op {
+                IrOp::Collective { elems, .. } => *elems,
+                _ => 0,
+            })
+            .sum();
+        assert_eq!(total, 1000);
+        // Round-trip back to the serialized coordinator's work list.
+        let g = lower_dp(&buckets, world, 1, None);
+        let works = g.serial_dp_works().unwrap();
+        assert_eq!(works.len(), 2);
+        assert_eq!(works[0].0.elems, 1000);
+        assert_eq!(works[1].0.ready, buckets[1].ready);
+    }
+
+    #[test]
+    fn serial_dp_rejects_non_dp_graphs() {
+        let world = 4;
+        let buckets = vec![bucket(100, 0.0, world)];
+        let zero = lower_zero(&buckets, world, 0.01, 1);
+        assert!(zero.serial_dp_works().is_none());
+        let moe = lower_moe(world, &[0.1; 4], &[0.2; 4], &[100], 1, 64, 1).unwrap();
+        assert!(moe.serial_dp_works().is_none());
+    }
+
+    #[test]
+    fn lower_zero_chains_rs_opt_ag() {
+        let world = 8;
+        let buckets = vec![bucket(3000, 0.002, world), bucket(1000, 0.004, world)];
+        let g = lower_zero(&buckets, world, 0.008, 2);
+        g.validate().unwrap();
+        assert_eq!(g.nodes.len(), 6);
+        for b in 0..2 {
+            let (rs, opt, ag) = (3 * b, 3 * b + 1, 3 * b + 2);
+            assert!(matches!(
+                g.nodes[rs].op,
+                IrOp::Collective { kind: CollKind::ReduceScatter, .. }
+            ));
+            assert!(matches!(g.nodes[ag].op, IrOp::Collective { kind: CollKind::AllGather, .. }));
+            assert_eq!(g.nodes[opt].deps, vec![rs]);
+            assert_eq!(g.nodes[ag].deps, vec![opt]);
+            assert!(g.nodes[rs].launch && g.nodes[ag].launch);
+        }
+        // The optimizer shards sum to optimizer / world on every rank.
+        let mut per_rank = vec![0.0; world];
+        for n in &g.nodes {
+            if let IrOp::Compute { secs } = &n.op {
+                for &(r, d) in secs {
+                    per_rank[r] += d;
+                }
+            }
+        }
+        for d in per_rank {
+            assert!((d - 0.008 / world as f64).abs() < 1e-15, "shard sum {d}");
+        }
+    }
+
+    #[test]
+    fn lower_pipeline_emits_1f1b() {
+        let world = 8;
+        let stages = 4;
+        let m = 6;
+        let fwd = vec![0.04; world];
+        let bwd = vec![0.08; world];
+        let g = lower_pipeline(world, stages, m, &fwd, &bwd, 2e6, 25_000_000).unwrap();
+        g.validate().unwrap();
+        // Per replica: m F + m B per stage, a forward send per non-last
+        // stage and a backward send per non-first stage, plus one grad
+        // allreduce per stage across the 2 replicas.
+        let computes =
+            g.nodes.iter().filter(|n| matches!(n.op, IrOp::Compute { .. })).count();
+        let sends = g.nodes.iter().filter(|n| matches!(n.op, IrOp::Send { .. })).count();
+        let ars = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, IrOp::Collective { kind: CollKind::Allreduce, .. }))
+            .count();
+        assert_eq!(computes, 2 * stages * m * 2);
+        assert_eq!(sends, 2 * 2 * (stages - 1) * m);
+        assert_eq!(ars, stages);
+        // Grad allreduces are grouped per stage across replicas and the
+        // shards partition the gradient.
+        let mut shard_total = 0;
+        for n in &g.nodes {
+            if let IrOp::Collective { kind: CollKind::Allreduce, elems, group } = &n.op {
+                let g = group.as_ref().expect("stage allreduce must be grouped");
+                assert_eq!(g.len(), 2);
+                assert_eq!(g[1] - g[0], stages);
+                shard_total += elems;
+            }
+        }
+        assert_eq!(shard_total, 25_000_000);
+        // Single replica: pure pipeline, no gradient exchange.
+        let solo = lower_pipeline(stages, stages, m, &fwd[..stages], &bwd[..stages], 2e6, 100)
+            .unwrap();
+        solo.validate().unwrap();
+        assert!(!solo
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, IrOp::Collective { .. })));
+        // Invalid shapes are loud.
+        assert!(lower_pipeline(6, 4, m, &[0.0; 6], &[0.0; 6], 1.0, 10).is_err());
+        assert!(lower_pipeline(4, 1, m, &[0.0; 4], &[0.0; 4], 1.0, 10).is_err());
+    }
+
+    #[test]
+    fn lower_moe_interleaves_a2a() {
+        let world = 4;
+        let g = lower_moe(world, &[0.1; 4], &[0.2; 4], &[900, 100], 2, 4096, 2).unwrap();
+        g.validate().unwrap();
+        // Per pass: 3 compute segments + 2 boundaries x 2 a2a = 7 nodes.
+        let a2a = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, IrOp::Collective { kind: CollKind::AllToAll, .. }))
+            .count();
+        assert_eq!(a2a, 2 * 2 * 2);
+        let ars: Vec<&IrNode> = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, IrOp::Collective { kind: CollKind::Allreduce, .. }))
+            .collect();
+        assert_eq!(ars.len(), 2);
+        assert_eq!(ars[0].stream, 0);
+        assert_eq!(ars[1].stream, 1);
+        // Both gradient allreduces gate on the final backward segment.
+        assert_eq!(ars[0].deps, ars[1].deps);
+        assert_eq!(ars[0].deps.len(), 1);
+        assert!(matches!(g.nodes[ars[0].deps[0]].op, IrOp::Compute { .. }));
+    }
+
+    #[test]
+    fn signature_discriminates_structure() {
+        let world = 8;
+        let buckets = vec![bucket(1000, 0.0, world), bucket(500, 0.001, world)];
+        let a = lower_dp(&buckets, world, 2, None);
+        let b = lower_dp(&buckets, world, 2, None);
+        assert_eq!(a.signature(), b.signature(), "deterministic");
+        let c = lower_dp(&buckets, world, 1, None);
+        assert_ne!(a.signature(), c.signature(), "stream layout is structural");
+        let z = lower_zero(&buckets, world, 0.01, 2);
+        assert_ne!(a.signature(), z.signature());
+        // Ready floors are per-step data, not structure.
+        let mut shifted = buckets.clone();
+        shifted[0].ready = vec![0.5; world];
+        let d = lower_dp(&shifted, world, 2, None);
+        assert_eq!(a.signature(), d.signature());
+    }
+}

@@ -37,6 +37,7 @@ fn trainer(kind: FabricKind, num_streams: usize, fusion_bytes: f64) -> TrainerSi
         step_overhead: 0.0,
         coordination_overhead: fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy: fabricbench::config::TenancySpec::default(),
+        workload: fabricbench::config::WorkloadSpec::default(),
     }
 }
 

@@ -39,6 +39,7 @@ fn trainer(kind: FabricKind, tenancy: TenancySpec) -> TrainerSim {
         step_overhead: 0.0,
         coordination_overhead: fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy,
+        workload: fabricbench::config::WorkloadSpec::default(),
     }
 }
 

@@ -506,6 +506,13 @@ class NetSim:
         nic = fabric.effective_bandwidth()
         uplink = fabric.rack_uplink_bandwidth()
         self.res_caps = [nic] * (2 * self.n_nodes) + [uplink] * (2 * self.n_racks)
+        # FIFO resource carry-over across batches (fabric::sim): a flow's
+        # arrival is floored by the busy_until of every resource on its
+        # route, and each batch advances those clocks to its finishes.
+        # The golden drivers issue one batch per fresh engine, so this is
+        # inert for them; the DP-lowering verification below replays many
+        # batches and needs it.
+        self.busy_until = [0.0] * len(self.res_caps)
         self.inter_rack_messages = 0
 
     def network_cost(self, bytes_, inter_rack):
@@ -539,7 +546,9 @@ class NetSim:
             if inter_rack:
                 res.append(2 * self.n_nodes + src_rack)
                 res.append(2 * self.n_nodes + self.n_racks + dst_rack)
-            arrival = ready + send_ov  # busy_until all zero: fresh engine
+            arrival = ready + send_ov
+            for rid in res:
+                arrival = max(arrival, self.busy_until[rid])
             flows.append(
                 dict(
                     req_idx=i,
@@ -573,6 +582,8 @@ class NetSim:
         for f, fin in zip(flows, finishes):
             recv_complete = fin + f["latency"] + f["recv_overhead"]
             out[f["req_idx"]] = (fin, recv_complete)
+            for rid in f["res"]:
+                self.busy_until[rid] = max(self.busy_until[rid], fin)
         return out
 
     def fluid_finishes(self, flows, factor):
@@ -715,6 +726,295 @@ def fig3_quick_csv():
 
 
 # ---------------------------------------------------------------------------
+# trainer/scheduler.rs + workload/mod.rs — DP-lowering bit-identity check
+#
+# PR 7 rebuilt the trainer's communication scheduler as a workload-IR
+# executor: bucketed data-parallel allreduce is *lowered* to a graph of
+# collective nodes (workload::lower_dp) and run by a topological-frontier
+# executor (scheduler::exec_frontier). The refactor's contract is that
+# this path is bit-for-bit the pre-IR scheduler — serialized and
+# multi-stream, chunked or not. The Rust suite pins that with verbatim
+# pre-refactor oracles; this mirror re-proves it where no Rust toolchain
+# is ambient, using the stateful engine above (every formula below
+# mirrors its Rust counterpart, referenced in comments). Ranks sit one
+# per node, CPU endpoints, straddling a rack boundary, so rounds cross
+# both NIC and up-link resources.
+# ---------------------------------------------------------------------------
+
+import struct
+
+BYTES_PER_ELEM = 4.0  # collectives/mod.rs
+STREAM_MERGE_WINDOW = 2.5e-4  # trainer/scheduler.rs
+COORDINATION_OVERHEAD = 1.0e-3
+
+
+def fbits(x: float) -> bytes:
+    return struct.pack("<d", x)
+
+
+def chunk_ranges(elems, parts):
+    """Mirror of collectives::chunk_ranges."""
+    base, extra = elems // parts, elems % parts
+    out, start = [], 0
+    for i in range(parts):
+        ln = base + (1 if i < extra else 0)
+        out.append((start, start + ln))
+        start += ln
+    return out
+
+
+def split_chunks(buckets, chunk_bytes):
+    """Mirror of scheduler::split_chunks: [(elems, ready, launch)]."""
+    if chunk_bytes is None:
+        return [(e, r, True) for e, r in buckets]
+    out = []
+    for elems, ready in buckets:
+        bytes_ = elems * BYTES_PER_ELEM
+        parts = max(int(-(-bytes_ // chunk_bytes)), 1)
+        if parts <= 1 or elems < 2:
+            out.append((elems, ready, True))
+            continue
+        for i, (lo, hi) in enumerate(chunk_ranges(elems, min(parts, elems))):
+            out.append((hi - lo, ready, i == 0))
+    return out
+
+
+def ring_allreduce_rounds(p, elems):
+    """Mirror of RingAllreduce::allreduce as recorded by Comm::recorder:
+    2(p-1) Round ops (reduce-scatter then allgather), msgs (src,dst,bytes)."""
+    chunks = chunk_ranges(elems, p)
+    rounds = []
+    for k in range(p - 1):  # reduce-scatter: chunk (i - k) mod p
+        rounds.append(
+            [(i, (i + 1) % p, (chunks[(i + p - k % p) % p][1] - chunks[(i + p - k % p) % p][0]) * BYTES_PER_ELEM) for i in range(p)]
+        )
+    for k in range(p - 1):  # allgather: chunk (i + 1 - k) mod p
+        rounds.append(
+            [(i, (i + 1) % p, (chunks[(i + 1 + p - k % p) % p][1] - chunks[(i + 1 + p - k % p) % p][0]) * BYTES_PER_ELEM) for i in range(p)]
+        )
+    return rounds
+
+
+def apply_round(t, snapshot, msgs, times):
+    """Mirror of mpi::apply_round."""
+    for (src, dst, _), (send_release, recv_complete) in zip(msgs, times):
+        t[src] = max(t[src], send_release)
+        t[dst] = max(t[dst], max(recv_complete, snapshot[dst]))
+
+
+def submit_round(net, node_of, snapshot, msgs):
+    reqs = [(node_of[src], node_of[dst], b, snapshot[src]) for src, dst, b in msgs]
+    return net.transfer_batch(reqs)
+
+
+def legacy_serialized(net, node_of, works, p):
+    """Mirror of scheduler::run_serialized (cache off): the pre-scheduler
+    trainer loop — each collective starts after the previous finished on
+    every rank."""
+    prev_done = [0.0] * p
+    comm_done = [0.0] * p
+    intervals = []
+    for elems, ready, launch in works:
+        coord = COORDINATION_OVERHEAD if launch else 0.0
+        start = [max(ready[r], prev_done[r]) + coord for r in range(p)]
+        t = list(start)
+        for msgs in ring_allreduce_rounds(p, elems):
+            snapshot = list(t)
+            times = submit_round(net, node_of, snapshot, msgs)
+            apply_round(t, snapshot, msgs, times)
+        comm_done = list(t)
+        prev_done = list(t)
+        intervals.append((max([0.0] + start), max([0.0] + t)))
+    return comm_done, intervals
+
+
+def legacy_multi_stream(net, node_of, buckets, p, num_streams, chunk_bytes):
+    """Mirror of the pre-IR multi-stream scheduler (the verbatim oracle in
+    scheduler.rs tests): per-stream op queues, merge-window batching.
+    Streams are assigned per *bucket* (chunks of one bucket stay on its
+    stream), and the stream count is capped by the bucket count."""
+    s_count = min(num_streams, max(len(buckets), 1))
+    works = []  # (elems, ready, launch, stream)
+    for b, bucket in enumerate(buckets):
+        for elems, ready, launch in split_chunks([bucket], chunk_bytes):
+            works.append((elems, ready, launch, b % s_count))
+    patterns = {}  # elems -> rounds (recording order = first-use order)
+    for elems, _, _, _ in works:
+        if elems not in patterns:
+            patterns[elems] = ring_allreduce_rounds(p, elems)
+    queues = [[] for _ in range(s_count)]
+    for w, (elems, ready, launch, stream) in enumerate(works):
+        q = queues[stream]
+        q.append(("begin", w))
+        for i in range(len(patterns[elems])):
+            q.append(("op", w, i))
+        q.append(("end", w))
+    clocks = [[0.0] * p for _ in range(s_count)]
+    intervals = [(0.0, 0.0)] * len(works)
+    while True:
+        for s in range(s_count):
+            while queues[s]:
+                item = queues[s][0]
+                if item[0] == "begin":
+                    w = item[1]
+                    elems, ready, launch, _ = works[w]
+                    coord = COORDINATION_OVERHEAD if launch else 0.0
+                    for r in range(p):
+                        clocks[s][r] = max(ready[r], clocks[s][r]) + coord
+                    intervals[w] = (max([0.0] + clocks[s]), intervals[w][1])
+                elif item[0] == "end":
+                    w = item[1]
+                    intervals[w] = (intervals[w][0], max([0.0] + clocks[s]))
+                else:
+                    break  # engine op: head of this stream's frontier
+                queues[s].pop(0)
+        cands = []
+        for s in range(s_count):
+            if queues[s] and queues[s][0][0] == "op":
+                _, w, i = queues[s][0]
+                msgs = patterns[works[w][0]][i]
+                cands.append((s, min(clocks[s][src] for src, _, _ in msgs)))
+        if not cands:
+            break
+        t0 = min(r for _, r in cands)
+        chosen = [s for s, r in cands if r <= t0 + STREAM_MERGE_WINDOW]
+        reqs, parts = [], []
+        for s in chosen:
+            _, w, i = queues[s][0]
+            msgs = patterns[works[w][0]][i]
+            snapshot = list(clocks[s])
+            first = len(reqs)
+            reqs.extend((node_of[src], node_of[dst], b, snapshot[src]) for src, dst, b in msgs)
+            parts.append((s, msgs, snapshot, first))
+        times = net.transfer_batch(reqs)
+        for s, msgs, snapshot, first in parts:
+            apply_round(clocks[s], snapshot, msgs, times[first : first + len(msgs)])
+            queues[s].pop(0)
+    comm_done = [max(clocks[s][r] for s in range(s_count)) for r in range(p)]
+    return comm_done, intervals
+
+
+def lower_dp(buckets, num_streams, chunk_bytes):
+    """Mirror of workload::lower_dp: [(elems, ready, stream, launch)]."""
+    s_count = min(num_streams, max(len(buckets), 1))
+    nodes = []
+    for b, (elems, ready) in enumerate(buckets):
+        for c_elems, c_ready, launch in split_chunks([(elems, ready)], chunk_bytes):
+            nodes.append((c_elems, c_ready, b % s_count, launch))
+    return nodes
+
+
+def exec_frontier(net, node_of, nodes, p):
+    """Mirror of scheduler::exec_frontier on a DP graph (allreduce nodes,
+    no deps): acquire each node's recorded schedule (dedup within the
+    step), drain engine-free items per stream, then batch the heads of
+    all streams ready within the merge window."""
+    s_count = max((s for _, _, s, _ in nodes), default=0) + 1
+    local = {}  # (sig, elems) -> rounds; sig constant: one strategy
+    ops_of = []
+    for elems, _, _, _ in nodes:
+        key = ("allreduce", elems)
+        if key not in local:
+            local[key] = ring_allreduce_rounds(p, elems)
+        ops_of.append(local[key])
+    queues = [[] for _ in range(s_count)]
+    for n, (elems, ready, stream, launch) in enumerate(nodes):
+        q = queues[stream]
+        q.append(("begin", n))
+        for i in range(len(ops_of[n])):
+            q.append(("op", n, i))
+        q.append(("end", n))
+    clocks = [[0.0] * p for _ in range(s_count)]
+    intervals = [(0.0, 0.0)] * len(nodes)
+    while True:
+        while True:  # engine-free fixpoint (trivial for dependency-free DP)
+            progress = False
+            for s in range(s_count):
+                while queues[s]:
+                    item = queues[s][0]
+                    if item[0] == "begin":
+                        n = item[1]
+                        _, ready, _, launch = nodes[n]
+                        coord = COORDINATION_OVERHEAD if launch else 0.0
+                        for r in range(p):
+                            clocks[s][r] = max(ready[r], clocks[s][r]) + coord
+                        intervals[n] = (max([0.0] + clocks[s]), intervals[n][1])
+                    elif item[0] == "end":
+                        n = item[1]
+                        intervals[n] = (intervals[n][0], max([0.0] + clocks[s]))
+                    else:
+                        break
+                    queues[s].pop(0)
+                    progress = True
+            if not progress:
+                break
+        cands = []
+        for s in range(s_count):
+            if queues[s] and queues[s][0][0] == "op":
+                _, n, i = queues[s][0]
+                msgs = ops_of[n][i]
+                cands.append((s, min(clocks[s][src] for src, _, _ in msgs)))
+        if not cands:
+            break
+        t0 = min(r for _, r in cands)
+        chosen = [s for s, r in cands if r <= t0 + STREAM_MERGE_WINDOW]
+        reqs, parts = [], []
+        for s in chosen:
+            _, n, i = queues[s][0]
+            msgs = ops_of[n][i]
+            snapshot = list(clocks[s])
+            first = len(reqs)
+            reqs.extend((node_of[src], node_of[dst], b, snapshot[src]) for src, dst, b in msgs)
+            parts.append((s, msgs, snapshot, first))
+        times = net.transfer_batch(reqs)
+        for s, msgs, snapshot, first in parts:
+            apply_round(clocks[s], snapshot, msgs, times[first : first + len(msgs)])
+            queues[s].pop(0)
+    comm_done = [max(clocks[s][r] for s in range(s_count)) for r in range(p)]
+    return comm_done, intervals
+
+
+def verify_dp_lowering():
+    """Assert lower_dp + exec_frontier == the pre-IR scheduler, to the
+    bit, on both fabrics at 1 and 4 streams, chunked and not. Mirrors
+    scheduler.rs::dp_through_ir_matches_legacy_scheduler_bit_for_bit
+    (with per-rank staggered readies on top). At 1 stream this checks
+    the *frontier* executor against the serialized loop — the stronger
+    form of the claim the Rust `execute` dispatch relies on."""
+    p = 8
+    node_of = [r * 8 for r in range(p)]  # one rank per node, racks 0 and 1
+    checked = 0
+    for fab in (ETH, OPA):
+        for streams in (1, 4):
+            for chunk in (None, 60_000.0):
+                buckets = [
+                    (30_000 + 17_000 * i, [0.003 * i + 0.0002 * r for r in range(p)])
+                    for i in range(5)
+                ]
+                net_a = NetSim(fab)
+                nodes = lower_dp(buckets, streams, chunk)
+                got_done, got_iv = exec_frontier(net_a, node_of, nodes, p)
+                net_b = NetSim(fab)
+                if streams <= 1:
+                    works = split_chunks(buckets, chunk)
+                    want_done, want_iv = legacy_serialized(net_b, node_of, works, p)
+                else:
+                    want_done, want_iv = legacy_multi_stream(
+                        net_b, node_of, buckets, p, streams, chunk
+                    )
+                tag = f"{fab.name} streams={streams} chunk={chunk}"
+                assert len(got_done) == len(want_done), tag
+                for a, b in zip(got_done, want_done):
+                    assert fbits(a) == fbits(b), f"comm_done diverged: {tag}: {a!r} != {b!r}"
+                assert len(got_iv) == len(want_iv), tag
+                for (a0, a1), (b0, b1) in zip(got_iv, want_iv):
+                    assert fbits(a0) == fbits(b0), f"interval start: {tag}: {a0!r} != {b0!r}"
+                    assert fbits(a1) == fbits(b1), f"interval end: {tag}: {a1!r} != {b1!r}"
+                checked += 1
+    print(f"DP-lowering bit-identity: {checked} scenarios OK")
+
+
+# ---------------------------------------------------------------------------
 
 
 def main():
@@ -732,6 +1032,10 @@ def main():
     assert abs(inception_params - 23.8e6) / 23.8e6 < 0.05, inception_params
     assert factor3(40) == (5, 4, 2)
     assert MeshPartition(PAPER_MESH, 64).elems_per_rank() == 512
+
+    # PR 7 pre-verification: the workload-IR executor must reproduce the
+    # pre-IR scheduler bit-for-bit before the fixtures are trusted.
+    verify_dp_lowering()
 
     for name, csv in (("table1", table1_csv()), ("fig3_quick", fig3_quick_csv())):
         path = os.path.join(args.out_dir, f"{name}.csv")
