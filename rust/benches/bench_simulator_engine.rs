@@ -204,6 +204,59 @@ fn main() {
         );
     }
 
+    // 3b. Frontier-scale step (ROADMAP item 5 acceptance): one 32k-GPU
+    // allreduce on explicit switch tiers. Hierarchical on a 4-spine 4:1
+    // fat-tree is the wall-ms envelope pinned in BENCH_BASELINE.json
+    // (single-digit seconds); RHD on a dragonfly floods every tier so it
+    // reports the aggregation counters (tens of thousands of flows
+    // collapsing into a few thousand weighted fluid units).
+    {
+        use fabricbench::config::spec::TopologyKind;
+        use fabricbench::experiments::frontier::{self, FrontierCell};
+        let cells = [
+            ("frontier_32k", FrontierCell {
+                kind: FabricKind::EthernetRoce25,
+                gpus: 32768,
+                topo: TopologyKind::FatTree,
+                rhd: false,
+            }),
+            ("frontier_32k_dragonfly", FrontierCell {
+                kind: FabricKind::EthernetRoce25,
+                gpus: 32768,
+                topo: TopologyKind::Dragonfly,
+                rhd: true,
+            }),
+        ];
+        for (label, cell) in cells {
+            let start = Instant::now();
+            let r = frontier::run_cell(&cell, frontier::STEP_ELEMS);
+            let dt = start.elapsed().as_secs_f64();
+            println!(
+                "{label}: {} GPUs {} {} — {:.2} s wall / {:.1} ms virtual ({} units, {} collapsed, {:.1}%)",
+                cell.gpus,
+                cell.topo_name(),
+                cell.strategy_name(),
+                dt,
+                r.step_s * 1e3,
+                r.agg_units,
+                r.agg_collapsed,
+                100.0 * r.collapse_fraction()
+            );
+            report.entry(
+                label,
+                &[
+                    ("wall_ms", dt * 1e3),
+                    ("virtual_ms", r.step_s * 1e3),
+                    ("events", r.fluid_events as f64),
+                    ("solver_solves", r.solves as f64),
+                    ("agg_units", r.agg_units as f64),
+                    ("agg_collapsed", r.agg_collapsed as f64),
+                    ("collapse_pct", 100.0 * r.collapse_fraction()),
+                ],
+            );
+        }
+    }
+
     // 4. Schedule memoization: jitter-free steady-state replay of a
     // serialized step (identical ready offsets every step) — the timing
     // tier must turn repeat steps into cache hits.

@@ -117,6 +117,10 @@ num_streams = 2        # concurrent collective channels (1 = serialized)
 # chunk_mib = 16.0     # chunk-pipeline buckets above this size
 # schedule_cache = false # disable collective schedule/timing memoization
 #                        # (exact-keyed; output bytes identical either way)
+# flow_aggregation = false # disable same-route fluid flow aggregation
+#                        # (bit-exact either way; A/B perf toggle only)
+# solver_threads = 4     # parallel bottleneck-group solves: 0 = auto,
+#                        # 1 = sequential (bit-identical at any setting)
 
 [workload]
 parallelism = "dp"     # dp | zero | pipeline | moe: how each step

@@ -1200,6 +1200,18 @@ pub struct TransportOptions {
     /// toggling it cannot change any output byte — off exists for A/B
     /// perf measurement and debugging.
     pub schedule_cache: bool,
+    /// Collapse fluid-indistinguishable flows (same route, flow cap,
+    /// arrival, and bytes) into one weighted aggregate inside the
+    /// contended-batch event loop — the frontier-scale lever that makes
+    /// a 32k-GPU collective step tractable. Bit-exact by construction
+    /// (see `fabric/README.md` § "Frontier scale"), so off exists only
+    /// for A/B perf measurement and the equivalence suites.
+    pub flow_aggregation: bool,
+    /// Worker threads for parallel intra-batch bottleneck-group solves:
+    /// 0 = one per available core (capped at 16), 1 = sequential, N = N
+    /// workers. Results are bit-identical at any setting; only
+    /// wall-clock moves.
+    pub solver_threads: usize,
 }
 
 impl Default for TransportOptions {
@@ -1211,6 +1223,8 @@ impl Default for TransportOptions {
             rendezvous_threshold: None,
             chunk_bytes: None,
             schedule_cache: true,
+            flow_aggregation: true,
+            solver_threads: 0,
         }
     }
 }
@@ -1258,6 +1272,15 @@ impl TransportOptions {
         if let Some(b) = getb("schedule_cache")? {
             t.schedule_cache = b;
         }
+        if let Some(b) = getb("flow_aggregation")? {
+            t.flow_aggregation = b;
+        }
+        if let Some(x) = getf("solver_threads")? {
+            if x.fract() != 0.0 || x < 0.0 {
+                bail!("transport.solver_threads must be a non-negative integer, got {x}");
+            }
+            t.solver_threads = x as usize;
+        }
         t.validate()?;
         Ok(t)
     }
@@ -1268,6 +1291,12 @@ impl TransportOptions {
         }
         if self.num_streams > 64 {
             bail!("transport: num_streams {} is implausible (max 64)", self.num_streams);
+        }
+        if self.solver_threads > 512 {
+            bail!(
+                "transport: solver_threads {} is implausible (max 512; 0 = auto)",
+                self.solver_threads
+            );
         }
         if let Some(x) = self.rendezvous_threshold {
             if x < 0.0 {
@@ -1586,9 +1615,11 @@ mod tests {
         assert!(t.rendezvous_threshold.is_none());
         assert!(t.chunk_bytes.is_none());
         assert!(t.schedule_cache, "memoization defaults on");
+        assert!(t.flow_aggregation, "aggregation defaults on");
+        assert_eq!(t.solver_threads, 0, "solver threads default to auto");
 
         let doc = toml::parse(
-            "gpudirect = false\nnum_streams = 4\nrendezvous_threshold_bytes = 32768.0\nchunk_mib = 16.0\nschedule_cache = false",
+            "gpudirect = false\nnum_streams = 4\nrendezvous_threshold_bytes = 32768.0\nchunk_mib = 16.0\nschedule_cache = false\nflow_aggregation = false\nsolver_threads = 4",
         )
         .unwrap();
         let t = TransportOptions::from_toml(&doc).unwrap();
@@ -1597,9 +1628,27 @@ mod tests {
         assert_eq!(t.rendezvous_threshold, Some(32768.0));
         assert_eq!(t.chunk_bytes, Some(16.0 * 1024.0 * 1024.0));
         assert!(!t.schedule_cache);
+        assert!(!t.flow_aggregation);
+        assert_eq!(t.solver_threads, 4);
         assert!(
             TransportOptions::from_toml(&toml::parse("schedule_cache = 3").unwrap()).is_err(),
             "wrong type must be loud"
+        );
+        assert!(
+            TransportOptions::from_toml(&toml::parse("flow_aggregation = 3").unwrap()).is_err(),
+            "flow_aggregation must be a bool"
+        );
+        assert!(
+            TransportOptions::from_toml(&toml::parse("solver_threads = -1").unwrap()).is_err(),
+            "negative solver_threads must be loud"
+        );
+        assert!(
+            TransportOptions::from_toml(&toml::parse("solver_threads = 2.5").unwrap()).is_err(),
+            "fractional solver_threads must be loud"
+        );
+        assert!(
+            TransportOptions::from_toml(&toml::parse("solver_threads = 4096").unwrap()).is_err(),
+            "absurd solver_threads must be loud"
         );
     }
 

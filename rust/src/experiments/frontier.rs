@@ -1,0 +1,338 @@
+//! Frontier-scale engine sweep (ROADMAP item 5): one synchronized
+//! allreduce step at 1k–32k GPUs on explicit multi-spine fat-tree and
+//! dragonfly topologies, driven straight through [`Comm`] +
+//! [`NullBuffers`] (no trainer around it). This is the workload the
+//! flow-aggregation + hierarchical group-solve machinery exists for: a
+//! 32k-GPU step submits rounds of tens of thousands of flows, which the
+//! engine collapses into a few thousand weighted fluid aggregates and
+//! solves per bottleneck group — never materializing a global grid.
+//!
+//! The CSV is fully deterministic (simulated time + engine counters
+//! only, identical for any `--jobs`); wall-clock envelopes live in the
+//! perf bench (`bench_simulator_engine`, `frontier_32k` entry).
+
+use crate::cluster::Placement;
+use crate::collectives::{Collective, Hierarchical, NullBuffers, RecursiveHalvingDoubling};
+use crate::config::presets::fabric;
+use crate::config::spec::{
+    ClusterSpec, FabricKind, TopologyKind, TopologySpec, TransportOptions,
+};
+use crate::experiments::sweeps::Runner;
+use crate::fabric::{Comm, NetSim};
+use crate::util::table::Table;
+use crate::util::units::fmt_time;
+
+/// Dense frontier nodes (A100/H100-class boxes), vs TX-GAIA's 2.
+pub const GPUS_PER_NODE: usize = 8;
+
+/// Allreduce payload per step: 16 Mi f32 elements (64 MiB), a fused
+/// large-model gradient bucket. Simulation cost is independent of the
+/// byte count, so this only shapes the reported virtual times.
+pub const STEP_ELEMS: usize = 1 << 24;
+
+/// Synthetic frontier cluster: `gpus / 8` nodes of 8 GPUs, 32 nodes per
+/// rack/ToR. Link technologies (PCIe/UPI/shm) are inherited from the
+/// TX-GAIA preset — the fabric tiers are what this sweep varies.
+pub fn frontier_cluster(gpus: usize) -> ClusterSpec {
+    let mut c = ClusterSpec::txgaia();
+    c.name = format!("frontier-{gpus}");
+    c.nodes = gpus.div_ceil(GPUS_PER_NODE).max(1);
+    c.gpus_per_node = GPUS_PER_NODE;
+    c.cores_per_node = 64;
+    c.nodes_per_rack = 32;
+    c
+}
+
+/// Switch tiers for a frontier cell: a 4-spine 4:1-oversubscribed
+/// fat-tree, or a dragonfly grouping the same ToRs with 2:1 global
+/// oversubscription — the configuration whose global-egress/ingress
+/// links only an at-scale sweep exercises.
+pub fn frontier_topology(kind: TopologyKind, cluster: &ClusterSpec) -> TopologySpec {
+    let tors = cluster.nodes.div_ceil(cluster.nodes_per_rack);
+    let mut t = TopologySpec {
+        kind,
+        spines: 4.min(tors.max(1)),
+        oversubscription: Some(4.0),
+        ..TopologySpec::default()
+    };
+    if kind == TopologyKind::Dragonfly {
+        t.groups = (tors / 2).clamp(1, 8);
+        t.global_oversubscription = 2.0;
+    }
+    t
+}
+
+/// One sweep cell: fabric x GPU count x topology x allreduce strategy.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontierCell {
+    pub kind: FabricKind,
+    pub gpus: usize,
+    pub topo: TopologyKind,
+    /// `true` = recursive halving-doubling, `false` = hierarchical
+    /// (NCCL-style) — the two strategies with opposite fabric footprints:
+    /// RHD floods every tier each round, hierarchical confines traffic
+    /// below the ToRs except for one short inter-leader ring.
+    pub rhd: bool,
+}
+
+impl FrontierCell {
+    pub fn strategy_name(&self) -> &'static str {
+        if self.rhd {
+            "rhd"
+        } else {
+            "hierarchical"
+        }
+    }
+
+    pub fn topo_name(&self) -> &'static str {
+        match self.topo {
+            TopologyKind::FatTree => "fat-tree",
+            TopologyKind::Dragonfly => "dragonfly",
+        }
+    }
+}
+
+/// Deterministic engine-side results of one cell.
+#[derive(Clone, Debug)]
+pub struct FrontierRow {
+    pub fabric: String,
+    pub cell: FrontierCell,
+    pub step_s: f64,
+    pub fluid_events: u64,
+    pub solves: u64,
+    pub agg_units: u64,
+    pub agg_collapsed: u64,
+}
+
+impl FrontierRow {
+    /// Fraction of submitted flows absorbed into an existing aggregate.
+    pub fn collapse_fraction(&self) -> f64 {
+        let total = self.agg_units + self.agg_collapsed;
+        if total == 0 {
+            0.0
+        } else {
+            self.agg_collapsed as f64 / total as f64
+        }
+    }
+}
+
+/// The sweep grid. Quick keeps 8 cells (CI-sized) but deliberately
+/// retains the two acceptance workloads: the 32k-GPU hierarchical
+/// fat-tree step and the 32k-GPU RHD dragonfly step (global-link tier
+/// under a full-fabric flood).
+pub fn cells(quick: bool) -> Vec<FrontierCell> {
+    let gpu_counts: &[usize] = if quick {
+        &[1024, 32768]
+    } else {
+        &[1024, 8192, 32768]
+    };
+    let mut out = Vec::new();
+    for &kind in &[FabricKind::EthernetRoce25, FabricKind::OmniPath100] {
+        for &gpus in gpu_counts {
+            if quick {
+                out.push(FrontierCell { kind, gpus, topo: TopologyKind::FatTree, rhd: false });
+                out.push(FrontierCell { kind, gpus, topo: TopologyKind::Dragonfly, rhd: true });
+            } else {
+                for &topo in &[TopologyKind::FatTree, TopologyKind::Dragonfly] {
+                    for &rhd in &[false, true] {
+                        out.push(FrontierCell { kind, gpus, topo, rhd });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run one cell: build the synthetic cluster + tiers, run a single
+/// allreduce step, and report virtual time + engine counters.
+pub fn run_cell(cell: &FrontierCell, elems: usize) -> FrontierRow {
+    let cluster = frontier_cluster(cell.gpus);
+    let mut fab = fabric(cell.kind);
+    fab.topology = frontier_topology(cell.topo, &cluster);
+    fab.topology
+        .validate_for(&cluster)
+        .expect("frontier topology must fit its synthetic cluster");
+    let placement = Placement::gpus(&cluster, cell.gpus).expect("cluster sized for gpus");
+    let mut net = NetSim::new(fab, cluster, TransportOptions::default());
+    let fabric_name = net.fabric.name.clone();
+    let hier = Hierarchical::default();
+    let step_s = {
+        let mut comm = Comm::new(&mut net, &placement);
+        let strategy: &dyn Collective =
+            if cell.rhd { &RecursiveHalvingDoubling } else { &hier };
+        strategy.allreduce(&mut comm, &mut NullBuffers { elems })
+    };
+    FrontierRow {
+        fabric: fabric_name,
+        cell: *cell,
+        step_s,
+        fluid_events: net.stats.fluid_events,
+        solves: net.solver.solves,
+        agg_units: net.stats.agg_units,
+        agg_collapsed: net.stats.agg_collapsed,
+    }
+}
+
+pub fn run_with(quick: bool, runner: &Runner) -> (Table, Vec<FrontierRow>) {
+    let grid = cells(quick);
+    let rows = runner.map(&grid, |_, cell| run_cell(cell, STEP_ELEMS));
+    let mut t = Table::new(
+        "Frontier-scale allreduce step (one step, 8-GPU nodes, 64 MiB bucket)",
+        &[
+            "fabric",
+            "gpus",
+            "topology",
+            "strategy",
+            "step time",
+            "fluid events",
+            "solves",
+            "agg units",
+            "agg collapsed",
+            "collapse %",
+        ],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.fabric.clone(),
+            r.cell.gpus.to_string(),
+            r.cell.topo_name().to_string(),
+            r.cell.strategy_name().to_string(),
+            fmt_time(r.step_s),
+            r.fluid_events.to_string(),
+            r.solves.to_string(),
+            r.agg_units.to_string(),
+            r.agg_collapsed.to_string(),
+            format!("{:.1}", 100.0 * r.collapse_fraction()),
+        ]);
+    }
+    (t, rows)
+}
+
+pub fn run(quick: bool) -> (Table, Vec<FrontierRow>) {
+    run_with(quick, &Runner::sequential())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_and_topology_shapes() {
+        let c = frontier_cluster(32768);
+        assert_eq!(c.nodes, 4096);
+        assert_eq!(c.gpus_per_node, 8);
+        let ft = frontier_topology(TopologyKind::FatTree, &c);
+        assert_eq!(ft.spines, 4);
+        assert_eq!(ft.oversubscription, Some(4.0));
+        ft.validate_for(&c).unwrap();
+        let df = frontier_topology(TopologyKind::Dragonfly, &c);
+        assert_eq!(df.groups, 8, "128 ToRs cap at 8 dragonfly groups");
+        df.validate_for(&c).unwrap();
+        // Small end: still a valid multi-group dragonfly.
+        let c1k = frontier_cluster(1024);
+        assert_eq!(c1k.nodes, 128);
+        let df1k = frontier_topology(TopologyKind::Dragonfly, &c1k);
+        assert_eq!(df1k.groups, 2);
+        df1k.validate_for(&c1k).unwrap();
+    }
+
+    #[test]
+    fn quick_grid_keeps_the_acceptance_cells() {
+        let g = cells(true);
+        assert_eq!(g.len(), 8);
+        assert!(g.iter().any(|c| c.gpus == 32768
+            && c.topo == TopologyKind::FatTree
+            && !c.rhd));
+        assert!(g.iter().any(|c| c.gpus == 32768
+            && c.topo == TopologyKind::Dragonfly
+            && c.rhd));
+        assert_eq!(cells(false).len(), 24);
+    }
+
+    #[test]
+    fn small_cell_runs_and_aggregates() {
+        // A scaled-down cell (same code path as the 32k acceptance run):
+        // 8-GPU nodes make every inter-node round submit 8 same-route
+        // flows per node pair, so aggregation must collapse flows and the
+        // step must come out finite and positive.
+        let cell = FrontierCell {
+            kind: FabricKind::EthernetRoce25,
+            gpus: 128,
+            topo: TopologyKind::FatTree,
+            rhd: true,
+        };
+        let r = run_cell(&cell, 1 << 16);
+        assert!(r.step_s.is_finite() && r.step_s > 0.0);
+        assert!(r.agg_units > 0, "fluid rounds must have run");
+        assert!(
+            r.agg_collapsed > 0,
+            "8 GPUs/node guarantees same-route flows to collapse"
+        );
+        assert!(r.collapse_fraction() > 0.5, "got {}", r.collapse_fraction());
+    }
+
+    #[test]
+    fn dragonfly_cell_exercises_global_links() {
+        let cell = FrontierCell {
+            kind: FabricKind::OmniPath100,
+            gpus: 128,
+            topo: TopologyKind::Dragonfly,
+            rhd: true,
+        };
+        // 16 nodes on 1 ToR -> 1 group: force several ToRs/groups by
+        // shrinking racks so the global tier actually carries traffic.
+        let mut cluster = frontier_cluster(cell.gpus);
+        cluster.nodes_per_rack = 4;
+        let mut fab = fabric(cell.kind);
+        fab.topology = frontier_topology(cell.topo, &cluster);
+        fab.topology.validate_for(&cluster).unwrap();
+        assert!(fab.topology.groups >= 2);
+        let placement = Placement::gpus(&cluster, cell.gpus).unwrap();
+        let mut net = NetSim::new(fab, cluster, TransportOptions::default());
+        let t = {
+            let mut comm = Comm::new(&mut net, &placement);
+            RecursiveHalvingDoubling.allreduce(&mut comm, &mut NullBuffers { elems: 1 << 16 })
+        };
+        assert!(t.is_finite() && t > 0.0);
+        assert!(net.stats.inter_rack_messages > 0);
+    }
+
+    #[test]
+    fn aggregation_toggle_is_bit_exact_on_a_frontier_cell() {
+        // The frontier path end-to-end: same cell with aggregation on vs
+        // off must produce the bit-identical virtual step time and the
+        // same event/solve counters — aggregation is a pure speedup.
+        for rhd in [false, true] {
+            let cell = FrontierCell {
+                kind: FabricKind::EthernetRoce25,
+                gpus: 64,
+                topo: TopologyKind::Dragonfly,
+                rhd,
+            };
+            let cluster = frontier_cluster(cell.gpus);
+            let mut run = |agg: bool| {
+                let mut fab = fabric(cell.kind);
+                fab.topology = frontier_topology(cell.topo, &cluster);
+                let placement = Placement::gpus(&cluster, cell.gpus).unwrap();
+                let opts = TransportOptions { flow_aggregation: agg, ..Default::default() };
+                let mut net = NetSim::new(fab, cluster.clone(), opts);
+                let hier = Hierarchical::default();
+                let t = {
+                    let mut comm = Comm::new(&mut net, &placement);
+                    let s: &dyn Collective =
+                        if cell.rhd { &RecursiveHalvingDoubling } else { &hier };
+                    s.allreduce(&mut comm, &mut NullBuffers { elems: 4096 })
+                };
+                (t, net.stats.fluid_events, net.solver.solves, net.stats.agg_collapsed)
+            };
+            let (t_on, ev_on, solves_on, collapsed_on) = run(true);
+            let (t_off, ev_off, solves_off, collapsed_off) = run(false);
+            assert_eq!(t_on.to_bits(), t_off.to_bits(), "rhd={rhd}");
+            assert_eq!(ev_on, ev_off, "rhd={rhd}");
+            assert_eq!(solves_on, solves_off, "rhd={rhd}");
+            assert_eq!(collapsed_off, 0, "aggregation off must not collapse");
+            assert!(collapsed_on > 0, "8-GPU nodes must collapse flows (rhd={rhd})");
+        }
+    }
+}

@@ -16,6 +16,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fleet;
 pub mod frameworks;
+pub mod frontier;
 pub mod microbench;
 pub mod sweeps;
 pub mod table1;

@@ -32,8 +32,6 @@ use crate::util::json::{self, Json};
 use crate::util::table::{fnum, Table};
 use crate::util::units::MIB;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
 
 /// Bump when cell semantics change so stale artifacts never resurface.
 pub const CACHE_VERSION: &str = "v1";
@@ -146,44 +144,16 @@ impl Runner {
     }
 
     /// Map `f` over `items` on `jobs` threads; results in item order.
+    /// Thin wrapper over [`crate::util::pool::map_steal`], the shared
+    /// work-stealing primitive (the fabric engine's parallel group
+    /// solves use the same machinery).
     pub fn map<I, O, F>(&self, items: &[I], f: F) -> Vec<O>
     where
         I: Sync,
         O: Send,
         F: Fn(usize, &I) -> O + Sync,
     {
-        let jobs = self.jobs.max(1).min(items.len().max(1));
-        if jobs <= 1 {
-            return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
-        }
-        let next = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<(usize, O)>();
-        std::thread::scope(|scope| {
-            for _ in 0..jobs {
-                let tx = tx.clone();
-                let next = &next;
-                let f = &f;
-                scope.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= items.len() {
-                        break;
-                    }
-                    let out = f(i, &items[i]);
-                    if tx.send((i, out)).is_err() {
-                        break;
-                    }
-                });
-            }
-        });
-        drop(tx);
-        let mut slots: Vec<Option<O>> = (0..items.len()).map(|_| None).collect();
-        for (i, o) in rx {
-            slots[i] = Some(o);
-        }
-        slots
-            .into_iter()
-            .map(|o| o.expect("sweep worker dropped a cell"))
-            .collect()
+        crate::util::pool::map_steal(self.jobs, items.len(), |i| f(i, &items[i]))
     }
 
     /// Map with per-cell seeding and the JSON artifact cache. `key_of`

@@ -128,14 +128,34 @@ impl FlowResources {
 ///
 /// Returns the per-flow rates. A flow with no resources gets its cap.
 pub fn max_min_rates(caps: &[f64], flow_caps: &[f64], flow_res: &[FlowResources]) -> Vec<f64> {
+    max_min_rates_weighted(caps, flow_caps, flow_res, &vec![1u32; flow_caps.len()])
+}
+
+/// Weighted max-min reference oracle: entry `i` stands for `weights[i]`
+/// identical flows (same cap, same resource set), and the returned rate
+/// is **per member**, not per aggregate. Progressive filling with
+/// integer loads makes this bit-identical to [`max_min_rates`] over the
+/// expanded (de-aggregated) flow set: per-resource load is the same
+/// integer sum, the round increments are the same quotients in the same
+/// order, and identical members freeze together in the same round —
+/// which is what lets the engine collapse same-route flows into one
+/// fluid aggregate without changing a single output bit (pinned by the
+/// unit tests below and `tests/aggregation_properties.rs`).
+pub fn max_min_rates_weighted(
+    caps: &[f64],
+    flow_caps: &[f64],
+    flow_res: &[FlowResources],
+    weights: &[u32],
+) -> Vec<f64> {
     let n = flow_caps.len();
+    debug_assert_eq!(weights.len(), n);
     let mut rate = vec![0.0; n];
     let mut frozen = vec![false; n];
     let mut remaining = caps.to_vec();
     let mut load = vec![0usize; caps.len()];
-    for fr in flow_res {
+    for (fr, &w) in flow_res.iter().zip(weights) {
         for id in fr.iter() {
-            load[id] += 1;
+            load[id] += w as usize;
         }
     }
     let mut unfrozen = n;
@@ -178,7 +198,7 @@ pub fn max_min_rates(caps: &[f64], flow_caps: &[f64], flow_res: &[FlowResources]
                 frozen[i] = true;
                 newly += 1;
                 for r in flow_res[i].iter() {
-                    load[r] -= 1;
+                    load[r] -= weights[i] as usize;
                 }
             }
         }
@@ -204,8 +224,21 @@ pub struct MaxMinScratch {
     /// Member slots sorted by flow cap ascending (prefix-freeze order).
     order: Vec<u32>,
     frozen: Vec<bool>,
-    /// Per-resource unfrozen-holder count (dense, zero between solves).
+    /// SoA gathers of the member set (cap / route / weight / rate, in
+    /// member order): the filling rounds index these dense arrays
+    /// instead of double-indirecting through `members` into the
+    /// batch-wide tables on every access.
+    m_caps: Vec<f64>,
+    m_res: Vec<FlowResources>,
+    m_w: Vec<u32>,
+    m_rate: Vec<f64>,
+    /// Per-resource unfrozen load — the sum of unfrozen holders'
+    /// *weights* (dense, zero between solves).
     load: Vec<u32>,
+    /// Per-resource unfrozen-holder count (dense, zero between solves);
+    /// sizes the CSR, which stores one slot per member, not per weight
+    /// unit.
+    holders: Vec<u32>,
     /// Per-resource remaining capacity (valid only for touched entries).
     remaining: Vec<f64>,
     /// Per-resource drained marker (dense, false between solves).
@@ -241,29 +274,81 @@ impl MaxMinScratch {
         members: &[u32],
         rate: &mut [f64],
     ) {
+        self.solve_member_order(caps, flow_caps, flow_res, None, members);
+        for (k, &m) in members.iter().enumerate() {
+            rate[m as usize] = self.m_rate[k];
+        }
+    }
+
+    /// Weighted variant: member `m` stands for `weights[m]` identical
+    /// flows and receives its **per-member** rate. Bit-identical to
+    /// [`max_min_rates_weighted`] over the same member set, and hence to
+    /// the unweighted solve over the de-aggregated flow multiset.
+    pub fn solve_weighted(
+        &mut self,
+        caps: &[f64],
+        flow_caps: &[f64],
+        flow_res: &[FlowResources],
+        weights: &[u32],
+        members: &[u32],
+        rate: &mut [f64],
+    ) {
+        self.solve_member_order(caps, flow_caps, flow_res, Some(weights), members);
+        for (k, &m) in members.iter().enumerate() {
+            rate[m as usize] = self.m_rate[k];
+        }
+    }
+
+    /// The core progressive-filling loop. Gathers the member set into
+    /// the SoA arrays, solves, and leaves the per-member rates in member
+    /// order in the returned slice (`solve`/`solve_weighted` scatter it
+    /// back to the batch-wide table; the engine's parallel group-solve
+    /// path reads it directly so workers never alias the shared rate
+    /// table).
+    pub fn solve_member_order(
+        &mut self,
+        caps: &[f64],
+        flow_caps: &[f64],
+        flow_res: &[FlowResources],
+        weights: Option<&[u32]>,
+        members: &[u32],
+    ) -> &[f64] {
         let n = members.len();
+        self.m_rate.clear();
+        self.m_rate.resize(n, 0.0);
         if n == 0 {
-            return;
+            return &self.m_rate;
         }
         self.solves += 1;
         let nr = caps.len();
         if self.load.len() < nr {
             self.load.resize(nr, 0);
+            self.holders.resize(nr, 0);
             self.remaining.resize(nr, 0.0);
             self.drained.resize(nr, false);
             self.csr_start.resize(nr, 0);
             self.cursor.resize(nr, 0);
         }
 
-        // Touched resources + per-resource unfrozen-holder counts.
+        // SoA gather + touched resources + per-resource loads.
+        self.m_caps.clear();
+        self.m_res.clear();
+        self.m_w.clear();
         self.touched.clear();
         for &m in members {
-            for r in flow_res[m as usize].iter() {
-                if self.load[r] == 0 {
+            let i = m as usize;
+            let fres = flow_res[i];
+            let w = weights.map_or(1, |w| w[i]);
+            self.m_caps.push(flow_caps[i]);
+            self.m_res.push(fres);
+            self.m_w.push(w);
+            for r in fres.iter() {
+                if self.holders[r] == 0 {
                     self.touched.push(r as u32);
                     self.remaining[r] = caps[r];
                 }
-                self.load[r] += 1;
+                self.holders[r] += 1;
+                self.load[r] += w;
             }
         }
         // CSR: which member slots hold each touched resource.
@@ -271,12 +356,13 @@ impl MaxMinScratch {
         for &r in &self.touched {
             self.csr_start[r as usize] = total;
             self.cursor[r as usize] = total;
-            total += self.load[r as usize];
+            total += self.holders[r as usize];
         }
         self.csr_items.clear();
         self.csr_items.resize(total as usize, 0);
-        for (k, &m) in members.iter().enumerate() {
-            for r in flow_res[m as usize].iter() {
+        for k in 0..n {
+            let fres = self.m_res[k];
+            for r in fres.iter() {
                 let c = self.cursor[r] as usize;
                 self.csr_items[c] = k as u32;
                 self.cursor[r] += 1;
@@ -285,8 +371,9 @@ impl MaxMinScratch {
 
         self.order.clear();
         self.order.extend(0..n as u32);
-        let key = |k: &u32| flow_caps[members[*k as usize] as usize];
-        self.order.sort_unstable_by(|a, b| key(a).total_cmp(&key(b)));
+        let m_caps = &self.m_caps;
+        self.order
+            .sort_unstable_by(|a, b| m_caps[*a as usize].total_cmp(&m_caps[*b as usize]));
         self.frozen.clear();
         self.frozen.resize(n, false);
         self.drain_stack.clear();
@@ -304,7 +391,7 @@ impl MaxMinScratch {
             // unfrozen flows sit at `level`), then the resource slacks.
             let mut delta = f64::INFINITY;
             if ptr < n {
-                delta = flow_caps[members[self.order[ptr] as usize] as usize] - level;
+                delta = self.m_caps[self.order[ptr] as usize] - level;
             }
             for &r in &self.touched {
                 let l = self.load[r as usize];
@@ -330,13 +417,14 @@ impl MaxMinScratch {
                     ptr += 1;
                     continue;
                 }
-                let i = members[k] as usize;
-                if level >= flow_caps[i] * (1.0 - 1e-12) {
+                if level >= self.m_caps[k] * (1.0 - 1e-12) {
                     self.frozen[k] = true;
                     newly += 1;
-                    rate[i] = level;
-                    for r in flow_res[i].iter() {
-                        self.load[r] -= 1;
+                    self.m_rate[k] = level;
+                    let fres = self.m_res[k];
+                    let w = self.m_w[k];
+                    for r in fres.iter() {
+                        self.load[r] -= w;
                     }
                     ptr += 1;
                 } else {
@@ -359,12 +447,13 @@ impl MaxMinScratch {
                     if self.frozen[k] {
                         continue;
                     }
-                    let i = members[k] as usize;
                     self.frozen[k] = true;
                     newly += 1;
-                    rate[i] = level;
-                    for r2 in flow_res[i].iter() {
-                        self.load[r2] -= 1;
+                    self.m_rate[k] = level;
+                    let fres = self.m_res[k];
+                    let w = self.m_w[k];
+                    for r2 in fres.iter() {
+                        self.load[r2] -= w;
                     }
                 }
             }
@@ -374,7 +463,7 @@ impl MaxMinScratch {
                 // the same partial sum).
                 for k in 0..n {
                     if !self.frozen[k] {
-                        rate[members[k] as usize] = level;
+                        self.m_rate[k] = level;
                     }
                 }
                 break;
@@ -384,8 +473,10 @@ impl MaxMinScratch {
         // Sparse cleanup: restore the dense tables' invariants.
         for &r in &self.touched {
             self.load[r as usize] = 0;
+            self.holders[r as usize] = 0;
             self.drained[r as usize] = false;
         }
+        &self.m_rate
     }
 
     /// Convenience for oracles and tests: solve over every flow,
@@ -585,6 +676,120 @@ mod tests {
         for ((a, b), c) in first.iter().zip(&rates).zip(&rates2) {
             assert_eq!(a.to_bits(), b.to_bits());
             assert_eq!(a.to_bits(), c.to_bits());
+        }
+    }
+
+    fn random_weights(rng: &mut crate::util::rng::Rng, n: usize) -> Vec<u32> {
+        (0..n).map(|_| 1 + rng.below(5) as u32).collect()
+    }
+
+    /// Expand a weighted instance into the flow multiset it stands for:
+    /// member `i` becomes `weights[i]` identical flows.
+    fn expand(
+        flow_caps: &[f64],
+        flow_res: &[FlowResources],
+        weights: &[u32],
+    ) -> (Vec<f64>, Vec<FlowResources>, Vec<usize>) {
+        let mut fc = Vec::new();
+        let mut fres = Vec::new();
+        let mut owner = Vec::new();
+        for i in 0..flow_caps.len() {
+            for _ in 0..weights[i] {
+                fc.push(flow_caps[i]);
+                fres.push(flow_res[i]);
+                owner.push(i);
+            }
+        }
+        (fc, fres, owner)
+    }
+
+    #[test]
+    fn weighted_reference_bit_identical_to_expanded_reference() {
+        // The aggregation contract: a weight-w member solves to exactly
+        // the rate each of its w expanded copies would get. Integer loads
+        // make the round increments the same quotients, so this is
+        // bit-exact, not approximate.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xA66);
+        for _ in 0..300 {
+            let (caps, flow_caps, flow_res) = random_instance(&mut rng);
+            let weights = random_weights(&mut rng, flow_caps.len());
+            let agg = max_min_rates_weighted(&caps, &flow_caps, &flow_res, &weights);
+            let (fc, fres, owner) = expand(&flow_caps, &flow_res, &weights);
+            let full = max_min_rates(&caps, &fc, &fres);
+            for (j, &i) in owner.iter().enumerate() {
+                assert_eq!(
+                    agg[i].to_bits(),
+                    full[j].to_bits(),
+                    "member {i} copy {j}: agg {} vs expanded {}",
+                    agg[i],
+                    full[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_weighted_bit_identical_to_weighted_reference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xA66E5);
+        let mut scratch = MaxMinScratch::new();
+        for _ in 0..300 {
+            let (caps, flow_caps, flow_res) = random_instance(&mut rng);
+            let weights = random_weights(&mut rng, flow_caps.len());
+            let members: Vec<u32> = (0..flow_caps.len() as u32).collect();
+            let mut rates = vec![f64::NAN; flow_caps.len()];
+            scratch.solve_weighted(&caps, &flow_caps, &flow_res, &weights, &members, &mut rates);
+            let want = max_min_rates_weighted(&caps, &flow_caps, &flow_res, &weights);
+            for i in 0..flow_caps.len() {
+                assert_eq!(want[i].to_bits(), rates[i].to_bits(), "member {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_weighted_matches_duplicated_unaggregated_scratch() {
+        // End-to-end over the scratch solver both ways: solving the
+        // weighted instance equals solving the physically duplicated
+        // flow set, per member, bit for bit.
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xD0B1E);
+        let mut agg_scratch = MaxMinScratch::new();
+        let mut full_scratch = MaxMinScratch::new();
+        for _ in 0..200 {
+            let (caps, flow_caps, flow_res) = random_instance(&mut rng);
+            let weights = random_weights(&mut rng, flow_caps.len());
+            let members: Vec<u32> = (0..flow_caps.len() as u32).collect();
+            let mut agg_rates = vec![f64::NAN; flow_caps.len()];
+            agg_scratch.solve_weighted(
+                &caps, &flow_caps, &flow_res, &weights, &members, &mut agg_rates,
+            );
+            let (fc, fres, owner) = expand(&flow_caps, &flow_res, &weights);
+            let mut full_rates = Vec::new();
+            full_scratch.solve_all(&caps, &fc, &fres, &mut full_rates);
+            for (j, &i) in owner.iter().enumerate() {
+                assert_eq!(agg_rates[i].to_bits(), full_rates[j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn member_order_rates_match_scatter_path() {
+        // The parallel group-solve path reads member-order rates directly;
+        // they must be the same values `solve` scatters.
+        let caps = vec![10.0, 4.0];
+        let fc = vec![100.0, 2.0, 100.0];
+        let fres = vec![fr(&[0]), fr(&[0, 1]), fr(&[1])];
+        let members = vec![0u32, 1, 2];
+        let mut s1 = MaxMinScratch::new();
+        let mut rates = vec![f64::NAN; 3];
+        s1.solve(&caps, &fc, &fres, &members, &mut rates);
+        let mut s2 = MaxMinScratch::new();
+        let mo = s2
+            .solve_member_order(&caps, &fc, &fres, None, &members)
+            .to_vec();
+        for (k, &m) in members.iter().enumerate() {
+            assert_eq!(mo[k].to_bits(), rates[m as usize].to_bits());
         }
     }
 

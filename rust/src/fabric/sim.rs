@@ -75,6 +75,14 @@ pub struct NetStats {
     /// rate-frozen for those batches — the engine also warns on stderr
     /// the first time so sweeps cannot degrade silently.
     pub budget_exceeded: u64,
+    /// Fluid aggregation units actually solved by contended batches (one
+    /// unit per distinct (route, flow cap, arrival, bytes) class; equals
+    /// the flow count when [`TransportOptions::flow_aggregation`] is
+    /// off). Perf counters for the engine bench: `agg_collapsed` is the
+    /// number of flows that rode along in an existing unit — the work
+    /// the aggregation saved.
+    pub agg_units: u64,
+    pub agg_collapsed: u64,
     /// Background-tenant flows injected by the shared-tenancy model
     /// ([`crate::fabric::tenancy`]). Kept separate from the training
     /// counters above (`messages`/`bytes` stay training-only), so
@@ -171,6 +179,43 @@ struct Group {
     live: bool,
 }
 
+/// Aggregation key for one fluid unit: flows are collapsed into one
+/// weighted aggregate exactly when their **compact** resource set (route
+/// through this batch's remap — ECMP spine choices key apart naturally),
+/// congestion-scaled flow cap, arrival, and byte count are all
+/// bit-identical. Under those conditions the members are fluid-
+/// indistinguishable: they activate together, share every resource with
+/// identical integer multiplicity, and the weighted max-min solve gives
+/// each member exactly the rate it would get solved individually (see
+/// [`crate::fabric::contention::max_min_rates_weighted`]) — so they
+/// retire together and the de-aggregated finish times are bit-exact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct AggKey {
+    res: [u32; crate::fabric::contention::MAX_FLOW_RESOURCES],
+    n_res: u8,
+    fcap_bits: u64,
+    arrival_bits: u64,
+    bytes_bits: u64,
+}
+
+impl AggKey {
+    fn new(res: FlowResources, fcap: f64, arrival: f64, bytes: f64) -> Self {
+        let mut ids = [u32::MAX; crate::fabric::contention::MAX_FLOW_RESOURCES];
+        let mut n_res = 0u8;
+        for id in res.iter() {
+            ids[n_res as usize] = id as u32;
+            n_res += 1;
+        }
+        AggKey {
+            res: ids,
+            n_res,
+            fcap_bits: fcap.to_bits(),
+            arrival_bits: arrival.to_bits(),
+            bytes_bits: bytes.to_bits(),
+        }
+    }
+}
+
 /// Per-batch event-loop state, allocated once per [`NetSim`] and reused
 /// (no per-batch or per-event `Vec` allocation on the hot path).
 #[derive(Debug, Default)]
@@ -183,6 +228,23 @@ struct FluidScratch {
     caps: Vec<f64>,
     res: Vec<FlowResources>,
     fcaps: Vec<f64>,
+    /// Flow -> aggregation unit (the event loop below runs over units,
+    /// not flows; identity when aggregation is off).
+    unit_of: Vec<u32>,
+    /// Per-unit inputs: representative route / flow cap / arrival /
+    /// bytes, and the member multiplicity (`u_w`). The solver treats a
+    /// weight-w unit as w identical flows and returns the per-member
+    /// rate, so `rem`/`rate`/`t0` below carry per-member semantics too.
+    u_res: Vec<FlowResources>,
+    u_fcaps: Vec<f64>,
+    u_arrival: Vec<f64>,
+    u_bytes: Vec<f64>,
+    u_w: Vec<u32>,
+    u_finish: Vec<f64>,
+    agg_map: HashMap<AggKey, u32>,
+    /// The dirty groups settled this event, awaiting (possibly parallel)
+    /// re-solve.
+    wave: Vec<u32>,
     order: Vec<u32>,
     rem: Vec<f64>,
     t0: Vec<f64>,
@@ -227,10 +289,10 @@ impl FluidScratch {
         }
     }
 
-    /// Activate flow `fi`: merge every group sharing one of its resources
+    /// Activate unit `fi`: merge every group sharing one of its resources
     /// (largest absorbs, first wins ties) and mark the result dirty.
     fn join(&mut self, fi: usize) {
-        let fr = self.res[fi];
+        let fr = self.u_res[fi];
         let mut gids = [u32::MAX; crate::fabric::contention::MAX_FLOW_RESOURCES];
         let mut n_g = 0usize;
         for r in fr.iter() {
@@ -357,6 +419,13 @@ pub struct NetSim {
     flow_seq: HashMap<(usize, usize), u64>,
     /// The production max-min solver arena (perf counters inside).
     pub solver: MaxMinScratch,
+    /// Worker-local solver arenas for parallel intra-batch group solves
+    /// (bottleneck groups are independent by construction). Sized to
+    /// `solver_jobs` in [`NetSim::try_new`]; empty means sequential.
+    par_solvers: Vec<MaxMinScratch>,
+    /// Resolved worker count from [`TransportOptions::solver_threads`]
+    /// (0 = one per available core, capped; 1 = sequential).
+    solver_jobs: usize,
     fluid: FluidScratch,
     scratch_flows: Vec<NetFlow>,
     scratch_srcs: Vec<usize>,
@@ -385,6 +454,14 @@ pub struct NetSim {
     pub trace: Option<crate::fabric::trace::Trace>,
 }
 
+/// Minimum settled-wave size (total members across dirty groups) before
+/// an event's group re-solves fan out to the worker pool. Below this the
+/// spawn/steal overhead dwarfs the solves; typical steady-state events
+/// dirty one small group and stay sequential, while the opening event of
+/// a frontier-scale batch (every unit arrives at t=0 across many ToR-
+/// local groups) crosses it easily.
+const PAR_SOLVE_MIN_MEMBERS: usize = 4096;
+
 fn time_eps(t: f64) -> f64 {
     1e-12 * (1.0 + t.abs())
 }
@@ -409,6 +486,14 @@ impl NetSim {
     ) -> anyhow::Result<Self> {
         let topology = Topology::build(&fabric.topology, &fabric, &cluster)?;
         let n_res = topology.num_resources();
+        // Parallel group solves are bit-identical at any worker count
+        // (the wave is settled, solved member-order, and scattered back
+        // in deterministic wave order), so auto-sizing from the host is
+        // safe for reproducibility; it only moves wall-clock.
+        let solver_jobs = match opts.solver_threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16),
+            j => j,
+        };
         Ok(NetSim {
             fabric,
             cluster,
@@ -418,6 +503,10 @@ impl NetSim {
             load: vec![0; n_res],
             flow_seq: HashMap::new(),
             solver: MaxMinScratch::new(),
+            par_solvers: (0..if solver_jobs > 1 { solver_jobs } else { 0 })
+                .map(|_| MaxMinScratch::new())
+                .collect(),
+            solver_jobs,
             fluid: FluidScratch {
                 // The global->compact remap is per-topology: built once
                 // here, entries reset sparsely after each batch.
@@ -554,6 +643,8 @@ impl NetSim {
         stats.inter_rack_messages += val.d_inter_rack;
         stats.fluid_events += val.d_fluid_events;
         stats.budget_exceeded += val.d_budget;
+        stats.agg_units += val.d_agg_units;
+        stats.agg_collapsed += val.d_agg_collapsed;
         stats.peak_concurrent_flows = val.peak_after;
         Some(val.t_out.clone())
     }
@@ -798,16 +889,27 @@ impl NetSim {
     }
 
     /// Event loop over a contended batch: advance virtual time from event
-    /// to event (arrival or completion). Only the bottleneck groups an
-    /// event touches are re-solved; the next completion comes from the
-    /// lazily-invalidated projection heap. Writes per-flow transfer-finish
-    /// times into `finish` (same order as `flows`).
+    /// to event (arrival or completion). Flows are first collapsed into
+    /// **aggregation units** ([`AggKey`]: same compact route + flow cap +
+    /// arrival + bytes; identity mapping when
+    /// [`TransportOptions::flow_aggregation`] is off), and the loop runs
+    /// over units — a hierarchical-allreduce level that submits thousands
+    /// of indistinguishable neighbor transfers costs a handful of units.
+    /// Only the bottleneck groups an event touches are re-solved (on the
+    /// worker-local solver arenas in parallel when the settled wave is
+    /// large enough; bit-identical at any worker count); the next
+    /// completion comes from the lazily-invalidated projection heap.
+    /// Writes per-flow transfer-finish times into `finish` (same order as
+    /// `flows`) by gathering each flow's unit finish — bit-exact
+    /// de-aggregation, because unit members are fluid-indistinguishable.
     fn fluid_finishes(&mut self, flows: &[NetFlow], factor: f64, finish: &mut Vec<f64>) {
-        let NetSim { fluid, solver, topology, stats, .. } = self;
+        let NetSim { fluid, solver, par_solvers, topology, stats, opts, .. } = self;
         let n = flows.len();
         // Compact the touched resource ids to a dense table through the
         // persistent per-topology remap (built in `try_new`, reset
-        // sparsely below) — no sort/binary-search per batch.
+        // sparsely below) — no sort/binary-search per batch, and a 32k-GPU
+        // step never materializes a global link grid: every solve below
+        // touches only its bottleneck group's footprint.
         fluid.touched.clear();
         fluid.caps.clear();
         fluid.res.clear();
@@ -829,37 +931,85 @@ impl NetSim {
         }
         let n_compact = fluid.caps.len();
 
-        fluid.order.clear();
-        fluid.order.extend(0..n as u32);
-        // NaN-safe arrival order: `total_cmp` cannot panic (a NaN arrival
-        // is already rejected at `FlowReq` intake by debug_assert).
-        fluid.order.sort_unstable_by(|&a, &b| {
-            flows[a as usize].arrival.total_cmp(&flows[b as usize].arrival)
-        });
+        // Aggregation pass: first-seen keying keeps unit order a
+        // deterministic function of submission order (the map is only
+        // probed, never iterated). ECMP multi-spine flows key apart
+        // naturally (different spine => different compact route), so no
+        // bypass is needed; tracing and per-tenant attribution operate on
+        // flows outside this loop and are unaffected.
+        fluid.unit_of.clear();
+        fluid.u_res.clear();
+        fluid.u_fcaps.clear();
+        fluid.u_arrival.clear();
+        fluid.u_bytes.clear();
+        fluid.u_w.clear();
+        if opts.flow_aggregation {
+            fluid.agg_map.clear();
+            for i in 0..n {
+                let key =
+                    AggKey::new(fluid.res[i], fluid.fcaps[i], flows[i].arrival, flows[i].bytes);
+                let next = fluid.u_fcaps.len() as u32;
+                let u = *fluid.agg_map.entry(key).or_insert(next);
+                if u == next {
+                    fluid.u_res.push(fluid.res[i]);
+                    fluid.u_fcaps.push(fluid.fcaps[i]);
+                    fluid.u_arrival.push(flows[i].arrival);
+                    fluid.u_bytes.push(flows[i].bytes);
+                    fluid.u_w.push(1);
+                } else {
+                    fluid.u_w[u as usize] += 1;
+                }
+                fluid.unit_of.push(u);
+            }
+        } else {
+            for i in 0..n {
+                fluid.u_res.push(fluid.res[i]);
+                fluid.u_fcaps.push(fluid.fcaps[i]);
+                fluid.u_arrival.push(flows[i].arrival);
+                fluid.u_bytes.push(flows[i].bytes);
+                fluid.u_w.push(1);
+                fluid.unit_of.push(i as u32);
+            }
+        }
+        let m = fluid.u_fcaps.len();
+        stats.agg_units += m as u64;
+        stats.agg_collapsed += (n - m) as u64;
 
-        finish.clear();
-        finish.resize(n, 0.0);
-        fluid.rem.clear();
-        fluid.rem.extend(flows.iter().map(|f| f.bytes));
-        fluid.t0.clear();
-        fluid.t0.resize(n, 0.0);
-        fluid.rate.clear();
-        fluid.rate.resize(n, 0.0);
-        fluid.active.clear();
-        fluid.active.resize(n, false);
-        fluid.stamp.clear();
-        fluid.stamp.resize(n, 0);
-        fluid.group_of.clear();
-        fluid.group_of.resize(n, u32::MAX);
-        fluid.member_pos.clear();
-        fluid.member_pos.resize(n, 0);
-        fluid.heap.clear();
+        {
+            let FluidScratch { order, u_arrival, u_bytes, u_finish, rem, t0, rate, active, stamp, group_of, member_pos, heap, .. } =
+                &mut *fluid;
+            order.clear();
+            order.extend(0..m as u32);
+            // NaN-safe arrival order: `total_cmp` cannot panic (a NaN
+            // arrival is already rejected at `FlowReq` intake by
+            // debug_assert).
+            order.sort_unstable_by(|&a, &b| {
+                u_arrival[a as usize].total_cmp(&u_arrival[b as usize])
+            });
+            u_finish.clear();
+            u_finish.resize(m, 0.0);
+            rem.clear();
+            rem.extend_from_slice(u_bytes);
+            t0.clear();
+            t0.resize(m, 0.0);
+            rate.clear();
+            rate.resize(m, 0.0);
+            active.clear();
+            active.resize(m, false);
+            stamp.clear();
+            stamp.resize(m, 0);
+            group_of.clear();
+            group_of.resize(m, u32::MAX);
+            member_pos.clear();
+            member_pos.resize(m, 0);
+            heap.clear();
+        }
         fluid.reset_groups(n_compact);
 
         let mut ptr = 0usize;
         let mut n_active = 0usize;
-        let mut t = flows[fluid.order[0] as usize].arrival;
-        // Event budget. The incremental loop terminates in O(flows)
+        let mut t = fluid.u_arrival[fluid.order[0] as usize];
+        // Event budget. The incremental loop terminates in O(units)
         // events by construction: every iteration activates an arrival,
         // retires the heap top (its projection equals the event time, and
         // retirement is matched against event time within `time_eps`), or
@@ -871,39 +1021,46 @@ impl NetSim {
         // cases). The budget is therefore pure insurance now, retuned
         // ~5x over the previous `512 + 40e6/(n+64)` since per-event cost
         // dropped about an order of magnitude; if it ever trips, the
-        // fallback is deterministic (in-flight flows keep their rates,
+        // fallback is deterministic (in-flight units keep their rates,
         // pending ones take their caps), counted in
         // `NetStats::budget_exceeded`, and warned once on stderr so
         // degradation can never be silent again.
-        let max_events = fluid.budget_override.unwrap_or(2048 + 200_000_000 / (n + 64));
+        let max_events = fluid.budget_override.unwrap_or(2048 + 200_000_000 / (m + 64));
         let mut events = 0usize;
         loop {
-            // Activate flows whose arrival is due (ties within epsilon).
-            while ptr < n && flows[fluid.order[ptr] as usize].arrival <= t + time_eps(t) {
-                let fi = fluid.order[ptr] as usize;
+            // Activate units whose arrival is due (ties within epsilon).
+            while ptr < m && fluid.u_arrival[fluid.order[ptr] as usize] <= t + time_eps(t) {
+                let ui = fluid.order[ptr] as usize;
                 ptr += 1;
-                if fluid.rem[fi] <= byte_eps(flows[fi].bytes) {
-                    finish[fi] = flows[fi].arrival; // zero-byte flow
+                if fluid.rem[ui] <= byte_eps(fluid.u_bytes[ui]) {
+                    fluid.u_finish[ui] = fluid.u_arrival[ui]; // zero-byte unit
                 } else {
-                    fluid.active[fi] = true;
+                    fluid.active[ui] = true;
                     n_active += 1;
-                    fluid.t0[fi] = t;
-                    fluid.join(fi);
+                    fluid.t0[ui] = t;
+                    fluid.join(ui);
                 }
             }
             if n_active == 0 {
-                if ptr >= n {
+                if ptr >= m {
                     break;
                 }
-                t = flows[fluid.order[ptr] as usize].arrival;
+                t = fluid.u_arrival[fluid.order[ptr] as usize];
                 continue;
             }
 
-            // Re-solve only the groups the last events touched: settle
-            // their members to `t`, recompute max-min rates, refresh
-            // completion projections (stale heap entries die by stamp).
-            // Runs before the budget check, like the reference loop, so a
-            // budget trip always sees real rates for just-arrived flows.
+            // Re-solve only the groups the last events touched. Phase A
+            // (sequential): settle their members to `t` and collect the
+            // wave. Phase B: recompute max-min rates per group — on the
+            // worker pool when the wave is large enough, since bottleneck
+            // groups are independent by construction. Phase C
+            // (sequential, wave order): scatter rates, bump stamps,
+            // refresh completion projections (stale heap entries die by
+            // stamp) — so the heap-op sequence is identical at any worker
+            // count. Runs before the budget check, like the reference
+            // loop, so a budget trip always sees real rates for
+            // just-arrived units.
+            fluid.wave.clear();
             for di in 0..fluid.dirty.len() {
                 let g = fluid.dirty[di] as usize;
                 if !fluid.groups[g].live || !fluid.groups[g].dirty {
@@ -912,27 +1069,80 @@ impl NetSim {
                 fluid.groups[g].dirty = false;
                 let m_len = fluid.groups[g].members.len();
                 for k in 0..m_len {
-                    let fi = fluid.groups[g].members[k] as usize;
-                    fluid.rem[fi] -= fluid.rate[fi] * (t - fluid.t0[fi]);
-                    fluid.t0[fi] = t;
+                    let ui = fluid.groups[g].members[k] as usize;
+                    fluid.rem[ui] -= fluid.rate[ui] * (t - fluid.t0[ui]);
+                    fluid.t0[ui] = t;
                 }
-                solver.solve(
-                    &fluid.caps,
-                    &fluid.fcaps,
-                    &fluid.res,
-                    &fluid.groups[g].members,
-                    &mut fluid.rate,
-                );
-                for k in 0..m_len {
-                    let fi = fluid.groups[g].members[k] as usize;
-                    fluid.stamp[fi] = fluid.stamp[fi].wrapping_add(1);
-                    if fluid.rate[fi] > 0.0 {
-                        let key = t + fluid.rem[fi] / fluid.rate[fi];
-                        fluid.heap.push(HeapEntry { key, flow: fi as u32, stamp: fluid.stamp[fi] });
+                fluid.wave.push(g as u32);
+            }
+            fluid.dirty.clear();
+
+            let wave_members: usize =
+                fluid.wave.iter().map(|&g| fluid.groups[g as usize].members.len()).sum();
+            if par_solvers.len() > 1
+                && fluid.wave.len() > 1
+                && wave_members >= PAR_SOLVE_MIN_MEMBERS
+            {
+                let solved = {
+                    let FluidScratch { wave, groups, caps, u_fcaps, u_res, u_w, .. } = &*fluid;
+                    crate::util::pool::map_steal_with(
+                        par_solvers.len(),
+                        par_solvers,
+                        wave.len(),
+                        |scratch, wi| {
+                            let g = wave[wi] as usize;
+                            let before = (scratch.solves, scratch.rounds);
+                            let rates = scratch
+                                .solve_member_order(
+                                    caps,
+                                    u_fcaps,
+                                    u_res,
+                                    Some(u_w),
+                                    &groups[g].members,
+                                )
+                                .to_vec();
+                            (rates, scratch.solves - before.0, scratch.rounds - before.1)
+                        },
+                    )
+                };
+                for (wi, (rates, d_solves, d_rounds)) in solved.into_iter().enumerate() {
+                    solver.solves += d_solves;
+                    solver.rounds += d_rounds;
+                    let g = fluid.wave[wi] as usize;
+                    for (k, &mu) in fluid.groups[g].members.iter().enumerate() {
+                        let ui = mu as usize;
+                        fluid.rate[ui] = rates[k];
+                        fluid.stamp[ui] = fluid.stamp[ui].wrapping_add(1);
+                        if rates[k] > 0.0 {
+                            let key = t + fluid.rem[ui] / rates[k];
+                            fluid.heap.push(HeapEntry { key, flow: mu, stamp: fluid.stamp[ui] });
+                        }
+                    }
+                }
+            } else {
+                for wi in 0..fluid.wave.len() {
+                    let g = fluid.wave[wi] as usize;
+                    solver.solve_weighted(
+                        &fluid.caps,
+                        &fluid.u_fcaps,
+                        &fluid.u_res,
+                        &fluid.u_w,
+                        &fluid.groups[g].members,
+                        &mut fluid.rate,
+                    );
+                    let m_len = fluid.groups[g].members.len();
+                    for k in 0..m_len {
+                        let ui = fluid.groups[g].members[k] as usize;
+                        fluid.stamp[ui] = fluid.stamp[ui].wrapping_add(1);
+                        if fluid.rate[ui] > 0.0 {
+                            let key = t + fluid.rem[ui] / fluid.rate[ui];
+                            fluid
+                                .heap
+                                .push(HeapEntry { key, flow: ui as u32, stamp: fluid.stamp[ui] });
+                        }
                     }
                 }
             }
-            fluid.dirty.clear();
 
             events += 1;
             if events > max_events {
@@ -941,23 +1151,23 @@ impl NetSim {
                 if !fluid.budget_warned {
                     fluid.budget_warned = true;
                     eprintln!(
-                        "fabricbench: fluid event budget exceeded ({n} flows, {max_events} \
-                         events) — batch finished with frozen rates; degraded batches are \
-                         counted in NetStats::budget_exceeded"
+                        "fabricbench: fluid event budget exceeded ({n} flows / {m} units, \
+                         {max_events} events) — batch finished with frozen rates; degraded \
+                         batches are counted in NetStats::budget_exceeded"
                     );
                 }
-                for fi in 0..n {
-                    if fluid.active[fi] {
-                        let rm = fluid.rem[fi] - fluid.rate[fi] * (t - fluid.t0[fi]);
-                        finish[fi] =
-                            if fluid.rate[fi] > 0.0 { t + rm / fluid.rate[fi] } else { t };
+                for ui in 0..m {
+                    if fluid.active[ui] {
+                        let rm = fluid.rem[ui] - fluid.rate[ui] * (t - fluid.t0[ui]);
+                        fluid.u_finish[ui] =
+                            if fluid.rate[ui] > 0.0 { t + rm / fluid.rate[ui] } else { t };
                     }
                 }
-                while ptr < n {
-                    let fi = fluid.order[ptr] as usize;
+                while ptr < m {
+                    let ui = fluid.order[ptr] as usize;
                     ptr += 1;
-                    finish[fi] = flows[fi].arrival
-                        + flows[fi].bytes / fluid.fcaps[fi].max(f64::MIN_POSITIVE);
+                    fluid.u_finish[ui] = fluid.u_arrival[ui]
+                        + fluid.u_bytes[ui] / fluid.u_fcaps[ui].max(f64::MIN_POSITIVE);
                 }
                 break;
             }
@@ -972,27 +1182,27 @@ impl NetSim {
                 }
             }
             let mut t_next = fluid.heap.peek().map(|e| e.key).unwrap_or(f64::INFINITY);
-            if ptr < n {
-                let a = flows[fluid.order[ptr] as usize].arrival;
+            if ptr < m {
+                let a = fluid.u_arrival[fluid.order[ptr] as usize];
                 if a < t_next {
                     t_next = a;
                 }
             }
             if !t_next.is_finite() {
-                // Every active flow is rate-0 (zero flow cap) and nothing
+                // Every active unit is rate-0 (zero flow cap) and nothing
                 // arrives before them; fail closed.
-                for fi in 0..n {
-                    if fluid.active[fi] {
-                        finish[fi] = t;
-                        fluid.active[fi] = false;
+                for ui in 0..m {
+                    if fluid.active[ui] {
+                        fluid.u_finish[ui] = t;
+                        fluid.active[ui] = false;
                         n_active -= 1;
-                        fluid.leave(fi);
+                        fluid.leave(ui);
                     }
                 }
-                if ptr >= n {
+                if ptr >= m {
                     break;
                 }
-                t = flows[fluid.order[ptr] as usize].arrival;
+                t = fluid.u_arrival[fluid.order[ptr] as usize];
                 continue;
             }
             t = t_next;
@@ -1006,20 +1216,27 @@ impl NetSim {
                 }
                 if e.key <= t + time_eps(t) {
                     fluid.heap.pop();
-                    let fi = e.flow as usize;
-                    finish[fi] = t;
-                    fluid.active[fi] = false;
+                    let ui = e.flow as usize;
+                    fluid.u_finish[ui] = t;
+                    fluid.active[ui] = false;
                     n_active -= 1;
-                    fluid.leave(fi);
+                    fluid.leave(ui);
                 } else {
                     break;
                 }
             }
-            if n_active == 0 && ptr >= n {
+            if n_active == 0 && ptr >= m {
                 break;
             }
         }
         stats.fluid_events += events as u64;
+        // De-aggregate: every member of a unit shares its finish (they
+        // are indistinguishable to the fluid model — bit-exact by
+        // construction, pinned by `tests/aggregation_properties.rs`).
+        finish.clear();
+        for i in 0..n {
+            finish.push(fluid.u_finish[fluid.unit_of[i] as usize]);
+        }
         // Sparse remap reset: the table is clean for the next batch.
         for &id in &fluid.touched {
             fluid.remap[id] = u32::MAX;
@@ -1063,19 +1280,28 @@ mod tests {
     }
 
     impl NetSim {
-        /// The pre-PR4 event loop, kept verbatim (including its original
-        /// event budget) as the oracle for the heap/dirty-group engine:
-        /// full linear completion scan and a monolithic re-solve of every
-        /// active flow at every event. Returns `(finish, budget_hit)`:
-        /// the old loop stalls when a flow's residual transfer time
-        /// `remaining/rate` drops below the fp resolution of `t`
-        /// (`t + q == t`, so `dt == 0` and nothing ever retires) and then
-        /// burns its whole budget before falling back to frozen rates —
-        /// a silent degradation the incremental engine fixes by retiring
-        /// completions against the event time with `time_eps`. Trials
-        /// where the oracle degraded are therefore excluded from the
-        /// bit-level comparison (the new engine is exact there).
-        fn fluid_finishes_reference(&self, flows: &[NetFlow], factor: f64) -> (Vec<f64>, bool) {
+        /// The pre-PR4 event loop, kept as an *independent* oracle for
+        /// the heap/dirty-group engine: full linear completion scan and a
+        /// monolithic re-solve of every active flow at every event — no
+        /// heap, no groups, no aggregation, so it shares no machinery
+        /// with the code it checks. Two long-standing bugs are fixed
+        /// (they made the oracle weaker than the engine, not wrong the
+        /// other way): it retired flows only on the byte residual
+        /// `remaining <= byte_eps`, so when a residual transfer time
+        /// dropped below the fp resolution of `t` (`t + q == t`, i.e.
+        /// `dt == 0`) nothing ever retired and the loop burned its whole
+        /// hardcoded 50k-event budget before *silently* freezing rates —
+        /// on random mixed-size batches that happened in ~25% of trials.
+        /// Now each step also retires any flow whose projected completion
+        /// `t + remaining/rate` is within `time_eps` of the advanced
+        /// event time (the same tie rule the engine's heap uses), which
+        /// retires at least the argmin flow every event, so the loop
+        /// terminates in O(flows) events; the budget (now the engine's
+        /// own formula instead of the hardcoded constant) is pure
+        /// insurance, and a trip is counted in
+        /// `NetStats::budget_exceeded` instead of vanishing. Returns
+        /// `(finish, budget_hit)`.
+        fn fluid_finishes_reference(&mut self, flows: &[NetFlow], factor: f64) -> (Vec<f64>, bool) {
             let n = flows.len();
             let mut ids: Vec<usize> = flows.iter().flat_map(|f| f.res.iter()).collect();
             ids.sort_unstable();
@@ -1102,13 +1328,12 @@ mod tests {
             let mut active: Vec<usize> = Vec::new();
             let mut ptr = 0usize;
             let mut t = flows[order[0]].arrival;
-            // The pre-PR4 budget was `512 + 40e6/(n+64)` (~300k+). A
-            // stalled oracle burns its whole budget on zero-progress
-            // events, which is pointless test time: cap it lower. Batches
-            // either finish exactly within a few hundred events or stall
-            // into the hundreds of thousands, so the cap only reclassifies
-            // (hypothetical) borderline trials into the skipped bucket.
-            let max_events = 50_000;
+            // Same insurance formula (and test override hook) as the
+            // production loop: the old hardcoded 50k existed only because
+            // the scan loop could genuinely stall; with projection
+            // retirement it cannot.
+            let max_events =
+                self.fluid.budget_override.unwrap_or(2048 + 200_000_000 / (n + 64));
             let mut events = 0usize;
             let mut budget_hit = false;
             let mut a_caps: Vec<f64> = Vec::new();
@@ -1142,6 +1367,7 @@ mod tests {
                 events += 1;
                 if events > max_events {
                     budget_hit = true;
+                    self.stats.budget_exceeded += 1;
                     for (k, &fi) in active.iter().enumerate() {
                         finish[fi] =
                             if rates[k] > 0.0 { t + remaining[fi] / rates[k] } else { t };
@@ -1173,19 +1399,30 @@ mod tests {
                 }
 
                 let dt = (t_next - t).max(0.0);
-                for (k, &fi) in active.iter().enumerate() {
-                    remaining[fi] -= rates[k] * dt;
-                }
-                t = t_next;
-
                 let mut still = Vec::with_capacity(active.len());
-                for &fi in active.iter() {
-                    if remaining[fi] <= byte_eps(flows[fi].bytes) {
-                        finish[fi] = t;
+                for (k, &fi) in active.iter().enumerate() {
+                    // Projection retirement: the flow's completion was
+                    // projected at `t + remaining/rate`; when the event
+                    // time reaches that projection within `time_eps` (the
+                    // same tie rule the engine's heap uses) the flow is
+                    // done, even if the byte residual stays positive by a
+                    // sub-ulp crumb (`remaining - rate*dt > 0` with
+                    // `dt == 0` — the zero-progress stall this oracle
+                    // used to spin on). At least the argmin flow retires
+                    // every completion event, so the loop terminates in
+                    // O(flows) events.
+                    let proj =
+                        if rates[k] > 0.0 { t + remaining[fi] / rates[k] } else { f64::INFINITY };
+                    remaining[fi] -= rates[k] * dt;
+                    if remaining[fi] <= byte_eps(flows[fi].bytes)
+                        || proj <= t_next + time_eps(t_next)
+                    {
+                        finish[fi] = t_next;
                     } else {
                         still.push(fi);
                     }
                 }
+                t = t_next;
                 active = still;
                 if active.is_empty() && ptr >= n {
                     break;
@@ -1496,6 +1733,7 @@ mod tests {
             let arrival = if rng.below(2) == 0 { 0.0 } else { rng.uniform_in(0.0, 2e-2) };
             flows.push(NetFlow {
                 req_idx: i,
+                tenant: 0,
                 src_node: src,
                 dst_node: dst,
                 inter_rack: route.inter_tor,
@@ -1515,15 +1753,11 @@ mod tests {
         // The dirty-group + projection-heap loop must agree with the
         // monolithic reference loop to within solver re-association noise
         // (component-local vs. global filling rounds): <= 1e-9 relative.
-        // Trials where the *reference* exhausted its budget are excluded
-        // from the comparison: the old loop stalls on sub-ulp completion
-        // steps and silently degrades to frozen rates there, while the
-        // incremental loop stays exact (see `fluid_finishes_reference`).
-        // The new loop itself must never need the budget: every event
-        // retires or activates at least one flow.
+        // Since the oracle's zero-progress stall was fixed (projection
+        // retirement — see `fluid_finishes_reference`), EVERY trial is
+        // compared: no skipped/degraded bucket remains, and neither loop
+        // may touch its event budget.
         let mut rng = crate::util::rng::Rng::new(0xE7E7);
-        let mut compared = 0usize;
-        let mut degraded = 0usize;
         for trial in 0..60 {
             let kind = if trial % 2 == 0 {
                 FabricKind::EthernetRoce25
@@ -1534,15 +1768,14 @@ mod tests {
             let n = [2, 3, 5, 9, 17, 33, 64][trial % 7];
             let flows = random_flows(&mut s, &mut rng, n);
             let (want, oracle_degraded) = s.fluid_finishes_reference(&flows, 1.0);
+            assert!(
+                !oracle_degraded,
+                "trial {trial}: fixed oracle must not stall into its budget"
+            );
             let mut got = Vec::new();
             s.fluid_finishes(&flows, 1.0, &mut got);
-            assert_eq!(s.stats.budget_exceeded, 0, "incremental loop must never stall");
+            assert_eq!(s.stats.budget_exceeded, 0, "neither loop may trip the budget");
             assert!(got.iter().all(|x| x.is_finite()));
-            if oracle_degraded {
-                degraded += 1;
-                continue;
-            }
-            compared += 1;
             for (i, (a, b)) in want.iter().zip(&got).enumerate() {
                 let denom = a.abs().max(b.abs()).max(1e-12);
                 assert!(
@@ -1551,7 +1784,100 @@ mod tests {
                 );
             }
         }
-        assert!(compared >= 20, "only {compared} clean trials ({degraded} degraded)");
+    }
+
+    #[test]
+    fn reference_scan_budget_trip_is_counted() {
+        // Satellite regression: the oracle's budget fallback must be
+        // *accounted* in `NetStats::budget_exceeded`, never silent (the
+        // pre-fix loop dropped its `budget_hit` on the floor). The fixed
+        // loop cannot stall structurally, so drive the fallback through
+        // the shared test override hook.
+        let mut s = sim(FabricKind::EthernetRoce25);
+        let flows = random_flows(&mut s, &mut crate::util::rng::Rng::new(0xB06), 8);
+        let (finish, hit) = s.fluid_finishes_reference(&flows, 1.0);
+        assert!(!hit, "clean batch must not trip");
+        assert_eq!(s.stats.budget_exceeded, 0, "no trip => no count");
+        assert!(finish.iter().all(|f| f.is_finite()));
+        s.fluid.budget_override = Some(1);
+        let (degraded, hit) = s.fluid_finishes_reference(&flows, 1.0);
+        assert!(hit, "override must trip the oracle's budget");
+        assert_eq!(s.stats.budget_exceeded, 1, "oracle trip must be counted");
+        assert!(degraded.iter().all(|f| f.is_finite()), "fallback must stay finite");
+    }
+
+    #[test]
+    fn heap_entry_ordering_is_total_on_degenerate_keys() {
+        // Satellite regression (PR 6 NaN-sort hardening follow-up): the
+        // completion heap's ordering is a `total_cmp`-based `Ord`, so
+        // NaN / ±0.0 / ±inf keys can never panic or violate strict weak
+        // ordering, and NaN projections sink to the END of the reversed
+        // (min-first) pop order instead of poisoning the heap.
+        let keys = [f64::NAN, 1.0, f64::NEG_INFINITY, 0.0, -0.0, f64::INFINITY, -1.0];
+        let mut heap = std::collections::BinaryHeap::new();
+        for (i, &k) in keys.iter().enumerate() {
+            heap.push(HeapEntry { key: k, flow: i as u32, stamp: 0 });
+        }
+        let popped: Vec<f64> = std::iter::from_fn(|| heap.pop().map(|e| e.key)).collect();
+        let want = [f64::NEG_INFINITY, -1.0, -0.0, 0.0, 1.0, f64::INFINITY, f64::NAN];
+        assert_eq!(popped.len(), want.len());
+        for (i, (a, b)) in popped.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "pop {i}: got {a}, want {b}");
+        }
+        // Ord/PartialEq consistency on the degenerate keys (what a
+        // hand-written partial_cmp got wrong historically).
+        let nan = HeapEntry { key: f64::NAN, flow: 0, stamp: 0 };
+        assert_eq!(nan.cmp(&nan), Ordering::Equal);
+        assert!(nan == nan);
+        let z = HeapEntry { key: 0.0, flow: 0, stamp: 0 };
+        let nz = HeapEntry { key: -0.0, flow: 0, stamp: 0 };
+        assert_ne!(z.cmp(&nz), Ordering::Equal, "total order separates ±0.0");
+    }
+
+    #[test]
+    fn aggregation_is_bit_exact_and_counts_units() {
+        // One mixed batch: 8 identical same-route flows (one unit), a
+        // singleton sharing their tx port, 3 identical flows on a
+        // disjoint pair, and 2 staggered-ready copies of the first route
+        // (distinct arrival => distinct unit). Aggregation on vs off must
+        // be bit-identical per flow — the weighted solve gives each
+        // member exactly its individual rate — with identical event/solve
+        // counts, while the unit counters record the collapse.
+        let bytes = 8.0 * 1024.0 * 1024.0;
+        let mut reqs: Vec<FlowReq> =
+            (0..8).map(|_| FlowReq { src: cpu_ep(0), dst: cpu_ep(1), bytes, ready: 0.0 }).collect();
+        reqs.push(FlowReq { src: cpu_ep(0), dst: cpu_ep(2), bytes: bytes / 2.0, ready: 0.0 });
+        reqs.extend((0..3).map(|_| FlowReq { src: cpu_ep(5), dst: cpu_ep(6), bytes, ready: 0.0 }));
+        reqs.extend(
+            (0..2).map(|_| FlowReq { src: cpu_ep(0), dst: cpu_ep(1), bytes, ready: 1e-3 }),
+        );
+
+        let mut on = sim(FabricKind::EthernetRoce25);
+        assert!(on.opts.flow_aggregation, "aggregation must default on");
+        let got_on: Vec<u64> =
+            on.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
+
+        let mut o = TransportOptions::default();
+        o.flow_aggregation = false;
+        let mut off =
+            NetSim::new(fabric(FabricKind::EthernetRoce25), ClusterSpec::txgaia(), o);
+        let got_off: Vec<u64> =
+            off.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
+
+        assert_eq!(got_on, got_off, "aggregated vs unaggregated timing must be bit-exact");
+        // 14 flows collapse to 4 units: {0->1 @0}, {0->2}, {5->6}, {0->1 @1ms}.
+        assert_eq!(on.stats.agg_units, 4);
+        assert_eq!(on.stats.agg_collapsed, 10);
+        assert_eq!(off.stats.agg_units, 14, "identity mapping when off");
+        assert_eq!(off.stats.agg_collapsed, 0);
+        // The unit loop replays the same events and group solves the
+        // expanded loop would (members of a unit activate/retire
+        // together), so the perf counters cannot drift apart.
+        assert_eq!(on.stats.fluid_events, off.stats.fluid_events);
+        assert_eq!(on.solver.solves, off.solver.solves);
+        assert_eq!(on.solver.rounds, off.solver.rounds);
+        assert_eq!(on.stats.budget_exceeded, 0);
+        assert_eq!(off.stats.budget_exceeded, 0);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //!   microbench           OSU-style fabric micro-benchmarks
 //!   ablations            design-choice ablations (fusion, overlap, ...)
 //!   fleet                multi-job fleet scheduler placement-policy sweep
+//!   frontier             frontier-scale (1k-32k GPU) allreduce step sweep
 //!   all                  run every experiment above
 //!
 //! Commands (real three-layer stack):
@@ -30,6 +31,8 @@
 //!   --stragglers SPEC    run: straggler model FRAC:FACTOR[:JITTER]
 //!   --placement P        run: [fleet] placement pack | spread | topology
 //!   --no-schedule-cache  run: disable schedule/timing memoization
+//!   --no-aggregation     run: disable same-route flow aggregation
+//!   --solver-threads N   run: parallel group-solve workers [0 = auto]
 //!   --workers N          train-real: data-parallel workers   [4]
 //!   --steps N            train-real: training steps          [300]
 //!   --lr X               train-real: learning rate           [0.1]
@@ -97,6 +100,7 @@ fn run(args: &Args) -> Result<()> {
         "tenancy" => cmd_tenancy(&rec, quick, &runner),
         "parallelism" => cmd_parallelism(&rec, quick, &runner),
         "fleet" => cmd_fleet(&rec, quick, &runner),
+        "frontier" => cmd_frontier(&rec, quick, &runner),
         "train-real" => cmd_train_real(args, &rec),
         "calibrate" => cmd_calibrate(args, &rec),
         "cfd-kernel" => cmd_cfd_kernel(),
@@ -118,6 +122,8 @@ extensions      : frameworks (TF-Horovod vs PyTorch-DDP)  sweeps (batch, precisi
                   tenancy (shared-tenancy background-load sweep alone)
                   parallelism (fabric x dp|zero|pipeline|moe strategy sweep)
                   fleet (multi-job scheduler: placement policy x occupancy)
+                  frontier (1k-32k GPU allreduce steps: fat-tree/dragonfly
+                  tiers, flow aggregation + hierarchical group solves)
                   run --config configs/<file>.toml (custom scenario)
 real stack      : train-real [--workers N --steps N --lr X --fabric F]
                   calibrate [--steps N]   cfd-kernel
@@ -137,6 +143,17 @@ trainer communication (run --config):
                        (exact-keyed: outputs are byte-identical either
                        way; off exists for A/B perf measurement). Also
                        [transport] schedule_cache = false in the TOML
+
+frontier engine (run --config, and the `frontier` command):
+  same-route flows are collapsed into integer-weighted fluid aggregates
+  and each bottleneck group is solved independently (in parallel for
+  large batches) — outputs are bit-identical with both knobs at any
+  setting; the toggles exist for A/B perf measurement only.
+  --no-aggregation     disable flow aggregation; also
+                       [transport] flow_aggregation = false in the TOML
+  --solver-threads N   worker threads for intra-batch group solves
+                       [0 = auto (<= 16), 1 = sequential]; also
+                       [transport] solver_threads in the TOML
 
 workload IR ([workload] in the TOML config):
   every training step compiles to a DAG of compute spans and collective /
@@ -205,6 +222,26 @@ fn cmd_fleet(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
     Ok(())
 }
 
+fn cmd_frontier(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
+    let (t, rows) = fabricbench::experiments::frontier::run_with(quick, runner);
+    rec.emit("frontier_scale", &t);
+    if let Some(r) = rows
+        .iter()
+        .filter(|r| r.agg_units + r.agg_collapsed > 0)
+        .max_by_key(|r| r.cell.gpus)
+    {
+        println!(
+            "largest cell ({} GPUs, {}): {} flows collapsed into {} fluid aggregates ({:.1}% collapse)",
+            r.cell.gpus,
+            r.cell.strategy_name(),
+            r.agg_units + r.agg_collapsed,
+            r.agg_units,
+            100.0 * r.collapse_fraction()
+        );
+    }
+    Ok(())
+}
+
 fn cmd_sweeps(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
     rec.emit(
         "sweep_batch",
@@ -248,6 +285,13 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
     }
     if args.flag("no-schedule-cache") {
         opts.schedule_cache = false;
+    }
+    if args.flag("no-aggregation") {
+        opts.flow_aggregation = false;
+    }
+    if args.get("solver-threads").is_some() {
+        opts.solver_threads = args.get_usize("solver-threads", opts.solver_threads)?;
+        opts.validate()?;
     }
     let mut fabric = FabricSpec::from_toml(
         doc.get("fabric")

@@ -98,6 +98,10 @@ fn fnv_str(h: u64, s: &str) -> u64 {
 pub(crate) fn world_sig(net: &NetSim, placement: &Placement) -> u64 {
     let mut h = fnv_str(net.topology.signature(), &net.fabric.name);
     h = fnv_step(h, net.background_signature());
+    // Aggregation is bit-exact, so entries captured with it on/off would
+    // replay identically — but the agg_units/agg_collapsed stat deltas
+    // differ, and a cache must never let an A/B toggle alias entries.
+    h = fnv_step(h, net.opts.flow_aggregation as u64);
     h = fnv_step(h, placement.endpoints.len() as u64);
     for e in &placement.endpoints {
         h = fnv_step(h, ((e.node as u64) << 24) ^ ((e.slot as u64) << 4) ^ e.kind as u64);
@@ -148,6 +152,8 @@ pub(crate) struct TimingVal {
     pub d_inter_rack: u64,
     pub d_fluid_events: u64,
     pub d_budget: u64,
+    pub d_agg_units: u64,
+    pub d_agg_collapsed: u64,
     pub peak_after: u64,
 }
 
@@ -279,6 +285,8 @@ impl ScheduleCache {
                     - before.stats.inter_rack_messages,
                 d_fluid_events: stats_after.fluid_events - before.stats.fluid_events,
                 d_budget: stats_after.budget_exceeded - before.stats.budget_exceeded,
+                d_agg_units: stats_after.agg_units - before.stats.agg_units,
+                d_agg_collapsed: stats_after.agg_collapsed - before.stats.agg_collapsed,
                 peak_after: stats_after.peak_concurrent_flows,
             },
         });

@@ -6,6 +6,7 @@
 pub mod benchjson;
 pub mod hash;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

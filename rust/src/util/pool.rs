@@ -1,0 +1,142 @@
+//! Work-stealing map over scoped threads — the one parallel primitive
+//! in the codebase. Extracted from the sweep [`Runner`]
+//! (`experiments::sweeps`) so the fabric engine's intra-batch group
+//! solves can ride the same machinery.
+//!
+//! Workers pull indices off a shared atomic cursor (work stealing: a
+//! slow item never convoys the rest of the list behind one thread) and
+//! send `(index, result)` pairs back over a channel; the caller
+//! reassembles results **in item order**, so output is independent of
+//! scheduling, worker count, and completion order. The sequential path
+//! (`jobs <= 1` or a single item) is the same closure applied in a plain
+//! loop — which is what makes parallel/sequential equivalence trivial to
+//! reason about for the callers that pin bit-identical output across
+//! `--jobs` / solver-thread counts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Map `f` over `0..n` on up to `jobs` threads; results in index order.
+pub fn map_steal<O, F>(jobs: usize, n: usize, f: F) -> Vec<O>
+where
+    O: Send,
+    F: Fn(usize) -> O + Sync,
+{
+    let jobs = jobs.max(1).min(n.max(1));
+    if jobs <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, O)>();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(i);
+                if tx.send((i, out)).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+    collect_slots(rx, n)
+}
+
+/// Like [`map_steal`], but each worker owns one reusable state from
+/// `states` (e.g. a solver arena) passed to every `f` call it steals —
+/// no per-item allocation, no sharing. Worker count is
+/// `min(jobs, states.len(), n)`; with one worker (or one item) the
+/// sequential path runs everything on `states[0]`.
+pub fn map_steal_with<S, O, F>(jobs: usize, states: &mut [S], n: usize, f: F) -> Vec<O>
+where
+    S: Send,
+    O: Send,
+    F: Fn(&mut S, usize) -> O + Sync,
+{
+    assert!(!states.is_empty(), "map_steal_with needs at least one worker state");
+    let jobs = jobs.max(1).min(states.len()).min(n.max(1));
+    if jobs <= 1 {
+        let s0 = &mut states[0];
+        return (0..n).map(|i| f(s0, i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, O)>();
+    std::thread::scope(|scope| {
+        for state in states.iter_mut().take(jobs) {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = f(state, i);
+                if tx.send((i, out)).is_err() {
+                    break;
+                }
+            });
+        }
+    });
+    drop(tx);
+    collect_slots(rx, n)
+}
+
+fn collect_slots<O>(rx: mpsc::Receiver<(usize, O)>, n: usize) -> Vec<O> {
+    let mut slots: Vec<Option<O>> = (0..n).map(|_| None).collect();
+    for (i, o) in rx {
+        slots[i] = Some(o);
+    }
+    slots.into_iter().map(|o| o.expect("pool worker dropped an item")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_steal_preserves_order() {
+        let seq = map_steal(1, 97, |i| i * i);
+        let par = map_steal(4, 97, |i| i * i);
+        assert_eq!(seq, par);
+        assert_eq!(seq[10], 100);
+    }
+
+    #[test]
+    fn map_steal_handles_empty_and_single() {
+        assert!(map_steal(4, 0, |i| i).is_empty());
+        assert_eq!(map_steal(4, 1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn map_steal_with_uses_worker_states() {
+        // Each worker counts its own calls; the counts must sum to n and
+        // the output must be order-exact regardless of who did what.
+        let mut states = vec![0usize; 3];
+        let out = map_steal_with(3, &mut states, 50, |calls, i| {
+            *calls += 1;
+            i * 2
+        });
+        assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(states.iter().sum::<usize>(), 50);
+    }
+
+    #[test]
+    fn map_steal_with_sequential_path_uses_first_state() {
+        let mut states = vec![0usize; 4];
+        let out = map_steal_with(1, &mut states, 5, |calls, i| {
+            *calls += 1;
+            i
+        });
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        assert_eq!(states[0], 5);
+        assert!(states[1..].iter().all(|&c| c == 0));
+    }
+}

@@ -1,0 +1,230 @@
+//! Property tests for frontier-scale flow aggregation: collapsing
+//! same-route flows into integer-weighted fluid aggregates must be a
+//! pure engine speedup — per-flow completion times are **bit-identical**
+//! with aggregation on vs off (not merely within a tolerance; the
+//! weighted max-min solve performs the same f64 operations as the
+//! expanded one), and the event/solve counters match too. Exercised
+//! through the public `transfer_batch` API over mixed
+//! aggregated/singleton batches, shared-tenancy background flows, and
+//! ECMP multi-spine topologies.
+
+use fabricbench::cluster::{EndpointKind, Placement};
+use fabricbench::collectives::{Collective, Hierarchical, NullBuffers};
+use fabricbench::config::presets::fabric;
+use fabricbench::config::spec::{
+    ClusterSpec, FabricKind, TopologyKind, TopologySpec, TransportOptions,
+};
+use fabricbench::config::TenancySpec;
+use fabricbench::fabric::{BackgroundTraffic, Comm, FlowReq, NetSim};
+use fabricbench::util::rng::Rng;
+
+fn opts(aggregation: bool) -> TransportOptions {
+    TransportOptions { flow_aggregation: aggregation, ..Default::default() }
+}
+
+/// Random batch mixing duplicate-route flows (same src/dst/bytes/ready,
+/// several copies) with singletons — both aggregation regimes in one
+/// solve, across both GPU and CPU endpoints.
+fn random_mixed_batch(rng: &mut Rng, nodes: usize) -> Vec<FlowReq> {
+    let mut reqs = Vec::new();
+    let n_groups = 1 + rng.below(8) as usize;
+    for _ in 0..n_groups {
+        let src = rng.below(nodes as u64) as usize;
+        let mut dst = rng.below(nodes as u64) as usize;
+        if dst == src {
+            dst = (dst + 1) % nodes;
+        }
+        let kind = if rng.below(2) == 0 { EndpointKind::Gpu } else { EndpointKind::Cpu };
+        let bytes = match rng.below(4) {
+            0 => 0.0, // zero-byte flows complete at arrival
+            1 => 512.0,
+            2 => 1.5e6,
+            _ => 64.0 * 1024.0 * 1024.0,
+        };
+        let ready = rng.below(4) as f64 * 75.0e-6;
+        let copies = 1 + rng.below(5) as usize; // 1 = singleton
+        for _ in 0..copies {
+            reqs.push(FlowReq {
+                src: NetSim::endpoint(src, 0, kind),
+                dst: NetSim::endpoint(dst, 0, kind),
+                bytes,
+                ready,
+            });
+        }
+    }
+    reqs
+}
+
+fn assert_batches_bit_identical(
+    label: &str,
+    mut on: NetSim,
+    mut off: NetSim,
+    batches: &[Vec<FlowReq>],
+) {
+    for (bi, reqs) in batches.iter().enumerate() {
+        let t_on = on.transfer_batch(reqs);
+        let t_off = off.transfer_batch(reqs);
+        for (i, (a, b)) in t_on.iter().zip(&t_off).enumerate() {
+            assert_eq!(
+                a.recv_complete.to_bits(),
+                b.recv_complete.to_bits(),
+                "{label}: batch {bi} flow {i} recv_complete {} vs {}",
+                a.recv_complete,
+                b.recv_complete
+            );
+            assert_eq!(
+                a.send_release.to_bits(),
+                b.send_release.to_bits(),
+                "{label}: batch {bi} flow {i} send_release"
+            );
+        }
+    }
+    // The aggregated loop walks the same event sequence over fewer
+    // flow records: engine counters must agree exactly.
+    assert_eq!(on.stats.fluid_events, off.stats.fluid_events, "{label}: fluid_events");
+    assert_eq!(on.solver.solves, off.solver.solves, "{label}: solves");
+    assert_eq!(on.solver.rounds, off.solver.rounds, "{label}: rounds");
+    assert_eq!(on.stats.budget_exceeded, off.stats.budget_exceeded, "{label}: budget");
+    assert_eq!(off.stats.agg_collapsed, 0, "{label}: off path must not collapse");
+    assert!(
+        on.stats.agg_collapsed > 0,
+        "{label}: trials must include genuinely collapsed flows"
+    );
+}
+
+#[test]
+fn mixed_batches_bit_identical_across_aggregation_toggle() {
+    let cluster = ClusterSpec::txgaia();
+    let mut rng = Rng::new(0xA66_0001);
+    let on = NetSim::new(fabric(FabricKind::EthernetRoce25), cluster.clone(), opts(true));
+    let off = NetSim::new(fabric(FabricKind::EthernetRoce25), cluster, opts(false));
+    let batches: Vec<Vec<FlowReq>> =
+        (0..40).map(|_| random_mixed_batch(&mut rng, 48)).collect();
+    assert_batches_bit_identical("mixed", on, off, &batches);
+}
+
+#[test]
+fn tenancy_background_flows_bit_identical_across_toggle() {
+    // Background tenant flows join every fluid batch; attribution and
+    // tracing happen per-flow outside the solve, so tenant traffic
+    // aggregates like any other same-route flow — and the shared-fabric
+    // timings must stay bit-identical.
+    let cluster = ClusterSpec::txgaia();
+    let spec = TenancySpec {
+        src_first: Some(64),
+        src_count: Some(16),
+        dst_first: Some(32),
+        dst_count: Some(8),
+        ..TenancySpec::neighbor_incast(0.5)
+    };
+    let build = |agg: bool| {
+        let mut net = NetSim::new(fabric(FabricKind::EthernetRoce25), cluster.clone(), opts(agg));
+        let bg = BackgroundTraffic::new(&spec, &net.fabric, &net.cluster, 11).unwrap();
+        net.set_background(bg);
+        net
+    };
+    let mut rng = Rng::new(0xA66_0002);
+    let batches: Vec<Vec<FlowReq>> =
+        (0..25).map(|_| random_mixed_batch(&mut rng, 40)).collect();
+    let (mut on, mut off) = (build(true), build(false));
+    for (bi, reqs) in batches.iter().enumerate() {
+        let t_on = on.transfer_batch(reqs);
+        let t_off = off.transfer_batch(reqs);
+        for (i, (a, b)) in t_on.iter().zip(&t_off).enumerate() {
+            assert_eq!(
+                a.recv_complete.to_bits(),
+                b.recv_complete.to_bits(),
+                "tenancy: batch {bi} flow {i}"
+            );
+        }
+    }
+    assert!(on.stats.background_messages > 0, "tenant must have injected flows");
+    assert_eq!(on.stats.background_messages, off.stats.background_messages);
+    assert_eq!(on.stats.fluid_events, off.stats.fluid_events);
+    assert_eq!(on.stats.budget_exceeded, off.stats.budget_exceeded);
+    assert!(on.stats.agg_collapsed > 0, "incast duplicates must collapse");
+}
+
+#[test]
+fn ecmp_multi_spine_keys_routes_apart_and_stays_bit_identical() {
+    // On a 4-spine oversubscribed fat-tree, same-(src,dst) flows can hash
+    // to different spines (distinct routes) — the aggregation key is the
+    // exact resource route, so ECMP-split flows must stay separate units
+    // while same-spine duplicates still collapse. Either way: bit-exact.
+    let mut cluster = ClusterSpec::txgaia();
+    cluster.nodes_per_rack = 8;
+    let topo = TopologySpec {
+        kind: TopologyKind::FatTree,
+        spines: 4,
+        oversubscription: Some(4.0),
+        ..TopologySpec::default()
+    };
+    let build = |agg: bool| {
+        let mut fab = fabric(FabricKind::OmniPath100);
+        fab.topology = topo;
+        fab.topology.validate_for(&cluster).unwrap();
+        NetSim::new(fab, cluster.clone(), opts(agg))
+    };
+    let mut rng = Rng::new(0xA66_0003);
+    let (mut on, mut off) = (build(true), build(false));
+    let mut collapsed_total = 0u64;
+    for bi in 0..30 {
+        // Cross-rack fan: many copies between few node pairs, so the
+        // engine assigns several flow_seq values per pair and ECMP
+        // spreads them over spines.
+        let mut reqs = Vec::new();
+        for _ in 0..(2 + rng.below(4)) {
+            let src = rng.below(8) as usize;
+            let dst = 8 + rng.below(8) as usize;
+            let bytes = [4096.0, 2.0e6, 16.0e6][rng.below(3) as usize];
+            for _ in 0..(1 + rng.below(6)) {
+                reqs.push(FlowReq {
+                    src: NetSim::endpoint(src, 0, EndpointKind::Cpu),
+                    dst: NetSim::endpoint(dst, 0, EndpointKind::Cpu),
+                    bytes,
+                    ready: 0.0,
+                });
+            }
+        }
+        let t_on = on.transfer_batch(&reqs);
+        let t_off = off.transfer_batch(&reqs);
+        for (i, (a, b)) in t_on.iter().zip(&t_off).enumerate() {
+            assert_eq!(
+                a.recv_complete.to_bits(),
+                b.recv_complete.to_bits(),
+                "ecmp: batch {bi} flow {i}"
+            );
+        }
+        collapsed_total = on.stats.agg_collapsed;
+    }
+    assert_eq!(on.stats.fluid_events, off.stats.fluid_events);
+    assert_eq!(on.solver.solves, off.solver.solves);
+    assert!(collapsed_total > 0, "same-spine duplicates must still collapse");
+    assert!(
+        on.stats.agg_units > collapsed_total / 8,
+        "ECMP split must keep distinct routes as distinct units"
+    );
+}
+
+#[test]
+fn hierarchical_collective_round_trips_the_whole_stack() {
+    // End-to-end through Comm + a real collective on 8-GPU nodes (the
+    // frontier shape): per-rank completion clocks bit-identical.
+    let mut cluster = ClusterSpec::txgaia();
+    cluster.gpus_per_node = 8;
+    cluster.nodes_per_rack = 4;
+    let placement = Placement::gpus(&cluster, 64).unwrap();
+    let run = |agg: bool| {
+        let mut net = NetSim::new(fabric(FabricKind::EthernetRoce25), cluster.clone(), opts(agg));
+        let t = {
+            let mut comm = Comm::new(&mut net, &placement);
+            Hierarchical::default().allreduce(&mut comm, &mut NullBuffers { elems: 1 << 18 })
+        };
+        (t, net.stats.fluid_events, net.stats.agg_collapsed)
+    };
+    let (t_on, ev_on, collapsed) = run(true);
+    let (t_off, ev_off, _) = run(false);
+    assert_eq!(t_on.to_bits(), t_off.to_bits());
+    assert_eq!(ev_on, ev_off);
+    assert!(collapsed > 0, "8-GPU nodes produce same-route flows");
+}

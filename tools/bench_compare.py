@@ -38,7 +38,16 @@ import sys
 SCHEMA = "fabricbench-bench-v1"
 
 # Fields where a larger value is an improvement, not a regression.
-HIGHER_IS_BETTER = {"cache_hits", "hit_rate", "img_s", "images_per_sec"}
+# agg_collapsed / collapse_pct: flows absorbed into an existing fluid
+# aggregate — losing aggregation coverage is the regression direction.
+HIGHER_IS_BETTER = {
+    "cache_hits",
+    "hit_rate",
+    "img_s",
+    "images_per_sec",
+    "agg_collapsed",
+    "collapse_pct",
+}
 
 TIME_SUFFIXES = ("_ms", "_secs", "_us", "_ns")
 
