@@ -6,8 +6,9 @@
 //!
 //! `--quick` shrinks every workload to CI size; `--bench-json PATH`
 //! appends machine-readable results (the perf trajectory CI uploads —
-//! currently `BENCH_PR5.json`: wall-ms, event counts, solver
-//! iterations, cache hits, background-tenant flow counts).
+//! currently `BENCH_PR9.json`: wall-ms, event counts, solver
+//! iterations, cache hits, background-tenant flow counts, fault
+//! retry/reroute counters).
 
 use fabricbench::cluster::Placement;
 use fabricbench::collectives::{Collective, NullBuffers, RingAllreduce};
@@ -177,6 +178,59 @@ fn main() {
         );
     }
 
+    // 2c. Faulted contended workload: the 256-flow incast mix on a
+    // 4-spine 4:1 fat-tree with spine 0 dying mid-batch — the
+    // degradation-aware event loop settles, re-routes over the three
+    // survivors, and re-prices the touched bottleneck groups every
+    // iteration (reset keeps the fault clock at 0, so each round
+    // replays the same trace). The PR 9 perf-trajectory workload;
+    // retry/reroute counters ride along in the bench JSON.
+    {
+        let flows_n = 256usize;
+        let reqs = contended_batch(flows_n);
+        let iters = if quick { 20 } else { 200 };
+        let mut fab = fabric(FabricKind::EthernetRoce25);
+        fab.topology.spines = 4;
+        fab.topology.oversubscription = Some(4.0);
+        let mut net = NetSim::new(fab, cluster.clone(), TransportOptions::default());
+        net.set_faults(&fabricbench::fabric::FaultSpec::spine_down(0, 1.0e-3, 0.5))
+            .unwrap();
+        let mut events = 0u64;
+        let (mut retries, mut reroutes, mut failed) = (0u64, 0u64, 0u64);
+        let start = Instant::now();
+        for _ in 0..iters {
+            let times = net.transfer_batch(&reqs);
+            std::hint::black_box(times[flows_n / 2].recv_complete);
+            events += net.stats.fluid_events;
+            retries += net.stats.retries;
+            reroutes += net.stats.reroutes;
+            failed += net.stats.failed_flows;
+            net.reset();
+        }
+        let dt = start.elapsed().as_secs_f64();
+        println!(
+            "contended batch x{flows_n} + mid-batch spine-down: {:.3} ms/batch ({} events, {} reroutes, {} retries, {} failed)",
+            dt / iters as f64 * 1e3,
+            events / iters as u64,
+            reroutes / iters as u64,
+            retries / iters as u64,
+            failed
+        );
+        report.entry(
+            "contended_batch_faulted",
+            &[
+                ("wall_ms", dt * 1e3),
+                ("wall_ms_per_batch", dt / iters as f64 * 1e3),
+                ("iters", iters as f64),
+                ("events", events as f64),
+                ("reroutes", reroutes as f64),
+                ("retries", retries as f64),
+                ("failed_flows", failed as f64),
+                ("solver_iterations", net.solver.rounds as f64),
+            ],
+        );
+    }
+
     // 3. Full-scale allreduce simulation (512 GPUs, ResNet50-sized bucket).
     let placement = Placement::gpus(&cluster, 512).unwrap();
     let elems = 25_557_032usize / 2;
@@ -324,6 +378,7 @@ fn main() {
             fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy: fabricbench::config::TenancySpec::default(),
         workload: fabricbench::config::WorkloadSpec::default(),
+        faults: fabricbench::fabric::FaultSpec::default(),
     };
     let spec = fabricbench::config::spec::RunSpec {
         warmup_steps: 0,

@@ -29,7 +29,12 @@ impl Args {
                     // Value-taking if the next token isn't another flag.
                     match it.peek() {
                         Some(next) if !next.starts_with("--") => {
-                            let v = it.next().unwrap();
+                            // peek() just said Some; if that invariant
+                            // ever breaks, fail loudly instead of
+                            // panicking on unwrap.
+                            let Some(v) = it.next() else {
+                                bail!("--{stripped}: expected a value but the argument list ended");
+                            };
                             options.insert(stripped.to_string(), v);
                         }
                         _ => {

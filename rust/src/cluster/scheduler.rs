@@ -20,7 +20,12 @@
 //! shared-tenancy background generators of PR 5 promoted to first-class
 //! jobs. Step times are memoized on the (job, node set, neighbor set)
 //! key, so a fleet run costs one trainer simulation per distinct
-//! co-location pattern, not per event.
+//! co-location pattern, not per event. Node failures double as fabric
+//! faults: a node awaiting repair enters every measurement taken during
+//! its repair window as a hard NIC-down ([`crate::fabric::FaultEvent`])
+//! layered on the configured `[faults]` trace, and the remaining repair
+//! time folds into the memo key so faulted prices never alias healthy
+//! ones.
 //!
 //! Determinism contract: the whole simulation is a pure function of
 //! `(TrainerSim, FleetSpec, RunSpec)`. A single-job, no-churn fleet
@@ -34,6 +39,7 @@ use crate::cluster::Placement;
 use crate::config::{FleetSpec, PlacementPolicy, RunSpec, TenancySpec};
 use crate::fabric::tenancy::BackgroundTraffic;
 use crate::fabric::topology::Topology;
+use crate::fabric::{FaultEvent, FaultTarget};
 use crate::trainer::TrainerSim;
 use crate::util::hash::{fnv1a_u64, FNV_OFFSET};
 use crate::util::stats;
@@ -396,6 +402,15 @@ impl<'a> FleetSim<'a> {
         let running: Vec<usize> = (0..st.jobs.len())
             .filter(|&ji| st.jobs[ji].phase == JobPhase::Running)
             .collect();
+        // Nodes awaiting repair surface to the fabric as hard NIC-down
+        // faults for the remainder of their repair window: the failure
+        // trace is a *fabric* event, not just a scheduling one. Sorted
+        // by node id so the memo key and the fault spec are canonical.
+        // Empty when no repair is pending, which folds nothing into the
+        // key — healthy repricings keep their pre-fault memo entries.
+        let mut down: Vec<(usize, f64)> =
+            st.repairs.iter().map(|&(rt, node)| (node, rt - t)).collect();
+        down.sort_by(|a, b| a.0.cmp(&b.0));
         for &ji in &running {
             let mut key = FNV_OFFSET;
             key = fnv1a_u64(key, st.jobs[ji].spec.id as u64);
@@ -413,10 +428,14 @@ impl<'a> FleetSim<'a> {
                 }
                 key = fnv1a_u64(key, u64::MAX);
             }
+            for &(node, remaining) in &down {
+                key = fnv1a_u64(key, node as u64);
+                key = fnv1a_u64(key, remaining.to_bits());
+            }
             let step_time = match memo.get(&key) {
                 Some(&v) => v,
                 None => {
-                    let v = self.measure_step_time(st, ji, &running, run)?;
+                    let v = self.measure_step_time(st, ji, &running, run, &down)?;
                     memo.insert(key, v);
                     v
                 }
@@ -436,12 +455,18 @@ impl<'a> FleetSim<'a> {
     /// (shuffle traffic over the neighbor's own nodes at the configured
     /// `neighbor_load`). Single-node neighbors emit nothing — their
     /// training traffic never leaves the node.
+    ///
+    /// Nodes still awaiting repair (`down`: sorted `(node, remaining)`)
+    /// enter the measurement as NIC hard-down fabric faults for the
+    /// remainder of their repair window, layered on top of any
+    /// configured `[faults]` trace.
     fn measure_step_time(
         &self,
         st: &Ledger,
         ji: usize,
         running: &[usize],
         run: &RunSpec,
+        down: &[(usize, f64)],
     ) -> anyhow::Result<f64> {
         let j = &st.jobs[ji];
         let gpus = j.nodes.len() * self.trainer.cluster.gpus_per_node;
@@ -470,7 +495,23 @@ impl<'a> FleetSim<'a> {
             }
         }
         let inner = RunSpec { seed: self.job_run_seed(run, j.spec.id), ..run.clone() };
-        let result = self.trainer.run_placed(&placement, &inner, &tenants)?;
+        let result = if down.is_empty() {
+            // No pending repair: `run_placed` applies `trainer.faults`
+            // itself, and the default (inactive) spec is bit-for-bit
+            // the pre-fault engine.
+            self.trainer.run_placed(&placement, &inner, &tenants)?
+        } else {
+            let mut faults = self.trainer.faults.clone();
+            for &(node, remaining) in down {
+                faults.events.push(FaultEvent {
+                    target: FaultTarget::Nic(node),
+                    at: 0.0,
+                    duration: remaining,
+                    factor: 0.0,
+                });
+            }
+            self.trainer.run_placed_with_faults(&placement, &inner, &tenants, &faults)?
+        };
         Ok(result.step_time_mean)
     }
 

@@ -36,13 +36,16 @@ impl Collective for Hierarchical {
         let n = bufs.elems();
         let bytes = n as f64 * BYTES_PER_ELEM;
         let groups = comm.placement.by_node();
-        let leaders: Vec<usize> = groups.iter().map(|g| g[0]).collect();
+        let leaders: Vec<usize> = groups.iter().map(|g| elect(comm, g)).collect();
 
         // Phase 1: intra-node reduce to the leader (PCIe, point-to-point
         // links — no shared fabric resources).
-        for g in &groups {
-            let leader = g[0];
-            for &r in &g[1..] {
+        for (gi, g) in groups.iter().enumerate() {
+            let leader = leaders[gi];
+            for &r in g {
+                if r == leader {
+                    continue;
+                }
                 comm.p2p(r, leader, bytes);
                 bufs.reduce_chunk(leader, r, 0..n);
             }
@@ -63,18 +66,25 @@ impl Collective for Hierarchical {
             if tors.len() > 1 {
                 // Phase 2b: ring among the per-ToR leaders — the only
                 // phase whose flows cross the (possibly oversubscribed)
-                // leaf->spine uplinks.
-                let tor_leaders: Vec<usize> = tors.iter().map(|g| g[0]).collect();
+                // leaf->spine uplinks. A ToR whose first leader's node
+                // is down on the fault timeline re-elects (first
+                // surviving member), so a leader death degrades the
+                // step instead of wedging it.
+                let tor_leaders: Vec<usize> = tors.iter().map(|g| elect(comm, g)).collect();
                 ring_over_groups(comm, bufs, std::slice::from_ref(&tor_leaders), n);
 
                 // Phase 2c: fan the global sum back out to the other
                 // node leaders, all ToRs in one concurrent round.
                 let mut msgs = Vec::new();
                 let mut copies = Vec::new();
-                for g in &tors {
-                    for &r in &g[1..] {
-                        msgs.push((g[0], r, bytes));
-                        copies.push((r, g[0]));
+                for (ti, g) in tors.iter().enumerate() {
+                    let leader = tor_leaders[ti];
+                    for &r in g {
+                        if r == leader {
+                            continue;
+                        }
+                        msgs.push((leader, r, bytes));
+                        copies.push((r, leader));
                     }
                 }
                 if !msgs.is_empty() {
@@ -87,14 +97,38 @@ impl Collective for Hierarchical {
         }
 
         // Phase 3: intra-node broadcast from the leader.
-        for g in &groups {
-            let leader = g[0];
-            for &r in &g[1..] {
+        for (gi, g) in groups.iter().enumerate() {
+            let leader = leaders[gi];
+            for &r in g {
+                if r == leader {
+                    continue;
+                }
                 comm.p2p(leader, r, bytes);
                 bufs.copy_chunk(r, leader, 0..n);
             }
         }
         comm.max_time()
+    }
+}
+
+/// Pick a group's leader: the first member whose node is alive on the
+/// attached fault timeline through the step's current horizon, so a
+/// leader whose NIC is hard-down mid-step is replaced by the first
+/// surviving member instead of wedging the collective. On a healthy
+/// fabric (no timeline — the `faults = none` contract) this is exactly
+/// the pre-fault choice `g[0]`, bit-for-bit; it is also the fallback
+/// when every member's node is down (the flows then ride the transport
+/// retry/failure accounting).
+fn elect(comm: &Comm, g: &[usize]) -> usize {
+    match comm.net.fault_timeline() {
+        None => g[0],
+        Some(tl) => {
+            let at = comm.net.fault_clock() + comm.max_time();
+            g.iter()
+                .copied()
+                .find(|&r| tl.node_alive(comm.placement.endpoints[r].node, at))
+                .unwrap_or(g[0])
+        }
     }
 }
 
@@ -278,6 +312,56 @@ mod tests {
             net_h.stats.inter_rack_messages,
             net_f.stats.inter_rack_messages
         );
+    }
+
+    #[test]
+    fn dead_leader_node_is_re_elected_off_the_uplinks() {
+        // Node 0 hosts the default leader of the first node AND the
+        // first ToR. With its NIC hard-down for the whole run, ToR 0's
+        // leadership must move to a surviving node: no inter-rack
+        // message may touch node 0 (its unavoidable intra-ToR ring
+        // flows still pay the transport retry/failure accounting), and
+        // the allreduce still sums correctly — the step degrades, it
+        // does not wedge.
+        use crate::collectives::testutil::naive_sum;
+        use crate::fabric::faults::{FaultEvent, FaultTarget};
+        use crate::fabric::FaultSpec;
+        let ranks = 12;
+        let (mut net, placement) = small_rack_world(ranks);
+        let spec = FaultSpec {
+            events: vec![FaultEvent {
+                target: FaultTarget::Nic(0),
+                at: 0.0,
+                duration: 1e6,
+                factor: 0.0,
+            }],
+            ..FaultSpec::default()
+        };
+        net.set_faults(&spec).unwrap();
+        net.enable_trace();
+        let mut bufs = crate::collectives::testutil::random_buffers(ranks, 64, 42);
+        let expect = naive_sum(&bufs);
+        let t = {
+            let mut comm = Comm::new(&mut net, &placement);
+            Hierarchical::default().allreduce(&mut comm, &mut bufs)
+        };
+        assert!(t.is_finite() && t > 0.0);
+        let trace = net.trace.as_ref().unwrap();
+        assert!(
+            trace
+                .events
+                .iter()
+                .filter(|e| e.inter_rack)
+                .all(|e| e.src_node != 0 && e.dst_node != 0),
+            "a dead node kept ToR leadership across the uplinks"
+        );
+        assert!(net.stats.failed_flows > 0, "node 0's intra-ToR flows must fail loudly");
+        for buf in &bufs.data {
+            for (i, (got, want)) in buf.iter().zip(&expect).enumerate() {
+                let tol = 1e-4 * want.abs().max(1.0);
+                assert!((got - want).abs() <= tol, "elem {i}: {got} vs {want}");
+            }
+        }
     }
 
     #[test]

@@ -160,6 +160,23 @@ source = "poisson"     # or "on-off" (bursty: exponential burst/idle phases)
 # straggler_factor = 1.5 # their compute-time multiplier (>= 1)
 # straggler_jitter = 0.05# extra per-step lognormal sigma, all ranks
 
+# Uncomment to inject fabric faults (see `fabricbench help`, "fault
+# injection"): a seeded random trace (`rate` events/sec) and/or scripted
+# events, times in milliseconds. `rate = 0` with no events is inactive
+# and bit-for-bit the fault-free engine.
+# [faults]
+# rate = 0.5             # random link/NIC/spine events per second
+# seed = 1025047         # fault-trace RNG seed
+# mean_duration_ms = 50.0 # mean outage length of random events
+# horizon_secs = 60.0    # random trace covers [0, horizon)
+# brownout_frac = 0.5    # fraction of random events that are brownouts
+# brownout_factor = 0.25 # surviving capacity fraction in a brownout
+# spine_down = [[0, 10.0, 50.0]]         # [spine, at_ms, duration_ms]
+# link_down  = [[0, 1, 10.0, 50.0]]      # [tor, spine, at_ms, duration_ms]
+# nic_down   = [[3, 10.0, 50.0]]         # [node, at_ms, duration_ms]
+# brownout   = [[0, 1, 10.0, 50.0, 0.5]] # [tor, spine, at_ms, dur_ms, factor]
+# flap       = [[1, 10.0, 20.0, 4]]      # [spine, first_ms, period_ms, count]
+
 # Uncomment to run a multi-job fleet through the cluster scheduler
 # instead of a single training job (`run --config` then reports per-job
 # JCTs and fleet goodput; see `fabricbench help`, "multi-job fleet").
@@ -277,6 +294,24 @@ mod tests {
         assert_eq!(fleet.jobs, 12);
         assert_eq!(fleet.placement, crate::config::PlacementPolicy::Pack);
         assert_eq!(fleet.seed, 1);
+        // The [faults] block also ships commented out (an active table
+        // would inject faults into the example run); de-comment it so
+        // every documented key and event row stays parseable and valid.
+        let faults_text: String = EXAMPLE_TOML
+            .lines()
+            .skip_while(|l| *l != "# [faults]")
+            .take_while(|l| l.starts_with('#'))
+            .map(|l| l.trim_start_matches("# "))
+            .collect::<Vec<_>>()
+            .join("\n");
+        let faults_doc = toml::parse(&faults_text).unwrap();
+        let faults =
+            crate::fabric::FaultSpec::from_toml(faults_doc.get("faults").unwrap()).unwrap();
+        assert!(faults.active());
+        assert_eq!(faults.rate, 0.5);
+        assert_eq!(faults.seed, 1025047);
+        // 1 spine_down + 1 link_down + 1 nic_down + 1 brownout + 4 flaps
+        assert_eq!(faults.events.len(), 8);
     }
 
     #[test]

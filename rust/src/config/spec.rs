@@ -1212,6 +1212,16 @@ pub struct TransportOptions {
     /// workers. Results are bit-identical at any setting; only
     /// wall-clock moves.
     pub solver_threads: usize,
+    /// Base rendezvous timeout (seconds) before a flow whose path is
+    /// fault-dead retries. Only consulted when a `[faults]` timeline is
+    /// attached; the healthy engine never reads it.
+    pub retry_timeout: f64,
+    /// Exponential backoff multiplier between retries (wait k is
+    /// `retry_timeout * retry_backoff^(k-1)`).
+    pub retry_backoff: f64,
+    /// Retries before a flow is declared failed (loudly, and counted in
+    /// `NetStats::failed_flows`).
+    pub max_retries: usize,
 }
 
 impl Default for TransportOptions {
@@ -1225,6 +1235,11 @@ impl Default for TransportOptions {
             schedule_cache: true,
             flow_aggregation: true,
             solver_threads: 0,
+            // 1 ms base timeout, doubling, 10 tries: the total retry
+            // window (~1 s) comfortably covers the default 50 ms repair.
+            retry_timeout: 1e-3,
+            retry_backoff: 2.0,
+            max_retries: 10,
         }
     }
 }
@@ -1281,6 +1296,18 @@ impl TransportOptions {
             }
             t.solver_threads = x as usize;
         }
+        if let Some(x) = getf("retry_timeout_ms")? {
+            t.retry_timeout = x * 1e-3;
+        }
+        if let Some(x) = getf("retry_backoff")? {
+            t.retry_backoff = x;
+        }
+        if let Some(x) = getf("max_retries")? {
+            if x.fract() != 0.0 || x < 0.0 {
+                bail!("transport.max_retries must be a non-negative integer, got {x}");
+            }
+            t.max_retries = x as usize;
+        }
         t.validate()?;
         Ok(t)
     }
@@ -1307,6 +1334,19 @@ impl TransportOptions {
             if x <= 0.0 {
                 bail!("transport: chunk size must be positive");
             }
+        }
+        if !self.retry_timeout.is_finite() || self.retry_timeout <= 0.0 {
+            bail!("transport: retry_timeout_ms must be positive");
+        }
+        if !self.retry_backoff.is_finite() || self.retry_backoff < 1.0 {
+            bail!(
+                "transport: retry_backoff {} must be >= 1 (shrinking waits never \
+                 outlast a repair window)",
+                self.retry_backoff
+            );
+        }
+        if self.max_retries == 0 || self.max_retries > 64 {
+            bail!("transport: max_retries {} must be in [1, 64]", self.max_retries);
         }
         Ok(())
     }

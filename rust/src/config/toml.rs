@@ -119,7 +119,12 @@ fn ensure_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<()
 }
 
 fn insert(root: &mut BTreeMap<String, Json>, path: &[String], value: Json) -> Result<(), String> {
-    let (last, dirs) = path.split_last().expect("non-empty path");
+    let Some((last, dirs)) = path.split_last() else {
+        // Callers always pass a parsed dotted key; an empty path is a
+        // parser bug — surface it as a structured parse error, not a
+        // panic.
+        return Err("empty key path".to_string());
+    };
     let mut cur = root;
     for seg in dirs {
         let entry = cur

@@ -44,6 +44,7 @@ fn sample(
             crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy: crate::config::TenancySpec::default(),
         workload: crate::config::WorkloadSpec::default(),
+        faults: crate::fabric::FaultSpec::default(),
     };
     (0..reps)
         .map(|i| {

@@ -60,6 +60,7 @@ pub fn run_with(quick: bool, runner: &Runner) -> (Table, Vec<Fig4Row>) {
                     crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
                 tenancy: crate::config::TenancySpec::default(),
                 workload: crate::config::WorkloadSpec::default(),
+                faults: crate::fabric::FaultSpec::default(),
             };
             let run_spec = RunSpec { seed, measure_steps, warmup_steps: 2, ..Default::default() };
             let r = trainer.run(*g, &run_spec).unwrap();

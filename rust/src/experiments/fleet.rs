@@ -66,6 +66,7 @@ pub fn fleet_trainer() -> TrainerSim {
         coordination_overhead: DEFAULT_COORDINATION_OVERHEAD,
         tenancy: TenancySpec::default(),
         workload: crate::config::WorkloadSpec::default(),
+        faults: crate::fabric::FaultSpec::default(),
     }
 }
 

@@ -34,6 +34,7 @@ fn trainer(profile: &FrameworkProfile, fabric: crate::config::FabricSpec) -> Tra
         coordination_overhead: profile.coordination_overhead,
         tenancy: crate::config::TenancySpec::default(),
         workload: crate::config::WorkloadSpec::default(),
+        faults: crate::fabric::FaultSpec::default(),
     }
 }
 

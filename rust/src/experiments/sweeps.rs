@@ -222,6 +222,7 @@ fn trainer(fabric: crate::config::FabricSpec, batch: usize, precision: Precision
         coordination_overhead: crate::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy: crate::config::TenancySpec::default(),
         workload: crate::config::WorkloadSpec::default(),
+        faults: crate::fabric::FaultSpec::default(),
     }
 }
 

@@ -1,0 +1,860 @@
+//! Fault injection: deterministic, seeded traces of link/NIC/spine events
+//! compiled into a capacity-multiplier timeline the fluid engine merges
+//! into its event loop.
+//!
+//! Three event classes, all expressed as *capacity changes* on the shared
+//! link resources of [`Topology`]:
+//!
+//! * **hard-down with repair** — factor `0.0` over `[at, at + duration)`;
+//! * **bandwidth brownout** — factor in `(0, 1)` over the window;
+//! * **flapping** — a spine that cycles down/up `count` times with period
+//!   `period` (down for the first half of each cycle).
+//!
+//! Targets: a whole **spine** (every ToR's up/down port through it), a
+//! single **link** (one ToR's up/down pair on one spine), or a **NIC**
+//! (a node's tx/rx ports; a hard NIC-down also marks the *node* dead for
+//! the window, which the collectives use for leader election). Dragonfly
+//! global links are not fault targets — the spine tier they feed already
+//! covers the inter-group path.
+//!
+//! Traces come from two sources that compose: a scripted event list (the
+//! `[faults]` TOML arrays, or programmatic [`FaultSpec::events`]) and a
+//! seeded Poisson process (`rate` events/sec up to `horizon_secs`,
+//! exponential durations, a `brownout_frac` coin per event). Compilation
+//! is pure: the same `(spec, topology)` pair always yields the same
+//! timeline, so every downstream consumer (engine, collectives, sweeps)
+//! is bitwise reproducible.
+//!
+//! The neutral spec (`FaultSpec::default()`, i.e. `faults = none`) is
+//! *inactive*: `NetSim` never attaches a timeline, and the engine is
+//! bit-for-bit the pre-fault engine (pinned by `tests/fault_properties.rs`).
+
+use crate::fabric::topology::Topology;
+use crate::util::hash::{fnv1a_u64, FNV_OFFSET};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// What a fault event hits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// A whole spine switch: every ToR's up/down port through it.
+    Spine(usize),
+    /// One ToR's up/down link pair on one spine.
+    Link { tor: usize, spine: usize },
+    /// A node's NIC (tx and rx). A hard-down also marks the node dead.
+    Nic(usize),
+}
+
+/// One fault: the target's capacity is multiplied by `factor` over
+/// `[at, at + duration)`. `factor == 0.0` is a hard-down with repair at
+/// the window's end; `0 < factor < 1` is a brownout. Overlapping events
+/// on the same resource multiply (any hard-down wins).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub target: FaultTarget,
+    /// Start, in seconds on the fault clock.
+    pub at: f64,
+    /// Window length in seconds (> 0).
+    pub duration: f64,
+    /// Capacity multiplier in [0, 1).
+    pub factor: f64,
+}
+
+/// Declarative fault configuration (`[faults]` in TOML). Inactive by
+/// default — [`FaultSpec::active`] gates every engine hook, so the
+/// neutral spec costs nothing and changes no bits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Random fault events per second (0 = scripted events only).
+    pub rate: f64,
+    /// Seed for the random trace.
+    pub seed: u64,
+    /// Mean duration of a random event, seconds (exponential).
+    pub mean_duration: f64,
+    /// Random-trace horizon, seconds: no random event starts after this.
+    pub horizon: f64,
+    /// Fraction of random events that brown out instead of hard-down.
+    pub brownout_frac: f64,
+    /// Capacity multiplier used by random brownouts.
+    pub brownout_factor: f64,
+    /// Scripted events (parsed from the TOML arrays, or set directly).
+    pub events: Vec<FaultEvent>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            rate: 0.0,
+            seed: 0xFA_017,
+            mean_duration: 0.05,
+            horizon: 60.0,
+            brownout_frac: 0.5,
+            brownout_factor: 0.25,
+            events: Vec::new(),
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Does this spec inject anything? `false` = the engine never
+    /// attaches a timeline and is bit-for-bit the pre-fault engine.
+    pub fn active(&self) -> bool {
+        self.rate > 0.0 || !self.events.is_empty()
+    }
+
+    /// Preset: one scripted spine hard-down with repair.
+    pub fn spine_down(spine: usize, at: f64, duration: f64) -> FaultSpec {
+        FaultSpec {
+            events: vec![FaultEvent { target: FaultTarget::Spine(spine), at, duration, factor: 0.0 }],
+            ..Default::default()
+        }
+    }
+
+    /// Preset: seeded Poisson trace at `rate` events/sec.
+    pub fn random(rate: f64, seed: u64) -> FaultSpec {
+        FaultSpec { rate, seed, ..Default::default() }
+    }
+
+    /// Stable hash of the fault configuration (folded into schedule-cache
+    /// world signatures so faulted and healthy worlds can never alias).
+    pub fn signature(&self) -> u64 {
+        // One fold per field (see TenancySpec::signature for why not XOR).
+        let mut h = fnv1a_u64(FNV_OFFSET, self.rate.to_bits());
+        h = fnv1a_u64(h, self.seed);
+        h = fnv1a_u64(h, self.mean_duration.to_bits());
+        h = fnv1a_u64(h, self.horizon.to_bits());
+        h = fnv1a_u64(h, self.brownout_frac.to_bits());
+        h = fnv1a_u64(h, self.brownout_factor.to_bits());
+        for e in &self.events {
+            let (tag, a, b) = match e.target {
+                FaultTarget::Spine(s) => (1u64, s as u64, 0),
+                FaultTarget::Link { tor, spine } => (2, tor as u64, spine as u64),
+                FaultTarget::Nic(n) => (3, n as u64, 0),
+            };
+            h = fnv1a_u64(h, tag);
+            h = fnv1a_u64(h, a);
+            h = fnv1a_u64(h, b);
+            h = fnv1a_u64(h, e.at.to_bits());
+            h = fnv1a_u64(h, e.duration.to_bits());
+            h = fnv1a_u64(h, e.factor.to_bits());
+        }
+        h
+    }
+
+    /// Build from a parsed TOML `[faults]` table, filling defaults. A key
+    /// present with the wrong type or shape is a loud error, not a
+    /// silently kept default (same contract as `[transport]`/`[tenancy]`).
+    ///
+    /// Scripted events are arrays of fixed-arity number rows, times in
+    /// milliseconds:
+    ///
+    /// ```toml
+    /// [faults]
+    /// spine_down = [[0, 10.0, 50.0]]        # [spine, at_ms, duration_ms]
+    /// link_down  = [[0, 1, 10.0, 50.0]]     # [tor, spine, at_ms, duration_ms]
+    /// nic_down   = [[3, 10.0, 50.0]]        # [node, at_ms, duration_ms]
+    /// brownout   = [[0, 1, 10.0, 50.0, 0.5]]# [tor, spine, at_ms, dur_ms, factor]
+    /// flap       = [[1, 10.0, 20.0, 4]]     # [spine, first_ms, period_ms, count]
+    /// ```
+    pub fn from_toml(v: &Json) -> Result<FaultSpec> {
+        let getf = |key: &str| -> Result<Option<f64>> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => match x.as_f64() {
+                    Some(f) => Ok(Some(f)),
+                    None => bail!("faults.{key} must be a number"),
+                },
+            }
+        };
+        let rows = |key: &str, arity: usize| -> Result<Vec<Vec<f64>>> {
+            let Some(x) = v.get(key) else { return Ok(Vec::new()) };
+            let Some(items) = x.as_arr() else {
+                bail!("faults.{key} must be an array of {arity}-number rows");
+            };
+            let mut out = Vec::with_capacity(items.len());
+            for (i, row) in items.iter().enumerate() {
+                let Some(cells) = row.as_arr() else {
+                    bail!("faults.{key}[{i}] must be a {arity}-number row, got a scalar");
+                };
+                if cells.len() != arity {
+                    bail!("faults.{key}[{i}] must have {arity} numbers, got {}", cells.len());
+                }
+                let mut r = Vec::with_capacity(arity);
+                for (j, c) in cells.iter().enumerate() {
+                    match c.as_f64() {
+                        Some(f) => r.push(f),
+                        None => bail!("faults.{key}[{i}][{j}] must be a number"),
+                    }
+                }
+                out.push(r);
+            }
+            Ok(out)
+        };
+        let idx = |key: &str, x: f64| -> Result<usize> {
+            if x.fract() != 0.0 || x < 0.0 {
+                bail!("faults.{key} index must be a non-negative integer, got {x}");
+            }
+            Ok(x as usize)
+        };
+        let mut t = FaultSpec::default();
+        if let Some(x) = getf("rate")? {
+            t.rate = x;
+        }
+        if let Some(k) = v.get("seed") {
+            match k.as_f64() {
+                Some(f) if f.fract() == 0.0 && f >= 0.0 => {
+                    // Same 2^53 guard as tenancy.seed: the TOML layer
+                    // carries numbers as f64.
+                    if f >= (1u64 << 53) as f64 {
+                        bail!("faults.seed {f} is not exactly representable (must be < 2^53)");
+                    }
+                    t.seed = f as u64;
+                }
+                _ => bail!("faults.seed must be a non-negative integer"),
+            }
+        }
+        if let Some(x) = getf("mean_duration_ms")? {
+            t.mean_duration = x * 1e-3;
+        }
+        if let Some(x) = getf("horizon_secs")? {
+            t.horizon = x;
+        }
+        if let Some(x) = getf("brownout_frac")? {
+            t.brownout_frac = x;
+        }
+        if let Some(x) = getf("brownout_factor")? {
+            t.brownout_factor = x;
+        }
+        for r in rows("spine_down", 3)? {
+            t.events.push(FaultEvent {
+                target: FaultTarget::Spine(idx("spine_down", r[0])?),
+                at: r[1] * 1e-3,
+                duration: r[2] * 1e-3,
+                factor: 0.0,
+            });
+        }
+        for r in rows("link_down", 4)? {
+            t.events.push(FaultEvent {
+                target: FaultTarget::Link {
+                    tor: idx("link_down", r[0])?,
+                    spine: idx("link_down", r[1])?,
+                },
+                at: r[2] * 1e-3,
+                duration: r[3] * 1e-3,
+                factor: 0.0,
+            });
+        }
+        for r in rows("nic_down", 3)? {
+            t.events.push(FaultEvent {
+                target: FaultTarget::Nic(idx("nic_down", r[0])?),
+                at: r[1] * 1e-3,
+                duration: r[2] * 1e-3,
+                factor: 0.0,
+            });
+        }
+        for r in rows("brownout", 5)? {
+            t.events.push(FaultEvent {
+                target: FaultTarget::Link {
+                    tor: idx("brownout", r[0])?,
+                    spine: idx("brownout", r[1])?,
+                },
+                at: r[2] * 1e-3,
+                duration: r[3] * 1e-3,
+                factor: r[4],
+            });
+        }
+        for r in rows("flap", 4)? {
+            let spine = idx("flap", r[0])?;
+            let (first, period) = (r[1] * 1e-3, r[2] * 1e-3);
+            let count = idx("flap", r[3])?;
+            if !period.is_finite() || period <= 0.0 {
+                bail!("faults.flap period_ms must be positive, got {}", r[2]);
+            }
+            if count == 0 || count > 10_000 {
+                bail!("faults.flap count must be in [1, 10000], got {count}");
+            }
+            // Each flap cycle: down for the first half-period, up for the
+            // second.
+            for j in 0..count {
+                t.events.push(FaultEvent {
+                    target: FaultTarget::Spine(spine),
+                    at: first + j as f64 * period,
+                    duration: period * 0.5,
+                    factor: 0.0,
+                });
+            }
+        }
+        t.validate()?;
+        Ok(t)
+    }
+
+    /// Parse a CLI fault spec `RATE[:SEED]` (e.g. `2.0:99` — two random
+    /// events per second, seed 99) onto this spec.
+    pub fn apply_cli(&mut self, s: &str) -> Result<()> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.is_empty() || parts.len() > 2 {
+            bail!("--faults expects RATE[:SEED], got '{s}'");
+        }
+        self.rate = parts[0]
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--faults RATE must be a number, got '{}'", parts[0]))?;
+        if let Some(p) = parts.get(1) {
+            self.seed = p
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--faults SEED must be an integer, got '{p}'"))?;
+        }
+        self.validate()
+    }
+
+    /// Cluster-independent validation (event *indices* are checked
+    /// against the concrete topology at [`FaultTimeline::compile`] time).
+    pub fn validate(&self) -> Result<()> {
+        if !self.rate.is_finite() || self.rate < 0.0 {
+            bail!("faults: rate {} must be a finite non-negative number", self.rate);
+        }
+        if !self.mean_duration.is_finite() || self.mean_duration <= 0.0 {
+            bail!("faults: mean_duration_ms must be positive");
+        }
+        if !self.horizon.is_finite() || self.horizon <= 0.0 {
+            bail!("faults: horizon_secs must be positive");
+        }
+        // The random trace materializes ~rate * horizon events; keep the
+        // compiled timeline's size sane.
+        if self.rate * self.horizon > 100_000.0 {
+            bail!(
+                "faults: rate {} x horizon {}s would generate > 100k events",
+                self.rate,
+                self.horizon
+            );
+        }
+        if !self.brownout_frac.is_finite() || !(0.0..=1.0).contains(&self.brownout_frac) {
+            bail!("faults: brownout_frac {} must be in [0, 1]", self.brownout_frac);
+        }
+        if !self.brownout_factor.is_finite() || !(0.0..1.0).contains(&self.brownout_factor) {
+            bail!(
+                "faults: brownout_factor {} must be in [0, 1) (1 would be a no-op fault)",
+                self.brownout_factor
+            );
+        }
+        for (i, e) in self.events.iter().enumerate() {
+            if !e.at.is_finite() || e.at < 0.0 {
+                bail!("faults: event {i} start {} must be finite and >= 0", e.at);
+            }
+            if !e.duration.is_finite() || e.duration <= 0.0 {
+                bail!("faults: event {i} duration {} must be positive", e.duration);
+            }
+            if !e.factor.is_finite() || !(0.0..1.0).contains(&e.factor) {
+                bail!("faults: event {i} factor {} must be in [0, 1)", e.factor);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A compiled fault timeline against one concrete [`Topology`]: for every
+/// touched resource, a sorted step function of capacity multipliers, plus
+/// the global list of change times the event loop merges against, node
+/// liveness windows, and the merged "some fault is active" intervals the
+/// trainer's exposure metric integrates.
+#[derive(Clone, Debug, Default)]
+pub struct FaultTimeline {
+    /// Per-resource step function: `(t, mult)` sorted by `t`; the
+    /// multiplier applies from `t` (inclusive). Before the first entry
+    /// the multiplier is 1.
+    steps: HashMap<usize, Vec<(f64, f64)>>,
+    /// Union of every step time, sorted and deduplicated.
+    changes: Vec<f64>,
+    /// Per-node merged dead windows `[start, end)` (hard NIC-downs).
+    node_down: HashMap<usize, Vec<(f64, f64)>>,
+    /// Merged `[start, end)` windows where at least one fault is active.
+    degraded: Vec<(f64, f64)>,
+    /// Total expanded event count (after flap/random expansion).
+    n_events: usize,
+}
+
+/// Merge possibly-overlapping `[start, end)` intervals in place.
+fn merge_intervals(iv: &mut Vec<(f64, f64)>) {
+    iv.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+    let mut out: Vec<(f64, f64)> = Vec::with_capacity(iv.len());
+    for &(s, e) in iv.iter() {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    *iv = out;
+}
+
+/// Sorted `(t, mult)` step function from one resource's fault intervals
+/// `(start, end, factor)`: the multiplier at time t is the product of the
+/// factors of every interval covering t (so overlapping brownouts
+/// compound and any hard-down forces 0). Consecutive bitwise-equal steps
+/// are collapsed.
+fn step_function(intervals: &[(f64, f64, f64)]) -> Vec<(f64, f64)> {
+    // Breakpoints: (t, is_start, interval index). Ends sort before starts
+    // at equal t so a repair and a new fault at the same instant don't
+    // fabricate a zero-width overlap.
+    let mut pts: Vec<(f64, bool, usize)> = Vec::with_capacity(2 * intervals.len());
+    for (i, &(s, e, _)) in intervals.iter().enumerate() {
+        pts.push((s, true, i));
+        pts.push((e, false, i));
+    }
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut alive = vec![false; intervals.len()];
+    let mut out: Vec<(f64, f64)> = Vec::new();
+    let mut k = 0;
+    while k < pts.len() {
+        let t = pts[k].0;
+        while k < pts.len() && pts[k].0 == t {
+            alive[pts[k].2] = pts[k].1;
+            k += 1;
+        }
+        let mut mult = 1.0;
+        for (i, &a) in alive.iter().enumerate() {
+            if a {
+                mult *= intervals[i].2;
+            }
+        }
+        if out.last().map_or(1.0f64.to_bits() != mult.to_bits(), |l| l.1.to_bits() != mult.to_bits())
+        {
+            out.push((t, mult));
+        }
+    }
+    out
+}
+
+impl FaultTimeline {
+    /// Expand a spec's scripted + random events against a concrete
+    /// topology into per-resource capacity step functions. Pure and
+    /// deterministic; scripted indices out of range are loud errors.
+    pub fn compile(spec: &FaultSpec, topo: &Topology) -> Result<FaultTimeline> {
+        spec.validate()?;
+        let mut events = spec.events.clone();
+        if spec.rate > 0.0 {
+            let mut rng = Rng::new(spec.seed ^ 0x00FA_017F_A017_FA01);
+            let mut t = 0.0;
+            loop {
+                t += rng.exponential(1.0 / spec.rate);
+                if t > spec.horizon {
+                    break;
+                }
+                let duration = rng.exponential(spec.mean_duration).max(1e-6);
+                let factor =
+                    if rng.uniform() < spec.brownout_frac { spec.brownout_factor } else { 0.0 };
+                // Mix: mostly single-link faults, some NICs, rare whole
+                // spines — roughly the blast-radius ordering of real
+                // fabric incidents.
+                let target = match rng.below(10) {
+                    0..=4 => FaultTarget::Link {
+                        tor: rng.below(topo.n_tors as u64) as usize,
+                        spine: rng.below(topo.n_spines as u64) as usize,
+                    },
+                    5..=7 => FaultTarget::Nic(rng.below(topo.n_nodes as u64) as usize),
+                    _ => FaultTarget::Spine(rng.below(topo.n_spines as u64) as usize),
+                };
+                events.push(FaultEvent { target, at: t, duration, factor });
+            }
+        }
+        // Expand targets to resource-level intervals.
+        let mut by_res: HashMap<usize, Vec<(f64, f64, f64)>> = HashMap::new();
+        let mut node_down: HashMap<usize, Vec<(f64, f64)>> = HashMap::new();
+        let mut degraded: Vec<(f64, f64)> = Vec::new();
+        for (i, e) in events.iter().enumerate() {
+            let (s, end) = (e.at, e.at + e.duration);
+            let mut push = |id: usize| by_res.entry(id).or_default().push((s, end, e.factor));
+            match e.target {
+                FaultTarget::Spine(sp) => {
+                    if sp >= topo.n_spines {
+                        bail!(
+                            "faults: event {i} targets spine {sp}, topology has {}",
+                            topo.n_spines
+                        );
+                    }
+                    for tor in 0..topo.n_tors {
+                        push(topo.up_id(tor, sp));
+                        push(topo.down_id(tor, sp));
+                    }
+                }
+                FaultTarget::Link { tor, spine } => {
+                    if tor >= topo.n_tors || spine >= topo.n_spines {
+                        bail!(
+                            "faults: event {i} targets link (tor {tor}, spine {spine}), topology \
+                             has {} tors x {} spines",
+                            topo.n_tors,
+                            topo.n_spines
+                        );
+                    }
+                    push(topo.up_id(tor, spine));
+                    push(topo.down_id(tor, spine));
+                }
+                FaultTarget::Nic(node) => {
+                    if node >= topo.n_nodes {
+                        bail!("faults: event {i} targets node {node}, topology has {}", topo.n_nodes);
+                    }
+                    push(topo.tx_id(node));
+                    push(topo.rx_id(node));
+                    if e.factor == 0.0 {
+                        node_down.entry(node).or_default().push((s, end));
+                    }
+                }
+            }
+            degraded.push((s, end));
+        }
+        let mut steps: HashMap<usize, Vec<(f64, f64)>> = HashMap::with_capacity(by_res.len());
+        let mut changes: Vec<f64> = Vec::new();
+        for (id, iv) in by_res {
+            let sf = step_function(&iv);
+            changes.extend(sf.iter().map(|&(t, _)| t));
+            steps.insert(id, sf);
+        }
+        changes.sort_by(f64::total_cmp);
+        changes.dedup_by(|a, b| a.to_bits() == b.to_bits());
+        for iv in node_down.values_mut() {
+            merge_intervals(iv);
+        }
+        merge_intervals(&mut degraded);
+        Ok(FaultTimeline { steps, changes, node_down, degraded, n_events: events.len() })
+    }
+
+    /// Capacity multiplier on resource `res` at fault-clock time `t`
+    /// (1.0 when the resource is untouched by the trace).
+    pub fn mult_at(&self, res: usize, t: f64) -> f64 {
+        match self.steps.get(&res) {
+            None => 1.0,
+            Some(s) => match s.partition_point(|&(st, _)| st <= t) {
+                0 => 1.0,
+                k => s[k - 1].1,
+            },
+        }
+    }
+
+    /// The first capacity-change time strictly after `t`, if any.
+    pub fn next_change_after(&self, t: f64) -> Option<f64> {
+        let k = self.changes.partition_point(|&c| c <= t);
+        self.changes.get(k).copied()
+    }
+
+    /// Is the node's NIC free of a hard-down at time `t`?
+    pub fn node_alive(&self, node: usize, t: f64) -> bool {
+        match self.node_down.get(&node) {
+            None => true,
+            Some(iv) => {
+                let k = iv.partition_point(|&(s, _)| s <= t);
+                k == 0 || t >= iv[k - 1].1
+            }
+        }
+    }
+
+    /// Seconds of `[a, b]` during which at least one fault is active —
+    /// the trainer's per-step fault exposure integrand.
+    pub fn degraded_overlap(&self, a: f64, b: f64) -> f64 {
+        let mut acc = 0.0;
+        for &(s, e) in &self.degraded {
+            if s >= b {
+                break;
+            }
+            acc += (e.min(b) - s.max(a)).max(0.0);
+        }
+        acc
+    }
+
+    /// Is spine `s` usable between the two ToRs at time `t` (both the up
+    /// port at the source ToR and the down port at the destination)?
+    pub fn spine_alive(&self, topo: &Topology, src_tor: usize, dst_tor: usize, s: usize, t: f64) -> bool {
+        self.mult_at(topo.up_id(src_tor, s), t) > 0.0
+            && self.mult_at(topo.down_id(dst_tor, s), t) > 0.0
+    }
+
+    /// Can a flow from `src` to `dst` make progress at time `t`: both
+    /// NICs up and, across ToRs, at least one surviving spine.
+    pub fn path_usable(&self, topo: &Topology, src: usize, dst: usize, t: f64) -> bool {
+        if self.mult_at(topo.tx_id(src), t) <= 0.0 || self.mult_at(topo.rx_id(dst), t) <= 0.0 {
+            return false;
+        }
+        let (st, dt) = (topo.tor_of_node(src), topo.tor_of_node(dst));
+        if st == dt {
+            return true;
+        }
+        (0..topo.n_spines).any(|s| self.spine_alive(topo, st, dt, s, t))
+    }
+
+    /// The earliest time >= `t` at which the `src -> dst` path is usable
+    /// again (only change times need checking — the path's state is
+    /// constant between them). `None` if it never recovers within the
+    /// trace.
+    pub fn path_recovery_after(&self, topo: &Topology, src: usize, dst: usize, t: f64) -> Option<f64> {
+        if self.path_usable(topo, src, dst, t) {
+            return Some(t);
+        }
+        let mut k = self.changes.partition_point(|&c| c <= t);
+        while k < self.changes.len() {
+            let c = self.changes[k];
+            if self.path_usable(topo, src, dst, c) {
+                return Some(c);
+            }
+            k += 1;
+        }
+        None
+    }
+
+    /// Does the trace ever touch this resource?
+    pub fn touches(&self, res: usize) -> bool {
+        self.steps.contains_key(&res)
+    }
+
+    /// Expanded event count (after flap/random expansion).
+    pub fn n_events(&self) -> usize {
+        self.n_events
+    }
+
+    /// Number of distinct capacity-change instants.
+    pub fn n_changes(&self) -> usize {
+        self.changes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::fabric;
+    use crate::config::spec::{ClusterSpec, FabricKind, TopologySpec};
+
+    fn topo(spines: usize) -> Topology {
+        let cluster = ClusterSpec::txgaia();
+        let spec =
+            TopologySpec { spines, oversubscription: Some(1.0), ..Default::default() };
+        Topology::build(&spec, &fabric(FabricKind::EthernetRoce25), &cluster).unwrap()
+    }
+
+    #[test]
+    fn default_spec_is_inactive() {
+        let s = FaultSpec::default();
+        assert!(!s.active());
+        s.validate().unwrap();
+        let tl = FaultTimeline::compile(&s, &topo(2)).unwrap();
+        assert_eq!(tl.n_events(), 0);
+        assert_eq!(tl.n_changes(), 0);
+        assert!(tl.next_change_after(0.0).is_none());
+        assert_eq!(tl.mult_at(0, 1.0), 1.0);
+    }
+
+    #[test]
+    fn scripted_spine_down_zeroes_every_tor_port() {
+        let t = topo(2);
+        let s = FaultSpec::spine_down(1, 0.01, 0.05);
+        assert!(s.active());
+        let tl = FaultTimeline::compile(&s, &t).unwrap();
+        for tor in 0..t.n_tors {
+            for id in [t.up_id(tor, 1), t.down_id(tor, 1)] {
+                assert_eq!(tl.mult_at(id, 0.0), 1.0);
+                assert_eq!(tl.mult_at(id, 0.02), 0.0);
+                assert_eq!(tl.mult_at(id, 0.07), 1.0);
+            }
+            // Spine 0 untouched.
+            assert_eq!(tl.mult_at(t.up_id(tor, 0), 0.02), 1.0);
+        }
+        assert_eq!(tl.n_changes(), 2);
+        assert_eq!(tl.next_change_after(0.0), Some(0.01));
+        assert_eq!(tl.next_change_after(0.01), Some(0.06));
+        assert!((tl.degraded_overlap(0.0, 0.1) - 0.05).abs() < 1e-12);
+        assert!((tl.degraded_overlap(0.02, 0.04) - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlapping_brownouts_compound_and_hard_down_wins() {
+        let t = topo(2);
+        let mk = |factor, at, duration| FaultEvent {
+            target: FaultTarget::Link { tor: 0, spine: 0 },
+            at,
+            duration,
+            factor,
+        };
+        let s = FaultSpec {
+            events: vec![mk(0.5, 0.0, 0.10), mk(0.5, 0.05, 0.10), mk(0.0, 0.08, 0.01)],
+            ..Default::default()
+        };
+        let tl = FaultTimeline::compile(&s, &t).unwrap();
+        let id = t.up_id(0, 0);
+        assert_eq!(tl.mult_at(id, 0.01), 0.5);
+        assert_eq!(tl.mult_at(id, 0.06), 0.25);
+        assert_eq!(tl.mult_at(id, 0.085), 0.0);
+        assert_eq!(tl.mult_at(id, 0.095), 0.25);
+        assert_eq!(tl.mult_at(id, 0.12), 0.5);
+        assert_eq!(tl.mult_at(id, 0.2), 1.0);
+    }
+
+    #[test]
+    fn nic_down_marks_node_dead_and_path_unusable() {
+        let t = topo(2);
+        let s = FaultSpec {
+            events: vec![FaultEvent {
+                target: FaultTarget::Nic(3),
+                at: 0.01,
+                duration: 0.02,
+                factor: 0.0,
+            }],
+            ..Default::default()
+        };
+        let tl = FaultTimeline::compile(&s, &t).unwrap();
+        assert!(tl.node_alive(3, 0.0));
+        assert!(!tl.node_alive(3, 0.02));
+        assert!(tl.node_alive(3, 0.03));
+        assert!(tl.node_alive(0, 0.02));
+        assert!(!tl.path_usable(&t, 3, 40, 0.02));
+        assert!(!tl.path_usable(&t, 40, 3, 0.02));
+        assert!(tl.path_usable(&t, 0, 40, 0.02));
+        assert_eq!(tl.path_recovery_after(&t, 3, 40, 0.02), Some(0.01 + 0.02));
+    }
+
+    #[test]
+    fn all_spines_down_kills_inter_tor_but_not_intra_tor() {
+        let t = topo(2);
+        let s = FaultSpec {
+            events: (0..2)
+                .map(|sp| FaultEvent {
+                    target: FaultTarget::Spine(sp),
+                    at: 0.0,
+                    duration: 0.1,
+                    factor: 0.0,
+                })
+                .collect(),
+            ..Default::default()
+        };
+        let tl = FaultTimeline::compile(&s, &t).unwrap();
+        // Node 0 and 3 share a ToR on txgaia (nodes_per_rack >= 4).
+        assert!(tl.path_usable(&t, 0, 3, 0.05));
+        assert!(!tl.path_usable(&t, 0, 40, 0.05));
+        assert_eq!(tl.path_recovery_after(&t, 0, 40, 0.05), Some(0.1));
+    }
+
+    #[test]
+    fn random_trace_is_deterministic_and_seed_sensitive() {
+        let t = topo(4);
+        let a = FaultTimeline::compile(&FaultSpec::random(20.0, 7), &t).unwrap();
+        let b = FaultTimeline::compile(&FaultSpec::random(20.0, 7), &t).unwrap();
+        let c = FaultTimeline::compile(&FaultSpec::random(20.0, 8), &t).unwrap();
+        assert!(a.n_events() > 0);
+        assert_eq!(a.n_events(), b.n_events());
+        assert_eq!(a.changes, b.changes);
+        assert_ne!(a.changes, c.changes);
+    }
+
+    #[test]
+    fn from_toml_parses_every_event_kind() {
+        let doc = crate::config::toml::parse(
+            r#"
+[faults]
+rate = 0.5
+seed = 99
+mean_duration_ms = 40
+horizon_secs = 10
+spine_down = [[0, 10.0, 50.0]]
+link_down = [[0, 1, 10.0, 50.0]]
+nic_down = [[3, 10.0, 50.0]]
+brownout = [[0, 1, 10.0, 50.0, 0.5]]
+flap = [[1, 10.0, 20.0, 4]]
+"#,
+        )
+        .unwrap();
+        let s = FaultSpec::from_toml(doc.get("faults").unwrap()).unwrap();
+        assert_eq!(s.rate, 0.5);
+        assert_eq!(s.seed, 99);
+        assert!((s.mean_duration - 0.04).abs() < 1e-12);
+        // 1 spine + 1 link + 1 nic + 1 brownout + 4 flap windows.
+        assert_eq!(s.events.len(), 8);
+        assert_eq!(s.events[0].target, FaultTarget::Spine(0));
+        assert!((s.events[0].at - 0.01).abs() < 1e-12);
+        assert_eq!(s.events[3].factor, 0.5);
+        let flap = &s.events[4..];
+        assert!(flap.iter().all(|e| e.target == FaultTarget::Spine(1) && e.factor == 0.0));
+        assert!((flap[1].at - flap[0].at - 0.02).abs() < 1e-12);
+        assert!((flap[0].duration - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_toml_rejects_malformed_rows_loudly() {
+        for (body, needle) in [
+            ("spine_down = 3", "must be an array"),
+            ("spine_down = [[0, 10.0]]", "must have 3 numbers"),
+            ("spine_down = [[0.5, 10.0, 50.0]]", "non-negative integer"),
+            ("nic_down = [[\"a\", 10.0, 50.0]]", "must be a number"),
+            ("rate = \"fast\"", "faults.rate must be a number"),
+            ("seed = -1", "non-negative integer"),
+            ("flap = [[0, 1.0, 0.0, 2]]", "period_ms must be positive"),
+        ] {
+            let doc = crate::config::toml::parse(&format!("[faults]\n{body}\n")).unwrap();
+            let err = FaultSpec::from_toml(doc.get("faults").unwrap()).unwrap_err().to_string();
+            assert!(err.contains(needle), "body {body:?}: error {err:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn compile_rejects_out_of_range_targets() {
+        let t = topo(2);
+        let s = FaultSpec::spine_down(2, 0.0, 0.1);
+        let err = FaultTimeline::compile(&s, &t).unwrap_err().to_string();
+        assert!(err.contains("spine 2"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_numbers() {
+        for (mutate, needle) in [
+            (
+                Box::new(|s: &mut FaultSpec| s.rate = -1.0) as Box<dyn Fn(&mut FaultSpec)>,
+                "rate",
+            ),
+            (Box::new(|s: &mut FaultSpec| s.brownout_factor = 1.0), "brownout_factor"),
+            (Box::new(|s: &mut FaultSpec| s.horizon = 0.0), "horizon"),
+            (
+                Box::new(|s: &mut FaultSpec| {
+                    s.rate = 100.0;
+                    s.horizon = 1e9;
+                }),
+                "100k events",
+            ),
+            (
+                Box::new(|s: &mut FaultSpec| {
+                    s.events.push(FaultEvent {
+                        target: FaultTarget::Spine(0),
+                        at: 0.0,
+                        duration: 0.0,
+                        factor: 0.0,
+                    })
+                }),
+                "duration",
+            ),
+        ] {
+            let mut s = FaultSpec::default();
+            mutate(&mut s);
+            let err = s.validate().unwrap_err().to_string();
+            assert!(err.contains(needle), "error {err:?} missing {needle:?}");
+        }
+    }
+
+    #[test]
+    fn apply_cli_parses_rate_and_seed() {
+        let mut s = FaultSpec::default();
+        s.apply_cli("2.5:42").unwrap();
+        assert_eq!(s.rate, 2.5);
+        assert_eq!(s.seed, 42);
+        assert!(s.apply_cli("fast").is_err());
+        assert!(s.apply_cli("1.0:x").is_err());
+    }
+
+    #[test]
+    fn signature_distinguishes_specs() {
+        let a = FaultSpec::default();
+        let b = FaultSpec::random(1.0, 7);
+        let c = FaultSpec::random(1.0, 8);
+        let d = FaultSpec::spine_down(0, 0.0, 0.1);
+        let sigs = [a.signature(), b.signature(), c.signature(), d.signature()];
+        for i in 0..sigs.len() {
+            for j in i + 1..sigs.len() {
+                assert_ne!(sigs[i], sigs[j], "specs {i} and {j} alias");
+            }
+        }
+        assert_eq!(a.signature(), FaultSpec::default().signature());
+    }
+}

@@ -34,8 +34,15 @@
 //! (see [`tenancy`]): seeded poisson/on-off sources over configurable
 //! node sets whose flows join the same batches and share every link
 //! max-min fairly with the training job.
+//!
+//! Fabrics can also be **faulted** (see [`faults`]): deterministic seeded
+//! traces of link/NIC/spine hard-downs, brownouts and flaps compile into
+//! a capacity timeline merged into the fluid event loop; mid-flight flows
+//! re-route over surviving ECMP spines or retry with exponential backoff
+//! under the `[transport]` timeout policy (see [`mpi::RetryPolicy`]).
 
 pub mod contention;
+pub mod faults;
 pub mod mpi;
 pub mod sim;
 pub mod tenancy;
@@ -43,7 +50,8 @@ pub mod topology;
 pub mod trace;
 pub mod transport;
 
-pub use mpi::{Comm, CommOp};
+pub use faults::{FaultEvent, FaultSpec, FaultTarget, FaultTimeline};
+pub use mpi::{Comm, CommOp, RetryPolicy};
 pub use sim::{FlowReq, FlowTimes, NetSim, NetStats};
 pub use tenancy::{BackgroundTraffic, BgFlow};
 pub use topology::{Route, Topology};

@@ -63,6 +63,70 @@ pub(crate) fn is_rendezvous(opts: &TransportOptions, eager_threshold: f64, bytes
     bytes > opts.rendezvous_threshold.unwrap_or(eager_threshold)
 }
 
+/// Timeout/retry transport semantics under faults (the `[transport]`
+/// `retry_timeout_ms` / `retry_backoff` / `max_retries` knobs).
+///
+/// When a flow's path is fault-dead at submission (or dies mid-flight),
+/// the rendezvous handshake times out after [`RetryPolicy::wait`]`(0)`
+/// seconds and is re-attempted with exponentially growing waits; probe
+/// `k` (0-based) happens `timeout * backoff^0 + ... + timeout *
+/// backoff^k` seconds after the first failure. A flow that exhausts
+/// `max_retries` probes without finding a live path fails loudly and is
+/// counted in `NetStats::failed_flows`. The probe schedule is a pure
+/// function of the policy, so faulted runs stay bitwise deterministic.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Base rendezvous timeout, seconds.
+    pub timeout: f64,
+    /// Wait multiplier between consecutive probes (>= 1).
+    pub backoff: f64,
+    /// Probes before the flow is declared failed.
+    pub max_retries: u32,
+}
+
+impl RetryPolicy {
+    pub fn from_opts(opts: &TransportOptions) -> RetryPolicy {
+        RetryPolicy {
+            timeout: opts.retry_timeout,
+            backoff: opts.retry_backoff,
+            max_retries: opts.max_retries as u32,
+        }
+    }
+
+    /// Wait before 0-based probe `k`: `timeout * backoff^k`.
+    pub fn wait(&self, k: u32) -> f64 {
+        self.timeout * self.backoff.powi(k as i32)
+    }
+
+    /// Offset of 0-based probe `k` from the moment the path was found
+    /// dead: the sum of every wait up to and including `wait(k)`.
+    pub fn probe_offset(&self, k: u32) -> f64 {
+        (0..=k).map(|i| self.wait(i)).sum()
+    }
+
+    /// The whole retry window: a flow that has not found a live path
+    /// this long after the first dead probe fails.
+    pub fn total_window(&self) -> f64 {
+        self.probe_offset(self.max_retries.saturating_sub(1))
+    }
+
+    /// The earliest probe (index, absolute time) at or after `recovery`,
+    /// for a path first found dead at `dead_at` — `None` when the path
+    /// recovers too late for the probe schedule (the flow fails at
+    /// `dead_at + total_window()`). Probe indices are 0-based; the
+    /// retry *count* charged to `NetStats::retries` is `index + 1`.
+    pub fn first_probe_at(&self, dead_at: f64, recovery: f64) -> Option<(u32, f64)> {
+        let mut at = dead_at;
+        for k in 0..self.max_retries {
+            at += self.wait(k);
+            if at >= recovery {
+                return Some((k, at));
+            }
+        }
+        None
+    }
+}
+
 /// A communicator: placement + one virtual clock per rank.
 pub struct Comm<'a> {
     pub net: &'a mut NetSim,
@@ -336,6 +400,39 @@ mod tests {
         comm.t[79] = 10.0;
         comm.p2p(0, 79, big);
         assert!(comm.t[0] < 10.0, "override must keep the transfer eager");
+    }
+
+    #[test]
+    fn retry_policy_schedule_is_exponential() {
+        let p = RetryPolicy { timeout: 1e-3, backoff: 2.0, max_retries: 4 };
+        assert_eq!(p.wait(0), 1e-3);
+        assert_eq!(p.wait(2), 4e-3);
+        assert!((p.probe_offset(2) - 7e-3).abs() < 1e-15);
+        assert!((p.total_window() - 15e-3).abs() < 1e-15);
+        // Path recovers at +2.5ms: probes at +1, +3 ms -> probe 1 lands.
+        let (k, at) = p.first_probe_at(10.0, 10.0025).unwrap();
+        assert_eq!(k, 1);
+        assert!((at - 10.003).abs() < 1e-12);
+        // Instant recovery still pays one timeout.
+        let (k, at) = p.first_probe_at(10.0, 10.0).unwrap();
+        assert_eq!(k, 0);
+        assert!((at - 10.001).abs() < 1e-12);
+        // Recovery after the window: no probe reaches it.
+        assert!(p.first_probe_at(10.0, 10.1).is_none());
+    }
+
+    #[test]
+    fn retry_policy_from_opts_mirrors_transport_knobs() {
+        let opts = TransportOptions {
+            retry_timeout: 2e-3,
+            retry_backoff: 3.0,
+            max_retries: 5,
+            ..Default::default()
+        };
+        let p = RetryPolicy::from_opts(&opts);
+        assert_eq!(p.timeout, 2e-3);
+        assert_eq!(p.backoff, 3.0);
+        assert_eq!(p.max_retries, 5);
     }
 
     #[test]

@@ -50,6 +50,8 @@
 use crate::cluster::{Endpoint, EndpointKind, Placement};
 use crate::config::{ClusterSpec, FabricSpec, TransportOptions};
 use crate::fabric::contention::{FlowResources, MaxMinScratch};
+use crate::fabric::faults::{FaultSpec, FaultTimeline};
+use crate::fabric::mpi::RetryPolicy;
 use crate::fabric::topology::Topology;
 use crate::fabric::transport::{self, MessageGeometry};
 use crate::trainer::scheduler::ScheduleCache;
@@ -89,6 +91,15 @@ pub struct NetStats {
     /// training-vs-background attribution is always available.
     pub background_messages: u64,
     pub background_bytes: f64,
+    /// Fault-injection accounting ([`crate::fabric::faults`]): timeout
+    /// probes paid by flows whose path was fault-dead (each backoff wait
+    /// counts once, including the probe that succeeds), flows re-routed
+    /// onto a surviving ECMP spine (at admission or mid-flight), and
+    /// flows that exhausted the retry window and failed loudly. All zero
+    /// on a healthy fabric.
+    pub retries: u64,
+    pub reroutes: u64,
+    pub failed_flows: u64,
 }
 
 /// One message submitted to the engine.
@@ -134,6 +145,9 @@ struct NetFlow {
     latency: f64,
     recv_overhead: f64,
     res: FlowResources,
+    /// The ECMP sequence the route was drawn with — kept so a mid-flight
+    /// re-route over surviving spines re-hashes deterministically.
+    seq: u64,
 }
 
 /// Lazily-invalidated completion-heap entry: `key` is the finish time
@@ -452,6 +466,26 @@ pub struct NetSim {
     pub stats: NetStats,
     /// Optional message-level trace (enable with [`NetSim::enable_trace`]).
     pub trace: Option<crate::fabric::trace::Trace>,
+    /// Attached fault timeline ([`NetSim::set_faults`]); `None` (the
+    /// neutral spec) keeps every batch on the exact pre-fault code path.
+    faults: Option<FaultState>,
+    /// The failed-flow warning fires once per simulator lifetime, like
+    /// the budget warning: per-flow failures are counted in
+    /// [`NetStats::failed_flows`], not spammed.
+    fault_fail_warned: bool,
+}
+
+/// Engine-side fault state: the compiled timeline plus the absolute
+/// fault-clock offset of the current step. Batches run in batch-local
+/// time; `clock + t` is the position on the fault trace. The clock
+/// survives [`NetSim::reset`] (the trainer advances it across steps via
+/// [`NetSim::advance_fault_clock`]), so a multi-step run walks the trace
+/// instead of replaying its first window.
+struct FaultState {
+    timeline: FaultTimeline,
+    clock: f64,
+    /// The spec's signature, cached for [`NetSim::fault_signature`].
+    sig: u64,
 }
 
 /// Minimum settled-wave size (total members across dirty groups) before
@@ -522,7 +556,72 @@ impl NetSim {
             schedule_cache: ScheduleCache::new(),
             stats: NetStats::default(),
             trace: None,
+            faults: None,
+            fault_fail_warned: false,
         })
+    }
+
+    /// Attach a compiled fault timeline. A no-op for an inactive spec —
+    /// the neutral `faults = none` configuration never attaches, so the
+    /// healthy engine stays bit-for-bit the pre-fault engine. The fault
+    /// clock starts at 0 and survives [`NetSim::reset`].
+    pub fn set_faults(&mut self, spec: &FaultSpec) -> anyhow::Result<()> {
+        if !spec.active() {
+            self.faults = None;
+            return Ok(());
+        }
+        let timeline = FaultTimeline::compile(spec, &self.topology)?;
+        self.faults = Some(FaultState { timeline, clock: 0.0, sig: spec.signature() });
+        Ok(())
+    }
+
+    /// Detach the fault timeline (back to a healthy fabric).
+    pub fn clear_faults(&mut self) {
+        self.faults = None;
+    }
+
+    /// Is a fault timeline attached?
+    pub fn faults_active(&self) -> bool {
+        self.faults.is_some()
+    }
+
+    /// The attached timeline (collectives consult it for node liveness).
+    pub fn fault_timeline(&self) -> Option<&FaultTimeline> {
+        self.faults.as_ref().map(|f| &f.timeline)
+    }
+
+    /// Absolute fault-trace time of the current step's t=0.
+    pub fn fault_clock(&self) -> f64 {
+        self.faults.as_ref().map_or(0.0, |f| f.clock)
+    }
+
+    /// Advance the fault clock by one step's wall time so the next step
+    /// sees the next window of the trace.
+    pub fn advance_fault_clock(&mut self, dt: f64) {
+        if let Some(f) = self.faults.as_mut() {
+            f.clock += dt;
+        }
+    }
+
+    /// Seconds of the batch-local interval `[a, b]` during which at
+    /// least one fault is active — the per-step exposure integrand.
+    /// 0 on a healthy fabric.
+    pub fn fault_exposure(&self, a: f64, b: f64) -> f64 {
+        match self.faults.as_ref() {
+            None => 0.0,
+            Some(f) => f.timeline.degraded_overlap(f.clock + a, f.clock + b),
+        }
+    }
+
+    /// Fault configuration hash for schedule-cache world signatures
+    /// (0 when no timeline is attached). Folds the current clock too:
+    /// leader election and routing depend on *where* in the trace a step
+    /// runs, so two steps of one faulted run must never alias.
+    pub fn fault_signature(&self) -> u64 {
+        match self.faults.as_ref() {
+            None => 0,
+            Some(f) => crate::util::hash::fnv1a_u64(f.sig, f.clock.to_bits()),
+        }
     }
 
     /// Start recording every delivered message.
@@ -597,6 +696,9 @@ impl NetSim {
         for (_, bg) in self.tenants.iter_mut() {
             bg.advance_epoch();
         }
+        // The fault clock deliberately survives: the trainer resets the
+        // sim every step but advances the clock explicitly
+        // ([`NetSim::advance_fault_clock`]) so a run walks the trace.
     }
 
     /// Drain time of one link (observability: lets tests assert a flow
@@ -610,12 +712,14 @@ impl NetSim {
     /// events), trivial ECMP (with several spines the per-pair
     /// `flow_seq` counters are engine state a replay would skip), and a
     /// dedicated fabric (the background generators' cursors are engine
-    /// state a replay would skip too).
+    /// state a replay would skip too) and a healthy one (a fault
+    /// timeline makes timing depend on the advancing fault clock).
     pub(crate) fn timing_cache_usable(&self) -> bool {
         self.opts.schedule_cache
             && self.trace.is_none()
             && self.topology.n_spines <= 1
             && self.tenants.is_empty()
+            && self.faults.is_none()
     }
 
     /// Snapshot the engine state a captured execution starts from.
@@ -709,7 +813,11 @@ impl NetSim {
                 continue;
             }
 
-            self.admit_inter_node_flow(&mut flows, i, 0, req.src, req.dst, req.bytes, req.ready);
+            if let Some(failed) =
+                self.admit_inter_node_flow(&mut flows, i, 0, req.src, req.dst, req.bytes, req.ready)
+            {
+                out[i] = failed;
+            }
         }
         if flows.is_empty() {
             self.scratch_flows = flows;
@@ -736,7 +844,9 @@ impl NetSim {
                 for bf in &bg_reqs {
                     let src = Endpoint { rank: 0, node: bf.src, slot: 0, kind: EndpointKind::Cpu };
                     let dst = Endpoint { rank: 0, node: bf.dst, slot: 0, kind: EndpointKind::Cpu };
-                    self.admit_inter_node_flow(
+                    // A failed background flow has no completion slot;
+                    // it is already counted in `failed_flows`.
+                    let _ = self.admit_inter_node_flow(
                         &mut flows,
                         BACKGROUND_FLOW,
                         *tid,
@@ -775,7 +885,11 @@ impl NetSim {
             }
         }
         let mut finishes = std::mem::take(&mut self.scratch_finish);
-        if contended {
+        // An attached fault timeline forces the fluid path: capacity
+        // steps must be merged into the event loop even when no two
+        // flows share a resource (the closed-form fast path knows
+        // nothing about mid-flight capacity changes).
+        if contended || self.faults.is_some() {
             self.fluid_finishes(&flows, factor, &mut finishes);
         } else {
             // Fast path: every flow runs at its (congestion-scaled) cap.
@@ -823,6 +937,18 @@ impl NetSim {
     /// tenant and training flows physically identical to the engine;
     /// only stats attribution follows `tenant` (0 = the observing job,
     /// whose flows carry a real `req_idx` completion slot).
+    ///
+    /// Under an attached fault timeline, a flow whose path is dead at
+    /// submission retries on the [`RetryPolicy`] backoff schedule (its
+    /// ready time shifts to the first probe at or after the path's
+    /// recovery, each probe counted in [`NetStats::retries`]); a flow
+    /// whose path outlives the whole retry window is *not* admitted —
+    /// the failure is counted in [`NetStats::failed_flows`], warned once
+    /// on stderr, and returned as a [`FlowTimes`] at the moment the
+    /// transport gave up (`Some` return). Flows that do admit during a
+    /// partial spine outage re-hash over the surviving spines
+    /// ([`Topology::route_excluding`]); landing on a different spine
+    /// than the healthy hash counts in [`NetStats::reroutes`].
     #[allow(clippy::too_many_arguments)]
     fn admit_inter_node_flow(
         &mut self,
@@ -833,7 +959,7 @@ impl NetSim {
         dst: Endpoint,
         bytes: f64,
         ready: f64,
-    ) {
+    ) -> Option<FlowTimes> {
         let background = tenant != 0;
         if background {
             self.stats.background_messages += 1;
@@ -856,7 +982,63 @@ impl NetSim {
         } else {
             0
         };
-        let route = self.topology.route(src.node, dst.node, seq);
+        let mut ready = ready;
+        let mut fault_route = None;
+        if let Some(fs) = self.faults.as_ref() {
+            let tl = &fs.timeline;
+            let policy = RetryPolicy::from_opts(&self.opts);
+            let dead_at = fs.clock + ready;
+            if !tl.path_usable(&self.topology, src.node, dst.node, dead_at) {
+                match tl
+                    .path_recovery_after(&self.topology, src.node, dst.node, dead_at)
+                    .and_then(|rec| policy.first_probe_at(dead_at, rec))
+                {
+                    Some((k, probe_abs)) => {
+                        self.stats.retries += k as u64 + 1;
+                        ready = probe_abs - fs.clock;
+                    }
+                    None => {
+                        self.stats.retries += policy.max_retries as u64;
+                        self.stats.failed_flows += 1;
+                        if !self.fault_fail_warned {
+                            self.fault_fail_warned = true;
+                            eprintln!(
+                                "fabricbench: flow {} -> {} failed (path dead past the \
+                                 {}-retry window); failed flows are counted in \
+                                 NetStats::failed_flows",
+                                src.node, dst.node, policy.max_retries
+                            );
+                        }
+                        let fail_t = ready + policy.total_window();
+                        return Some(FlowTimes { send_release: fail_t, recv_complete: fail_t });
+                    }
+                }
+            }
+            // Route over the spines surviving at the (possibly shifted)
+            // admission time; `path_usable`/recovery guaranteed one.
+            let t_abs = fs.clock + ready;
+            let (st, dt) = (
+                self.topology.tor_of_node(src.node),
+                self.topology.tor_of_node(dst.node),
+            );
+            if st != dt {
+                let alive: Vec<bool> = (0..self.topology.n_spines)
+                    .map(|s| tl.spine_alive(&self.topology, st, dt, s, t_abs))
+                    .collect();
+                if alive.iter().any(|&a| !a) {
+                    let r = self
+                        .topology
+                        .route_excluding(src.node, dst.node, seq, &alive)
+                        .expect("a surviving spine was guaranteed above");
+                    if r.spine != self.topology.route(src.node, dst.node, seq).spine {
+                        self.stats.reroutes += 1;
+                    }
+                    fault_route = Some(r);
+                }
+            }
+        }
+        let route =
+            fault_route.unwrap_or_else(|| self.topology.route(src.node, dst.node, seq));
         let inter_rack = route.inter_tor;
         if inter_rack && !background {
             self.stats.inter_rack_messages += 1;
@@ -885,7 +1067,9 @@ impl NetSim {
             latency: cost.latency,
             recv_overhead: cost.recv_overhead,
             res: route.res,
+            seq,
         });
+        None
     }
 
     /// Event loop over a contended batch: advance virtual time from event
@@ -903,8 +1087,13 @@ impl NetSim {
     /// `flows`) by gathering each flow's unit finish — bit-exact
     /// de-aggregation, because unit members are fluid-indistinguishable.
     fn fluid_finishes(&mut self, flows: &[NetFlow], factor: f64, finish: &mut Vec<f64>) {
-        let NetSim { fluid, solver, par_solvers, topology, stats, opts, .. } = self;
+        let NetSim { fluid, solver, par_solvers, topology, stats, opts, faults, fault_fail_warned, .. } =
+            self;
         let n = flows.len();
+        // Batch-local time of the first arrival: fault changes at or
+        // before it are baked into the initial caps; later ones are
+        // merged into the event loop through the `next_fault` cursor.
+        let t_start = flows.iter().map(|f| f.arrival).fold(f64::INFINITY, f64::min);
         // Compact the touched resource ids to a dense table through the
         // persistent per-topology remap (built in `try_new`, reset
         // sparsely below) — no sort/binary-search per batch, and a 32k-GPU
@@ -922,7 +1111,11 @@ impl NetSim {
                     c = fluid.caps.len() as u32;
                     fluid.remap[id] = c;
                     fluid.touched.push(id);
-                    fluid.caps.push(topology.caps()[id] * factor);
+                    let mut cap = topology.caps()[id] * factor;
+                    if let Some(fs) = faults.as_ref() {
+                        cap *= fs.timeline.mult_at(id, fs.clock + t_start);
+                    }
+                    fluid.caps.push(cap);
                 }
                 fr.push(c as usize);
             }
@@ -943,7 +1136,10 @@ impl NetSim {
         fluid.u_arrival.clear();
         fluid.u_bytes.clear();
         fluid.u_w.clear();
-        if opts.flow_aggregation {
+        // Aggregation is disabled under faults: the park/re-route logic
+        // below needs unit == flow (a unit's members could otherwise be
+        // split by a mid-flight re-route).
+        if opts.flow_aggregation && faults.is_none() {
             fluid.agg_map.clear();
             for i in 0..n {
                 let key =
@@ -1006,6 +1202,51 @@ impl NetSim {
         }
         fluid.reset_groups(n_compact);
 
+        // Re-price a (possibly new) route into the batch's compact table
+        // at fault-trace time `t_abs`, extending the remap for resources
+        // the batch has not touched yet (mid-flight re-routes can claim
+        // links no original flow used).
+        fn remap_route(
+            fluid: &mut FluidScratch,
+            topology: &Topology,
+            factor: f64,
+            tl: &FaultTimeline,
+            t_abs: f64,
+            route: &crate::fabric::topology::Route,
+        ) -> FlowResources {
+            let mut fr = FlowResources::new();
+            for id in route.res.iter() {
+                let mut c = fluid.remap[id];
+                if c == u32::MAX {
+                    c = fluid.caps.len() as u32;
+                    fluid.remap[id] = c;
+                    fluid.touched.push(id);
+                    fluid.caps.push(topology.caps()[id] * factor * tl.mult_at(id, t_abs));
+                    fluid.res_group.push(u32::MAX);
+                }
+                fr.push(c as usize);
+            }
+            fr
+        }
+
+        // Fault merge state: the next capacity-change instant
+        // (batch-local) and the parked units — flows whose path died
+        // mid-flight with no surviving spine, waiting on the retry
+        // policy's probe schedule: `(unit, batch-local probe time,
+        // fails)`. `fails == true` marks the probe as the end of the
+        // retry window (the flow fails there). Parked units stay
+        // `active` (the loop must not exit under them) but belong to no
+        // group and carry rate 0.
+        let policy = RetryPolicy::from_opts(opts);
+        let mut next_fault: f64 = match faults.as_ref() {
+            Some(fs) => fs
+                .timeline
+                .next_change_after(fs.clock + t_start)
+                .map_or(f64::INFINITY, |c| c - fs.clock),
+            None => f64::INFINITY,
+        };
+        let mut parked: Vec<(usize, f64, bool)> = Vec::new();
+
         let mut ptr = 0usize;
         let mut n_active = 0usize;
         let mut t = fluid.u_arrival[fluid.order[0] as usize];
@@ -1028,6 +1269,166 @@ impl NetSim {
         let max_events = fluid.budget_override.unwrap_or(2048 + 200_000_000 / (m + 64));
         let mut events = 0usize;
         loop {
+            // Merge fault capacity changes due at t: re-price the
+            // touched resources, dirty exactly the groups holding a
+            // changed one (the same dirty-tracking arrivals and
+            // departures use), and re-route or park the units whose
+            // path just died.
+            while next_fault <= t + time_eps(t) {
+                let fs = faults.as_ref().expect("next_fault is finite only with faults");
+                let t_abs = fs.clock + next_fault;
+                let mut changed: Vec<u32> = Vec::new();
+                for c in 0..fluid.touched.len() {
+                    let id = fluid.touched[c];
+                    let cap = topology.caps()[id] * factor * fs.timeline.mult_at(id, t_abs);
+                    if cap.to_bits() != fluid.caps[c].to_bits() {
+                        fluid.caps[c] = cap;
+                        changed.push(c as u32);
+                    }
+                }
+                let mut any_dead = false;
+                for &c in &changed {
+                    if fluid.caps[c as usize] == 0.0 {
+                        any_dead = true;
+                    }
+                    let g = fluid.res_group[c as usize];
+                    if g != u32::MAX && fluid.groups[g as usize].live {
+                        fluid.mark_dirty(g);
+                    }
+                }
+                if any_dead {
+                    for ui in 0..m {
+                        if !fluid.active[ui] || fluid.group_of[ui] == u32::MAX {
+                            continue;
+                        }
+                        if !fluid.u_res[ui].iter().any(|c| fluid.caps[c] == 0.0) {
+                            continue;
+                        }
+                        // Aggregation is off under faults: unit == flow.
+                        let f = &flows[ui];
+                        // Settle progress at the pre-fault rate, then
+                        // detach (the unit's group is already dirty via
+                        // the dead resource, so survivors re-solve).
+                        fluid.rem[ui] -= fluid.rate[ui] * (next_fault - fluid.t0[ui]);
+                        fluid.t0[ui] = next_fault;
+                        fluid.leave(ui);
+                        fluid.rate[ui] = 0.0;
+                        fluid.stamp[ui] = fluid.stamp[ui].wrapping_add(1);
+                        let (st, dt) =
+                            (topology.tor_of_node(f.src_node), topology.tor_of_node(f.dst_node));
+                        let nic_ok = fs.timeline.mult_at(topology.tx_id(f.src_node), t_abs) > 0.0
+                            && fs.timeline.mult_at(topology.rx_id(f.dst_node), t_abs) > 0.0;
+                        let mut rerouted = false;
+                        if nic_ok && st != dt {
+                            let alive: Vec<bool> = (0..topology.n_spines)
+                                .map(|s| fs.timeline.spine_alive(topology, st, dt, s, t_abs))
+                                .collect();
+                            if let Some(r) =
+                                topology.route_excluding(f.src_node, f.dst_node, f.seq, &alive)
+                            {
+                                fluid.u_res[ui] =
+                                    remap_route(fluid, topology, factor, &fs.timeline, t_abs, &r);
+                                fluid.join(ui);
+                                stats.reroutes += 1;
+                                rerouted = true;
+                            }
+                        }
+                        if !rerouted {
+                            // No surviving path: park on the retry
+                            // policy's probe schedule. Parked units stay
+                            // `active` (no group, rate 0) so the loop
+                            // cannot exit under them.
+                            match fs
+                                .timeline
+                                .path_recovery_after(topology, f.src_node, f.dst_node, t_abs)
+                                .and_then(|rec| policy.first_probe_at(t_abs, rec))
+                            {
+                                Some((k, probe_abs)) => {
+                                    stats.retries += k as u64 + 1;
+                                    parked.push((ui, probe_abs - fs.clock, false));
+                                }
+                                None => {
+                                    stats.retries += policy.max_retries as u64;
+                                    parked.push((ui, next_fault + policy.total_window(), true));
+                                }
+                            }
+                        }
+                    }
+                }
+                next_fault = fs
+                    .timeline
+                    .next_change_after(t_abs)
+                    .map_or(f64::INFINITY, |c| c - fs.clock);
+            }
+
+            // Resume (or fail) parked units whose probe is due.
+            let mut pi = 0;
+            while pi < parked.len() {
+                let (ui, when, fails) = parked[pi];
+                if when > t + time_eps(t) {
+                    pi += 1;
+                    continue;
+                }
+                parked.swap_remove(pi);
+                if fails {
+                    fluid.u_finish[ui] = when;
+                    fluid.active[ui] = false;
+                    n_active -= 1;
+                    stats.failed_flows += 1;
+                    if !*fault_fail_warned {
+                        *fault_fail_warned = true;
+                        eprintln!(
+                            "fabricbench: in-flight flow {} -> {} failed (path dead past the \
+                             {}-retry window); failed flows are counted in \
+                             NetStats::failed_flows",
+                            flows[ui].src_node, flows[ui].dst_node, policy.max_retries
+                        );
+                    }
+                    continue;
+                }
+                let fs = faults.as_ref().expect("parked units exist only with faults");
+                let f = &flows[ui];
+                let t_abs = fs.clock + t;
+                if fs.timeline.path_usable(topology, f.src_node, f.dst_node, t_abs) {
+                    let (st, dt) =
+                        (topology.tor_of_node(f.src_node), topology.tor_of_node(f.dst_node));
+                    let route = if st != dt {
+                        let alive: Vec<bool> = (0..topology.n_spines)
+                            .map(|s| fs.timeline.spine_alive(topology, st, dt, s, t_abs))
+                            .collect();
+                        topology
+                            .route_excluding(f.src_node, f.dst_node, f.seq, &alive)
+                            .expect("path_usable guaranteed a surviving spine")
+                    } else {
+                        topology.route(f.src_node, f.dst_node, f.seq)
+                    };
+                    fluid.u_res[ui] =
+                        remap_route(fluid, topology, factor, &fs.timeline, t_abs, &route);
+                    fluid.t0[ui] = t;
+                    fluid.join(ui);
+                } else {
+                    // The path died again before this probe landed:
+                    // recompute the schedule from here (retries keep
+                    // accruing; termination is guaranteed because every
+                    // re-park moves strictly forward and the trace has
+                    // finitely many changes).
+                    match fs
+                        .timeline
+                        .path_recovery_after(topology, f.src_node, f.dst_node, t_abs)
+                        .and_then(|rec| policy.first_probe_at(t_abs, rec))
+                    {
+                        Some((k, probe_abs)) => {
+                            stats.retries += k as u64 + 1;
+                            parked.push((ui, probe_abs - fs.clock, false));
+                        }
+                        None => {
+                            stats.retries += policy.max_retries as u64;
+                            parked.push((ui, t + policy.total_window(), true));
+                        }
+                    }
+                }
+            }
+
             // Activate units whose arrival is due (ties within epsilon).
             while ptr < m && fluid.u_arrival[fluid.order[ptr] as usize] <= t + time_eps(t) {
                 let ui = fluid.order[ptr] as usize;
@@ -1045,7 +1446,12 @@ impl NetSim {
                 if ptr >= m {
                     break;
                 }
-                t = fluid.u_arrival[fluid.order[ptr] as usize];
+                // Jump to the next arrival — but never over a pending
+                // fault change, or later arrivals would join against
+                // stale capacities. (Parked units stay `active`, so
+                // reaching here means none are waiting.)
+                let a = fluid.u_arrival[fluid.order[ptr] as usize];
+                t = if next_fault < a { next_fault } else { a };
                 continue;
             }
 
@@ -1188,6 +1594,14 @@ impl NetSim {
                     t_next = a;
                 }
             }
+            if next_fault < t_next {
+                t_next = next_fault;
+            }
+            for &(_, when, _) in &parked {
+                if when < t_next {
+                    t_next = when;
+                }
+            }
             if !t_next.is_finite() {
                 // Every active unit is rate-0 (zero flow cap) and nothing
                 // arrives before them; fail closed.
@@ -1196,7 +1610,9 @@ impl NetSim {
                         fluid.u_finish[ui] = t;
                         fluid.active[ui] = false;
                         n_active -= 1;
-                        fluid.leave(ui);
+                        if fluid.group_of[ui] != u32::MAX {
+                            fluid.leave(ui);
+                        }
                     }
                 }
                 if ptr >= m {
@@ -1743,6 +2159,7 @@ mod tests {
                 latency: 0.0,
                 recv_overhead: 0.0,
                 res: route.res,
+                seq: 0,
             });
         }
         flows
@@ -2127,5 +2544,172 @@ mod tests {
         d.transfer_batch(&reqs);
         assert!(d.stats.budget_exceeded >= 1);
         assert!(d.fluid.budget_warned);
+    }
+
+    // -----------------------------------------------------------------
+    // Fault injection (fabric::faults) at the engine level.
+    // -----------------------------------------------------------------
+
+    use crate::fabric::faults::{FaultEvent, FaultSpec, FaultTarget};
+
+    fn spined_sim(spines: usize, over: f64) -> NetSim {
+        let mut f = fabric(FabricKind::EthernetRoce25);
+        f.topology.spines = spines;
+        f.topology.oversubscription = Some(over);
+        NetSim::new(f, ClusterSpec::txgaia(), TransportOptions::default())
+    }
+
+    fn cross_rack_reqs(n: usize, bytes: f64) -> Vec<FlowReq> {
+        (0..n).map(|i| FlowReq { src: cpu_ep(i), dst: cpu_ep(40 + i), bytes, ready: 0.0 }).collect()
+    }
+
+    #[test]
+    fn neutral_fault_spec_is_bit_identical() {
+        // `faults = none` must leave the engine on the exact pre-fault
+        // code path: attaching the default (inactive) spec is a no-op.
+        let reqs = cross_rack_reqs(12, 8.0 * 1024.0 * 1024.0);
+        let mut a = spined_sim(4, 4.0);
+        let mut b = spined_sim(4, 4.0);
+        b.set_faults(&FaultSpec::default()).unwrap();
+        assert!(!b.faults_active(), "default spec must not attach a timeline");
+        let ta: Vec<u64> = a.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
+        let tb: Vec<u64> = b.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
+        assert_eq!(ta, tb);
+        assert_eq!(b.stats.retries + b.stats.reroutes + b.stats.failed_flows, 0);
+    }
+
+    #[test]
+    fn mid_batch_spine_down_reroutes_and_slows() {
+        // A spine dying mid-batch on a 4-spine fat-tree: flows crossing
+        // it re-route over the survivors (counted), nothing fails, and
+        // the batch finishes no earlier than the healthy run.
+        let bytes = 32.0 * 1024.0 * 1024.0;
+        let reqs = cross_rack_reqs(16, bytes);
+        let mut healthy = spined_sim(4, 4.0);
+        let ht: Vec<f64> =
+            healthy.transfer_batch(&reqs).iter().map(|t| t.recv_complete).collect();
+        let h_last = ht.iter().fold(0.0f64, |a, &b| a.max(b));
+
+        let mut faulted = spined_sim(4, 4.0);
+        // Down from mid-batch until well past the healthy finish.
+        faulted.set_faults(&FaultSpec::spine_down(0, h_last * 0.25, h_last * 4.0)).unwrap();
+        let ft: Vec<f64> =
+            faulted.transfer_batch(&reqs).iter().map(|t| t.recv_complete).collect();
+        let f_last = ft.iter().fold(0.0f64, |a, &b| a.max(b));
+        assert_eq!(faulted.stats.failed_flows, 0, "ECMP survivors must absorb the flows");
+        assert!(faulted.stats.reroutes > 0, "some flow must have crossed the dead spine");
+        assert!(
+            f_last > h_last * (1.0 + 1e-9),
+            "losing 1/4 of the bisection mid-batch must slow the batch: {f_last} vs {h_last}"
+        );
+        for t in &ft {
+            assert!(t.is_finite() && *t > 0.0);
+        }
+    }
+
+    #[test]
+    fn faulted_batches_are_deterministic() {
+        // Same spec + same submissions -> bitwise-equal times, and
+        // reset() replays (the fault clock is untouched by batches).
+        let reqs = cross_rack_reqs(16, 16.0 * 1024.0 * 1024.0);
+        let spec = FaultSpec::random(40.0, 0xDEAD);
+        let mut a = spined_sim(4, 4.0);
+        a.set_faults(&spec).unwrap();
+        let ta: Vec<u64> = a.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
+        a.reset();
+        let tb: Vec<u64> = a.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
+        let mut c = spined_sim(4, 4.0);
+        c.set_faults(&spec).unwrap();
+        let tc: Vec<u64> = c.transfer_batch(&reqs).iter().map(|t| t.recv_complete.to_bits()).collect();
+        assert_eq!(ta, tb, "reset() must replay the faulted batch");
+        assert_eq!(ta, tc, "a fresh sim with the same spec must agree");
+    }
+
+    #[test]
+    fn nic_down_parks_and_retries_within_window() {
+        // The destination NIC is down at submission and repairs inside
+        // the retry window: the flow is admitted at the first probe at
+        // or after the repair (retries counted), and completes.
+        let mut s = sim(FabricKind::EthernetRoce25);
+        let down = FaultSpec {
+            events: vec![FaultEvent {
+                target: FaultTarget::Nic(1),
+                at: 0.0,
+                duration: 0.0035,
+                factor: 0.0,
+            }],
+            ..FaultSpec::default()
+        };
+        s.set_faults(&down).unwrap();
+        let (_, healthy_done) = {
+            let mut h = sim(FabricKind::EthernetRoce25);
+            h.message(cpu_ep(0), cpu_ep(1), 1e6, 0.0)
+        };
+        let (_, done) = s.message(cpu_ep(0), cpu_ep(1), 1e6, 0.0);
+        assert!(s.stats.retries > 0, "a down NIC at submission must cost probes");
+        assert_eq!(s.stats.failed_flows, 0);
+        // Default policy: probes at 1,3,7,15 ms...; repair at 3.5 ms ->
+        // first usable probe is 7 ms.
+        assert!(
+            done >= 0.007 && done < 0.007 + 2.0 * healthy_done + 1e-3,
+            "flow should start at the 7 ms probe: done={done}"
+        );
+    }
+
+    #[test]
+    fn nic_down_past_retry_window_fails_loudly_in_stats() {
+        // A NIC dead longer than the whole retry window: the flow fails,
+        // is counted, and returns a finite give-up time.
+        let mut s = sim(FabricKind::EthernetRoce25);
+        let down = FaultSpec {
+            events: vec![FaultEvent {
+                target: FaultTarget::Nic(1),
+                at: 0.0,
+                duration: 1e6,
+                factor: 0.0,
+            }],
+            ..FaultSpec::default()
+        };
+        s.set_faults(&down).unwrap();
+        let (_, done) = s.message(cpu_ep(0), cpu_ep(1), 1e6, 0.0);
+        assert_eq!(s.stats.failed_flows, 1);
+        assert!(done.is_finite());
+        // Give-up time is the end of the retry window (~1.023 s under
+        // the defaults), not an arbitrary sentinel.
+        assert!(done > 0.5 && done < 2.0, "give-up time should be ~1 s: {done}");
+    }
+
+    #[test]
+    fn brownout_severity_is_monotone() {
+        // Deeper brownouts (smaller surviving factor) on every uplink
+        // can only slow a cross-rack batch down.
+        let bytes = 16.0 * 1024.0 * 1024.0;
+        let reqs = cross_rack_reqs(8, bytes);
+        let mut last = 0.0f64;
+        for &factor in &[1.0, 0.5, 0.25, 0.1] {
+            let mut s = spined_sim(1, 4.0);
+            if factor < 1.0 {
+                let mut events = Vec::new();
+                for tor in 0..s.topology.n_tors {
+                    events.push(FaultEvent {
+                        target: FaultTarget::Link { tor, spine: 0 },
+                        at: 0.0,
+                        duration: 1e6,
+                        factor,
+                    });
+                }
+                s.set_faults(&FaultSpec { events, ..FaultSpec::default() }).unwrap();
+            }
+            let t = s
+                .transfer_batch(&reqs)
+                .iter()
+                .map(|ft| ft.recv_complete)
+                .fold(0.0, f64::max);
+            assert!(
+                t + 1e-12 >= last,
+                "factor {factor}: brownout sped the batch up ({t} < {last})"
+            );
+            last = t;
+        }
     }
 }

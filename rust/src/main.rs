@@ -29,6 +29,7 @@
 //!   --parallelism P      run: dp | zero | pipeline | moe      [dp]
 //!   --background-load F  run: shared-tenancy background load in [0,1]
 //!   --stragglers SPEC    run: straggler model FRAC:FACTOR[:JITTER]
+//!   --faults SPEC        run: random fault trace RATE[:SEED] (events/sec)
 //!   --placement P        run: [fleet] placement pack | spread | topology
 //!   --no-schedule-cache  run: disable schedule/timing memoization
 //!   --no-aggregation     run: disable same-route flow aggregation
@@ -100,6 +101,7 @@ fn run(args: &Args) -> Result<()> {
         "tenancy" => cmd_tenancy(&rec, quick, &runner),
         "parallelism" => cmd_parallelism(&rec, quick, &runner),
         "fleet" => cmd_fleet(&rec, quick, &runner),
+        "faults" => cmd_faults(&rec, quick, &runner),
         "frontier" => cmd_frontier(&rec, quick, &runner),
         "train-real" => cmd_train_real(args, &rec),
         "calibrate" => cmd_calibrate(args, &rec),
@@ -122,6 +124,7 @@ extensions      : frameworks (TF-Horovod vs PyTorch-DDP)  sweeps (batch, precisi
                   tenancy (shared-tenancy background-load sweep alone)
                   parallelism (fabric x dp|zero|pipeline|moe strategy sweep)
                   fleet (multi-job scheduler: placement policy x occupancy)
+                  faults (fabric x fault-rate x GPU-count degradation sweep)
                   frontier (1k-32k GPU allreduce steps: fat-tree/dragonfly
                   tiers, flow aggregation + hierarchical group solves)
                   run --config configs/<file>.toml (custom scenario)
@@ -190,6 +193,22 @@ shared tenancy ([tenancy] in the TOML config):
   --stragglers SPEC    FRAC:FACTOR[:JITTER], e.g. 0.1:1.5:0.05
   The `ablations` (and standalone `tenancy`) command sweeps fabric x
   background load x GPU count (ablation_tenancy CSV).
+
+fault injection ([faults] in the TOML config, and the `faults` command):
+  deterministic, seeded traces of fabric faults — spine/link/NIC
+  hard-downs with repair, bandwidth brownouts, flapping — compiled into
+  a capacity timeline the fluid engine merges into its event loop.
+  Mid-flight flows crossing a dead resource re-route over surviving ECMP
+  spines (deterministic re-hash) or park and retry under the [transport]
+  timeout policy (retry_timeout_ms, retry_backoff, max_retries); flows
+  whose path outlives the whole retry window fail loudly (counted in
+  retries/reroutes/failed-flows stats). The hierarchical collective
+  re-elects ToR leaders off dead nodes, and the trainer reports each
+  step's fault exposure. Omitted (faults = none), the engine is
+  bit-for-bit the pre-fault engine. CLI override for `run`:
+  --faults SPEC        RATE[:SEED] seeded Poisson trace, events/sec
+  The `faults` command (and the `ablations` pack) sweeps fabric x fault
+  rate x GPU count (ablation_faults CSV).
 
 multi-job fleet ([fleet] in the TOML config, and the `fleet` command):
   a desired-state/actual-state reconcile loop schedules a seeded arrival
@@ -332,6 +351,18 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
     if let Some(p) = args.get_choice("parallelism", &["dp", "zero", "pipeline", "moe"])? {
         workload.parallelism = ParallelismKind::parse(p)?;
     }
+    // Optional [faults] table: deterministic fabric fault trace
+    // (link/NIC/spine downs, brownouts, flaps). Absent (and without
+    // --faults), the fabric is healthy — bit-for-bit the pre-fault
+    // engine.
+    let mut faults = match doc.get("faults") {
+        Some(v) => fabricbench::fabric::FaultSpec::from_toml(v)?,
+        None => fabricbench::fabric::FaultSpec::default(),
+    };
+    if let Some(spec) = args.get("faults") {
+        faults.apply_cli(spec)?;
+    }
+    faults.validate()?;
     let train = doc
         .get("train")
         .ok_or_else(|| anyhow::anyhow!("config missing [train]"))?;
@@ -382,6 +413,7 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
             fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy,
         workload,
+        faults,
     };
     // Optional [fleet] table: hand the trainer to the multi-job fleet
     // scheduler instead of running one job. --placement overrides the
@@ -437,6 +469,9 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
     t.row(vec!["step time p95 (ms)".into(), fnum(r.step_time_p95 * 1e3)]);
     t.row(vec!["scaling efficiency".into(), format!("{:.3}", r.scaling_efficiency())]);
     t.row(vec!["exposed comm fraction".into(), format!("{:.3}", r.comm_fraction)]);
+    if trainer.faults.active() {
+        t.row(vec!["fault exposure".into(), format!("{:.3}", r.fault_exposure)]);
+    }
     t.row(vec!["comm streams".into(), opts.num_streams.to_string()]);
     t.row(vec!["parallelism".into(), trainer.workload.parallelism.name().into()]);
     t.row(vec![
@@ -517,6 +552,14 @@ fn cmd_ablations(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
     rec.emit("ablation_tenancy", &t5);
     let (t6, _) = ablations::parallelism_sweep_with(quick, runner);
     rec.emit("ablation_parallelism", &t6);
+    let (t7, _) = ablations::faults_sweep_with(quick, runner);
+    rec.emit("ablation_faults", &t7);
+    Ok(())
+}
+
+fn cmd_faults(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
+    let (t, _) = ablations::faults_sweep_with(quick, runner);
+    rec.emit("ablation_faults", &t);
     Ok(())
 }
 

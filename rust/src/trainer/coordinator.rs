@@ -26,7 +26,7 @@ use crate::config::{
     WorkloadSpec,
 };
 use crate::fabric::tenancy::BackgroundTraffic;
-use crate::fabric::NetSim;
+use crate::fabric::{FaultSpec, NetSim};
 use crate::models::perf::{step_cost, Precision};
 use crate::models::Arch;
 use crate::trainer::scheduler::{self, BucketWork, SchedulerConfig};
@@ -64,6 +64,11 @@ pub struct TrainerSim {
     /// [`crate::workload::WorkloadGraph`]. [`WorkloadSpec::default`]
     /// (bucketed DP) is bit-for-bit the pre-IR trainer.
     pub workload: WorkloadSpec,
+    /// Fabric fault trace injected into every step's engine.
+    /// [`FaultSpec::default`] (inactive) is bit-for-bit the pre-fault
+    /// trainer; an active spec walks its timeline across steps (the
+    /// fault clock advances by each step's wall time).
+    pub faults: FaultSpec,
 }
 
 /// Default per-collective coordination overhead, seconds (Horovod cycle).
@@ -80,6 +85,9 @@ pub struct ThroughputResult {
     pub comm_fraction: f64,
     /// Ideal images/sec if scaling were perfectly linear from 1 GPU.
     pub linear_images_per_sec: f64,
+    /// Mean fraction of each measured step during which at least one
+    /// fabric fault was active (0.0 on a healthy fabric).
+    pub fault_exposure: f64,
 }
 
 impl ThroughputResult {
@@ -109,10 +117,25 @@ impl TrainerSim {
         run: &RunSpec,
         tenants: &[(usize, BackgroundTraffic)],
     ) -> anyhow::Result<ThroughputResult> {
+        self.run_placed_with_faults(placement, run, tenants, &self.faults)
+    }
+
+    /// [`TrainerSim::run_placed`] with an explicit fault spec overriding
+    /// the trainer's own — the fleet scheduler's path, which merges the
+    /// configured trace with NIC-down events for nodes inside their
+    /// repair window.
+    pub fn run_placed_with_faults(
+        &self,
+        placement: &Placement,
+        run: &RunSpec,
+        tenants: &[(usize, BackgroundTraffic)],
+        faults: &FaultSpec,
+    ) -> anyhow::Result<ThroughputResult> {
         let gpus = placement.len();
         anyhow::ensure!(gpus >= 1, "need at least one GPU");
         self.workload.validate_for_gpus(gpus)?;
         let mut net = NetSim::try_new(self.fabric.clone(), self.cluster.clone(), self.opts)?;
+        net.set_faults(faults)?;
         if self.tenancy.background_active() {
             let bg = BackgroundTraffic::new(&self.tenancy, &net.fabric, &net.cluster, run.seed)?;
             net.set_background(bg);
@@ -139,6 +162,7 @@ impl TrainerSim {
 
         let mut step_times = Vec::with_capacity(run.measure_steps);
         let mut comm_fracs = Vec::with_capacity(run.measure_steps);
+        let mut exposures = Vec::with_capacity(run.measure_steps);
         for step in 0..run.warmup_steps + run.measure_steps {
             net.reset();
             let (step_time, comm_frac) = self.simulate_step(
@@ -154,7 +178,14 @@ impl TrainerSim {
             if step >= run.warmup_steps {
                 step_times.push(step_time);
                 comm_fracs.push(comm_frac);
+                exposures.push(if step_time > 0.0 {
+                    net.fault_exposure(0.0, step_time) / step_time
+                } else {
+                    0.0
+                });
             }
+            // Warmup steps advance the trace too: wall time passes.
+            net.advance_fault_clock(step_time);
         }
 
         let mean = stats::mean(&step_times);
@@ -169,6 +200,7 @@ impl TrainerSim {
             step_time_p95: stats::percentile(&step_times, 95.0),
             comm_fraction: stats::mean(&comm_fracs),
             linear_images_per_sec: single * gpus as f64,
+            fault_exposure: stats::mean(&exposures),
         })
     }
 
@@ -345,6 +377,7 @@ mod tests {
             coordination_overhead: DEFAULT_COORDINATION_OVERHEAD,
             tenancy: TenancySpec::default(),
             workload: WorkloadSpec::default(),
+            faults: FaultSpec::default(),
         }
     }
 

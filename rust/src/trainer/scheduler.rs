@@ -98,6 +98,11 @@ fn fnv_str(h: u64, s: &str) -> u64 {
 pub(crate) fn world_sig(net: &NetSim, placement: &Placement) -> u64 {
     let mut h = fnv_str(net.topology.signature(), &net.fabric.name);
     h = fnv_step(h, net.background_signature());
+    // Fault timelines shift routing, leader election and timing by
+    // *where on the trace* a step runs: fold the spec + current clock
+    // (a constant 0 when healthy — signatures are cache keys, not
+    // output bits, so healthy worlds just all share that constant).
+    h = fnv_step(h, net.fault_signature());
     // Aggregation is bit-exact, so entries captured with it on/off would
     // replay identically — but the agg_units/agg_collapsed stat deltas
     // differ, and a cache must never let an A/B toggle alias entries.

@@ -1,0 +1,242 @@
+//! Property tests for the fault-injection subsystem (`fabric::faults` +
+//! the degradation-aware engine and collectives):
+//!
+//! * an inactive `FaultSpec` — even with every parameter knob moved off
+//!   its default — is bit-for-bit identical to the default trainer for
+//!   **all five** collective algorithms, and the committed `table1`
+//!   golden stays byte-exact: `faults = none` is the pre-fault engine;
+//! * the acceptance scenario: a spine dying mid-step on the 4:1
+//!   fat-tree at 32 GPUs strictly increases exposed communication vs
+//!   the healthy paired run while the step still completes over the
+//!   surviving ECMP spines — rerouted flows counted, nothing failed;
+//! * the same fault seed replays bitwise-identical step times
+//!   (fresh-sim determinism);
+//! * step time is monotone non-decreasing in brownout severity on the
+//!   contended 25 GbE @ 32-GPU cell.
+
+use fabricbench::cluster::EndpointKind;
+use fabricbench::collectives::{
+    BinomialTree, Collective, Hierarchical, PipelinedRing, RecursiveHalvingDoubling, RingAllreduce,
+};
+use fabricbench::config::presets::fabric;
+use fabricbench::config::spec::{ClusterSpec, FabricKind, RunSpec, TenancySpec, TransportOptions};
+use fabricbench::fabric::{FaultEvent, FaultSpec, FaultTarget, FlowReq, NetSim};
+use fabricbench::trainer::TrainerSim;
+use fabricbench::util::units::MIB;
+
+fn trainer(kind: FabricKind, faults: FaultSpec) -> TrainerSim {
+    TrainerSim {
+        arch: fabricbench::models::zoo::resnet50(),
+        fabric: fabric(kind),
+        cluster: ClusterSpec::txgaia(),
+        opts: TransportOptions::default(),
+        strategy: Box::new(RingAllreduce),
+        per_gpu_batch: 64,
+        precision: fabricbench::models::perf::Precision::Fp32,
+        fusion_bytes: 64.0 * MIB,
+        overlap: true,
+        step_overhead: 0.0,
+        coordination_overhead: fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
+        tenancy: TenancySpec::default(),
+        workload: fabricbench::config::WorkloadSpec::default(),
+        faults,
+    }
+}
+
+fn spec(measure: usize) -> RunSpec {
+    RunSpec { warmup_steps: 1, measure_steps: measure, ..Default::default() }
+}
+
+fn cpu_ep(node: usize) -> fabricbench::cluster::Endpoint {
+    NetSim::endpoint(node, 0, EndpointKind::Cpu)
+}
+
+/// A NIC brownout on the ring's busiest nodes, covering the whole run.
+fn nic_brownout(factor: f64) -> FaultSpec {
+    let mut f = FaultSpec::default();
+    for node in [0usize, 1] {
+        f.events.push(FaultEvent {
+            target: FaultTarget::Nic(node),
+            at: 0.0,
+            duration: 1e3,
+            factor,
+        });
+    }
+    f
+}
+
+#[test]
+fn inactive_spec_is_bit_identical_for_all_five_collectives() {
+    // A fully *configured* fault spec whose only neutral knob is the
+    // one that matters: no rate, no events. Everything else — seed,
+    // durations, horizon, brownout shape — is deliberately non-default,
+    // so this pins "inactive means inactive", not "default means
+    // default".
+    let neutral = FaultSpec {
+        rate: 0.0,
+        seed: 0xDEAD_BEEF,
+        mean_duration: 7.5,
+        horizon: 123.0,
+        brownout_frac: 0.9,
+        brownout_factor: 0.01,
+        events: Vec::new(),
+    };
+    let strategies: Vec<fn() -> Box<dyn Collective>> = vec![
+        || Box::new(RingAllreduce),
+        || Box::new(RecursiveHalvingDoubling),
+        || Box::new(Hierarchical::default()),
+        || Box::new(BinomialTree),
+        || Box::new(PipelinedRing { segments: 3 }),
+    ];
+    for make in strategies {
+        let mut base = trainer(FabricKind::EthernetRoce25, FaultSpec::default());
+        base.strategy = make();
+        let name = base.strategy.name();
+        let mut faulty = trainer(FabricKind::EthernetRoce25, neutral.clone());
+        faulty.strategy = make();
+        let a = base.run(16, &spec(3)).unwrap();
+        let b = faulty.run(16, &spec(3)).unwrap();
+        assert_eq!(
+            a.step_time_mean.to_bits(),
+            b.step_time_mean.to_bits(),
+            "{name}: inactive fault spec moved the step time"
+        );
+        assert_eq!(a.images_per_sec.to_bits(), b.images_per_sec.to_bits(), "{name}");
+        assert_eq!(a.comm_fraction.to_bits(), b.comm_fraction.to_bits(), "{name}");
+        assert_eq!(a.step_time_p95.to_bits(), b.step_time_p95.to_bits(), "{name}");
+        assert_eq!(b.fault_exposure, 0.0, "{name}: inactive spec must report zero exposure");
+    }
+}
+
+#[test]
+fn table1_golden_untouched_by_fault_module() {
+    // The cheap committed golden: the fault subsystem must not move a
+    // byte of the default-config drivers. (fig3 is covered by
+    // tests/golden_outputs.rs — no need to run the CFD sweep twice.)
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+        .join("table1.csv");
+    let want = std::fs::read_to_string(&path).expect("committed golden tests/golden/table1.csv");
+    assert_eq!(
+        want,
+        fabricbench::experiments::table1::run().to_csv(),
+        "default config must stay bit-for-bit pre-fault"
+    );
+}
+
+#[test]
+fn mid_step_spine_down_reroutes_completes_and_slows() {
+    // The acceptance scenario, engine level: 24 cross-rack flows on a
+    // 4-spine 4:1 fat-tree, spine 0 dying a quarter of the way through
+    // the healthy batch and staying down past its end. Every flow that
+    // hashed onto spine 0 must re-route over the three survivors (so
+    // the batch completes with zero failures) and the lost bisection
+    // capacity must strictly stretch the batch.
+    let mk = || {
+        let mut f = fabric(FabricKind::EthernetRoce25);
+        f.topology.spines = 4;
+        f.topology.oversubscription = Some(4.0);
+        NetSim::new(f, ClusterSpec::txgaia(), TransportOptions::default())
+    };
+    let reqs: Vec<FlowReq> = (0..24)
+        .map(|i| FlowReq { src: cpu_ep(i), dst: cpu_ep(40 + i), bytes: 8.0 * MIB, ready: 0.0 })
+        .collect();
+    let mut healthy = mk();
+    let h = healthy
+        .transfer_batch(&reqs)
+        .iter()
+        .map(|t| t.recv_complete)
+        .fold(0.0, f64::max);
+    assert!(h > 0.0);
+    assert_eq!(healthy.stats.reroutes + healthy.stats.failed_flows, 0);
+
+    let mut faulted = mk();
+    faulted.set_faults(&FaultSpec::spine_down(0, h * 0.25, h * 4.0)).unwrap();
+    let f = faulted
+        .transfer_batch(&reqs)
+        .iter()
+        .map(|t| t.recv_complete)
+        .fold(0.0, f64::max);
+    assert_eq!(faulted.stats.failed_flows, 0, "ECMP survivors must absorb every flow");
+    assert!(faulted.stats.reroutes > 0, "flows crossing the dead spine must re-route");
+    assert!(
+        f > h * (1.0 + 1e-9),
+        "losing a quarter of the bisection must stretch the batch: {f} !> {h}"
+    );
+}
+
+#[test]
+fn mid_step_spine_down_increases_exposed_comm_at_trainer_level() {
+    // The same scenario through the trainer: 32 GPUs spanning four
+    // small racks of the 4-spine 4:1 fat-tree, hierarchical allreduce.
+    // The paired healthy run fixes the step length; the faulted run
+    // sees spine 0 die a quarter of the way into its (single) measured
+    // step and reports both a longer step and a nonzero fault exposure.
+    let mk = |faults: FaultSpec| {
+        let mut t = trainer(FabricKind::EthernetRoce25, faults);
+        t.fabric.topology.spines = 4;
+        t.fabric.topology.oversubscription = Some(4.0);
+        t.cluster.nodes_per_rack = 4;
+        t.strategy = Box::new(Hierarchical::default());
+        t
+    };
+    let run = RunSpec { warmup_steps: 0, measure_steps: 1, ..Default::default() };
+    let healthy = mk(FaultSpec::default()).run(32, &run).unwrap();
+    assert_eq!(healthy.fault_exposure, 0.0);
+    let s = healthy.step_time_mean;
+    let faulted =
+        mk(FaultSpec::spine_down(0, s * 0.25, s * 1e3)).run(32, &run).unwrap();
+    assert!(
+        faulted.step_time_mean > s * (1.0 + 1e-9),
+        "spine-down must stretch the step: {} !> {s}",
+        faulted.step_time_mean
+    );
+    assert!(
+        faulted.fault_exposure > 0.0,
+        "the trainer must surface the degraded window as exposure"
+    );
+    assert!(faulted.fault_exposure <= 1.0);
+}
+
+#[test]
+fn same_fault_seed_replays_bitwise() {
+    // Fresh-sim determinism: two independently constructed trainers
+    // with the same random fault trace agree to the bit, and a
+    // different fault seed genuinely moves the trace.
+    let spec3 = spec(3);
+    let mk = |fseed: u64| {
+        trainer(FabricKind::EthernetRoce25, FaultSpec::random(20.0, fseed))
+            .run(32, &spec3)
+            .unwrap()
+    };
+    let a = mk(0xFA_017);
+    let b = mk(0xFA_017);
+    assert_eq!(a.step_time_mean.to_bits(), b.step_time_mean.to_bits());
+    assert_eq!(a.step_time_p95.to_bits(), b.step_time_p95.to_bits());
+    assert_eq!(a.comm_fraction.to_bits(), b.comm_fraction.to_bits());
+    assert_eq!(a.fault_exposure.to_bits(), b.fault_exposure.to_bits());
+}
+
+#[test]
+fn brownout_severity_is_monotone_on_contended_cell() {
+    // Paired seeds: identical compute jitter, the NIC capacity factor is
+    // the only variable. Keeping less of the NIC can never make the
+    // 25 GbE @ 32-GPU ring faster.
+    let healthy = trainer(FabricKind::EthernetRoce25, FaultSpec::default())
+        .run(32, &spec(3))
+        .unwrap();
+    let mut last = healthy.step_time_mean;
+    for factor in [0.8, 0.4, 0.1] {
+        let r = trainer(FabricKind::EthernetRoce25, nic_brownout(factor))
+            .run(32, &spec(3))
+            .unwrap();
+        assert!(
+            r.step_time_mean >= last * (1.0 - 1e-9),
+            "brownout factor {factor} sped the step up: {} < {last}",
+            r.step_time_mean
+        );
+        assert!(r.fault_exposure > 0.99, "window covers the whole run, factor {factor}");
+        last = r.step_time_mean;
+    }
+}

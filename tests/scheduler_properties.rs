@@ -38,6 +38,7 @@ fn trainer(kind: FabricKind, num_streams: usize, fusion_bytes: f64) -> TrainerSi
         coordination_overhead: fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy: fabricbench::config::TenancySpec::default(),
         workload: fabricbench::config::WorkloadSpec::default(),
+        faults: fabricbench::fabric::FaultSpec::default(),
     }
 }
 

@@ -40,6 +40,7 @@ fn trainer(kind: FabricKind, tenancy: TenancySpec) -> TrainerSim {
         coordination_overhead: fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
         tenancy,
         workload: fabricbench::config::WorkloadSpec::default(),
+        faults: fabricbench::fabric::FaultSpec::default(),
     }
 }
 

@@ -98,6 +98,7 @@ fn explicit_one_spine_fat_tree_matches_default_on_trainer_cells() {
                     fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
                 tenancy: fabricbench::config::TenancySpec::default(),
                 workload: fabricbench::config::WorkloadSpec::default(),
+                faults: fabricbench::fabric::FaultSpec::default(),
             };
             let spec = RunSpec { measure_steps: 3, warmup_steps: 1, ..Default::default() };
             let a = mk(base.clone()).run(gpus, &spec).unwrap();

@@ -27,6 +27,7 @@ workload shows up loudly as one warning per side.
 Usage:
     python3 tools/bench_compare.py BASELINE.json CURRENT.json \
         [--time-tolerance-pct 35] [--count-tolerance-pct 0]
+    python3 tools/bench_compare.py --self-test
 
 Exit codes: 0 = within thresholds, 1 = regression, 2 = bad input.
 """
@@ -62,6 +63,10 @@ def load_report(path):
     if doc.get("schema") != SCHEMA:
         print(f"error: {path}: schema {doc.get('schema')!r} != {SCHEMA!r}", file=sys.stderr)
         sys.exit(2)
+    return flatten_report(doc)
+
+
+def flatten_report(doc):
     benches = {}
     for bench, workloads in doc.items():
         if bench == "schema" or not isinstance(workloads, dict):
@@ -81,17 +86,8 @@ def tolerance_pct(field, args):
     return args.count_tolerance_pct
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("baseline")
-    ap.add_argument("current")
-    ap.add_argument("--time-tolerance-pct", type=float, default=35.0)
-    ap.add_argument("--count-tolerance-pct", type=float, default=0.0)
-    args = ap.parse_args()
-
-    base = load_report(args.baseline)
-    cur = load_report(args.current)
-
+def compare(base, cur, args, emit=print):
+    """Walk both flattened reports; returns (regressions, warnings, compared)."""
     regressions, warnings, compared = [], [], 0
     for key in sorted(set(base) | set(cur)):
         bench, workload = key
@@ -122,7 +118,108 @@ def main():
             if worse:
                 regressions.append(f"{line}  exceeds {tolerance_pct(field, args):g}%")
             else:
-                print(f"ok   {line}")
+                emit(f"ok   {line}")
+    return regressions, warnings, compared
+
+
+def self_test():
+    """In-process check of the comparison semantics — no fixture files.
+
+    Covers the orphan-key warning surface (workload on one side only,
+    field on one side only) plus the gate directions: a counter drift at
+    0% tolerance regresses, a wall-clock drift inside the window does
+    not, and higher-is-better fields regress downward.
+    """
+    args = argparse.Namespace(time_tolerance_pct=35.0, count_tolerance_pct=0.0)
+    base = flatten_report({
+        "schema": SCHEMA,
+        "engine": {
+            "steady": {"wall_ms": 100.0, "events": 500, "cache_hits": 40},
+            "removed": {"wall_ms": 1.0},
+            "renamed_old": {"wall_ms": 1.0},
+        },
+    })
+    cur = flatten_report({
+        "schema": SCHEMA,
+        "engine": {
+            # wall_ms +20% is inside the 35% window; events drifting at
+            # 0% tolerance and cache_hits dropping both regress; the
+            # extra field is a warning.
+            "steady": {"wall_ms": 120.0, "events": 501, "cache_hits": 39, "new_field": 1},
+            "added": {"wall_ms": 2.0},
+            "renamed_new": {"wall_ms": 1.0},
+        },
+    })
+    regressions, warnings, compared = compare(base, cur, args, emit=lambda _line: None)
+
+    def expect(cond, msg):
+        if not cond:
+            print(f"self-test FAIL: {msg}", file=sys.stderr)
+            print(f"  regressions: {regressions}", file=sys.stderr)
+            print(f"  warnings:    {warnings}", file=sys.stderr)
+            sys.exit(1)
+
+    expect(compared == 3, f"compared {compared} fields, want 3 (wall_ms/events/cache_hits)")
+    expect(
+        any("only in baseline" in w and "removed" in w for w in warnings),
+        "baseline-only workload must warn",
+    )
+    expect(
+        any("only in current" in w and "added" in w for w in warnings),
+        "current-only workload must warn",
+    )
+    expect(
+        any("renamed_old" in w for w in warnings) and any("renamed_new" in w for w in warnings),
+        "a renamed workload must warn once per side",
+    )
+    expect(
+        any("new_field" in w and "only in current" in w for w in warnings),
+        "current-only field must warn",
+    )
+    expect(len(warnings) == 5, f"{len(warnings)} warnings, want exactly 5: {warnings}")
+    expect(
+        any("events" in r for r in regressions),
+        "a deterministic counter drift at 0% tolerance must regress",
+    )
+    expect(
+        any("cache_hits" in r for r in regressions),
+        "a higher-is-better field dropping must regress",
+    )
+    expect(
+        not any("wall_ms" in r for r in regressions),
+        "+20% wall_ms is inside the 35% window",
+    )
+    expect(len(regressions) == 2, f"{len(regressions)} regressions, want exactly 2")
+
+    # Identical reports: clean pass, no warnings.
+    regressions, warnings, compared = compare(base, base, args, emit=lambda _line: None)
+    expect(not regressions and not warnings, "identical reports must be clean")
+    expect(compared == 5, f"identical reports compare all 5 fields, got {compared}")
+    print("self-test: ok (orphan warnings, gate directions, clean identity)")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", nargs="?")
+    ap.add_argument("current", nargs="?")
+    ap.add_argument("--time-tolerance-pct", type=float, default=35.0)
+    ap.add_argument("--count-tolerance-pct", type=float, default=0.0)
+    ap.add_argument(
+        "--self-test",
+        action="store_true",
+        help="run the built-in comparison-semantics check and exit",
+    )
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    if not args.baseline or not args.current:
+        ap.error("baseline and current are required (or use --self-test)")
+
+    base = load_report(args.baseline)
+    cur = load_report(args.current)
+
+    regressions, warnings, compared = compare(base, cur, args)
 
     for w in warnings:
         print(f"warn {w}")

@@ -39,6 +39,19 @@ the expanded per-flow solve — the container still has no cargo, so this
 is the satellite evidence that the engine-side fixes/additions preserve
 exact semantics.
 
+Note (PR 9): the reference loop gained the engine's fault-capacity merge
+(fabric::faults / fabric::sim): an attached per-resource (t, mult) step
+function is baked into the initial pricing at the first arrival and later
+changes re-price capacities through a `next_fault` cursor that the event
+loop treats as one more event source. The mirror covers brownouts only
+(multiplier > 0); hard-downs need the re-route/park machinery, which is
+pinned Rust-side by tests/fault_properties.rs. verify_faults() asserts
+the two claims that make the goldens trustworthy under the new code: an
+attached-but-never-firing timeline is byte-identical to the healthy loop
+(so `faults = none` plus "no change lands in the batch" is the pre-fault
+engine), and a mid-flight brownout lands exactly on the closed form
+tau + (B - r*(tau - a)) / (r*f).
+
 Usage: python3 tools/gen_golden.py [--out-dir tests/golden]
 """
 
@@ -588,6 +601,47 @@ class NetSim:
         self.aggregate = False
         self.agg_units = 0
         self.agg_collapsed = 0
+        # PR 9 fault-injection mirror (off by default — the goldens pin
+        # the healthy path). `fault_steps` maps a resource id of THIS
+        # mirror's layout (tx / rx / rack-up / rack-down, see res_caps)
+        # to a sorted (t, mult) step function, mirroring a compiled
+        # FaultTimeline; attaching one forces every batch onto the fluid
+        # path exactly as fabric::sim does. Brownouts only (mult > 0):
+        # hard-downs need the re-route/park machinery, which stays
+        # Rust-side (pinned by tests/fault_properties.rs).
+        self.fault_steps = None
+        self.fault_changes = ()
+
+    def set_fault_steps(self, steps):
+        """Attach a fault timeline: {res_id: [(t, mult), ...] sorted}.
+
+        Mirror of NetSim::set_faults with a pre-compiled FaultTimeline —
+        the step function's multiplier applies from t (inclusive);
+        before the first entry it is 1. The mirror supports brownouts
+        only, so every multiplier must be strictly positive."""
+        for sf in steps.values():
+            for st, mult in sf:
+                assert mult > 0.0, "mirror supports brownouts only (mult > 0)"
+                assert st >= 0.0
+        self.fault_steps = steps
+        self.fault_changes = tuple(sorted(set(t for sf in steps.values() for t, _ in sf)))
+
+    def fault_mult_at(self, rid, t):
+        """FaultTimeline::mult_at — last step at or before t wins."""
+        sf = None if self.fault_steps is None else self.fault_steps.get(rid)
+        if not sf:
+            return 1.0
+        k = 0
+        while k < len(sf) and sf[k][0] <= t:
+            k += 1
+        return 1.0 if k == 0 else sf[k - 1][1]
+
+    def fault_next_change_after(self, t):
+        """FaultTimeline::next_change_after — first change strictly > t."""
+        for c in self.fault_changes:
+            if c > t:
+                return c
+        return float("inf")
 
     def network_cost(self, bytes_, inter_rack):
         # transport::network_message for a CPU endpoint with RDMA on.
@@ -648,8 +702,11 @@ class NetSim:
                 load[rid] = load.get(rid, 0) + 1
                 if load[rid] > 1:
                     contended = True
-        if contended:
-            if self.aggregate:
+        # An attached fault timeline forces the fluid path (and disables
+        # aggregation), mirroring fabric::sim::transfer_batch; with no
+        # timeline attached the dispatch is byte-identical to pre-PR 9.
+        if contended or self.fault_steps is not None:
+            if self.aggregate and self.fault_steps is None:
                 finishes = self.fluid_finishes_aggregated(flows, factor)
             else:
                 finishes = self.fluid_finishes(flows, factor)
@@ -679,12 +736,35 @@ class NetSim:
         active = []
         ptr = 0
         t = arrivals[order[0]]
+        # PR 9 fault merge (mirrors sim.rs fluid_finishes): changes at
+        # or before the first arrival are baked into the initial
+        # pricing; later ones re-price through the `next_fault` cursor.
+        # With no timeline attached, `next_fault` stays +inf and every
+        # line below is byte-identical to the healthy loop.
+        if self.fault_steps is not None:
+            caps = [
+                self.res_caps[rid] * factor * self.fault_mult_at(rid, t) for rid in ids
+            ]
+            next_fault = self.fault_next_change_after(t)
+        else:
+            next_fault = float("inf")
         # PR 8: engine budget formula (sim.rs fluid_finishes); the old
         # mirror's tighter 512 + 40M/(n+64) budget was never hit by the
         # golden drivers, so raising it is byte-neutral for the fixtures.
         max_events = 2048 + 200_000_000 // (n + 64)
         events = 0
         while True:
+            # Merge fault capacity changes due at t: re-price every
+            # touched resource at the change instant (the engine dirties
+            # only the affected groups; the mirror re-solves everything
+            # each round, so a full re-price is the same semantics).
+            while next_fault <= t + time_eps(t):
+                for k, rid in enumerate(ids):
+                    caps[k] = self.res_caps[rid] * factor * self.fault_mult_at(
+                        rid, next_fault
+                    )
+                assert all(c > 0.0 for c in caps), "mirror supports brownouts only"
+                next_fault = self.fault_next_change_after(next_fault)
             while ptr < n and arrivals[order[ptr]] <= t + time_eps(t):
                 fi = order[ptr]
                 ptr += 1
@@ -695,7 +775,11 @@ class NetSim:
             if not active:
                 if ptr >= n:
                     break
-                t = arrivals[order[ptr]]
+                # Hop to the earlier of the next arrival and the next
+                # fault change so joiners always price against current
+                # capacities (sim.rs does the same).
+                nxt_arrival = arrivals[order[ptr]]
+                t = next_fault if next_fault < nxt_arrival else nxt_arrival
                 continue
 
             a_caps = [fcaps[fi] for fi in active]
@@ -722,6 +806,8 @@ class NetSim:
                         t_next = cand
             if ptr < n and arrivals[order[ptr]] < t_next:
                 t_next = arrivals[order[ptr]]
+            if next_fault < t_next:
+                t_next = next_fault
             if t_next == float("inf"):
                 for fi in active:
                     finish[fi] = t
@@ -1254,6 +1340,106 @@ def verify_aggregation():
     print(f"flow-aggregation bit-identity: {checked} batches OK ({collapsed} flows collapsed)")
 
 
+def verify_faults():
+    """PR 9 pre-verification of the fault-capacity merge.
+
+    Three claims, mirroring the guarantees tests/fault_properties.rs
+    pins on the Rust engine:
+
+    * neutrality — an attached timeline that never fires inside the
+      batch (empty, or with its first change far beyond the last
+      finish) reproduces the healthy fluid path byte-for-byte on a
+      contended cross-rack batch, and forcing a lone uncontended flow
+      onto the fluid path under such a timeline reproduces the
+      closed-form finish to the bit: the merge plumbing (initial
+      mult_at pricing, the next_fault cursor, the t_next clamp) is
+      provably inert until a change lands;
+    * analytic brownout — a single flow whose source NIC browns out to
+      factor f at time tau mid-transfer finishes exactly at
+      tau + (B - r*(tau - a)) / (r*f), where a is its arrival and r its
+      healthy rate, compared bit-for-bit against the faulted loop;
+    * monotone severity — deepening a mid-batch brownout on the shared
+      rack uplink of a contended cross-rack batch never shrinks the
+      batch makespan.
+    """
+
+    def cross_rack_batch():
+        # 18 flows over 6 source NICs and the rack-0 up / rack-1 down
+        # links: NIC- and uplink-contended, staggered readies, mixed
+        # sizes — the shape the golden drivers exercise.
+        sizes = [1.5e6, 64.0 * 1024.0 * 1024.0, 512.0]
+        return [
+            (i % 6, 32 + (i % 7), sizes[i % 3], float(i % 4) * 75.0e-6)
+            for i in range(18)
+        ]
+
+    checked = 0
+    for fab in (ETH, OPA):
+        want = NetSim(fab).transfer_batch(cross_rack_batch())
+        for steps in ({}, {0: [(1.0e9, 0.5)]}):
+            sim = NetSim(fab)
+            sim.set_fault_steps(steps)
+            got = sim.transfer_batch(cross_rack_batch())
+            for i, ((a0, a1), (b0, b1)) in enumerate(zip(got, want)):
+                assert fbits(a0) == fbits(b0), f"{fab.name} flow {i}: send {a0!r} != {b0!r}"
+                assert fbits(a1) == fbits(b1), f"{fab.name} flow {i}: recv {a1!r} != {b1!r}"
+            checked += 1
+
+        # A lone flow under an inert timeline is forced onto the fluid
+        # path; its finish must still be the uncontended closed form.
+        lone = [(0, 1, 4.0 * 1024.0 * 1024.0, 0.0)]
+        sim = NetSim(fab)
+        sim.set_fault_steps({0: [(1.0e9, 0.5)]})
+        got = sim.transfer_batch(lone)
+        want_lone = NetSim(fab).transfer_batch(lone)
+        assert fbits(got[0][0]) == fbits(want_lone[0][0]), fab.name
+        assert fbits(got[0][1]) == fbits(want_lone[0][1]), fab.name
+        checked += 1
+
+        # Analytic mid-flight brownout, same float ops as the loop:
+        # one event at the healthy rate r until tau, then r*f to the
+        # end (the faulted tx cap (nic*factor)*f binds below the
+        # unfaulted flow cap).
+        bytes_ = 64.0 * 1024.0 * 1024.0
+        send_ov, latency, recv_ov, bw = NetSim(fab).network_cost(bytes_, False)
+        factor = fab.congestion_factor(1.0)
+        a = 0.0 + send_ov
+        r = bw * factor
+        f = 0.25
+        tau = a + 0.4 * (bytes_ / r)
+        sim = NetSim(fab)
+        sim.set_fault_steps({0: [(tau, f)]})
+        got = sim.transfer_batch([(0, 1, bytes_, 0.0)])[0]
+        dt = max(tau - a, 0.0)
+        rf = bw * factor * f
+        want_fin = tau + (bytes_ - r * dt) / rf
+        assert fbits(got[0]) == fbits(want_fin), (
+            f"{fab.name}: brownout finish {got[0]!r} != closed form {want_fin!r}"
+        )
+        assert fbits(got[1]) == fbits(want_fin + latency + recv_ov), fab.name
+        checked += 1
+
+        # Monotone severity: browning out the rack-0 uplink mid-batch,
+        # harder and harder, never shrinks the contended makespan.
+        up0 = 2 * CLUSTER_NODES  # rack-0 up-link resource id
+        healthy_make = max(rc for _, rc in want)
+        last = healthy_make
+        for mult in (0.6, 0.3, 0.1):
+            sim = NetSim(fab)
+            sim.set_fault_steps({up0: [(healthy_make * 0.25, mult)]})
+            make = max(rc for _, rc in sim.transfer_batch(cross_rack_batch()))
+            assert make >= last * (1.0 - 1e-12), (
+                f"{fab.name}: uplink brownout {mult} shrank the makespan: "
+                f"{make!r} < {last!r}"
+            )
+            last = make
+        assert last > healthy_make * (1.0 + 1e-9), (
+            f"{fab.name}: a 10x uplink brownout must stretch the batch"
+        )
+        checked += 1
+    print(f"fault-merge verification: {checked} scenarios OK")
+
+
 # ---------------------------------------------------------------------------
 
 
@@ -1281,6 +1467,11 @@ def main():
     # reproduce the expanded solve bit-for-bit, and the stall-fixed
     # retirement loop must finish every contended batch within budget.
     verify_aggregation()
+
+    # PR 9 pre-verification: the fault-capacity merge must be provably
+    # inert when no change lands in a batch (so the healthy goldens stay
+    # byte-exact) and land a mid-flight brownout on its closed form.
+    verify_faults()
 
     for name, csv in (("table1", table1_csv()), ("fig3_quick", fig3_quick_csv())):
         path = os.path.join(args.out_dir, f"{name}.csv")
