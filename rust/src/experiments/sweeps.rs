@@ -27,11 +27,13 @@ use crate::config::presets::paper_fabrics;
 use crate::config::spec::{ClusterSpec, RunSpec, TransportOptions};
 use crate::models::perf::Precision;
 use crate::models::zoo::resnet50;
+use crate::service::cache::ResultCache;
 use crate::trainer::TrainerSim;
 use crate::util::json::{self, Json};
 use crate::util::table::{fnum, Table};
 use crate::util::units::MIB;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 /// Bump when cell semantics change so stale artifacts never resurface.
 pub const CACHE_VERSION: &str = "v1";
@@ -116,12 +118,19 @@ pub struct Runner {
     pub cache_dir: Option<PathBuf>,
     /// Base seed every cell seed is derived from.
     pub seed: u64,
+    /// Shared in-memory cell memo (the what-if service's cross-request
+    /// tier): checked before the disk artifact, and because it is a
+    /// single-flight [`ResultCache`], two concurrent sweeps over
+    /// overlapping grids simulate each shared cell once. Values are the
+    /// cells' canonical JSON artifacts, so a memory hit round-trips
+    /// through exactly the bytes a disk hit would.
+    pub mem_cache: Option<Arc<ResultCache>>,
 }
 
 impl Runner {
     /// The sequential, uncached runner every `run(quick)` wrapper uses.
     pub fn sequential() -> Runner {
-        Runner { jobs: 1, cache_dir: None, seed: RunSpec::default().seed }
+        Runner { jobs: 1, cache_dir: None, seed: RunSpec::default().seed, mem_cache: None }
     }
 
     pub fn new(jobs: usize) -> Runner {
@@ -130,6 +139,12 @@ impl Runner {
 
     pub fn with_cache(mut self, dir: &Path) -> Runner {
         self.cache_dir = Some(dir.to_path_buf());
+        self
+    }
+
+    /// Attach a shared in-memory result cache (see the field docs).
+    pub fn with_mem_cache(mut self, cache: Arc<ResultCache>) -> Runner {
+        self.mem_cache = Some(cache);
         self
     }
 
@@ -168,16 +183,36 @@ impl Runner {
             let cell_key = format!("{CACHE_VERSION}:{kind}:{}", key_of(item));
             let seed = self.cell_seed(&cell_key);
             let full_key = format!("{cell_key}:seed={:016x}", self.seed);
-            if let Some(dir) = &self.cache_dir {
-                if let Some(hit) = cache_load(dir, kind, &full_key) {
-                    return hit;
+            let compute = || {
+                if let Some(dir) = &self.cache_dir {
+                    if let Some(hit) = cache_load(dir, kind, &full_key) {
+                        return hit;
+                    }
                 }
-            }
-            let out = f(i, item, seed);
-            if let Some(dir) = &self.cache_dir {
-                cache_store(dir, kind, &full_key, &out);
-            }
-            out
+                let out = f(i, item, seed);
+                if let Some(dir) = &self.cache_dir {
+                    cache_store(dir, kind, &full_key, &out);
+                }
+                out
+            };
+            let Some(mem) = &self.mem_cache else {
+                return compute();
+            };
+            // The memory tier stores the cell's canonical JSON artifact
+            // (same bytes as the disk tier) under the hash of the same
+            // full key, with single-flight coalescing across threads
+            // and requests.
+            let payload = mem
+                .get_or_compute(fnv1a(&format!("cell:{kind}:{full_key}")), || {
+                    Ok(compute().to_json(&full_key).to_string())
+                })
+                .expect("cell computation is infallible");
+            Json::parse(&payload)
+                .ok()
+                .and_then(|j| CellOut::from_json(&j, &full_key))
+                // A decode failure can only mean the artifact shape and
+                // this code disagree — recompute rather than corrupt.
+                .unwrap_or_else(compute)
         })
     }
 }
@@ -425,6 +460,38 @@ mod tests {
         let third = run(&other);
         assert_eq!(calls.load(Ordering::SeqCst), 6);
         assert_eq!(first, third);
+    }
+
+    #[test]
+    fn map_cells_mem_cache_shares_across_runners() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let mem = Arc::new(ResultCache::new(16));
+        let items = vec![1usize, 2, 3];
+        let calls = AtomicUsize::new(0);
+        let run = |r: &Runner| {
+            r.map_cells(
+                "m",
+                &items,
+                |i| i.to_string(),
+                |_, i, _| {
+                    calls.fetch_add(1, Ordering::SeqCst);
+                    CellOut::new(vec![i.to_string()]).val("x", *i as f64 + 0.5)
+                },
+            )
+        };
+        let a = run(&Runner::new(2).with_mem_cache(Arc::clone(&mem)));
+        assert_eq!(calls.load(Ordering::SeqCst), 3);
+        // A different Runner sharing the cache recomputes nothing and
+        // round-trips identical cells through the JSON artifact bytes.
+        let b = run(&Runner::new(1).with_mem_cache(Arc::clone(&mem)));
+        assert_eq!(calls.load(Ordering::SeqCst), 3, "second runner must be all memory hits");
+        assert_eq!(a, b);
+        assert_eq!(mem.stats().misses, 3);
+        assert_eq!(mem.stats().hits, 3);
+        // A different base seed derives different keys — no false sharing.
+        let c = run(&Runner::new(1).with_seed(99).with_mem_cache(Arc::clone(&mem)));
+        assert_eq!(calls.load(Ordering::SeqCst), 6);
+        assert_eq!(a, c);
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub mod fabric;
 pub mod metrics;
 pub mod models;
 pub mod runtime;
+pub mod service;
 pub mod trainer;
 pub mod util;
 pub mod workload;

@@ -20,6 +20,10 @@
 //!   calibrate            measure the real PJRT train-step throughput
 //!   cfd-kernel           time the real DG kernel on this machine
 //!
+//! Commands (what-if pricing):
+//!   run                  price one TOML config (--json for the canonical doc)
+//!   serve                what-if HTTP service with a shared LRU result cache
+//!
 //! Options:
 //!   --quick              smaller sweeps (CI-sized)
 //!   --jobs N             worker threads for grid experiments [1]
@@ -96,6 +100,7 @@ fn run(args: &Args) -> Result<()> {
             cmd_ablations(&rec, quick, &runner)
         }
         "run" => cmd_run_config(args, &rec),
+        "serve" => cmd_serve(args),
         "frameworks" => cmd_frameworks(&rec, quick),
         "sweeps" => cmd_sweeps(&rec, quick, &runner),
         "tenancy" => cmd_tenancy(&rec, quick, &runner),
@@ -127,7 +132,9 @@ extensions      : frameworks (TF-Horovod vs PyTorch-DDP)  sweeps (batch, precisi
                   faults (fabric x fault-rate x GPU-count degradation sweep)
                   frontier (1k-32k GPU allreduce steps: fat-tree/dragonfly
                   tiers, flow aggregation + hierarchical group solves)
-                  run --config configs/<file>.toml (custom scenario)
+                  run --config configs/<file>.toml [--json] (custom scenario)
+                  serve [--port N --threads N --cache-entries N] (what-if
+                  HTTP service over the same scenario engine)
 real stack      : train-real [--workers N --steps N --lr X --fabric F]
                   calibrate [--steps N]   cfd-kernel
 
@@ -221,6 +228,26 @@ multi-job fleet ([fleet] in the TOML config, and the `fleet` command):
   fleet goodput instead of a single-job run; --placement overrides the
   policy. The `fleet` command sweeps policy x occupancy on a 32-node
   4:1-oversubscribed fat-tree cell (fleet_placement CSV).
+
+what-if service (`serve`, and `run --config F --json`):
+  a dependency-free HTTP/1.1 service answering capacity-planning
+  questions from the same scenario engine as `run --config`:
+    POST /v1/whatif   {"config": "<TOML text>"} -> one result JSON line
+    POST /v1/batch    {"cells": ["<TOML>", ...]} -> NDJSON, one line per
+                      cell in request order (errors as {"cell":i,"error"})
+    GET  /v1/health   liveness probe
+    GET  /v1/cache/stats  hits / misses / coalesced / evictions / entries
+  Results are cached in a shared LRU keyed by the full scenario
+  signature (topology + transport + tenancy + faults + workload + run
+  seeds); identical in-flight queries coalesce onto one simulation.
+  Responses are byte-identical to `run --config F --json` for the same
+  config, cache hit or miss. [fleet] configs are rejected (single-job
+  scenarios only). Options:
+  --port N             listen port on 127.0.0.1 [8080]
+  --threads N          worker threads accepting connections [4]
+  --cache-entries N    LRU capacity in result documents [256]
+  `run --json` prints the canonical what-if JSON document (exact service
+  bytes) instead of the table — handy for diffing CLI vs service output.
 "#;
 
 fn cmd_tenancy(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
@@ -279,156 +306,74 @@ fn cmd_frameworks(rec: &Recorder, quick: bool) -> Result<()> {
     Ok(())
 }
 
-/// Run a custom scenario described by a TOML config file.
+/// Run a custom scenario described by a TOML config file. The
+/// single-job parse/run/serialize path lives in
+/// [`fabricbench::service::whatif::Scenario`], shared with the what-if
+/// HTTP service — which is what keeps `run --json` output and a
+/// `/v1/whatif` response byte-identical for the same config.
 fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
-    use fabricbench::config::spec::{
-        ClusterSpec, FabricSpec, ParallelismKind, RunSpec, TenancySpec, TransportOptions,
-        WorkloadSpec,
-    };
+    use fabricbench::config::spec::ParallelismKind;
+    use fabricbench::service::whatif::Scenario;
     let path = args
         .get("config")
         .ok_or_else(|| anyhow::anyhow!("run requires --config <file.toml>"))?;
     let text = std::fs::read_to_string(path)?;
     let doc = fabricbench::config::toml::parse(&text)?;
-    let cluster = match doc.get("cluster") {
-        Some(v) => ClusterSpec::from_toml(v)?,
-        None => ClusterSpec::txgaia(),
-    };
-    let mut opts = match doc.get("transport") {
-        Some(v) => TransportOptions::from_toml(v)?,
-        None => TransportOptions::default(),
-    };
+    let mut sc = Scenario::from_doc(&doc)?;
+    // CLI overrides on top of the TOML, re-validated where they bite.
     if args.get("streams").is_some() {
-        opts.num_streams = args.get_usize("streams", opts.num_streams)?;
-        opts.validate()?;
+        sc.opts.num_streams = args.get_usize("streams", sc.opts.num_streams)?;
+        sc.opts.validate()?;
     }
     if args.flag("no-schedule-cache") {
-        opts.schedule_cache = false;
+        sc.opts.schedule_cache = false;
     }
     if args.flag("no-aggregation") {
-        opts.flow_aggregation = false;
+        sc.opts.flow_aggregation = false;
     }
     if args.get("solver-threads").is_some() {
-        opts.solver_threads = args.get_usize("solver-threads", opts.solver_threads)?;
-        opts.validate()?;
+        sc.opts.solver_threads = args.get_usize("solver-threads", sc.opts.solver_threads)?;
+        sc.opts.validate()?;
     }
-    let mut fabric = FabricSpec::from_toml(
-        doc.get("fabric")
-            .ok_or_else(|| anyhow::anyhow!("config missing [fabric]"))?,
-    )?;
-    // Optional [topology] table: explicit fat-tree / dragonfly tiers
-    // above the NICs. Absent, the fabric keeps its preset (the legacy
-    // scalar rack-uplink model, bit-for-bit).
-    if let Some(v) = doc.get("topology") {
-        fabric.topology = fabricbench::config::TopologySpec::from_toml(v)?;
-    }
-    fabric.topology.validate_for(&cluster)?;
-    // Optional [tenancy] table: shared-tenancy background traffic +
-    // stragglers. Absent (and without CLI overrides), the system is
-    // dedicated — bit-for-bit the pre-tenancy model.
-    let mut tenancy = match doc.get("tenancy") {
-        Some(v) => TenancySpec::from_toml(v)?,
-        None => TenancySpec::default(),
-    };
     if args.get("background-load").is_some() {
-        tenancy.background_load = args.get_f64("background-load", tenancy.background_load)?;
-        tenancy.validate()?;
+        sc.tenancy.background_load =
+            args.get_f64("background-load", sc.tenancy.background_load)?;
+        sc.tenancy.validate()?;
     }
     if let Some(spec) = args.get("stragglers") {
-        tenancy.apply_stragglers(spec)?;
+        sc.tenancy.apply_stragglers(spec)?;
     }
-    if tenancy.background_active() {
+    if sc.tenancy.background_active() {
         // Surface node-set misconfiguration before the run starts.
-        tenancy.resolve_sets(&cluster)?;
+        sc.tenancy.resolve_sets(&sc.cluster)?;
     }
-    // Optional [workload] table: which parallelism strategy the step
-    // lowers to (workload IR). Absent (and without --parallelism), the
-    // trainer is the classic bucketed-DP path, bit-for-bit.
-    let mut workload = match doc.get("workload") {
-        Some(v) => WorkloadSpec::from_toml(v)?,
-        None => WorkloadSpec::default(),
-    };
     if let Some(p) = args.get_choice("parallelism", &["dp", "zero", "pipeline", "moe"])? {
-        workload.parallelism = ParallelismKind::parse(p)?;
+        sc.workload.parallelism = ParallelismKind::parse(p)?;
     }
-    // Optional [faults] table: deterministic fabric fault trace
-    // (link/NIC/spine downs, brownouts, flaps). Absent (and without
-    // --faults), the fabric is healthy — bit-for-bit the pre-fault
-    // engine.
-    let mut faults = match doc.get("faults") {
-        Some(v) => fabricbench::fabric::FaultSpec::from_toml(v)?,
-        None => fabricbench::fabric::FaultSpec::default(),
-    };
     if let Some(spec) = args.get("faults") {
-        faults.apply_cli(spec)?;
+        sc.faults.apply_cli(spec)?;
+        sc.faults.validate()?;
     }
-    faults.validate()?;
-    let train = doc
-        .get("train")
-        .ok_or_else(|| anyhow::anyhow!("config missing [train]"))?;
-    let model = train
-        .get("model")
-        .and_then(|x| x.as_str())
-        .unwrap_or("resnet50");
-    let arch = fabricbench::models::zoo::by_name(model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
-    let gpus = train.get("gpus").and_then(|x| x.as_usize()).unwrap_or(8);
-    let per_gpu_batch = train
-        .get("per_gpu_batch")
-        .and_then(|x| x.as_usize())
-        .unwrap_or(64);
-    let fusion_mib = train
-        .get("fusion_mib")
-        .and_then(|x| x.as_f64())
-        .unwrap_or(64.0);
-    let overlap = !matches!(
-        train.get("overlap"),
-        Some(fabricbench::util::json::Json::Bool(false))
-    );
-    let mut run_spec = RunSpec::default();
-    if let Some(r) = doc.get("run") {
-        if let Some(seed) = r.get("seed").and_then(|x| x.as_usize()) {
-            run_spec.seed = seed as u64;
-        }
-        if let Some(w) = r.get("warmup_steps").and_then(|x| x.as_usize()) {
-            run_spec.warmup_steps = w;
-        }
-        if let Some(m) = r.get("measure_steps").and_then(|x| x.as_usize()) {
-            run_spec.measure_steps = m;
-        }
-    }
-    let name = arch.name.clone();
-    let trainer = fabricbench::trainer::TrainerSim {
-        arch,
-        fabric: fabric.clone(),
-        cluster,
-        opts,
-        strategy: Box::new(fabricbench::collectives::RingAllreduce),
-        per_gpu_batch,
-        precision: fabricbench::models::perf::Precision::Fp32,
-        fusion_bytes: fusion_mib * fabricbench::util::units::MIB,
-        overlap,
-        step_overhead: 0.0,
-        coordination_overhead:
-            fabricbench::trainer::coordinator::DEFAULT_COORDINATION_OVERHEAD,
-        tenancy,
-        workload,
-        faults,
-    };
     // Optional [fleet] table: hand the trainer to the multi-job fleet
     // scheduler instead of running one job. --placement overrides the
     // configured policy.
     if let Some(v) = doc.get("fleet") {
+        anyhow::ensure!(
+            !args.flag("json"),
+            "--json prices single jobs; a [fleet] config emits a multi-job report"
+        );
         let mut fleet = fabricbench::config::FleetSpec::from_toml(v)?;
         if let Some(p) = args.get_choice("placement", &["pack", "spread", "topology"])? {
             fleet.placement = fabricbench::config::PlacementPolicy::parse(p)?;
         }
+        let trainer = sc.trainer();
         let sim = fabricbench::cluster::FleetSim::new(&trainer, fleet)?;
-        let r = sim.run(&run_spec)?;
+        let r = sim.run(&sc.run)?;
         let mut t = fabricbench::util::table::Table::new(
             &format!(
-                "fleet run: {name} gangs on {} ({} policy, {} jobs)",
-                fabric.name,
+                "fleet run: {} gangs on {} ({} policy, {} jobs)",
+                sc.arch.name,
+                sc.fabric.name,
                 fleet.placement.name(),
                 r.jobs.len()
             ),
@@ -459,9 +404,15 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
         );
         return Ok(());
     }
-    let r = trainer.run(gpus, &run_spec)?;
+    // --json: emit the canonical what-if document (the exact bytes
+    // `/v1/whatif` serves for this config) instead of the table.
+    if args.flag("json") {
+        print!("{}", sc.response_body()?);
+        return Ok(());
+    }
+    let r = sc.run_sim()?;
     let mut t = fabricbench::util::table::Table::new(
-        &format!("custom run: {name} on {} ({gpus} GPUs)", fabric.name),
+        &format!("custom run: {} on {} ({} GPUs)", sc.arch.name, sc.fabric.name, sc.gpus),
         &["metric", "value"],
     );
     t.row(vec!["images/s".into(), fnum(r.images_per_sec)]);
@@ -469,17 +420,29 @@ fn cmd_run_config(args: &Args, rec: &Recorder) -> Result<()> {
     t.row(vec!["step time p95 (ms)".into(), fnum(r.step_time_p95 * 1e3)]);
     t.row(vec!["scaling efficiency".into(), format!("{:.3}", r.scaling_efficiency())]);
     t.row(vec!["exposed comm fraction".into(), format!("{:.3}", r.comm_fraction)]);
-    if trainer.faults.active() {
+    if sc.faults.active() {
         t.row(vec!["fault exposure".into(), format!("{:.3}", r.fault_exposure)]);
     }
-    t.row(vec!["comm streams".into(), opts.num_streams.to_string()]);
-    t.row(vec!["parallelism".into(), trainer.workload.parallelism.name().into()]);
+    t.row(vec!["comm streams".into(), sc.opts.num_streams.to_string()]);
+    t.row(vec!["parallelism".into(), sc.workload.parallelism.name().into()]);
     t.row(vec![
         "background load".into(),
-        format!("{:.0}%", trainer.tenancy.background_load * 100.0),
+        format!("{:.0}%", sc.tenancy.background_load * 100.0),
     ]);
     rec.emit("custom_run", &t);
     Ok(())
+}
+
+/// The what-if HTTP service (`service::serve_blocking`): serve until
+/// killed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let port = args.get_usize("port", 8080)?;
+    anyhow::ensure!(port <= u16::MAX as usize, "--port must be 0..=65535, got {port}");
+    let threads = args.get_usize("threads", 4)?;
+    anyhow::ensure!(threads >= 1, "--threads must be at least 1");
+    let cache_entries = args.get_usize("cache-entries", 256)?;
+    anyhow::ensure!(cache_entries >= 1, "--cache-entries must be at least 1");
+    fabricbench::service::serve_blocking(port as u16, threads, cache_entries)
 }
 
 fn cmd_table1(rec: &Recorder, runner: &Runner) -> Result<()> {
@@ -566,6 +529,9 @@ fn cmd_faults(rec: &Recorder, quick: bool, runner: &Runner) -> Result<()> {
 fn cmd_train_real(args: &Args, rec: &Recorder) -> Result<()> {
     let workers = args.get_usize("workers", 4)?;
     let steps = args.get_usize("steps", 300)?;
+    // Reject before the (slow) engine load: a zero-step run has no
+    // losses to report and used to panic at the summary line.
+    anyhow::ensure!(steps >= 1, "train-real: --steps must be at least 1, got {steps}");
     let lr = args.get_f64("lr", 0.1)? as f32;
     let kind = FabricKind::parse(args.get("fabric").unwrap_or("25gbe-roce"))?;
     let fabric = fabricbench::config::presets::fabric(kind);
@@ -594,7 +560,7 @@ fn cmd_train_real(args: &Args, rec: &Recorder) -> Result<()> {
         "workers: {}  steps: {}  final loss: {:.4}  held-out accuracy: {:.1}%",
         report.workers,
         report.steps,
-        report.losses.last().unwrap(),
+        report.final_loss()?,
         100.0 * report.final_accuracy
     );
     println!(

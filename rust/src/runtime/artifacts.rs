@@ -111,8 +111,11 @@ impl Manifest {
                 .and_then(|x| x.as_arr())
                 .ok_or_else(|| anyhow!("manifest missing 'image'"))?
                 .iter()
-                .map(|d| d.as_usize().unwrap_or(0))
-                .collect(),
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| anyhow!("manifest 'image' has a non-integer dim: {d}"))
+                })
+                .collect::<Result<_>>()?,
             classes: get_usize("classes")?,
             param_count: get_usize("param_count")?,
             params,

@@ -1,0 +1,341 @@
+//! The shared result-cache tier of the what-if service: a true-LRU
+//! bounded store plus single-flight request coalescing.
+//!
+//! Two layers, separable on purpose:
+//!
+//! * [`LruCache`] — a small, dependency-free, deterministic LRU map.
+//!   Backed by a flat `Vec` with a logical access clock; capacities in
+//!   this codebase are tens-to-hundreds of entries, where a linear scan
+//!   beats hash-map + intrusive-list bookkeeping and keeps the code
+//!   auditable. Both [`crate::trainer::scheduler::ScheduleCache`] tiers
+//!   and the service's [`ResultCache`] evict through this one
+//!   implementation (previously the schedule cache *cleared itself* at
+//!   capacity, throwing away the whole working set whenever a sweep
+//!   crossed `MAX_PATTERNS`).
+//! * [`ResultCache`] — the concurrency-safe cross-request memo keyed by
+//!   the 64-bit scenario signature ([`crate::service::whatif`]): a
+//!   `Mutex<LruCache>` plus a single-flight table, so N identical
+//!   in-flight queries run **one** simulation and share the same
+//!   `Arc<String>` payload. Hit/miss/coalesce/evict counters feed
+//!   `GET /v1/cache/stats`.
+//!
+//! Correctness note: values are the final serialized response bytes of
+//! deterministic simulations, so serving a cached `Arc` is byte-for-byte
+//! what recomputation would produce — caching is a pure speedup, never a
+//! semantic change (the same contract the per-sim caches already pin).
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Deterministic LRU map over a flat vec (see module docs for why not a
+/// hash map). `get` and `insert` both count as a "use".
+pub struct LruCache<K, V> {
+    entries: Vec<(K, V, u64)>,
+    /// Logical access clock; strictly increasing, so last-use ticks are
+    /// unique and eviction order is total.
+    tick: u64,
+    cap: usize,
+    /// Total entries evicted to make room (never counts replacements).
+    pub evictions: u64,
+}
+
+impl<K: PartialEq, V> LruCache<K, V> {
+    /// `cap` is clamped to at least 1 — a zero-capacity cache would turn
+    /// every insert into an immediate silent eviction.
+    pub fn new(cap: usize) -> LruCache<K, V> {
+        LruCache { entries: Vec::new(), tick: 0, cap: cap.max(1), evictions: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        self.get_with(|k| k == key)
+    }
+
+    /// Predicate lookup for callers whose key is expensive to build (the
+    /// schedule cache's timing tier compares borrowed bit slices without
+    /// allocating a key). Marks the entry used on a hit.
+    pub fn get_with<P: FnMut(&K) -> bool>(&mut self, mut pred: P) -> Option<&V> {
+        let i = self.entries.iter().position(|(k, _, _)| pred(k))?;
+        self.tick += 1;
+        self.entries[i].2 = self.tick;
+        Some(&self.entries[i].1)
+    }
+
+    /// Insert or replace. At capacity the least-recently-used entry is
+    /// evicted — and only that one (no wholesale clearing).
+    pub fn insert(&mut self, key: K, val: V) {
+        self.tick += 1;
+        if let Some(i) = self.entries.iter().position(|(k, _, _)| *k == key) {
+            self.entries[i].1 = val;
+            self.entries[i].2 = self.tick;
+            return;
+        }
+        if self.entries.len() >= self.cap {
+            let oldest = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (_, _, used))| *used)
+                .map(|(i, _)| i)
+                .expect("cap >= 1 so a full cache is non-empty");
+            self.entries.swap_remove(oldest);
+            self.evictions += 1;
+        }
+        self.entries.push((key, val, self.tick));
+    }
+}
+
+/// Counter snapshot surfaced by `GET /v1/cache/stats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResultCacheStats {
+    /// Requests served from the LRU without waiting on anyone.
+    pub hits: u64,
+    /// Requests that ran the simulation (each miss = one compute).
+    pub misses: u64,
+    /// Requests that blocked on an identical in-flight computation and
+    /// shared its result (single-flight coalescing).
+    pub coalesced: u64,
+    /// LRU evictions performed to stay within capacity.
+    pub evictions: u64,
+    pub entries: usize,
+    pub capacity: usize,
+}
+
+struct FlightTable {
+    lru: LruCache<u64, Arc<String>>,
+    /// Signatures currently being computed by some thread.
+    inflight: Vec<u64>,
+    hits: u64,
+    misses: u64,
+    coalesced: u64,
+}
+
+/// Concurrency-safe memo with single-flight coalescing (module docs).
+pub struct ResultCache {
+    state: Mutex<FlightTable>,
+    done: Condvar,
+}
+
+impl ResultCache {
+    pub fn new(cap: usize) -> ResultCache {
+        ResultCache {
+            state: Mutex::new(FlightTable {
+                lru: LruCache::new(cap),
+                inflight: Vec::new(),
+                hits: 0,
+                misses: 0,
+                coalesced: 0,
+            }),
+            done: Condvar::new(),
+        }
+    }
+
+    pub fn stats(&self) -> ResultCacheStats {
+        let st = self.state.lock().expect("result cache poisoned");
+        ResultCacheStats {
+            hits: st.hits,
+            misses: st.misses,
+            coalesced: st.coalesced,
+            evictions: st.lru.evictions,
+            entries: st.lru.len(),
+            capacity: st.lru.capacity(),
+        }
+    }
+
+    /// Return the cached payload for `key`, computing it at most once
+    /// across all concurrent callers. While one thread computes, every
+    /// other caller with the same key blocks and then shares the same
+    /// `Arc` (counted as `coalesced`, not `hits`). Errors are **not**
+    /// cached: the failing leader wakes the waiters, one of them becomes
+    /// the new leader, and each caller gets its own error if the
+    /// computation keeps failing.
+    pub fn get_or_compute<F>(&self, key: u64, compute: F) -> anyhow::Result<Arc<String>>
+    where
+        F: FnOnce() -> anyhow::Result<String>,
+    {
+        let mut st = self.state.lock().expect("result cache poisoned");
+        let mut waited = false;
+        loop {
+            if let Some(v) = st.lru.get(&key) {
+                let out = Arc::clone(v);
+                if waited {
+                    st.coalesced += 1;
+                } else {
+                    st.hits += 1;
+                }
+                return Ok(out);
+            }
+            if st.inflight.contains(&key) {
+                waited = true;
+                st = self.done.wait(st).expect("result cache poisoned");
+                continue;
+            }
+            st.inflight.push(key);
+            st.misses += 1;
+            break;
+        }
+        drop(st);
+        let result = compute();
+        let mut st = self.state.lock().expect("result cache poisoned");
+        st.inflight.retain(|k| *k != key);
+        let out = match result {
+            Ok(body) => {
+                let payload = Arc::new(body);
+                st.lru.insert(key, Arc::clone(&payload));
+                Ok(payload)
+            }
+            Err(e) => Err(e),
+        };
+        drop(st);
+        self.done.notify_all();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn lru_evicts_least_recently_used_in_order() {
+        let mut c: LruCache<u32, &str> = LruCache::new(3);
+        c.insert(1, "a");
+        c.insert(2, "b");
+        c.insert(3, "c");
+        // Touch 1 so 2 becomes the LRU entry.
+        assert_eq!(c.get(&1), Some(&"a"));
+        c.insert(4, "d");
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.evictions, 1);
+        assert_eq!(c.get(&2), None, "2 was least-recently-used");
+        assert_eq!(c.get(&1), Some(&"a"));
+        // Next victim must be 3 (1 and 4 are fresher).
+        c.insert(5, "e");
+        assert_eq!(c.get(&3), None);
+        assert_eq!(c.get(&4), Some(&"d"));
+        assert_eq!(c.get(&5), Some(&"e"));
+        assert_eq!(c.evictions, 2);
+    }
+
+    #[test]
+    fn lru_replacement_does_not_evict() {
+        let mut c: LruCache<u32, u32> = LruCache::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(1, 11); // replace in place
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions, 0);
+        assert_eq!(c.get(&1), Some(&11));
+        assert_eq!(c.get(&2), Some(&20));
+    }
+
+    #[test]
+    fn lru_never_exceeds_capacity() {
+        let mut c: LruCache<u64, u64> = LruCache::new(4);
+        for i in 0..100u64 {
+            c.insert(i, i * i);
+            assert!(c.len() <= 4);
+        }
+        assert_eq!(c.evictions, 96);
+        // The four most recent keys survive.
+        for i in 96..100u64 {
+            assert_eq!(c.get(&i), Some(&(i * i)));
+        }
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let mut c: LruCache<u8, u8> = LruCache::new(0);
+        c.insert(1, 1);
+        assert_eq!(c.get(&1), Some(&1));
+        assert_eq!(c.capacity(), 1);
+    }
+
+    #[test]
+    fn get_with_marks_used() {
+        let mut c: LruCache<u32, &str> = LruCache::new(2);
+        c.insert(1, "a");
+        c.insert(2, "b");
+        assert_eq!(c.get_with(|k| *k == 1), Some(&"a"));
+        c.insert(3, "c"); // must evict 2, not the just-touched 1
+        assert_eq!(c.get(&1), Some(&"a"));
+        assert_eq!(c.get(&2), None);
+    }
+
+    #[test]
+    fn result_cache_hits_after_miss_and_stays_bounded() {
+        let cache = ResultCache::new(2);
+        for key in [1u64, 2, 3, 2, 3] {
+            let got = cache.get_or_compute(key, || Ok(format!("r{key}"))).unwrap();
+            assert_eq!(*got, format!("r{key}"));
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 3, "{s:?}");
+        assert_eq!(s.hits, 2, "{s:?}");
+        assert_eq!(s.evictions, 1, "{s:?}"); // key 1 fell out at cap 2
+        assert!(s.entries <= 2, "{s:?}");
+    }
+
+    #[test]
+    fn result_cache_does_not_cache_errors() {
+        let cache = ResultCache::new(4);
+        let err = cache.get_or_compute(7, || anyhow::bail!("transient"));
+        assert!(err.is_err());
+        let ok = cache.get_or_compute(7, || Ok("recovered".to_string())).unwrap();
+        assert_eq!(*ok, "recovered");
+        assert_eq!(cache.stats().misses, 2, "error must not poison the key");
+    }
+
+    #[test]
+    fn result_cache_coalesces_concurrent_identical_queries() {
+        // All threads release together on one key whose computation is
+        // slow: exactly one simulation runs, everyone shares its bytes.
+        let cache = ResultCache::new(4);
+        let computes = AtomicUsize::new(0);
+        let n = 8;
+        let start = Barrier::new(n);
+        let payloads: Vec<Arc<String>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n)
+                .map(|_| {
+                    scope.spawn(|| {
+                        start.wait();
+                        cache
+                            .get_or_compute(42, || {
+                                computes.fetch_add(1, Ordering::SeqCst);
+                                std::thread::sleep(std::time::Duration::from_millis(200));
+                                Ok("slow result".to_string())
+                            })
+                            .unwrap()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(computes.load(Ordering::SeqCst), 1, "single-flight violated");
+        for p in &payloads {
+            assert!(Arc::ptr_eq(p, &payloads[0]), "coalesced callers must share one Arc");
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 1, "{s:?}");
+        // A thread descheduled past the whole compute window would land
+        // as a plain hit, so pin the sum exactly and the coalesce floor.
+        assert_eq!(s.coalesced + s.hits, (n - 1) as u64, "{s:?}");
+        assert!(s.coalesced >= 1, "{s:?}");
+    }
+}

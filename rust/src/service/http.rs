@@ -1,0 +1,242 @@
+//! Minimal HTTP/1.1 codec for the what-if service — request parsing and
+//! response writing over `std::io` streams, no external crates (the
+//! container is offline; tokio/hyper are unavailable by design).
+//!
+//! Scope is deliberately narrow: one request per connection
+//! (`Connection: close`), `Content-Length` bodies on input, and either
+//! fixed-length or chunked (`Transfer-Encoding: chunked`, used for the
+//! batch endpoint's NDJSON stream) bodies on output. That covers curl,
+//! python's `urllib`/`http.client`, and the in-repo test client; it is
+//! not a general web server.
+
+use std::io::{BufRead, Write};
+
+/// Caps keep a malformed or hostile client from ballooning memory: the
+/// request line + headers and the body are each bounded.
+const MAX_HEAD_BYTES: usize = 64 * 1024;
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Header names lowercased at parse time (HTTP headers are
+    /// case-insensitive); values are trimmed verbatim.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse one request from the stream. Errors are protocol violations
+/// the caller should answer with 400 and close on.
+pub fn read_request<R: BufRead>(r: &mut R) -> anyhow::Result<Request> {
+    let mut line = String::new();
+    let mut head_bytes = 0usize;
+    read_line_capped(r, &mut line, &mut head_bytes)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty request line"))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("request line missing path"))?
+        .to_string();
+    let version = parts.next().unwrap_or("");
+    anyhow::ensure!(
+        version.starts_with("HTTP/1."),
+        "unsupported protocol version '{version}'"
+    );
+    let mut headers = Vec::new();
+    loop {
+        line.clear();
+        read_line_capped(r, &mut line, &mut head_bytes)?;
+        if line.is_empty() {
+            break;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("malformed header line"))?;
+        headers.push((k.trim().to_ascii_lowercase(), v.trim().to_string()));
+    }
+    let req = Request { method, path, headers, body: Vec::new() };
+    let len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad content-length '{v}'"))?,
+    };
+    anyhow::ensure!(
+        len <= MAX_BODY_BYTES,
+        "request body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte limit"
+    );
+    let mut body = vec![0u8; len];
+    std::io::Read::read_exact(r, &mut body)?;
+    Ok(Request { body, ..req })
+}
+
+/// Read one CRLF (or bare-LF) terminated line, enforcing the head cap.
+fn read_line_capped<R: BufRead>(
+    r: &mut R,
+    line: &mut String,
+    total: &mut usize,
+) -> anyhow::Result<()> {
+    let n = r.read_line(line)?;
+    anyhow::ensure!(n > 0, "connection closed mid-request");
+    *total += n;
+    anyhow::ensure!(
+        *total <= MAX_HEAD_BYTES,
+        "request head exceeds the {MAX_HEAD_BYTES}-byte limit"
+    );
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(())
+}
+
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Fixed-length response; the body is written verbatim, so cached and
+/// freshly-computed payloads stay byte-identical on the wire.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        status_text(status),
+        content_type,
+        body.len()
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Chunked streaming writer for the batch endpoint: one chunk per
+/// finished cell, so clients see results as they land instead of after
+/// the whole grid.
+pub struct ChunkedWriter<'a, W: Write> {
+    w: &'a mut W,
+    started: bool,
+    content_type: &'static str,
+}
+
+impl<'a, W: Write> ChunkedWriter<'a, W> {
+    pub fn new(w: &'a mut W, content_type: &'static str) -> ChunkedWriter<'a, W> {
+        ChunkedWriter { w, started: false, content_type }
+    }
+
+    fn start(&mut self) -> std::io::Result<()> {
+        if !self.started {
+            write!(
+                self.w,
+                "HTTP/1.1 200 OK\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+                self.content_type
+            )?;
+            self.started = true;
+        }
+        Ok(())
+    }
+
+    pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            return Ok(()); // a zero-length chunk would terminate the stream
+        }
+        self.start()?;
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.start()?;
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/whatif HTTP/1.1\r\nHost: x\r\nContent-Length: 11\r\n\r\nhello world";
+        let req = read_request(&mut BufReader::new(&raw[..])).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/whatif");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.body, b"hello world");
+    }
+
+    #[test]
+    fn parses_get_without_body_and_case_insensitive_headers() {
+        let raw = b"GET /v1/health HTTP/1.1\r\ncOnTeNt-TyPe: application/json\r\n\r\n";
+        let req = read_request(&mut BufReader::new(&raw[..])).unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+        assert_eq!(req.header("content-type"), Some("application/json"));
+    }
+
+    #[test]
+    fn rejects_protocol_garbage() {
+        for raw in [
+            &b"\r\n\r\n"[..],
+            &b"GET\r\n\r\n"[..],
+            &b"GET / SPDY/9\r\n\r\n"[..],
+            &b"POST / HTTP/1.1\r\nContent-Length: nope\r\n\r\n"[..],
+            &b"POST / HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n"[..],
+        ] {
+            assert!(read_request(&mut BufReader::new(raw)).is_err(), "{raw:?}");
+        }
+    }
+
+    #[test]
+    fn truncated_body_is_an_error_not_a_hang() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 50\r\n\r\nshort";
+        assert!(read_request(&mut BufReader::new(&raw[..])).is_err());
+    }
+
+    #[test]
+    fn response_and_chunked_framing() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "application/json", b"{\"a\":1}\n").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 8\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{\"a\":1}\n"), "{text}");
+
+        let mut out = Vec::new();
+        let mut cw = ChunkedWriter::new(&mut out, "application/x-ndjson");
+        cw.chunk(b"line one\n").unwrap();
+        cw.chunk(b"line two\n").unwrap();
+        cw.finish().unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Transfer-Encoding: chunked"), "{text}");
+        assert!(text.contains("9\r\nline one\n\r\n"), "{text}");
+        assert!(text.ends_with("0\r\n\r\n"), "{text}");
+    }
+}

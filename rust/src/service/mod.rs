@@ -1,0 +1,341 @@
+//! The what-if simulation service (ROADMAP item 3): a long-running,
+//! dependency-free HTTP/1.1 server that answers the paper's core
+//! question — *how long does training job X take on fabric Y under load
+//! Z?* — as a query against shared caches instead of a cold process
+//! launch per config.
+//!
+//! ```text
+//! POST /v1/whatif       {"config": "<run-config TOML>"}
+//!                       → one canonical JSON result document
+//! POST /v1/batch        {"cells": ["<TOML>", ...]}
+//!                       → NDJSON, one chunk per cell, in cell order
+//! GET  /v1/health       liveness + version
+//! GET  /v1/cache/stats  hits / misses / coalesced / evictions / entries
+//! ```
+//!
+//! Layering:
+//!
+//! * [`http`] — minimal HTTP/1.1 codec over `std::net` (no tokio; the
+//!   container is offline and the `util/pool.rs` scoped-thread pool is
+//!   the only concurrency primitive the codebase uses).
+//! * [`whatif`] — the scenario parser/runner/serializer shared with the
+//!   `run --config` CLI; a `/v1/whatif` response is byte-for-bit the
+//!   `run --config <file> --json` output for the same config.
+//! * [`cache`] — the shared LRU result store with single-flight
+//!   coalescing, keyed by [`whatif::Scenario::signature`]. Identical
+//!   concurrent queries run one simulation; repeats are served from
+//!   memory; capacity is enforced by true LRU eviction (`GET
+//!   /v1/cache/stats` exposes the counters).
+//!
+//! Accept model: the listener is non-blocking and shared by N worker
+//! threads ([`crate::util::pool::run_workers`]); each worker accepts,
+//! then handles one `Connection: close` request synchronously — a
+//! simulation is CPU-bound for milliseconds-to-seconds, so thread-per-
+//! request with a small fixed pool is the right shape, not an event
+//! loop. Batch cells additionally fan out over the existing
+//! [`crate::experiments::sweeps::Runner`] machinery, every cell passing
+//! through the same shared cache (so two overlapping batches, or a
+//! batch racing single queries, coalesce per cell).
+
+pub mod cache;
+pub mod http;
+pub mod whatif;
+
+use crate::experiments::sweeps::Runner;
+use crate::util::json::{self, Json};
+use cache::ResultCache;
+use http::{read_request, write_response, ChunkedWriter, Request};
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+use whatif::Scenario;
+
+const JSON_CT: &str = "application/json";
+const NDJSON_CT: &str = "application/x-ndjson";
+/// Per-connection socket timeout: a stalled client must not pin a
+/// worker forever (simulations themselves run after the request is
+/// fully read, so this bounds only I/O).
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Everything a request handler needs, shared across workers.
+pub struct ServiceState {
+    pub cache: ResultCache,
+    /// Worker threads for `/v1/batch` cell fan-out.
+    pub jobs: usize,
+}
+
+impl ServiceState {
+    pub fn new(cache_entries: usize, jobs: usize) -> ServiceState {
+        ServiceState { cache: ResultCache::new(cache_entries), jobs: jobs.max(1) }
+    }
+}
+
+/// A background server instance (tests and embedders). Shuts down and
+/// joins its threads on `stop()` or drop.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+    pub state: Arc<ServiceState>,
+}
+
+impl ServerHandle {
+    /// Bind `127.0.0.1:port` (0 = OS-assigned) and serve on `threads`
+    /// background workers until dropped.
+    pub fn start(
+        port: u16,
+        threads: usize,
+        cache_entries: usize,
+    ) -> anyhow::Result<ServerHandle> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let state = Arc::new(ServiceState::new(cache_entries, threads));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (st, sd) = (Arc::clone(&state), Arc::clone(&shutdown));
+        let join = std::thread::spawn(move || accept_loops(&listener, threads, &st, &sd));
+        Ok(ServerHandle { addr, shutdown, join: Some(join), state })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(self) {
+        // Drop does the work; consuming self just makes intent explicit.
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The foreground entry point behind the `serve` CLI command: bind,
+/// announce the resolved address (port 0 reports the real port), serve
+/// until the process is killed.
+pub fn serve_blocking(port: u16, threads: usize, cache_entries: usize) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    println!(
+        "fabricbench what-if service listening on http://{addr} \
+         ({threads} threads, cache {cache_entries} entries)"
+    );
+    let state = Arc::new(ServiceState::new(cache_entries, threads));
+    let never = AtomicBool::new(false);
+    accept_loops(&listener, threads, &state, &never);
+    Ok(())
+}
+
+/// N workers share one non-blocking listener; each polls accept and
+/// handles one whole connection at a time.
+fn accept_loops(
+    listener: &TcpListener,
+    threads: usize,
+    state: &Arc<ServiceState>,
+    shutdown: &AtomicBool,
+) {
+    crate::util::pool::run_workers(threads, |_| {
+        while !shutdown.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    // Connection-level I/O errors (client hung up
+                    // mid-response) are that client's problem only.
+                    let _ = handle_conn(state, stream);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+    });
+}
+
+fn handle_conn(state: &ServiceState, stream: TcpStream) -> std::io::Result<()> {
+    // Accepted sockets may inherit the listener's non-blocking flag;
+    // request handling wants plain blocking reads with a deadline.
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(IO_TIMEOUT))?;
+    stream.set_write_timeout(Some(IO_TIMEOUT))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    match read_request(&mut reader) {
+        Ok(req) => route(state, &req, &mut writer),
+        Err(e) => error_response(&mut writer, 400, &format!("bad request: {e:#}")),
+    }
+}
+
+fn route<W: Write>(state: &ServiceState, req: &Request, w: &mut W) -> std::io::Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/v1/health") => write_response(w, 200, JSON_CT, health_body().as_bytes()),
+        ("GET", "/v1/cache/stats") => {
+            write_response(w, 200, JSON_CT, stats_body(&state.cache).as_bytes())
+        }
+        ("POST", "/v1/whatif") => whatif_route(state, req, w),
+        ("POST", "/v1/batch") => batch_route(state, req, w),
+        (_, "/v1/health" | "/v1/cache/stats" | "/v1/whatif" | "/v1/batch") => {
+            error_response(w, 405, &format!("method {} not allowed here", req.method))
+        }
+        _ => error_response(w, 404, &format!("no route for '{}'", req.path)),
+    }
+}
+
+fn health_body() -> String {
+    format!(
+        "{}\n",
+        json::obj(vec![
+            ("schema", json::s("fabricbench-health-v1")),
+            ("service", json::s("fabricbench-whatif")),
+            ("status", json::s("ok")),
+            ("version", json::s(env!("CARGO_PKG_VERSION"))),
+        ])
+    )
+}
+
+fn stats_body(cache: &ResultCache) -> String {
+    let s = cache.stats();
+    format!(
+        "{}\n",
+        json::obj(vec![
+            ("schema", json::s("fabricbench-cache-stats-v1")),
+            ("capacity", json::num(s.capacity as f64)),
+            ("entries", json::num(s.entries as f64)),
+            ("hits", json::num(s.hits as f64)),
+            ("misses", json::num(s.misses as f64)),
+            ("coalesced", json::num(s.coalesced as f64)),
+            ("evictions", json::num(s.evictions as f64)),
+        ])
+    )
+}
+
+fn error_response<W: Write>(w: &mut W, status: u16, msg: &str) -> std::io::Result<()> {
+    let body = format!("{}\n", json::obj(vec![("error", json::s(msg))]));
+    write_response(w, status, JSON_CT, body.as_bytes())
+}
+
+/// Parse one `{"config": "<toml>"}` request into a scenario + cache key.
+fn parse_cell(cfg: &str) -> anyhow::Result<(Scenario, u64)> {
+    let scenario = Scenario::from_toml_text(cfg)?;
+    let sig = scenario.signature()?;
+    Ok((scenario, sig))
+}
+
+fn whatif_route<W: Write>(state: &ServiceState, req: &Request, w: &mut W) -> std::io::Result<()> {
+    let parsed = match std::str::from_utf8(&req.body)
+        .map_err(anyhow::Error::from)
+        .and_then(|text| Json::parse(text).map_err(anyhow::Error::from))
+    {
+        Ok(j) => j,
+        Err(e) => return error_response(w, 400, &format!("request body is not JSON: {e:#}")),
+    };
+    let Some(cfg) = parsed.get("config").and_then(|x| x.as_str()) else {
+        return error_response(w, 400, "body must be {\"config\": \"<run-config TOML>\"}");
+    };
+    let (scenario, sig) = match parse_cell(cfg) {
+        Ok(x) => x,
+        Err(e) => return error_response(w, 400, &format!("bad config: {e:#}")),
+    };
+    match state.cache.get_or_compute(sig, || scenario.response_body()) {
+        Ok(payload) => write_response(w, 200, JSON_CT, payload.as_bytes()),
+        Err(e) => error_response(w, 500, &format!("simulation failed: {e:#}")),
+    }
+}
+
+/// `/v1/batch`: validate every cell up front (bad configs 400 before
+/// any output), fan the grid out over the sweeps `Runner` with each
+/// cell passing through the shared cache, then emit one NDJSON chunk
+/// per cell in cell order. A cell whose *simulation* fails becomes an
+/// `{"cell": i, "error": ...}` line rather than aborting its siblings.
+fn batch_route<W: Write>(state: &ServiceState, req: &Request, w: &mut W) -> std::io::Result<()> {
+    let parsed = match std::str::from_utf8(&req.body)
+        .map_err(anyhow::Error::from)
+        .and_then(|text| Json::parse(text).map_err(anyhow::Error::from))
+    {
+        Ok(j) => j,
+        Err(e) => return error_response(w, 400, &format!("request body is not JSON: {e:#}")),
+    };
+    let Some(cells) = parsed.get("cells").and_then(|x| x.as_arr()) else {
+        return error_response(w, 400, "body must be {\"cells\": [\"<TOML>\", ...]}");
+    };
+    let mut specs: Vec<(Scenario, u64)> = Vec::with_capacity(cells.len());
+    for (i, cell) in cells.iter().enumerate() {
+        let Some(cfg) = cell.as_str() else {
+            return error_response(w, 400, &format!("cell {i} must be a TOML config string"));
+        };
+        match parse_cell(cfg) {
+            Ok(x) => specs.push(x),
+            Err(e) => return error_response(w, 400, &format!("cell {i}: {e:#}")),
+        }
+    }
+    let runner = Runner::new(state.jobs);
+    let results: Vec<Result<Arc<String>, String>> = runner.map(&specs, |_, (scenario, sig)| {
+        state
+            .cache
+            .get_or_compute(*sig, || scenario.response_body())
+            .map_err(|e| format!("{e:#}"))
+    });
+    let mut cw = ChunkedWriter::new(w, NDJSON_CT);
+    for (i, r) in results.iter().enumerate() {
+        match r {
+            Ok(payload) => cw.chunk(payload.as_bytes())?,
+            Err(msg) => {
+                let line = format!(
+                    "{}\n",
+                    json::obj(vec![("cell", json::num(i as f64)), ("error", json::s(msg))])
+                );
+                cw.chunk(line.as_bytes())?;
+            }
+        }
+    }
+    cw.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn health_and_stats_bodies_are_valid_json_lines() {
+        let h = health_body();
+        assert!(h.ends_with('\n'));
+        let j = Json::parse(h.trim_end()).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+
+        let cache = ResultCache::new(8);
+        cache.get_or_compute(1, || Ok("x".into())).unwrap();
+        cache.get_or_compute(1, || Ok("x".into())).unwrap();
+        let s = stats_body(&cache);
+        let j = Json::parse(s.trim_end()).unwrap();
+        assert_eq!(j.get("hits").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("misses").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("capacity").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn routes_reject_wrong_method_and_unknown_path() {
+        let state = ServiceState::new(4, 1);
+        let req = |method: &str, path: &str| Request {
+            method: method.into(),
+            path: path.into(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        };
+        let mut out = Vec::new();
+        route(&state, &req("POST", "/v1/health"), &mut out).unwrap();
+        assert!(String::from_utf8(out).unwrap().starts_with("HTTP/1.1 405"));
+        let mut out = Vec::new();
+        route(&state, &req("GET", "/nope"), &mut out).unwrap();
+        assert!(String::from_utf8(out).unwrap().starts_with("HTTP/1.1 404"));
+        let mut out = Vec::new();
+        route(&state, &req("POST", "/v1/whatif"), &mut out).unwrap();
+        assert!(String::from_utf8(out).unwrap().starts_with("HTTP/1.1 400"));
+    }
+}

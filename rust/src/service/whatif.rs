@@ -1,0 +1,371 @@
+//! One what-if query: a full single-job scenario (cluster + fabric +
+//! transport + tenancy + workload + faults + model + run window) parsed
+//! from the same TOML the `run --config` CLI takes, plus its canonical
+//! JSON answer and its cache signature.
+//!
+//! This is the `cmd_run_config` single-job path hoisted out of `main.rs`
+//! so the CLI and the HTTP service share **one** parser, one simulator
+//! entry point and one serializer — which is what makes the service's
+//! headline guarantee cheap to keep: a `/v1/whatif` response is
+//! byte-for-bit the `run --config ... --json` output for the same
+//! config, cold cache or warm (the CI smoke job diffs them).
+//!
+//! The cache signature composes the signatures the simulator already
+//! maintains for its own exact-keyed memo tiers —
+//! [`crate::trainer::scheduler::world_sig`] (topology + fabric +
+//! placement), [`crate::fabric::FaultSpec::signature`],
+//! [`crate::config::TenancySpec::signature`] — and folds in every
+//! remaining knob a response byte can depend on (transport, workload,
+//! model, batch, run window). Two configs that hash alike but differ in
+//! any of those fields would be a correctness bug, so each field is
+//! FNV-folded individually (no XOR-combining, same rule as the tenancy
+//! signature).
+
+use crate::cluster::Placement;
+use crate::config::spec::{
+    ClusterSpec, FabricSpec, ParallelismKind, RunSpec, TenancySpec, TransportOptions,
+    WorkloadSpec,
+};
+use crate::fabric::{FaultSpec, NetSim};
+use crate::models::Arch;
+use crate::trainer::coordinator::{ThroughputResult, DEFAULT_COORDINATION_OVERHEAD};
+use crate::trainer::TrainerSim;
+use crate::util::hash::{fnv1a_bytes, fnv1a_u64, FNV_OFFSET};
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, Result};
+
+/// Response schema tag; bump on any change to the emitted shape.
+pub const SCHEMA: &str = "fabricbench-whatif-v1";
+
+/// A fully-resolved single-job what-if scenario.
+pub struct Scenario {
+    pub cluster: ClusterSpec,
+    pub fabric: FabricSpec,
+    pub opts: TransportOptions,
+    pub tenancy: TenancySpec,
+    pub workload: WorkloadSpec,
+    pub faults: FaultSpec,
+    pub arch: Arch,
+    pub gpus: usize,
+    pub per_gpu_batch: usize,
+    pub fusion_mib: f64,
+    pub overlap: bool,
+    pub run: RunSpec,
+}
+
+impl Scenario {
+    /// Parse the service-facing TOML text. Rejects `[fleet]` configs:
+    /// the what-if endpoints price exactly one job (the fleet scheduler
+    /// emits a multi-job report with a different shape — use the CLI).
+    pub fn from_toml_text(text: &str) -> Result<Scenario> {
+        let doc = crate::config::toml::parse(text)?;
+        if doc.get("fleet").is_some() {
+            anyhow::bail!(
+                "config has a [fleet] table; /v1/whatif prices single jobs — \
+                 run fleet scenarios through the `run --config` CLI"
+            );
+        }
+        Scenario::from_doc(&doc)
+    }
+
+    /// Build from a parsed TOML document, applying the same defaults and
+    /// validation as the `run --config` CLI. A `[fleet]` table (if any)
+    /// is ignored here — the CLI branches on it separately.
+    pub fn from_doc(doc: &Json) -> Result<Scenario> {
+        let cluster = match doc.get("cluster") {
+            Some(v) => ClusterSpec::from_toml(v)?,
+            None => ClusterSpec::txgaia(),
+        };
+        let opts = match doc.get("transport") {
+            Some(v) => TransportOptions::from_toml(v)?,
+            None => TransportOptions::default(),
+        };
+        let mut fabric = FabricSpec::from_toml(
+            doc.get("fabric").ok_or_else(|| anyhow!("config missing [fabric]"))?,
+        )?;
+        // Optional [topology] table: explicit fat-tree / dragonfly tiers
+        // above the NICs. Absent, the fabric keeps its preset (the
+        // legacy scalar rack-uplink model, bit-for-bit).
+        if let Some(v) = doc.get("topology") {
+            fabric.topology = crate::config::TopologySpec::from_toml(v)?;
+        }
+        fabric.topology.validate_for(&cluster)?;
+        // Optional [tenancy] table: shared-tenancy background traffic +
+        // stragglers. Absent, the system is dedicated — bit-for-bit the
+        // pre-tenancy model.
+        let tenancy = match doc.get("tenancy") {
+            Some(v) => TenancySpec::from_toml(v)?,
+            None => TenancySpec::default(),
+        };
+        if tenancy.background_active() {
+            // Surface node-set misconfiguration before the run starts.
+            tenancy.resolve_sets(&cluster)?;
+        }
+        // Optional [workload] table: which parallelism strategy the step
+        // lowers to. Absent, the classic bucketed-DP path, bit-for-bit.
+        let workload = match doc.get("workload") {
+            Some(v) => WorkloadSpec::from_toml(v)?,
+            None => WorkloadSpec::default(),
+        };
+        // Optional [faults] table: deterministic fabric fault trace.
+        // Absent, the fabric is healthy — bit-for-bit the pre-fault
+        // engine.
+        let faults = match doc.get("faults") {
+            Some(v) => FaultSpec::from_toml(v)?,
+            None => FaultSpec::default(),
+        };
+        faults.validate()?;
+        let train = doc.get("train").ok_or_else(|| anyhow!("config missing [train]"))?;
+        let model = train.get("model").and_then(|x| x.as_str()).unwrap_or("resnet50");
+        let arch = crate::models::zoo::by_name(model)
+            .ok_or_else(|| anyhow!("unknown model '{model}'"))?;
+        let gpus = match train.get("gpus") {
+            None => 8,
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| anyhow!("[train] gpus must be a non-negative integer"))?,
+        };
+        let per_gpu_batch = match train.get("per_gpu_batch") {
+            None => 64,
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| anyhow!("[train] per_gpu_batch must be a non-negative integer"))?,
+        };
+        let fusion_mib = train.get("fusion_mib").and_then(|x| x.as_f64()).unwrap_or(64.0);
+        let overlap = !matches!(train.get("overlap"), Some(Json::Bool(false)));
+        let mut run = RunSpec::default();
+        if let Some(r) = doc.get("run") {
+            if let Some(seed) = r.get("seed").and_then(|x| x.as_usize()) {
+                run.seed = seed as u64;
+            }
+            if let Some(w) = r.get("warmup_steps").and_then(|x| x.as_usize()) {
+                run.warmup_steps = w;
+            }
+            if let Some(m) = r.get("measure_steps").and_then(|x| x.as_usize()) {
+                run.measure_steps = m;
+            }
+        }
+        Ok(Scenario {
+            cluster,
+            fabric,
+            opts,
+            tenancy,
+            workload,
+            faults,
+            arch,
+            gpus,
+            per_gpu_batch,
+            fusion_mib,
+            overlap,
+            run,
+        })
+    }
+
+    /// Assemble the trainer exactly as the CLI does.
+    pub fn trainer(&self) -> TrainerSim {
+        TrainerSim {
+            arch: self.arch.clone(),
+            fabric: self.fabric.clone(),
+            cluster: self.cluster.clone(),
+            opts: self.opts,
+            strategy: Box::new(crate::collectives::RingAllreduce),
+            per_gpu_batch: self.per_gpu_batch,
+            precision: crate::models::perf::Precision::Fp32,
+            fusion_bytes: self.fusion_mib * crate::util::units::MIB,
+            overlap: self.overlap,
+            step_overhead: 0.0,
+            coordination_overhead: DEFAULT_COORDINATION_OVERHEAD,
+            tenancy: self.tenancy.clone(),
+            workload: self.workload.clone(),
+            faults: self.faults.clone(),
+        }
+    }
+
+    pub fn run_sim(&self) -> Result<ThroughputResult> {
+        self.trainer().run(self.gpus, &self.run)
+    }
+
+    /// The cross-request cache key (see module docs). Built on the same
+    /// world signature the schedule cache keys by, then extended with
+    /// every remaining response-affecting field. Performance toggles
+    /// that are bit-exact by contract (`schedule_cache`,
+    /// `flow_aggregation`, `solver_threads`) are folded anyway: aliasing
+    /// them would be *correct* but folding is safer-by-default and only
+    /// costs a cold cell per A/B arm.
+    pub fn signature(&self) -> Result<u64> {
+        let net = NetSim::try_new(self.fabric.clone(), self.cluster.clone(), self.opts)?;
+        let placement = Placement::gpus(&self.cluster, self.gpus)?;
+        let mut h = crate::trainer::scheduler::world_sig(&net, &placement);
+        h = fnv1a_u64(h, self.faults.signature());
+        h = fnv1a_u64(h, self.tenancy.signature());
+        // Transport: world_sig already folds flow_aggregation; fold the
+        // rest field by field.
+        h = fnv1a_u64(h, self.opts.gpudirect as u64);
+        h = fnv1a_u64(h, self.opts.use_rdma as u64);
+        h = fnv1a_u64(h, self.opts.num_streams as u64);
+        h = fnv1a_u64(h, opt_bits(self.opts.rendezvous_threshold));
+        h = fnv1a_u64(h, opt_bits(self.opts.chunk_bytes));
+        h = fnv1a_u64(h, self.opts.schedule_cache as u64);
+        h = fnv1a_u64(h, self.opts.solver_threads as u64);
+        h = fnv1a_u64(h, self.opts.retry_timeout.to_bits());
+        h = fnv1a_u64(h, self.opts.retry_backoff.to_bits());
+        h = fnv1a_u64(h, self.opts.max_retries as u64);
+        // Workload IR shape.
+        h = fnv1a_bytes(h, self.workload.parallelism.name().as_bytes());
+        h = fnv1a_u64(h, self.workload.pipeline_stages as u64);
+        h = fnv1a_u64(h, self.workload.microbatches as u64);
+        h = fnv1a_u64(h, self.workload.activation_mib.to_bits());
+        h = fnv1a_u64(h, self.workload.moe_layers as u64);
+        h = fnv1a_u64(h, self.workload.moe_expert_mib.to_bits());
+        // Model + trainer knobs.
+        h = fnv1a_bytes(h, self.arch.name.as_bytes());
+        h = fnv1a_u64(h, self.gpus as u64);
+        h = fnv1a_u64(h, self.per_gpu_batch as u64);
+        h = fnv1a_u64(h, self.fusion_mib.to_bits());
+        h = fnv1a_u64(h, self.overlap as u64);
+        // Run window.
+        h = fnv1a_u64(h, self.run.seed);
+        h = fnv1a_u64(h, self.run.warmup_steps as u64);
+        h = fnv1a_u64(h, self.run.measure_steps as u64);
+        h = fnv1a_u64(h, self.run.jitter_sigma.to_bits());
+        Ok(h)
+    }
+
+    /// The canonical response document. `Json::Obj` is a `BTreeMap`, so
+    /// key order — and therefore the emitted bytes — are deterministic.
+    pub fn response_json(&self) -> Result<Json> {
+        let r = self.run_sim()?;
+        Ok(json::obj(vec![
+            ("schema", json::s(SCHEMA)),
+            (
+                "config",
+                json::obj(vec![
+                    ("model", json::s(&self.arch.name)),
+                    ("fabric", json::s(&self.fabric.name)),
+                    ("gpus", json::num(self.gpus as f64)),
+                    ("per_gpu_batch", json::num(self.per_gpu_batch as f64)),
+                    ("streams", json::num(self.opts.num_streams as f64)),
+                    ("parallelism", json::s(self.workload.parallelism.name())),
+                    ("background_load", json::num(self.tenancy.background_load)),
+                    ("seed", json::num(self.run.seed as f64)),
+                    ("warmup_steps", json::num(self.run.warmup_steps as f64)),
+                    ("measure_steps", json::num(self.run.measure_steps as f64)),
+                ]),
+            ),
+            (
+                "result",
+                json::obj(vec![
+                    ("images_per_sec", json::num(r.images_per_sec)),
+                    ("linear_images_per_sec", json::num(r.linear_images_per_sec)),
+                    ("step_time_mean_s", json::num(r.step_time_mean)),
+                    ("step_time_p95_s", json::num(r.step_time_p95)),
+                    ("scaling_efficiency", json::num(r.scaling_efficiency())),
+                    ("exposed_comm_fraction", json::num(r.comm_fraction)),
+                    ("fault_exposure", json::num(r.fault_exposure)),
+                ]),
+            ),
+        ]))
+    }
+
+    /// The exact wire/file payload: canonical JSON plus one trailing
+    /// newline (NDJSON-ready, byte-diffable against `run --json`).
+    pub fn response_body(&self) -> Result<String> {
+        Ok(format!("{}\n", self.response_json()?))
+    }
+}
+
+/// `None` and `Some(x)` must never alias, nor `Some(0.0)` and `None`:
+/// fold a presence tag with the payload bits.
+fn opt_bits(x: Option<f64>) -> u64 {
+    match x {
+        None => FNV_OFFSET,
+        Some(v) => fnv1a_u64(1, v.to_bits()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CFG: &str = r#"
+[fabric]
+kind = "25gbe-roce"
+
+[train]
+model = "resnet50"
+gpus = 8
+per_gpu_batch = 32
+
+[run]
+seed = 7
+warmup_steps = 1
+measure_steps = 3
+"#;
+
+    #[test]
+    fn parses_minimal_config_with_cli_defaults() {
+        let s = Scenario::from_toml_text(CFG).unwrap();
+        assert_eq!(s.arch.name, "resnet50");
+        assert_eq!(s.gpus, 8);
+        assert_eq!(s.per_gpu_batch, 32);
+        assert_eq!(s.fusion_mib, 64.0);
+        assert!(s.overlap);
+        assert_eq!(s.run.seed, 7);
+        assert_eq!(s.run.warmup_steps, 1);
+        assert_eq!(s.run.measure_steps, 3);
+    }
+
+    #[test]
+    fn response_is_deterministic_and_parses() {
+        let s = Scenario::from_toml_text(CFG).unwrap();
+        let a = s.response_body().unwrap();
+        let b = s.response_body().unwrap();
+        assert_eq!(a, b, "same scenario must serialize to identical bytes");
+        assert!(a.ends_with('\n'));
+        let j = Json::parse(a.trim_end()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert!(j.get("result").unwrap().get("images_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.get("config").unwrap().get("gpus").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn signature_separates_every_knob_it_folds() {
+        let base = Scenario::from_toml_text(CFG).unwrap();
+        let sig = base.signature().unwrap();
+        // Same text, same signature.
+        assert_eq!(sig, Scenario::from_toml_text(CFG).unwrap().signature().unwrap());
+        let mut gpus = Scenario::from_toml_text(CFG).unwrap();
+        gpus.gpus = 16;
+        assert_ne!(sig, gpus.signature().unwrap());
+        let mut seed = Scenario::from_toml_text(CFG).unwrap();
+        seed.run.seed = 8;
+        assert_ne!(sig, seed.signature().unwrap());
+        let mut batch = Scenario::from_toml_text(CFG).unwrap();
+        batch.per_gpu_batch = 64;
+        assert_ne!(sig, batch.signature().unwrap());
+        let mut streams = Scenario::from_toml_text(CFG).unwrap();
+        streams.opts.num_streams = 4;
+        assert_ne!(sig, streams.signature().unwrap());
+        let mut par = Scenario::from_toml_text(CFG).unwrap();
+        par.workload.parallelism = ParallelismKind::Zero;
+        assert_ne!(sig, par.signature().unwrap());
+        let mut chunk = Scenario::from_toml_text(CFG).unwrap();
+        chunk.opts.chunk_bytes = Some(0.0);
+        assert_ne!(sig, chunk.signature().unwrap(), "None vs Some(0.0) must not alias");
+    }
+
+    #[test]
+    fn fleet_configs_are_rejected_loudly() {
+        let cfg = format!("{CFG}\n[fleet]\njobs = 4\n");
+        let err = Scenario::from_toml_text(&cfg).unwrap_err().to_string();
+        assert!(err.contains("fleet"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn missing_fabric_is_loud() {
+        let err = Scenario::from_toml_text("[train]\nmodel = \"resnet50\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("[fabric]"), "unexpected error: {err}");
+    }
+}

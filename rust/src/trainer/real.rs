@@ -45,6 +45,21 @@ pub struct TrainReport {
     pub final_accuracy: f64,
 }
 
+impl TrainReport {
+    /// Last recorded step loss — a loud error (never a panic) on an
+    /// empty loss curve, which `train` forbids but hand-built or
+    /// deserialized reports may carry.
+    pub fn final_loss(&self) -> Result<f64> {
+        self.losses.last().copied().ok_or_else(|| {
+            anyhow::anyhow!(
+                "training report has no losses ({} steps recorded); \
+                 nothing to report as a final loss",
+                self.steps
+            )
+        })
+    }
+}
+
 impl RealTrainer {
     pub fn new(engine: Engine) -> Result<RealTrainer> {
         let train_step = engine.compile("train_step")?;
@@ -148,6 +163,10 @@ impl RealTrainer {
         log_every: Option<usize>,
     ) -> Result<TrainReport> {
         anyhow::ensure!(workers >= 1, "need at least one worker");
+        anyhow::ensure!(
+            steps >= 1,
+            "need at least one training step (a zero-step run has no loss curve)"
+        );
         let cluster = ClusterSpec::txgaia();
         let placement = Placement::gpus(&cluster, workers)?;
         let mut net = NetSim::try_new(fabric.clone(), cluster, TransportOptions::default())?;
@@ -252,6 +271,35 @@ mod tests {
         let last = *report.losses.last().unwrap();
         assert!(last < first, "loss did not decrease: {first} -> {last}");
         assert!(report.virtual_comm_time > 0.0);
+    }
+
+    #[test]
+    fn final_loss_is_loud_on_empty_curve() {
+        // No engine needed: this is pure report plumbing. A zero-step
+        // report used to panic the CLI summary via losses.last().unwrap().
+        let empty = TrainReport {
+            workers: 2,
+            steps: 0,
+            losses: vec![],
+            images_per_sec_wall: 0.0,
+            virtual_comm_time: 0.0,
+            final_accuracy: 0.0,
+        };
+        let err = empty.final_loss().unwrap_err().to_string();
+        assert!(err.contains("no losses"), "unhelpful error: {err}");
+        let ok = TrainReport { losses: vec![2.0, 1.5], steps: 2, ..empty };
+        assert_eq!(ok.final_loss().unwrap(), 1.5);
+    }
+
+    #[test]
+    fn zero_step_training_is_rejected() {
+        let Some(engine) = engine() else { return };
+        let mut t = RealTrainer::new(engine).unwrap();
+        let err = t
+            .train(2, 0, 0.1, &fabric(FabricKind::EthernetRoce25), None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("at least one training step"), "{err}");
     }
 
     #[test]

@@ -81,6 +81,7 @@ use crate::workload::{CollKind, IrOp, WorkloadGraph};
 use std::collections::VecDeque;
 use std::sync::Arc;
 
+use crate::service::cache::LruCache;
 use crate::util::hash::{fnv1a_bytes, fnv1a_str, fnv1a_u64 as fnv_step};
 
 fn fnv_str(h: u64, s: &str) -> u64 {
@@ -162,13 +163,16 @@ pub(crate) struct TimingVal {
     pub peak_after: u64,
 }
 
-struct TimingSlot {
+/// Timing-tier key: cheap discriminants first so the derived `PartialEq`
+/// short-circuits before touching the bit vectors (same fast-miss
+/// behavior the old hand-rolled scan had).
+#[derive(PartialEq, Eq)]
+struct TimingKey {
     config: u64,
     peak_before: u64,
     sig_hash: u64,
     start_bits: Vec<u64>,
     busy_bits: Vec<u64>,
-    val: TimingVal,
 }
 
 fn sig_hash(start: &[f64], busy: &[f64]) -> u64 {
@@ -184,24 +188,38 @@ fn sig_hash(start: &[f64], busy: &[f64]) -> u64 {
 }
 
 /// Per-[`NetSim`] schedule/timing memoization (see the module docs).
-/// Bounded: each tier clears itself past a fixed entry count, so a
-/// never-hitting workload (per-step jitter) costs only the capture
-/// overhead, not unbounded memory.
-#[derive(Default)]
+/// Bounded by **true LRU eviction** through the shared
+/// [`crate::service::cache::LruCache`]: at capacity only the
+/// least-recently-used entry is displaced, so a steady working set
+/// survives indefinitely (the old behavior cleared the whole tier at
+/// capacity, throwing away the hot entries along with the cold whenever
+/// a sweep crossed `MAX_PATTERNS`/`MAX_TIMINGS`). A never-hitting
+/// workload (per-step jitter) still costs only capture overhead, not
+/// unbounded memory.
 pub struct ScheduleCache {
     /// `Arc` so a pattern hit is O(1) — replaying a 512-rank schedule
     /// must not memcpy thousands of ops per step.
-    patterns: Vec<(PatternKey, Arc<Vec<CommOp>>)>,
-    timings: Vec<TimingSlot>,
+    patterns: LruCache<PatternKey, Arc<Vec<CommOp>>>,
+    timings: LruCache<TimingKey, TimingVal>,
     pub stats: CacheStats,
 }
 
 const MAX_PATTERNS: usize = 64;
 const MAX_TIMINGS: usize = 128;
 
+impl Default for ScheduleCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl ScheduleCache {
     pub fn new() -> Self {
-        Self::default()
+        ScheduleCache {
+            patterns: LruCache::new(MAX_PATTERNS),
+            timings: LruCache::new(MAX_TIMINGS),
+            stats: CacheStats::default(),
+        }
     }
 
     pub fn clear(&mut self) {
@@ -209,11 +227,19 @@ impl ScheduleCache {
         self.timings.clear();
     }
 
+    /// LRU evictions per tier, `(patterns, timings)` — surfaced so
+    /// capacity pressure is observable (the engine bench and the
+    /// service stats both care).
+    pub fn evictions(&self) -> (u64, u64) {
+        (self.patterns.evictions, self.timings.evictions)
+    }
+
     fn lookup_pattern(&mut self, key: &PatternKey) -> Option<Arc<Vec<CommOp>>> {
-        match self.patterns.iter().position(|(k, _)| k == key) {
-            Some(i) => {
+        match self.patterns.get(key) {
+            Some(ops) => {
+                let ops = Arc::clone(ops);
                 self.stats.pattern_hits += 1;
-                Some(Arc::clone(&self.patterns[i].1))
+                Some(ops)
             }
             None => {
                 self.stats.pattern_misses += 1;
@@ -223,15 +249,14 @@ impl ScheduleCache {
     }
 
     fn insert_pattern(&mut self, key: PatternKey, ops: Arc<Vec<CommOp>>) {
-        if self.patterns.len() >= MAX_PATTERNS {
-            self.patterns.clear();
-        }
-        self.patterns.push((key, ops));
+        self.patterns.insert(key, ops);
     }
 
     /// Exact-key lookup: the start clocks and the full occupancy table
     /// are compared bit-for-bit (the hash only short-circuits misses), so
-    /// a hit replays precisely what direct execution would produce.
+    /// a hit replays precisely what direct execution would produce. The
+    /// predicate compares against the borrowed slices directly — no key
+    /// allocation on the (hot) lookup path.
     pub(crate) fn lookup_timing(
         &mut self,
         config: u64,
@@ -240,22 +265,25 @@ impl ScheduleCache {
         peak_before: u64,
     ) -> Option<&TimingVal> {
         let h = sig_hash(start, busy);
-        let pos = self.timings.iter().position(|s| {
-            s.config == config
-                && s.sig_hash == h
-                && s.peak_before == peak_before
-                && s.start_bits.len() == start.len()
-                && s.busy_bits.len() == busy.len()
-                && s.start_bits.iter().zip(start).all(|(a, b)| *a == b.to_bits())
-                && s.busy_bits.iter().zip(busy).all(|(a, b)| *a == b.to_bits())
+        // Split borrows: the returned value borrows `timings` while the
+        // counters live in `stats`.
+        let ScheduleCache { timings, stats, .. } = self;
+        let hit = timings.get_with(|k| {
+            k.config == config
+                && k.sig_hash == h
+                && k.peak_before == peak_before
+                && k.start_bits.len() == start.len()
+                && k.busy_bits.len() == busy.len()
+                && k.start_bits.iter().zip(start).all(|(a, b)| *a == b.to_bits())
+                && k.busy_bits.iter().zip(busy).all(|(a, b)| *a == b.to_bits())
         });
-        match pos {
-            Some(i) => {
-                self.stats.timing_hits += 1;
-                Some(&self.timings[i].val)
+        match hit {
+            Some(val) => {
+                stats.timing_hits += 1;
+                Some(val)
             }
             None => {
-                self.stats.timing_misses += 1;
+                stats.timing_misses += 1;
                 None
             }
         }
@@ -270,16 +298,15 @@ impl ScheduleCache {
         stats_after: &NetStats,
         t_out: &[f64],
     ) {
-        if self.timings.len() >= MAX_TIMINGS {
-            self.timings.clear();
-        }
-        self.timings.push(TimingSlot {
-            config,
-            peak_before: before.stats.peak_concurrent_flows,
-            sig_hash: sig_hash(start, &before.busy),
-            start_bits: start.iter().map(|x| x.to_bits()).collect(),
-            busy_bits: before.busy.iter().map(|x| x.to_bits()).collect(),
-            val: TimingVal {
+        self.timings.insert(
+            TimingKey {
+                config,
+                peak_before: before.stats.peak_concurrent_flows,
+                sig_hash: sig_hash(start, &before.busy),
+                start_bits: start.iter().map(|x| x.to_bits()).collect(),
+                busy_bits: before.busy.iter().map(|x| x.to_bits()).collect(),
+            },
+            TimingVal {
                 t_out: t_out.to_vec(),
                 busy_after: busy_after.to_vec(),
                 d_messages: stats_after.messages - before.stats.messages,
@@ -294,7 +321,7 @@ impl ScheduleCache {
                 d_agg_collapsed: stats_after.agg_collapsed - before.stats.agg_collapsed,
                 peak_after: stats_after.peak_concurrent_flows,
             },
-        });
+        );
     }
 }
 
@@ -1142,6 +1169,27 @@ mod tests {
         net.reset();
         run_step(&mut net, &placement, &RingAllreduce, &b1, &cfg(1));
         assert_eq!(net.schedule_cache.stats.timing_hits, 1, "exact repeat hits");
+    }
+
+    #[test]
+    fn schedule_cache_evicts_lru_not_wholesale() {
+        // Pre-LRU behavior cleared the whole tier at capacity; now only
+        // the least-recently-used entry is displaced and the hot working
+        // set survives.
+        let mut cache = ScheduleCache::new();
+        let key = |i: usize| PatternKey { strategy: i as u64, elems: 1, world: 0 };
+        let ops = Arc::new(Vec::<CommOp>::new());
+        for i in 0..MAX_PATTERNS {
+            cache.insert_pattern(key(i), Arc::clone(&ops));
+        }
+        // Touch key 0 so key 1 becomes the LRU victim.
+        assert!(cache.lookup_pattern(&key(0)).is_some());
+        cache.insert_pattern(key(MAX_PATTERNS), Arc::clone(&ops));
+        assert!(cache.lookup_pattern(&key(0)).is_some(), "recently-used entry survived");
+        assert!(cache.lookup_pattern(&key(1)).is_none(), "only the LRU entry evicted");
+        assert!(cache.lookup_pattern(&key(2)).is_some(), "rest of the working set intact");
+        assert!(cache.lookup_pattern(&key(MAX_PATTERNS)).is_some());
+        assert_eq!(cache.evictions().0, 1);
     }
 
     #[test]

@@ -52,7 +52,15 @@ impl Json {
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        // Only exact non-negative integers below 2^53 map onto usize;
+        // negative, fractional, NaN, and infinite values are None rather
+        // than whatever an `as`-cast would truncate/saturate them to.
+        match self.as_f64() {
+            Some(x) if x >= 0.0 && x.fract() == 0.0 && x < 9_007_199_254_740_992.0 => {
+                Some(x as usize)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -203,13 +211,31 @@ impl<'a> Parser<'a> {
                     Some(b't') => s.push('\t'),
                     Some(b'u') => {
                         let cp = self.hex4()?;
-                        // Surrogate pairs.
+                        // Surrogate pairs: a high surrogate must be
+                        // immediately followed by a low-surrogate escape,
+                        // validated *before* the combining arithmetic (the
+                        // old unchecked `lo - 0xDC00` underflowed on bad
+                        // input). Lone surrogates are loud errors.
                         let ch = if (0xD800..0xDC00).contains(&cp) {
-                            self.expect(b'\\')?;
-                            self.expect(b'u')?;
+                            if (self.bump(), self.bump()) != (Some(b'\\'), Some(b'u')) {
+                                return Err(self.err(
+                                    "lone high surrogate \\u escape (expected \
+                                     a \\uDC00-\\uDFFF low surrogate to follow)",
+                                ));
+                            }
                             let lo = self.hex4()?;
-                            let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
-                            char::from_u32(c)
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                return Err(self.err(
+                                    "invalid surrogate pair: second \\u escape \
+                                     is not a low surrogate (\\uDC00-\\uDFFF)",
+                                ));
+                            }
+                            char::from_u32(0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00))
+                        } else if (0xDC00..0xE000).contains(&cp) {
+                            return Err(self.err(
+                                "lone low surrogate \\u escape (no preceding \
+                                 high surrogate)",
+                            ));
                         } else {
                             char::from_u32(cp)
                         };
@@ -406,6 +432,96 @@ mod tests {
         let j = Json::parse(src).unwrap();
         let emitted = j.to_string();
         assert_eq!(Json::parse(&emitted).unwrap(), j);
+    }
+
+    #[test]
+    fn surrogate_pair_escapes_decode_to_one_char() {
+        let j = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "😀");
+        assert_eq!(j.as_str().unwrap().chars().count(), 1);
+        // Uppercase hex, mid-string.
+        let j = Json::parse(r#""a\uD83D\uDE00b""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "a😀b");
+    }
+
+    #[test]
+    fn lone_and_invalid_surrogates_are_loud_errors() {
+        for src in [
+            r#""\ud83d""#,       // lone high at end of string
+            r#""\ud83d rest""#,  // high followed by plain text
+            r#""\ud83d\n""#,     // high followed by a non-\u escape
+            r#""\ud83d\u0041""#, // high followed by a non-low \u escape
+            r#""\ud83d\ud83d""#, // high followed by another high
+            r#""\ude00""#,       // lone low
+        ] {
+            let e = Json::parse(src).unwrap_err();
+            assert!(e.msg.contains("surrogate"), "{src}: {}", e.msg);
+        }
+    }
+
+    #[test]
+    fn utf16_escape_encodings_roundtrip() {
+        // Any char written as \uXXXX escapes (a pair for astral planes)
+        // must decode back to itself.
+        for c in ['A', 'é', '日', '\u{FFFD}', '😀', '\u{10FFFF}'] {
+            let mut buf = [0u16; 2];
+            let mut src = String::from('"');
+            for u in c.encode_utf16(&mut buf).iter() {
+                src.push_str(&format!("\\u{u:04x}"));
+            }
+            src.push('"');
+            let j = Json::parse(&src).unwrap();
+            assert_eq!(j.as_str().unwrap().chars().collect::<Vec<_>>(), vec![c], "{src}");
+        }
+    }
+
+    #[test]
+    fn escape_roundtrips_seeded_random_strings() {
+        // Seeded LCG property test: emit → parse is the identity for
+        // strings mixing ASCII, control chars, BMP, and astral chars.
+        let mut state = 0x9e37_79b9_7f4a_7c15u64;
+        let mut next = move || {
+            state = state
+                .wrapping_mul(6_364_136_223_846_793_005)
+                .wrapping_add(1_442_695_040_888_963_407);
+            state >> 33
+        };
+        for _ in 0..200 {
+            let len = (next() % 24) as usize;
+            let s: String = (0..len)
+                .map(|_| match next() % 4 {
+                    0 => char::from_u32((next() % 0x80) as u32).unwrap(),
+                    1 => char::from_u32(0x20 + (next() % 0x60) as u32).unwrap(),
+                    2 => char::from_u32(0x4e00 + (next() % 0x100) as u32).unwrap(),
+                    _ => char::from_u32(0x1f600 + (next() % 0x50) as u32).unwrap(),
+                })
+                .collect();
+            let emitted = Json::Str(s.clone()).to_string();
+            let parsed = Json::parse(&emitted).unwrap();
+            assert_eq!(parsed.as_str().unwrap(), s, "via {emitted}");
+        }
+    }
+
+    #[test]
+    fn as_usize_rejects_non_integer_and_negative_numbers() {
+        assert_eq!(Json::Num(-1.0).as_usize(), None);
+        assert_eq!(Json::Num(-0.5).as_usize(), None);
+        assert_eq!(Json::Num(2.5).as_usize(), None);
+        assert_eq!(Json::Num(f64::NAN).as_usize(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(f64::NEG_INFINITY).as_usize(), None);
+        assert_eq!(Json::Num(1e300).as_usize(), None);
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_usize(), None);
+        // Exact non-negative integers still convert (−0.0 is 0).
+        assert_eq!(Json::Num(-0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(0.0).as_usize(), Some(0));
+        assert_eq!(Json::Num(32.0).as_usize(), Some(32));
+        assert_eq!(
+            Json::Num(9_007_199_254_740_991.0).as_usize(),
+            Some(9_007_199_254_740_991)
+        );
+        assert_eq!(Json::Str("32".into()).as_usize(), None);
+        assert_eq!(Json::parse("-3").unwrap().as_usize(), None);
     }
 
     #[test]

@@ -89,6 +89,28 @@ where
     collect_slots(rx, n)
 }
 
+/// Run `n` copies of a worker loop to completion on scoped threads —
+/// the service's accept pool: unlike [`map_steal`] there is no item
+/// list, just long-lived workers sharing whatever `f` closes over (a
+/// non-blocking listener, a shutdown flag). `n <= 1` runs `f(0)` on the
+/// calling thread, same equivalence story as the map paths.
+pub fn run_workers<F>(n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let n = n.max(1);
+    if n == 1 {
+        f(0);
+        return;
+    }
+    std::thread::scope(|scope| {
+        for i in 0..n {
+            let f = &f;
+            scope.spawn(move || f(i));
+        }
+    });
+}
+
 fn collect_slots<O>(rx: mpsc::Receiver<(usize, O)>, n: usize) -> Vec<O> {
     let mut slots: Vec<Option<O>> = (0..n).map(|_| None).collect();
     for (i, o) in rx {
@@ -126,6 +148,23 @@ mod tests {
         });
         assert_eq!(out, (0..50).map(|i| i * 2).collect::<Vec<_>>());
         assert_eq!(states.iter().sum::<usize>(), 50);
+    }
+
+    #[test]
+    fn run_workers_runs_each_index_once() {
+        use std::sync::atomic::AtomicUsize;
+        let ran: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        run_workers(4, |i| {
+            ran[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(ran.iter().all(|c| c.load(Ordering::SeqCst) == 1));
+        // Sequential path: n=1 runs inline.
+        let solo = AtomicUsize::new(0);
+        run_workers(1, |i| {
+            assert_eq!(i, 0);
+            solo.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(solo.load(Ordering::SeqCst), 1);
     }
 
     #[test]

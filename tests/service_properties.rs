@@ -1,0 +1,195 @@
+//! End-to-end properties of the what-if HTTP service: a real server on
+//! an ephemeral port, a raw `std::net` test client (no HTTP crates),
+//! and the contract the service advertises — responses byte-identical
+//! to the CLI path, shared-cache hit/miss/coalesce accounting, NDJSON
+//! batch streaming, loud errors on bad requests.
+
+use fabricbench::service::whatif::Scenario;
+use fabricbench::service::ServerHandle;
+use fabricbench::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+const CFG: &str = r#"
+[fabric]
+kind = "25gbe-roce"
+
+[train]
+model = "resnet50"
+gpus = 8
+per_gpu_batch = 32
+
+[run]
+seed = 7
+warmup_steps = 1
+measure_steps = 3
+"#;
+
+/// One `Connection: close` HTTP exchange; returns (status, body) with
+/// chunked transfer-encoding decoded.
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).expect("read response");
+    let text = String::from_utf8(raw).expect("utf-8 response");
+    let (head, payload) = text.split_once("\r\n\r\n").expect("header/body split");
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    let chunked = head
+        .to_ascii_lowercase()
+        .contains("transfer-encoding: chunked");
+    let body = if chunked { dechunk(payload) } else { payload.to_string() };
+    (status, body)
+}
+
+/// Decode a chunked body: hex-length line, `len` bytes, CRLF, repeat
+/// until the zero-length terminator.
+fn dechunk(s: &str) -> String {
+    let mut out = String::new();
+    let mut rest = s;
+    loop {
+        let (len_line, tail) = rest.split_once("\r\n").expect("chunk length line");
+        let len = usize::from_str_radix(len_line.trim(), 16).expect("hex chunk length");
+        if len == 0 {
+            return out;
+        }
+        out.push_str(&tail[..len]);
+        rest = tail[len..].strip_prefix("\r\n").expect("chunk CRLF");
+    }
+}
+
+fn whatif_body(cfg: &str) -> String {
+    format!("{}", fabricbench::util::json::obj(vec![("config", fabricbench::util::json::s(cfg))]))
+}
+
+#[test]
+fn whatif_response_matches_cli_bytes_cold_and_warm() {
+    let server = ServerHandle::start(0, 2, 8).unwrap();
+    let addr = server.addr();
+    // The exact bytes `run --config <file> --json` prints.
+    let expected = Scenario::from_toml_text(CFG).unwrap().response_body().unwrap();
+
+    let (status, cold) = http(addr, "POST", "/v1/whatif", &whatif_body(CFG));
+    assert_eq!(status, 200, "{cold}");
+    assert_eq!(cold, expected, "cold-cache response must equal the CLI output");
+
+    let (status, warm) = http(addr, "POST", "/v1/whatif", &whatif_body(CFG));
+    assert_eq!(status, 200);
+    assert_eq!(warm, expected, "warm-cache response must equal the CLI output");
+
+    let (status, stats) = http(addr, "GET", "/v1/cache/stats", "");
+    assert_eq!(status, 200);
+    let j = Json::parse(stats.trim_end()).unwrap();
+    assert_eq!(j.get("misses").unwrap().as_usize(), Some(1), "{stats}");
+    assert_eq!(j.get("hits").unwrap().as_usize(), Some(1), "{stats}");
+    assert_eq!(j.get("entries").unwrap().as_usize(), Some(1), "{stats}");
+}
+
+#[test]
+fn concurrent_identical_queries_hammer_one_cache_slot() {
+    let server = ServerHandle::start(0, 4, 8).unwrap();
+    let addr = server.addr();
+    let n = 6;
+    let bodies: Vec<String> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|_| scope.spawn(move || http(addr, "POST", "/v1/whatif", &whatif_body(CFG))))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                let (status, body) = h.join().unwrap();
+                assert_eq!(status, 200, "{body}");
+                body
+            })
+            .collect()
+    });
+    for b in &bodies[1..] {
+        assert_eq!(b, &bodies[0], "every concurrent response must be bit-identical");
+    }
+    let s = server.state.cache.stats();
+    assert_eq!(s.misses, 1, "identical queries must run one simulation: {s:?}");
+    assert_eq!(s.hits + s.coalesced, (n - 1) as u64, "{s:?}");
+    assert_eq!(s.entries, 1);
+    assert!(s.entries <= s.capacity);
+}
+
+#[test]
+fn batch_streams_ndjson_in_cell_order_through_the_shared_cache() {
+    let server = ServerHandle::start(0, 2, 8).unwrap();
+    let addr = server.addr();
+    let other = CFG.replace("seed = 7", "seed = 8");
+    // Cells 0 and 2 are the same scenario; 1 differs by seed only.
+    let req = format!(
+        "{}",
+        fabricbench::util::json::obj(vec![(
+            "cells",
+            fabricbench::util::json::arr(vec![
+                fabricbench::util::json::s(CFG),
+                fabricbench::util::json::s(&other),
+                fabricbench::util::json::s(CFG),
+            ]),
+        )])
+    );
+    let (status, body) = http(addr, "POST", "/v1/batch", &req);
+    assert_eq!(status, 200, "{body}");
+    let lines: Vec<&str> = body.lines().collect();
+    assert_eq!(lines.len(), 3, "{body}");
+    assert_eq!(lines[0], lines[2], "identical cells must serialize identically");
+    assert_ne!(lines[0], lines[1], "a different seed is a different cell");
+    let expected = Scenario::from_toml_text(CFG).unwrap().response_body().unwrap();
+    assert_eq!(format!("{}\n", lines[0]), expected, "batch cells equal single what-ifs");
+    for line in &lines {
+        let j = Json::parse(line).unwrap();
+        assert!(j.get("result").is_some(), "{line}");
+    }
+    // Two unique scenarios across three cells: 2 misses, 1 hit-or-coalesce.
+    let s = server.state.cache.stats();
+    assert_eq!(s.misses, 2, "{s:?}");
+    assert_eq!(s.hits + s.coalesced, 1, "{s:?}");
+}
+
+#[test]
+fn health_answers_and_bad_requests_are_loud() {
+    let server = ServerHandle::start(0, 2, 8).unwrap();
+    let addr = server.addr();
+
+    let (status, body) = http(addr, "GET", "/v1/health", "");
+    assert_eq!(status, 200);
+    let j = Json::parse(body.trim_end()).unwrap();
+    assert_eq!(j.get("status").unwrap().as_str(), Some("ok"));
+
+    let (status, _) = http(addr, "GET", "/v1/nope", "");
+    assert_eq!(status, 404);
+    let (status, _) = http(addr, "PUT", "/v1/whatif", "");
+    assert_eq!(status, 405);
+    let (status, body) = http(addr, "POST", "/v1/whatif", "this is not json");
+    assert_eq!(status, 400, "{body}");
+    let (status, body) = http(addr, "POST", "/v1/whatif", &whatif_body("[fleet]\njobs = 2\n"));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("fleet"), "fleet rejection must say why: {body}");
+    // A batch with one bad cell fails whole, naming the cell, before
+    // any stream output.
+    let req = format!(
+        "{}",
+        fabricbench::util::json::obj(vec![(
+            "cells",
+            fabricbench::util::json::arr(vec![
+                fabricbench::util::json::s(CFG),
+                fabricbench::util::json::s("[train]\nmodel = \"resnet50\"\n"),
+            ]),
+        )])
+    );
+    let (status, body) = http(addr, "POST", "/v1/batch", &req);
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("cell 1"), "{body}");
+}
